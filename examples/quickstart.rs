@@ -1,0 +1,63 @@
+//! Quickstart: run the dynamic protocol on a small kernel task and print
+//! the loss/communication summary plus the efficiency-bound check.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use kdol::config::{ExperimentConfig, ProtocolConfig};
+use kdol::experiments::run_experiment;
+use kdol::metrics::report::comparison_table;
+use kdol::metrics::EfficiencyReport;
+
+fn main() -> anyhow::Result<()> {
+    // A 2-learner XOR-ish task, dynamic protocol with truncation to 32 SVs.
+    let cfg = ExperimentConfig::quickstart();
+    println!(
+        "running `{}` ({} learners x {} rounds)...",
+        cfg.name, cfg.learners, cfg.rounds
+    );
+    let outcome = run_experiment(&cfg)?;
+
+    // Compare against the two extremes on identical streams.
+    let mut continuous = cfg.clone();
+    continuous.protocol = ProtocolConfig::Continuous;
+    continuous.name = "quickstart-continuous".into();
+    let mut nosync = cfg.clone();
+    nosync.protocol = ProtocolConfig::NoSync;
+    nosync.name = "quickstart-nosync".into();
+    let cont = run_experiment(&continuous)?;
+    let iso = run_experiment(&nosync)?;
+
+    println!(
+        "{}",
+        comparison_table("quickstart: dynamic vs extremes", &[&outcome, &cont, &iso])
+    );
+
+    if let ProtocolConfig::Dynamic { delta, .. } = cfg.protocol {
+        let rep = EfficiencyReport::evaluate(
+            &outcome,
+            cfg.learner.eta,
+            delta,
+            (outcome.mean_svs as usize + 1) * cfg.learners,
+            cfg.data.dim(),
+            None,
+        );
+        println!("efficiency criterion (Def. 1) checks:");
+        for c in &rep.checks {
+            println!(
+                "  {:<38} measured {:>12.1}  bound {:>12.1}  [{}]",
+                c.name,
+                c.measured,
+                c.bound,
+                if c.holds() { "holds" } else { "VIOLATED" }
+            );
+        }
+    }
+    println!(
+        "dynamic used {:.1}% of continuous communication at {:.1}% of its error",
+        100.0 * outcome.comm.total_bytes() as f64 / cont.comm.total_bytes().max(1) as f64,
+        100.0 * outcome.cumulative_error / cont.cumulative_error.max(1e-9),
+    );
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! End-to-end three-layer driver: trains a kernel model with the dynamic
+//! protocol (L3), then serves batched predictions through the AOT XLA
+//! `predict` artifact (L2 jax graph wrapping the L1 Pallas RBF kernel),
+//! cross-checking the XLA scores against the native RKHS math.
+//!
+//! Requires `make artifacts` first.
+//!
+//! ```sh
+//! cargo run --release --example serve_xla
+//! ```
+
+use kdol::config::{CompressionConfig, ExperimentConfig, KernelConfig};
+use kdol::coordinator::{PredictionService, ScorePath};
+use kdol::data::build_stream;
+use kdol::protocol::ProtocolEngine;
+use kdol::runtime::XlaRuntime;
+use kdol::util::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let dir = XlaRuntime::default_dir();
+    if !dir.join("manifest.toml").exists() {
+        eprintln!(
+            "artifacts not found in {} — run `make artifacts` first",
+            dir.display()
+        );
+        std::process::exit(2);
+    }
+    let runtime = XlaRuntime::load(&dir, "susy")?;
+    let spec = runtime.spec("predict")?.clone();
+    println!("loaded {runtime:?}");
+
+    // --- L3: train under the dynamic protocol on the SUSY-like task -------
+    let mut cfg = ExperimentConfig::fig1_dynamic_kernel_compressed(0.2, spec.tau);
+    cfg.learners = 4;
+    cfg.rounds = 400;
+    let gamma = match cfg.learner.kernel {
+        KernelConfig::Rbf { gamma } => gamma,
+        _ => unreachable!(),
+    };
+    assert_eq!(cfg.learner.compression, CompressionConfig::Truncation { tau: spec.tau });
+    let mut engine = ProtocolEngine::new(cfg.clone())?;
+    for _ in 0..cfg.rounds {
+        engine.step();
+    }
+    let model = engine
+        .learner(0)
+        .snapshot()
+        .as_kernel()
+        .cloned()
+        .expect("kernel model");
+    println!(
+        "trained: {} SVs, cumulative error {:.1}, comm {} bytes",
+        model.len(),
+        engine.metrics.cum_error,
+        engine.comm.total_bytes()
+    );
+
+    // --- serve through XLA, cross-checking vs native -----------------------
+    let native_model = model.clone();
+    let mut svc = PredictionService::new(Some(runtime), model, gamma)?;
+    let mut stream = build_stream(&cfg.data, Pcg64::seeded(123));
+    let mut max_dev = 0.0f64;
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    let t0 = std::time::Instant::now();
+    for _ in 0..64 {
+        let batch: Vec<(Vec<f64>, f64)> = (0..spec.batch).map(|_| stream.next_example()).collect();
+        let queries: Vec<Vec<f64>> = batch.iter().map(|(x, _)| x.clone()).collect();
+        let (scores, path) = svc.score_batch(&queries)?;
+        assert_eq!(path, ScorePath::Xla, "hot path must be XLA");
+        for ((x, y), s) in batch.iter().zip(&scores) {
+            let native = native_model.predict(x);
+            max_dev = max_dev.max((native - s).abs());
+            if (s.signum() - y).abs() < 1e-9 {
+                agree += 1;
+            }
+            total += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!("served {total} predictions over XLA in {dt:?}");
+    println!("max |xla - native| deviation: {max_dev:.2e} (f32 path)");
+    println!("accuracy on fresh stream: {:.1}%", 100.0 * agree as f64 / total as f64);
+    assert!(max_dev < 1e-3, "XLA and native disagree: {max_dev}");
+    println!("serve_xla OK — all three layers agree");
+    Ok(())
+}

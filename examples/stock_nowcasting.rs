@@ -1,0 +1,32 @@
+//! Fig 2 end-to-end: the stock-nowcasting task with 32 learners — the
+//! paper's headline experiment. Reports the error/communication table,
+//! the §4 headline factors, and quiescence of the dynamic protocol.
+//!
+//! ```sh
+//! cargo run --release --example stock_nowcasting [-- scale]
+//! ```
+
+use kdol::experiments::{fig2, headline};
+use kdol::metrics::report::{comparison_table, series_csv, write_report};
+use kdol::metrics::Outcome;
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    eprintln!("running the Fig 2 grid at scale {scale} (1.0 = 4000 rounds/learner, m=32)...");
+    let outcomes = fig2::run(&fig2::DEFAULT_PERIODS, &fig2::DEFAULT_DELTAS, scale)?;
+    let refs: Vec<&Outcome> = outcomes.iter().collect();
+    println!(
+        "{}",
+        comparison_table("Fig 2 — stock nowcasting, m=32", &refs)
+    );
+    let csv_path = std::path::Path::new("target/fig2_series.csv");
+    write_report(csv_path, &series_csv(&refs))?;
+    eprintln!("over-time series (Fig 2b) -> {}", csv_path.display());
+
+    let h = headline::run(headline::DEFAULT_DELTA, scale)?;
+    println!("{}", h.render((4000.0 * scale) as u64));
+    Ok(())
+}

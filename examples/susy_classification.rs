@@ -1,0 +1,49 @@
+//! Fig 1 end-to-end: SUSY-like classification with 4 learners, comparing
+//! linear vs kernel models and continuous vs dynamic protocols, writing
+//! the error-vs-communication table and the over-time CSV
+//! (`target/fig1_series.csv`).
+//!
+//! ```sh
+//! cargo run --release --example susy_classification [-- scale]
+//! ```
+
+use kdol::experiments::fig1;
+use kdol::metrics::report::{comparison_table, series_csv, write_report};
+use kdol::metrics::Outcome;
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.5);
+    eprintln!("running the Fig 1 grid at scale {scale} (1.0 = 1000 rounds/learner)...");
+    let outcomes = fig1::run(&fig1::DEFAULT_DELTAS, 50, scale)?;
+    let refs: Vec<&Outcome> = outcomes.iter().collect();
+    println!(
+        "{}",
+        comparison_table("Fig 1 — SUSY-like, m=4: error vs communication", &refs)
+    );
+    let csv_path = std::path::Path::new("target/fig1_series.csv");
+    write_report(csv_path, &series_csv(&refs))?;
+    eprintln!("over-time series (Fig 1b) -> {}", csv_path.display());
+
+    // The qualitative paper claims, asserted on the real run:
+    let find = |pat: &str| {
+        refs.iter()
+            .find(|o| o.name.contains(pat))
+            .copied()
+            .unwrap_or_else(|| panic!("missing system {pat}"))
+    };
+    let lin_cont = find("linear-continuous");
+    let ker_cont = find("kernel-continuous");
+    assert!(
+        ker_cont.cumulative_error < lin_cont.cumulative_error,
+        "kernel should beat linear"
+    );
+    println!(
+        "kernel continuous cut error {:.1}x vs linear, at {:.0}x its communication",
+        lin_cont.cumulative_error / ker_cont.cumulative_error.max(1e-9),
+        ker_cont.comm.total_bytes() as f64 / lin_cont.comm.total_bytes().max(1) as f64,
+    );
+    Ok(())
+}

@@ -1,0 +1,10 @@
+"""L1 — Pallas kernels for the paper's compute hot-spot (RBF Gram algebra)."""
+
+from .rbf import rbf_gram  # noqa: F401
+from .ref import (  # noqa: F401
+    divergence_ref,
+    norm_diff_ref,
+    norm_sq_ref,
+    predict_ref,
+    rbf_gram_ref,
+)

@@ -1,0 +1,119 @@
+"""L1 — Pallas RBF Gram-matrix kernel.
+
+The compute hot-spot of the whole system: every prediction
+``f(x) = sum_s alpha_s k(s, x)``, every RKHS divergence evaluation and every
+projection-compression step reduces to a (masked) RBF Gram block
+
+    K[i, j] = exp(-gamma * ||x_i - z_j||^2).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the squared distance is
+expanded as ``||x||^2 + ||z||^2 - 2<x, z>`` so the dominant term is a single
+(bm, d) x (d, bn) matmul that feeds the MXU systolic array; norms and the
+exponential are cheap VPU element-wise work on the (bm, bn) output tile.
+BlockSpec tiles HBM->VMEM movement over a 2-D grid; each grid step holds one
+X tile, one Z tile and one output tile in VMEM.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the interpreter to plain HLO.
+Correctness is pinned against the pure-jnp oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches the MXU lane width; the sublane dimension
+# is kept at 128 as well so an f32 output tile is 64 KiB and the operand
+# tiles are 128*d*4 bytes each — comfortably inside the ~16 MiB VMEM budget
+# for every d used by the artifacts (d <= 64). See DESIGN.md §Perf for the
+# footprint table.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _rbf_block_kernel(x_ref, z_ref, gamma_ref, o_ref):
+    """One (bm, bn) output tile of the RBF Gram matrix.
+
+    x_ref: (bm, d) VMEM tile of query points.
+    z_ref: (bn, d) VMEM tile of support points.
+    gamma_ref: (1, 1) scalar bandwidth.
+    o_ref: (bm, bn) output tile.
+    """
+    x = x_ref[...]
+    z = z_ref[...]
+    gamma = gamma_ref[0, 0]
+    # ||x - z||^2 = ||x||^2 + ||z||^2 - 2 x.z  — the cross term is the MXU
+    # matmul; promote accumulation to f32 regardless of input dtype.
+    xn = jnp.sum(x * x, axis=1, keepdims=True)  # (bm, 1)
+    zn = jnp.sum(z * z, axis=1, keepdims=True).T  # (1, bn)
+    cross = jax.lax.dot_general(
+        x,
+        z,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bm, bn)
+    d2 = xn + zn - 2.0 * cross
+    # Floating-point cancellation can leave tiny negatives on the diagonal;
+    # clamp so exp never exceeds 1 and downstream norms stay PSD-ish.
+    d2 = jnp.maximum(d2, 0.0)
+    o_ref[...] = jnp.exp(-gamma * d2).astype(o_ref.dtype)
+
+
+def _pad_to(a: jax.Array, rows: int) -> jax.Array:
+    if a.shape[0] == rows:
+        return a
+    pad = rows - a.shape[0]
+    return jnp.pad(a, ((0, pad), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def rbf_gram(
+    x: jax.Array,
+    z: jax.Array,
+    gamma: jax.Array,
+    *,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+) -> jax.Array:
+    """RBF Gram matrix K[i, j] = exp(-gamma ||x_i - z_j||^2) via Pallas.
+
+    x: (M, d), z: (N, d), gamma: scalar (0-d or (1,1)) f32.
+    Returns (M, N) f32.
+
+    Shapes that are not multiples of the block size are zero-padded up; the
+    padded rows/cols are sliced away before returning. Zero-padding is exact
+    for the Gram computation itself (the pad entries are simply discarded),
+    and the callers that keep padding (fixed-tau models) mask via alpha = 0.
+    """
+    m, d = x.shape
+    n, _ = z.shape
+    bm = min(block_m, _ceil_mult(m, 8))
+    bn = min(block_n, _ceil_mult(n, 8))
+    mp = _ceil_mult(m, bm)
+    np_ = _ceil_mult(n, bn)
+    xp = _pad_to(x, mp)
+    zp = _pad_to(z, np_)
+    gamma2d = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        _rbf_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(xp, zp, gamma2d)
+    return out[:m, :n]
+
+
+def _ceil_mult(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the Pallas kernels. No Pallas, no tiling tricks —
+this is the definition the kernels are tested against."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rbf_gram_ref(x, z, gamma):
+    """K[i, j] = exp(-gamma * ||x_i - z_j||^2), computed the naive way."""
+    d2 = jnp.sum((x[:, None, :] - z[None, :, :]) ** 2, axis=-1)
+    return jnp.exp(-jnp.asarray(gamma, jnp.float32) * d2)
+
+
+def predict_ref(sv, alpha, x, gamma):
+    """f(x_b) = sum_s alpha_s k(sv_s, x_b) for a batch of query points."""
+    k = rbf_gram_ref(x, sv, gamma)  # (B, tau)
+    return k @ alpha
+
+
+def norm_sq_ref(sv, alpha, gamma):
+    """||f||^2_H = alpha^T K alpha over the model's own support set."""
+    k = rbf_gram_ref(sv, sv, gamma)
+    return alpha @ k @ alpha
+
+
+def norm_diff_ref(sv_f, alpha_f, sv_r, alpha_r, gamma):
+    """||f - r||^2_H in dual form over the stacked support set."""
+    u = jnp.concatenate([sv_f, sv_r], axis=0)
+    c = jnp.concatenate([alpha_f, -alpha_r], axis=0)
+    k = rbf_gram_ref(u, u, gamma)
+    return c @ k @ c
+
+
+def divergence_ref(svs, alphas, gamma):
+    """Eq. 1: delta(f) = 1/m sum_i ||f_i - fbar||^2 in dual form.
+
+    svs: (m, tau, d), alphas: (m, tau). Returns (delta, dists[m]).
+    """
+    m, tau, d = svs.shape
+    u = svs.reshape(m * tau, d)
+    # Learner i's coefficients over the union: its own block, zero elsewhere.
+    a = jnp.zeros((m, m * tau), alphas.dtype)
+    for i in range(m):
+        a = a.at[i, i * tau : (i + 1) * tau].set(alphas[i])
+    dev = a - jnp.mean(a, axis=0, keepdims=True)
+    k = rbf_gram_ref(u, u, gamma)
+    dists = jnp.einsum("ik,kl,il->i", dev, k, dev)
+    return jnp.mean(dists), dists

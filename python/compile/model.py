@@ -1,0 +1,119 @@
+"""L2 — JAX compute graphs over padded support-vector expansions.
+
+Every graph here is shape-static so it can be AOT-lowered once
+(``aot.py``) and executed from the Rust coordinator via PJRT with zero
+Python on the request path. The fixed shapes come from the paper itself:
+model compression (truncation [12] / projection [15, 20]) bounds every
+local model to ``tau`` support vectors — exactly the condition Thm. 7
+needs for adaptivity — so a ``(tau, d)`` SV matrix plus a ``(tau,)``
+coefficient vector with ``alpha = 0`` masking for unused slots is a
+*lossless* representation of every reachable model state.
+
+All functions call the L1 Pallas kernel (``kernels.rbf_gram``) for the Gram
+blocks, so the whole stack lowers into a single HLO module per entry point.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.rbf import rbf_gram
+
+
+def predict(sv, alpha, x, gamma):
+    """Batch prediction: y[b] = f(x_b) = sum_s alpha_s k(sv_s, x_b).
+
+    sv: (tau, d) padded support vectors, alpha: (tau,) coefficients
+    (0 in padded slots), x: (B, d) query batch, gamma: scalar bandwidth.
+    Returns (B,) scores (sign for classification, value for regression).
+    """
+    k = rbf_gram(x, sv, gamma)  # (B, tau)
+    return (k @ alpha,)
+
+
+def gram(a, b, gamma):
+    """Raw Gram block K[i, j] = k(a_i, b_j); used by projection compression
+    and by the coordinator's divergence service."""
+    return (rbf_gram(a, b, gamma),)
+
+
+def norm_diff(sv_f, alpha_f, sv_r, alpha_r, gamma):
+    """Local condition quantity ||f - r||^2_H in dual form.
+
+    The stacked support set U = [sv_f; sv_r] with signed coefficients
+    c = [alpha_f; -alpha_r] gives ||f - r||^2 = c^T K(U, U) c exactly,
+    duplicates included (the Gram handles repeated points natively).
+    """
+    u = jnp.concatenate([sv_f, sv_r], axis=0)
+    c = jnp.concatenate([alpha_f, -alpha_r], axis=0)
+    k = rbf_gram(u, u, gamma)
+    return (c @ k @ c,)
+
+
+def divergence(svs, alphas, gamma):
+    """Eq. 1 divergence delta(f) = 1/m sum_i ||f^i - fbar||^2 in dual form.
+
+    svs: (m, tau, d) stacked per-learner padded SV matrices,
+    alphas: (m, tau). The average model (Prop. 2) lives in the span of the
+    union U of all m*tau support vectors with coefficients alpha_s / m;
+    learner i's deviation from it is a quadratic form in the union Gram.
+    Returns (delta, dists[m]) so the coordinator can also inspect
+    per-learner distances (used by the partial-sync refinement).
+    """
+    m, tau, d = svs.shape
+    u = svs.reshape(m * tau, d)
+    # A[i] = learner i's coefficients over the union: block-diagonal layout.
+    eye = jnp.eye(m, dtype=alphas.dtype)
+    a = (eye[:, :, None] * alphas[None, :, :]).reshape(m, m * tau)
+    dev = a - jnp.mean(a, axis=0, keepdims=True)
+    k = rbf_gram(u, u, gamma)
+    # dists_i = dev_i^T K dev_i ; batch the quadratic forms as one matmul.
+    dk = dev @ k  # (m, m*tau)
+    dists = jnp.sum(dk * dev, axis=1)
+    return jnp.mean(dists), dists
+
+
+def average(alphas):
+    """Prop. 2 coefficient averaging over an aligned union layout:
+    alphas: (m, u) augmented coefficients -> (u,) averaged coefficients.
+    (The union alignment itself is bookkeeping, done in Rust.)"""
+    return (jnp.mean(alphas, axis=0),)
+
+
+def rff_features(x, w, b):
+    """Random Fourier Features map (paper §4, future-work variant):
+    phi(x) = sqrt(2/D) cos(x W^T + b); x: (B, d), w: (D, d), b: (D,).
+    Lets the protocol fall back to fixed-size linear models in phi-space."""
+    d_feat = w.shape[0]
+    proj = x @ w.T + b[None, :]
+    return (jnp.sqrt(2.0 / d_feat) * jnp.cos(proj),)
+
+
+def rff_predict(wvec, x, w, b):
+    """Linear prediction in RFF space: y = phi(x) @ wvec."""
+    (phi,) = rff_features(x, w, b)
+    return (phi @ wvec,)
+
+
+# --- Entry-point registry used by aot.py -----------------------------------
+
+
+def entry_points(m: int, tau: int, d: int, batch: int, rff_dim: int):
+    """Concrete (fn, example-args) pairs for one artifact shape variant."""
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    scalar = s((), f32)
+    return {
+        "predict": (predict, (s((tau, d), f32), s((tau,), f32), s((batch, d), f32), scalar)),
+        "gram": (gram, (s((tau, d), f32), s((tau, d), f32), scalar)),
+        "norm_diff": (
+            norm_diff,
+            (s((tau, d), f32), s((tau,), f32), s((tau, d), f32), s((tau,), f32), scalar),
+        ),
+        "divergence": (divergence, (s((m, tau, d), f32), s((m, tau), f32), scalar)),
+        "rff_predict": (
+            rff_predict,
+            (s((rff_dim,), f32), s((batch, d), f32), s((rff_dim, d), f32), s((rff_dim,), f32)),
+        ),
+    }

@@ -1,0 +1,63 @@
+"""AOT path: every entry point lowers to parseable HLO text, and the
+manifest is complete and well-formed."""
+
+import os
+import re
+import tempfile
+
+import pytest
+
+from compile import aot, model
+
+
+TINY = [("tiny", 2, 8, 3, 4, 16)]  # m, tau, d, batch, rff_dim
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.build(out, TINY)
+    return out
+
+
+def test_all_entry_points_emitted(built):
+    names = set(os.listdir(built))
+    for fn in ("predict", "gram", "norm_diff", "divergence", "rff_predict"):
+        assert f"{fn}_tiny.hlo.txt" in names
+    assert "manifest.toml" in names
+
+
+def test_hlo_text_is_hlo(built):
+    for f in os.listdir(built):
+        if not f.endswith(".hlo.txt"):
+            continue
+        text = open(os.path.join(built, f)).read()
+        assert text.startswith("HloModule"), f
+        assert "ENTRY" in text, f
+
+
+def test_manifest_lists_every_artifact(built):
+    manifest = open(os.path.join(built, "manifest.toml")).read()
+    entries = re.findall(r'file = "([^"]+)"', manifest)
+    on_disk = {f for f in os.listdir(built) if f.endswith(".hlo.txt")}
+    assert set(entries) == on_disk
+    # Required keys present in every block.
+    blocks = manifest.count("[[artifact]]")
+    for key in ("name", "fn", "tau", "d", "batch", "outputs", "sha256"):
+        assert manifest.count(f"{key} = ") == blocks
+
+
+def test_manifest_shapes_roundtrip(built):
+    manifest = open(os.path.join(built, "manifest.toml")).read()
+    assert 'tau = 8' in manifest and 'd = 3' in manifest and 'm = 2' in manifest
+
+
+def test_entry_points_signature_stability():
+    eps = model.entry_points(m=2, tau=4, d=3, batch=2, rff_dim=8)
+    assert set(eps) == {"predict", "gram", "norm_diff", "divergence", "rff_predict"}
+    fn, args = eps["predict"]
+    assert args[0].shape == (4, 3) and args[1].shape == (4,) and args[2].shape == (2, 3)
+
+
+def test_variant_spec_parser():
+    assert aot.parse_variant("x:1,2,3,4,5") == ("x", 1, 2, 3, 4, 5)

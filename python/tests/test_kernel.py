@@ -1,0 +1,111 @@
+"""L1 correctness: the Pallas RBF Gram kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, bandwidths and block sizes; this is the core
+correctness signal for everything the Rust hot path executes.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels.ref import rbf_gram_ref
+from compile.kernels.rbf import rbf_gram
+
+hypothesis.settings.register_profile(
+    "kdol", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kdol")
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+@given(
+    m=st.integers(1, 70),
+    n=st.integers(1, 70),
+    d=st.integers(1, 40),
+    gamma=st.floats(1e-3, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref(m, n, d, gamma, seed):
+    kx, kz = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(kx, (m, d))
+    z = _rand(kz, (n, d))
+    got = rbf_gram(x, z, gamma)
+    want = rbf_gram_ref(x, z, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@given(
+    m=st.integers(1, 300),
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bn=st.sampled_from([8, 16, 32, 128]),
+)
+def test_gram_block_size_invariance(m, bm, bn):
+    """Tiling must not change the numbers."""
+    key = jax.random.PRNGKey(m)
+    x = _rand(key, (m, 7))
+    base = rbf_gram(x, x, 0.5)
+    tiled = rbf_gram(x, x, 0.5, block_m=bm, block_n=bn)
+    # Tile width changes SIMD reduction order -> last-ulp differences.
+    np.testing.assert_allclose(tiled, base, rtol=1e-5, atol=1e-6)
+
+
+def test_gram_diagonal_is_one():
+    x = _rand(jax.random.PRNGKey(0), (33, 5), scale=3.0)
+    k = rbf_gram(x, x, 2.0)
+    # f32 cancellation in ||x||^2 + ||x||^2 - 2<x,x> leaves ~1e-5 residue.
+    np.testing.assert_allclose(jnp.diag(k), jnp.ones(33), rtol=1e-4)
+
+
+def test_gram_symmetry():
+    x = _rand(jax.random.PRNGKey(1), (41, 9))
+    k = rbf_gram(x, x, 1.3)
+    np.testing.assert_allclose(k, k.T, rtol=1e-6, atol=1e-7)
+
+
+def test_gram_bounds():
+    """0 <= K <= 1 for the RBF kernel (exp underflows to exactly 0 in f32
+    for far-apart points, so the lower bound is inclusive)."""
+    kx, kz = jax.random.split(jax.random.PRNGKey(2))
+    x = _rand(kx, (50, 12), scale=5.0)
+    z = _rand(kz, (60, 12), scale=5.0)
+    k = np.asarray(rbf_gram(x, z, 0.7))
+    assert (k >= 0).all() and (k <= 1.0 + 1e-6).all()
+
+
+def test_gram_identical_points():
+    x = jnp.ones((17, 4), jnp.float32)
+    k = rbf_gram(x, x, 1.0)
+    np.testing.assert_allclose(k, jnp.ones((17, 17)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("gamma", [1e-4, 0.1, 1.0, 50.0])
+def test_gram_gamma_sweep(gamma):
+    kx, kz = jax.random.split(jax.random.PRNGKey(3))
+    x = _rand(kx, (23, 6))
+    z = _rand(kz, (19, 6))
+    np.testing.assert_allclose(
+        rbf_gram(x, z, gamma), rbf_gram_ref(x, z, gamma), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_gram_zero_gamma_is_all_ones():
+    kx, kz = jax.random.split(jax.random.PRNGKey(4))
+    x = _rand(kx, (11, 3))
+    z = _rand(kz, (13, 3))
+    np.testing.assert_allclose(rbf_gram(x, z, 0.0), jnp.ones((11, 13)), rtol=1e-6)
+
+
+def test_gram_padding_rows_are_discarded():
+    """Non-multiple-of-block shapes: padded rows must not leak."""
+    key = jax.random.PRNGKey(5)
+    x = _rand(key, (130, 5))  # forces padding at bm=128 or any block
+    k = rbf_gram(x, x, 1.0)
+    assert k.shape == (130, 130)
+    np.testing.assert_allclose(k, rbf_gram_ref(x, x, 1.0), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,159 @@
+"""L2 correctness: the model graphs vs naive oracles, plus the padding and
+averaging semantics the Rust coordinator relies on."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile import model
+from compile.kernels import ref
+
+
+def _keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+@given(
+    tau=st.integers(1, 48),
+    d=st.integers(1, 24),
+    batch=st.integers(1, 16),
+    gamma=st.floats(1e-2, 5.0),
+    seed=st.integers(0, 10_000),
+)
+@settings(deadline=None, max_examples=20, derandomize=True)
+def test_predict_matches_ref(tau, d, batch, gamma, seed):
+    ks, ka, kx = _keys(seed, 3)
+    sv = jax.random.normal(ks, (tau, d), jnp.float32)
+    alpha = jax.random.normal(ka, (tau,), jnp.float32)
+    x = jax.random.normal(kx, (batch, d), jnp.float32)
+    (got,) = model.predict(sv, alpha, x, gamma)
+    want = ref.predict_ref(sv, alpha, x, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_predict_padding_is_exact():
+    """alpha = 0 slots must contribute exactly nothing, whatever junk the
+    padded SV rows hold."""
+    ks, ka, kx, kj = _keys(7, 4)
+    sv = jax.random.normal(ks, (10, 6), jnp.float32)
+    alpha = jax.random.normal(ka, (10,), jnp.float32)
+    x = jax.random.normal(kx, (5, 6), jnp.float32)
+    junk = 100.0 * jax.random.normal(kj, (22, 6), jnp.float32)
+    sv_pad = jnp.concatenate([sv, junk])
+    alpha_pad = jnp.concatenate([alpha, jnp.zeros(22, jnp.float32)])
+    (want,) = model.predict(sv, alpha, x, 0.8)
+    (got,) = model.predict(sv_pad, alpha_pad, x, 0.8)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@given(
+    tau=st.integers(1, 24),
+    d=st.integers(1, 12),
+    seed=st.integers(0, 10_000),
+)
+@settings(deadline=None, max_examples=15, derandomize=True)
+def test_norm_diff_matches_ref(tau, d, seed):
+    k1, k2, k3, k4 = _keys(seed, 4)
+    sv_f = jax.random.normal(k1, (tau, d), jnp.float32)
+    a_f = jax.random.normal(k2, (tau,), jnp.float32)
+    sv_r = jax.random.normal(k3, (tau, d), jnp.float32)
+    a_r = jax.random.normal(k4, (tau,), jnp.float32)
+    (got,) = model.norm_diff(sv_f, a_f, sv_r, a_r, 1.1)
+    want = ref.norm_diff_ref(sv_f, a_f, sv_r, a_r, 1.1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_norm_diff_identical_models_is_zero():
+    k1, k2 = _keys(3, 2)
+    sv = jax.random.normal(k1, (12, 5), jnp.float32)
+    a = jax.random.normal(k2, (12,), jnp.float32)
+    (got,) = model.norm_diff(sv, a, sv, a, 2.0)
+    np.testing.assert_allclose(got, 0.0, atol=1e-4)
+
+
+@given(
+    m=st.integers(2, 6),
+    tau=st.integers(1, 12),
+    d=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+@settings(deadline=None, max_examples=12, derandomize=True)
+def test_divergence_matches_ref(m, tau, d, seed):
+    k1, k2 = _keys(seed, 2)
+    svs = jax.random.normal(k1, (m, tau, d), jnp.float32)
+    alphas = jax.random.normal(k2, (m, tau), jnp.float32)
+    got_delta, got_dists = model.divergence(svs, alphas, 0.9)
+    want_delta, want_dists = ref.divergence_ref(svs, alphas, 0.9)
+    np.testing.assert_allclose(got_delta, want_delta, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_dists, want_dists, rtol=1e-4, atol=1e-4)
+
+
+def test_divergence_equal_models_is_zero():
+    k1, k2 = _keys(11, 2)
+    sv = jax.random.normal(k1, (8, 4), jnp.float32)
+    a = jax.random.normal(k2, (8,), jnp.float32)
+    svs = jnp.stack([sv] * 4)
+    alphas = jnp.stack([a] * 4)
+    delta, dists = model.divergence(svs, alphas, 1.0)
+    np.testing.assert_allclose(delta, 0.0, atol=1e-4)
+    np.testing.assert_allclose(dists, jnp.zeros(4), atol=1e-4)
+
+
+def test_divergence_is_nonnegative():
+    k1, k2 = _keys(13, 2)
+    svs = jax.random.normal(k1, (5, 9, 3), jnp.float32)
+    alphas = jax.random.normal(k2, (5, 9), jnp.float32)
+    delta, dists = model.divergence(svs, alphas, 1.7)
+    assert float(delta) >= -1e-5
+    assert (np.asarray(dists) >= -1e-5).all()
+
+
+def test_divergence_consistency_with_norm_diff():
+    """delta = 1/m sum ||f_i - fbar||^2 where fbar is built explicitly."""
+    m, tau, d = 3, 6, 4
+    k1, k2 = _keys(17, 2)
+    svs = jax.random.normal(k1, (m, tau, d), jnp.float32)
+    alphas = jax.random.normal(k2, (m, tau), jnp.float32)
+    delta, _ = model.divergence(svs, alphas, 1.0)
+    # Explicit average: union of SVs, coefficients alpha/m.
+    u = svs.reshape(m * tau, d)
+    a_bar = (alphas / m).reshape(m * tau)
+    acc = 0.0
+    for i in range(m):
+        acc += ref.norm_diff_ref(svs[i], alphas[i], u, a_bar, 1.0)
+    np.testing.assert_allclose(delta, acc / m, rtol=1e-4, atol=1e-4)
+
+
+def test_average_is_prop2():
+    alphas = jnp.arange(12.0, dtype=jnp.float32).reshape(3, 4)
+    (avg,) = model.average(alphas)
+    np.testing.assert_allclose(avg, alphas.mean(axis=0), rtol=1e-6)
+
+
+def test_rff_predict_shapes_and_range():
+    k1, k2, k3, k4 = _keys(23, 4)
+    x = jax.random.normal(k1, (7, 5), jnp.float32)
+    w = jax.random.normal(k2, (64, 5), jnp.float32)
+    b = jax.random.uniform(k3, (64,), jnp.float32, 0, 2 * np.pi)
+    wvec = jax.random.normal(k4, (64,), jnp.float32)
+    (phi,) = model.rff_features(x, w, b)
+    assert phi.shape == (7, 64)
+    assert np.abs(np.asarray(phi)).max() <= np.sqrt(2.0 / 64) + 1e-6
+    (y,) = model.rff_predict(wvec, x, w, b)
+    np.testing.assert_allclose(y, phi @ wvec, rtol=1e-5, atol=1e-5)
+
+
+def test_rff_approximates_rbf_kernel():
+    """E[phi(x).phi(z)] -> exp(-gamma||x-z||^2) as D grows (Rahimi-Recht)."""
+    gamma = 0.5
+    dfeat, d = 4096, 4
+    k1, k2, k3 = _keys(29, 3)
+    w = jnp.sqrt(2 * gamma) * jax.random.normal(k1, (dfeat, d), jnp.float32)
+    b = jax.random.uniform(k2, (dfeat,), jnp.float32, 0, 2 * np.pi)
+    xz = jax.random.normal(k3, (10, d), jnp.float32)
+    (phi,) = model.rff_features(xz, w, b)
+    approx = np.asarray(phi @ phi.T)
+    exact = np.asarray(ref.rbf_gram_ref(xz, xz, gamma))
+    np.testing.assert_allclose(approx, exact, atol=0.08)

@@ -1,0 +1,74 @@
+//! Ablation bench: the DESIGN.md §4 sweeps (Δ threshold, compression
+//! budget τ, mini-batched condition checks, truncation-vs-projection) and
+//! the Prop. 6 / Thm. 7 bound verification table.
+//!
+//! ```sh
+//! cargo bench --bench ablations
+//! KDOL_BENCH_SCALE=0.2 cargo bench --bench ablations
+//! ```
+
+use kdol::config::{ExperimentConfig, ProtocolConfig};
+use kdol::experiments::{runner, sweeps};
+use kdol::metrics::report::comparison_table;
+use kdol::metrics::{EfficiencyReport, Outcome};
+
+fn main() {
+    let scale: f64 = std::env::var("KDOL_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.5);
+
+    let show = |title: &str, outs: &[Outcome]| {
+        let refs: Vec<&Outcome> = outs.iter().collect();
+        println!("{}", comparison_table(title, &refs));
+    };
+
+    show(
+        "abl-delta: divergence-threshold sweep (dynamic, kernel)",
+        &sweeps::sweep_delta(&[0.01, 0.05, 0.2, 0.8, 3.2], scale).expect("delta sweep"),
+    );
+    show(
+        "abl-tau: compression budget sweep (dynamic Δ=0.2)",
+        &sweeps::sweep_tau(&[10, 25, 50, 100, 200], 0.2, scale).expect("tau sweep"),
+    );
+    show(
+        "abl-batch: mini-batched condition checks (Δ=0.05)",
+        &sweeps::sweep_check_period(&[1, 4, 16, 64], 0.05, scale).expect("check sweep"),
+    );
+    show(
+        "abl-comp: truncation vs projection (τ=50, Δ=0.2)",
+        &sweeps::sweep_compression(50, 0.2, scale).expect("comp sweep"),
+    );
+
+    // bound-comm: measured vs analytic bounds + consistency ratio.
+    let delta = 0.2;
+    let mut cfg = ExperimentConfig::fig1_dynamic_kernel_compressed(delta, 50);
+    cfg.rounds = ((cfg.rounds as f64 * scale) as usize).max(50);
+    let outcome = runner::run_experiment(&cfg).expect("bounds run");
+    let mut serial_cfg = cfg.clone();
+    serial_cfg.protocol = ProtocolConfig::Serial;
+    let serial = runner::run_serial(&serial_cfg);
+    let rep = EfficiencyReport::evaluate(
+        &outcome,
+        cfg.learner.eta,
+        delta,
+        (outcome.mean_svs as usize + 1) * cfg.learners,
+        cfg.data.dim(),
+        Some(serial.cumulative_loss),
+    );
+    println!("== bound-comm: Prop. 6 / Thm. 7 / Def. 1 ==");
+    for c in &rep.checks {
+        println!(
+            "{:<42} measured {:>16.1}  bound {:>16.1}  slack {:>9.2}x  [{}]",
+            c.name,
+            c.measured,
+            c.bound,
+            c.slack(),
+            if c.holds() { "holds" } else { "VIOLATED" }
+        );
+    }
+    if let Some(r) = rep.consistency_ratio {
+        println!("consistency L_D(T,m) / L_serial(mT) = {r:.3}");
+    }
+    assert!(rep.all_hold(), "a paper bound was violated — investigate!");
+}

@@ -1,0 +1,38 @@
+//! Bench target for Fig 1: regenerates the error-vs-communication table
+//! (1a) and emits the over-time series CSV (1b) at the paper's geometry.
+//!
+//! ```sh
+//! cargo bench --bench fig1            # full paper scale (m=4, T=1000)
+//! KDOL_BENCH_SCALE=0.1 cargo bench --bench fig1
+//! ```
+
+use kdol::experiments::fig1;
+use kdol::metrics::report::{comparison_table, series_csv, write_report};
+use kdol::metrics::Outcome;
+use kdol::util::Stopwatch;
+
+fn main() {
+    let scale: f64 = std::env::var("KDOL_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.5);
+    let mut watch = Stopwatch::started();
+    let outcomes = fig1::run(&fig1::DEFAULT_DELTAS, 50, scale).expect("fig1 run");
+    watch.stop();
+    let refs: Vec<&Outcome> = outcomes.iter().collect();
+    println!(
+        "{}",
+        comparison_table(
+            &format!("Fig 1 (scale {scale}) — SUSY-like, m=4, T=1000/learner"),
+            &refs
+        )
+    );
+    println!("(a) pareto points: (cum-error, comm-bytes) per system above");
+    println!("(b) over-time series -> target/bench_fig1_series.csv");
+    write_report(
+        std::path::Path::new("target/bench_fig1_series.csv"),
+        &series_csv(&refs),
+    )
+    .expect("write series");
+    println!("total bench wall time: {:.1}s", watch.elapsed_secs());
+}

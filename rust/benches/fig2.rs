@@ -1,0 +1,42 @@
+//! Bench target for Fig 2: the stock-nowcasting experiment (m=32) — the
+//! error/communication matrix (2a), the over-time series (2b), and the §4
+//! headline factors.
+//!
+//! ```sh
+//! cargo bench --bench fig2
+//! KDOL_BENCH_SCALE=0.25 cargo bench --bench fig2
+//! ```
+
+use kdol::experiments::{fig2, headline};
+use kdol::metrics::report::{comparison_table, series_csv, write_report};
+use kdol::metrics::Outcome;
+use kdol::util::Stopwatch;
+
+fn main() {
+    let scale: f64 = std::env::var("KDOL_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.25);
+    let mut watch = Stopwatch::started();
+    let outcomes =
+        fig2::run(&fig2::DEFAULT_PERIODS, &fig2::DEFAULT_DELTAS, scale).expect("fig2 run");
+    let refs: Vec<&Outcome> = outcomes.iter().collect();
+    println!(
+        "{}",
+        comparison_table(
+            &format!("Fig 2 (scale {scale}) — stock nowcasting, m=32"),
+            &refs
+        )
+    );
+    write_report(
+        std::path::Path::new("target/bench_fig2_series.csv"),
+        &series_csv(&refs),
+    )
+    .expect("write series");
+    println!("(b) over-time series -> target/bench_fig2_series.csv");
+
+    let h = headline::run(headline::DEFAULT_DELTA, scale).expect("headline");
+    println!("{}", h.render((4000.0 * scale) as u64));
+    watch.stop();
+    println!("total bench wall time: {:.1}s", watch.elapsed_secs());
+}

@@ -1,0 +1,158 @@
+//! Micro-benchmarks of the hot paths: prediction, divergence, averaging,
+//! condition tracking (incremental vs naive), wire encoding, and — when
+//! artifacts are present — the XLA predict path vs native.
+//!
+//! ```sh
+//! cargo bench --bench micro
+//! ```
+
+use std::time::Duration;
+
+use kdol::bench_util::{bench_for, black_box, report};
+use kdol::kernel::{Kernel, Model, SvModel};
+use kdol::network::{DeltaDecoder, DeltaEncoder, Message};
+use kdol::protocol::configuration_divergence;
+use kdol::runtime::{pad_expansion, XlaRuntime};
+use kdol::ser::to_bytes;
+use kdol::util::{Pcg64, Rng};
+
+const BUDGET: Duration = Duration::from_millis(300);
+
+fn random_model(rng: &mut Pcg64, n: usize, d: usize) -> SvModel {
+    let mut m = SvModel::new(Kernel::Rbf { gamma: 0.25 }, d);
+    for i in 0..n {
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        m.push(i as u64 + 1, &x, rng.normal());
+    }
+    m
+}
+
+fn main() {
+    let mut rng = Pcg64::seeded(1);
+    let d = 18;
+
+    // --- prediction ---------------------------------------------------------
+    for tau in [50, 200, 800] {
+        let model = random_model(&mut rng, tau, d);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let r = bench_for(&format!("predict native tau={tau}"), BUDGET, || {
+            black_box(model.predict(black_box(&x)));
+        });
+        println!("{}", report(&r));
+    }
+
+    // --- divergence (sync-time cost) ----------------------------------------
+    for (m, tau) in [(4, 50), (8, 50), (32, 50)] {
+        let models: Vec<Model> = (0..m)
+            .map(|_| Model::Kernel(random_model(&mut rng, tau, d)))
+            .collect();
+        let refs: Vec<&Model> = models.iter().collect();
+        let r = bench_for(&format!("divergence m={m} tau={tau}"), BUDGET, || {
+            black_box(configuration_divergence(black_box(&refs)));
+        });
+        println!("{}", report(&r));
+    }
+
+    // --- averaging ------------------------------------------------------------
+    for m in [4, 32] {
+        let models: Vec<Model> = (0..m)
+            .map(|_| Model::Kernel(random_model(&mut rng, 50, d)))
+            .collect();
+        let refs: Vec<&Model> = models.iter().collect();
+        let r = bench_for(&format!("average m={m} tau=50"), BUDGET, || {
+            black_box(Model::average(black_box(&refs)));
+        });
+        println!("{}", report(&r));
+    }
+
+    // --- condition check: incremental vs naive -------------------------------
+    {
+        let f = random_model(&mut rng, 50, d);
+        let refm = random_model(&mut rng, 50, d);
+        let r = bench_for("norm_diff naive tau=50 (per-round if naive)", BUDGET, || {
+            black_box(f.distance_sq(black_box(&refm)));
+        });
+        println!("{}", report(&r));
+        // Incremental path cost ~ one reference evaluation.
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let r = bench_for("tracker incremental (one r(x) eval)", BUDGET, || {
+            black_box(refm.predict(black_box(&x)));
+        });
+        println!("{}", report(&r));
+    }
+
+    // --- wire encoding ----------------------------------------------------------
+    {
+        let model = random_model(&mut rng, 50, d);
+        let mut enc = DeltaEncoder::new();
+        let (coeffs, block) = enc.encode_upload(&model);
+        let msg = Message::ModelUpload {
+            learner: 0,
+            coeffs,
+            new_svs: block,
+        };
+        let r = bench_for("encode ModelUpload tau=50", BUDGET, || {
+            black_box(to_bytes(black_box(&msg)));
+        });
+        println!("{} ({} bytes)", report(&r), msg.wire_bytes());
+
+        let mut dec = DeltaDecoder::new(1);
+        let (coeffs, block) = match &msg {
+            Message::ModelUpload {
+                coeffs, new_svs, ..
+            } => (coeffs.clone(), new_svs.clone()),
+            _ => unreachable!(),
+        };
+        let template = SvModel::new(Kernel::Rbf { gamma: 0.25 }, d);
+        let r = bench_for("ingest upload tau=50", BUDGET, || {
+            black_box(
+                dec.ingest_upload(0, black_box(&coeffs), black_box(&block), &template)
+                    .unwrap(),
+            );
+        });
+        println!("{}", report(&r));
+    }
+
+    // --- XLA vs native predict (needs artifacts) --------------------------------
+    let dir = XlaRuntime::default_dir();
+    if dir.join("manifest.toml").exists() {
+        let rt = XlaRuntime::load(&dir, "susy").expect("load artifacts");
+        let spec = rt.spec("predict").unwrap().clone();
+        let model = random_model(&mut rng, spec.tau, spec.d);
+        let (svs, alphas) = pad_expansion(&model, spec.tau).unwrap();
+        let x: Vec<f32> = (0..spec.batch * spec.d)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let r = bench_for(
+            &format!("predict XLA batch={} tau={}", spec.batch, spec.tau),
+            BUDGET,
+            || {
+                black_box(rt.predict(&svs, &alphas, black_box(&x), 0.25).unwrap());
+            },
+        );
+        println!(
+            "{} ({:.2} us/query)",
+            report(&r),
+            r.mean.as_micros() as f64 / spec.batch as f64
+        );
+        let queries: Vec<Vec<f64>> = (0..spec.batch)
+            .map(|_| (0..spec.d).map(|_| rng.normal()).collect())
+            .collect();
+        let r = bench_for(
+            &format!("predict native batch={} tau={}", spec.batch, spec.tau),
+            BUDGET,
+            || {
+                for q in &queries {
+                    black_box(model.predict(black_box(q)));
+                }
+            },
+        );
+        println!(
+            "{} ({:.2} us/query)",
+            report(&r),
+            r.mean.as_micros() as f64 / spec.batch as f64
+        );
+    } else {
+        println!("(skipping XLA benches — run `make artifacts`)");
+    }
+}

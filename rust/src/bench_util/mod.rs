@@ -1,0 +1,109 @@
+//! Bench harness (offline replacement for `criterion`): warmup +
+//! measured iterations, reporting mean / p50 / p99 / throughput. Used by
+//! every target in `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    summarize(name, &mut times)
+}
+
+/// Auto-calibrating variant: picks an iteration count targeting
+/// ~`budget` of wall time (min 5 iterations).
+pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Calibrate with one run.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = ((budget.as_secs_f64() / once.as_secs_f64()) as usize).clamp(5, 10_000);
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+fn summarize(name: &str, times: &mut [Duration]) -> BenchResult {
+    times.sort();
+    let total: Duration = times.iter().sum();
+    let n = times.len();
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean: total / n as u32,
+        p50: times[n / 2],
+        p99: times[(n * 99 / 100).min(n - 1)],
+        min: times[0],
+    }
+}
+
+/// Pretty-print a result line (the format every bench target emits).
+pub fn report(r: &BenchResult) -> String {
+    format!(
+        "{:<48} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p99  ({} iters)",
+        r.name, r.mean, r.p50, r.p99, r.iters
+    )
+}
+
+/// Prevent the optimizer from discarding a value (stable-rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 20, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.p99 >= r.p50);
+        assert!(r.p50 >= r.min);
+    }
+
+    #[test]
+    fn bench_for_calibrates() {
+        let r = bench_for("fast", Duration::from_millis(10), || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters >= 5);
+    }
+
+    #[test]
+    fn report_formats() {
+        let r = bench("x", 1, 5, || {});
+        assert!(report(&r).contains("x"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Tiny argument parser: positional command words + `--flag value` /
+//! `--flag` pairs, with typed accessors and unknown-flag detection.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed flag value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParsedFlag {
+    /// `--flag` with no value.
+    Present,
+    /// `--flag value`.
+    Value(String),
+}
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    pub flags: BTreeMap<String, ParsedFlag>,
+}
+
+impl Args {
+    /// Parse argv (excluding the binary name). Flags may be boolean
+    /// (listed in `boolean_flags`) or take one value.
+    pub fn parse(argv: &[String], boolean_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if boolean_flags.contains(&name) {
+                    out.flags.insert(name.to_string(), ParsedFlag::Present);
+                } else {
+                    let v = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    out.flags
+                        .insert(name.to_string(), ParsedFlag::Value(v.clone()));
+                    i += 1;
+                }
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        match self.flags.get(name) {
+            Some(ParsedFlag::Value(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| anyhow!("--{name}: `{v}` is not a number"))
+            })
+            .transpose()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|_| anyhow!("--{name}: `{v}` is not an integer"))
+            })
+            .transpose()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<u64>()
+                    .map_err(|_| anyhow!("--{name}: `{v}` is not an integer"))
+            })
+            .transpose()
+    }
+
+    /// Error on flags outside the allowed set (catches typos).
+    pub fn reject_unknown(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (see `kdol help`)");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_positionals_and_flags() {
+        let a = Args::parse(&argv("bench fig1 --scale 0.5 --divergence"), &["divergence"]).unwrap();
+        assert_eq!(a.positionals, vec!["bench", "fig1"]);
+        assert_eq!(a.get("scale"), Some("0.5"));
+        assert!(a.has("divergence"));
+        assert_eq!(a.get_f64("scale").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv("run --delta"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&argv("run --delta abc"), &[]).unwrap();
+        assert!(a.get_f64("delta").is_err());
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = Args::parse(&argv("run --typo 1"), &[]).unwrap();
+        assert!(a.reject_unknown(&["delta"]).is_err());
+        assert!(a.reject_unknown(&["typo"]).is_ok());
+    }
+}

@@ -1,0 +1,231 @@
+//! Subcommand implementations behind the CLI.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::config::{ExperimentConfig, ProtocolConfig};
+use crate::experiments::{fig1, fig2, headline, runner, sweeps};
+use crate::metrics::report::{comparison_table, series_csv, write_report};
+use crate::metrics::{EfficiencyReport, Outcome};
+
+pub fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(&argv, &["divergence", "help", "partial"])?;
+    match args.positionals.first().map(String::as_str) {
+        Some("run") => cmd_run(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("cluster") => cmd_cluster(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("help") | None => {
+            println!("{}", crate::cli::HELP);
+            Ok(())
+        }
+        Some(other) => bail!("unknown command `{other}` (see `kdol help`)"),
+    }
+}
+
+/// Apply shared CLI overrides onto a config.
+fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
+    if let Some(p) = args.get("protocol") {
+        cfg.protocol = match p {
+            "nosync" => ProtocolConfig::NoSync,
+            "continuous" => ProtocolConfig::Continuous,
+            "periodic" => ProtocolConfig::Periodic {
+                period: args.get_usize("period")?.unwrap_or(10),
+            },
+            "dynamic" => ProtocolConfig::Dynamic {
+                delta: args.get_f64("delta")?.unwrap_or(0.1),
+                check_period: args.get_usize("check-period")?.unwrap_or(1),
+            },
+            "dynamic-decay" => ProtocolConfig::DynamicDecay {
+                delta0: args.get_f64("delta")?.unwrap_or(1.0),
+                check_period: args.get_usize("check-period")?.unwrap_or(1),
+            },
+            "serial" => ProtocolConfig::Serial,
+            other => bail!("unknown protocol `{other}`"),
+        };
+        cfg.name = format!("{}-{}", cfg.name, cfg.protocol.label());
+    }
+    if let Some(n) = args.get_usize("learners")? {
+        cfg.learners = n;
+    }
+    if let Some(n) = args.get_usize("rounds")? {
+        cfg.rounds = n;
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        cfg.seed = s;
+    }
+    if args.has("partial") {
+        // Partial-sync refinement is implemented in the deterministic
+        // engine (the threaded cluster always escalates to full syncs).
+        cfg.partial_sync = true;
+    }
+    cfg.validate()
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::from_path(Path::new(path))?
+    } else {
+        match args.get("preset").unwrap_or("quickstart") {
+            "quickstart" => ExperimentConfig::quickstart(),
+            "fig1" => ExperimentConfig::fig1_kernel(ProtocolConfig::Continuous),
+            "fig2" => ExperimentConfig::fig2_kernel(ProtocolConfig::Periodic { period: 1 }),
+            other => bail!("unknown preset `{other}`"),
+        }
+    };
+    apply_overrides(&mut cfg, args)?;
+    Ok(cfg)
+}
+
+fn maybe_csv(args: &Args, outcomes: &[&Outcome]) -> Result<()> {
+    if let Some(path) = args.get("csv") {
+        write_report(Path::new(path), &series_csv(outcomes))?;
+        eprintln!("series written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    args.reject_unknown(&[
+        "config", "preset", "protocol", "delta", "period", "check-period", "learners", "rounds",
+        "seed", "csv", "divergence", "partial",
+    ])?;
+    let cfg = load_config(args)?;
+    let outcome = runner::run_experiment(&cfg)?;
+    println!("{}", comparison_table(&cfg.name, &[&outcome]));
+    if let ProtocolConfig::Dynamic { delta, .. } = cfg.protocol {
+        let rep = EfficiencyReport::evaluate(
+            &outcome,
+            cfg.learner.eta,
+            delta,
+            outcome.mean_svs as usize * cfg.learners,
+            cfg.data.dim(),
+            None,
+        );
+        for c in &rep.checks {
+            println!(
+                "  {:<38} measured {:>14.1}  bound {:>14.1}  [{}]",
+                c.name,
+                c.measured,
+                c.bound,
+                if c.holds() { "holds" } else { "VIOLATED" }
+            );
+        }
+    }
+    maybe_csv(args, &[&outcome])
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    args.reject_unknown(&["scale", "csv", "divergence"])?;
+    let scale = args.get_f64("scale")?.unwrap_or(1.0);
+    let target = args
+        .positionals
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("fig1");
+    let outcomes: Vec<Outcome> = match target {
+        "fig1" => fig1::run(&fig1::DEFAULT_DELTAS, 50, scale)?,
+        "fig2" => fig2::run(&fig2::DEFAULT_PERIODS, &fig2::DEFAULT_DELTAS, scale)?,
+        "headline" => {
+            let h = headline::run(headline::DEFAULT_DELTA, scale)?;
+            println!("{}", h.render((4000.0 * scale) as u64));
+            h.outcomes
+        }
+        "sweep-delta" => sweeps::sweep_delta(&[0.01, 0.05, 0.2, 0.8, 3.2], scale)?,
+        "sweep-tau" => sweeps::sweep_tau(&[10, 25, 50, 100, 200], 0.2, scale)?,
+        "sweep-checkperiod" => sweeps::sweep_check_period(&[1, 4, 16, 64], 0.05, scale)?,
+        "sweep-comp" => sweeps::sweep_compression(50, 0.2, scale)?,
+        "sweep-decay" => sweeps::sweep_decay(1.0, scale)?,
+        "sweep-rff" => sweeps::sweep_rff(50, 0.2, scale)?,
+        "sweep-partial" => sweeps::sweep_partial(0.2, scale)?,
+        "bounds" => return cmd_bounds(scale),
+        other => bail!("unknown bench target `{other}`"),
+    };
+    let refs: Vec<&Outcome> = outcomes.iter().collect();
+    println!("{}", comparison_table(target, &refs));
+    maybe_csv(args, &refs)
+}
+
+/// bound-comm: measured communication/violations vs the Prop. 6 / Thm. 7
+/// analytic bounds, on a dynamic-kernel run.
+fn cmd_bounds(scale: f64) -> Result<()> {
+    let mut cfg = ExperimentConfig::fig1_dynamic_kernel_compressed(0.2, 50);
+    cfg.rounds = ((cfg.rounds as f64 * scale) as usize).max(50);
+    let delta = 0.2;
+    let outcome = runner::run_experiment(&cfg)?;
+    let mut serial_cfg = cfg.clone();
+    serial_cfg.protocol = ProtocolConfig::Serial;
+    let serial = runner::run_serial(&serial_cfg);
+    let rep = EfficiencyReport::evaluate(
+        &outcome,
+        cfg.learner.eta,
+        delta,
+        (outcome.mean_svs as usize + 1) * cfg.learners,
+        cfg.data.dim(),
+        Some(serial.cumulative_loss),
+    );
+    println!("== bounds (Prop. 6 / Thm. 7 / Def. 1) ==");
+    for c in &rep.checks {
+        println!(
+            "{:<40} measured {:>16.1}  bound {:>16.1}  slack {:>8.2}x  [{}]",
+            c.name,
+            c.measured,
+            c.bound,
+            c.slack(),
+            if c.holds() { "holds" } else { "VIOLATED" }
+        );
+    }
+    if let Some(r) = rep.consistency_ratio {
+        println!("consistency L_D(T,m) / L_serial(mT)      = {r:.3}");
+    }
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    args.reject_unknown(&[
+        "config", "preset", "protocol", "delta", "period", "check-period", "learners", "rounds",
+        "seed",
+    ])?;
+    let cfg = load_config(args)?;
+    let out = crate::coordinator::run_cluster(&cfg)?;
+    println!("== cluster run: {} ==", cfg.name);
+    println!("cumulative loss  : {:.2}", out.cum_loss);
+    println!("cumulative error : {:.2}", out.cum_error);
+    println!("total bytes      : {}", out.comm.total_bytes());
+    println!("messages         : {}", out.comm.total_msgs());
+    println!("syncs            : {}", out.comm.syncs);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.reject_unknown(&["artifacts", "variant", "requests"])?;
+    let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+    let variant = args.get("variant").unwrap_or("susy").to_string();
+    let requests = args.get_usize("requests")?.unwrap_or(1024);
+    crate::cli::serve_demo(Path::new(&dir), &variant, requests)
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    args.reject_unknown(&["artifacts", "variant"])?;
+    let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+    let specs = crate::runtime::load_manifest(Path::new(&dir))?;
+    println!("{} artifacts in {dir}:", specs.len());
+    for s in &specs {
+        println!(
+            "  {:<28} fn={:<12} m={:<3} tau={:<4} d={:<3} batch={:<3} outputs={}",
+            s.name, s.fn_name, s.m, s.tau, s.d, s.batch, s.outputs
+        );
+    }
+    // Compile every variant found to prove they load.
+    let mut variants: Vec<String> = specs.iter().map(|s| s.variant.clone()).collect();
+    variants.sort();
+    variants.dedup();
+    for v in variants {
+        let rt = crate::runtime::XlaRuntime::load(Path::new(&dir), &v)?;
+        println!("variant `{v}` compiled OK: {rt:?}");
+    }
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! Command-line interface (hand-rolled — no `clap` offline): subcommands,
+//! long flags with values, and help text.
+
+mod args;
+pub mod commands;
+
+pub use args::{Args, ParsedFlag};
+
+pub const HELP: &str = "\
+kdol — communication-efficient distributed online learning with kernels
+
+USAGE:
+    kdol <COMMAND> [FLAGS]
+
+COMMANDS:
+    run           Run one experiment (config file or preset + overrides)
+    bench         Reproduce a paper figure / ablation table
+    cluster       Run the threaded leader/worker cluster runtime
+    serve         Batched prediction service demo over the XLA hot path
+    artifacts     Validate the AOT artifacts (manifest + PJRT compile)
+    help          Show this message
+
+RUN FLAGS:
+    --config <file>        TOML experiment config
+    --preset <name>        quickstart | fig1 | fig2           [quickstart]
+    --protocol <kind>      nosync|continuous|periodic|dynamic|serial
+    --delta <f>            divergence threshold (dynamic)
+    --period <n>           sync period (periodic)
+    --learners <n>         number of local learners
+    --rounds <n>           rounds per learner
+    --seed <n>             RNG seed
+    --csv <file>           write the over-time series as CSV
+    --divergence           record true divergence at syncs
+    --partial              enable partial-sync (subset balancing) refinement
+
+BENCH FLAGS:
+    bench <target>         fig1 | fig2 | headline | sweep-delta |
+                           sweep-tau | sweep-checkperiod | sweep-comp | bounds
+    --scale <f>            fraction of the paper horizon        [1.0]
+    --csv <file>           write series CSV
+
+SERVE FLAGS:
+    --artifacts <dir>      artifacts directory                  [artifacts]
+    --variant <name>       shape variant                        [susy]
+    --requests <n>         number of synthetic requests         [1024]
+
+EXAMPLES:
+    kdol run --preset fig1 --protocol dynamic --delta 0.2
+    kdol bench fig2 --scale 0.25 --csv fig2.csv
+    kdol serve --requests 4096
+";
+
+/// Top-level entry used by main.rs; returns the process exit code.
+pub fn main_with_args(argv: Vec<String>) -> i32 {
+    crate::util::logging::init();
+    match commands::dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+/// Serving demo used by `kdol serve`: stream synthetic SUSY-like queries
+/// through the batched XLA prediction service and report latency.
+pub fn serve_demo(dir: &std::path::Path, variant: &str, requests: usize) -> anyhow::Result<()> {
+    use crate::config::{DataConfig, ExperimentConfig};
+    use crate::coordinator::PredictionService;
+    use crate::data::build_stream;
+    use crate::runtime::XlaRuntime;
+    use crate::util::Pcg64;
+    use std::time::Instant;
+
+    // Train a small model quickly so the service scores something real.
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.learners = 1;
+    cfg.rounds = 300;
+    let gamma = match cfg.learner.kernel {
+        crate::config::KernelConfig::Rbf { gamma } => gamma,
+        _ => anyhow::bail!("serve demo needs an RBF model"),
+    };
+    // Serve over the artifact's native geometry.
+    let runtime = XlaRuntime::load(dir, variant)?;
+    let spec = runtime.spec("predict")?.clone();
+    cfg.data = match variant {
+        "stock" => DataConfig::Stock {
+            stocks: spec.d,
+            noise: 0.02,
+        },
+        _ => DataConfig::Susy { noise: 0.05 },
+    };
+    anyhow::ensure!(cfg.data.dim() == spec.d, "variant dim mismatch");
+    cfg.learner.compression = crate::config::CompressionConfig::Truncation { tau: spec.tau };
+    if !cfg.data.is_classification() {
+        cfg.learner.loss = crate::config::LossKind::Squared;
+    }
+    let outcome_model = {
+        let mut engine = crate::protocol::ProtocolEngine::new(cfg.clone())?;
+        for _ in 0..cfg.rounds {
+            engine.step();
+        }
+        engine
+            .learner(0)
+            .snapshot()
+            .as_kernel()
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("kernel model expected"))?
+    };
+
+    let mut svc = PredictionService::new(Some(runtime), outcome_model, gamma)?;
+    let mut stream = build_stream(&cfg.data, Pcg64::seeded(99));
+    let t0 = Instant::now();
+    let mut scored = 0usize;
+    let mut batches = 0usize;
+    for _ in 0..requests {
+        let (x, _) = stream.next_example();
+        if let Some(out) = svc.submit(x)? {
+            scored += out.len();
+            batches += 1;
+        }
+    }
+    scored += svc.flush()?.len();
+    let dt = t0.elapsed();
+    println!("== kdol serve ({variant}) ==");
+    println!("requests        : {requests}");
+    println!("scored          : {scored}");
+    println!("batch size      : {}", svc.batch_size());
+    println!("xla batches     : {}", svc.xla_batches);
+    println!("native batches  : {}", svc.native_batches);
+    println!("wall time       : {dt:?}");
+    println!(
+        "throughput      : {:.0} req/s, mean latency {:.1} us/req over {} full batches",
+        requests as f64 / dt.as_secs_f64(),
+        dt.as_micros() as f64 / requests as f64,
+        batches
+    );
+    Ok(())
+}

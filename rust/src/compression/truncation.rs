@@ -1,0 +1,59 @@
+//! Truncation compression [Kivinen et al. 2004]: remove the support vector
+//! with the smallest |coefficient|. With NORMA's multiplicative decay the
+//! smallest coefficient is (up to new-SV magnitudes) the oldest one, and
+//! the removal error is |alpha| * sqrt(k(x, x)).
+
+use crate::kernel::SvModel;
+use crate::learner::RemovedSv;
+
+/// Remove the smallest-|alpha| support vector. Returns the removed SV and
+/// the exact RKHS perturbation `||f_after - f_before|| = |alpha| sqrt(k(x,x))`.
+pub fn truncate_smallest(model: &mut SvModel) -> (RemovedSv, f64) {
+    assert!(!model.is_empty());
+    let alpha = model.alpha();
+    let mut min_i = 0;
+    let mut min_v = alpha[0].abs();
+    for (i, a) in alpha.iter().enumerate().skip(1) {
+        if a.abs() < min_v {
+            min_v = a.abs();
+            min_i = i;
+        }
+    }
+    let x = model.sv(min_i).to_vec();
+    let coeff = model.alpha()[min_i];
+    let err = coeff.abs() * model.kernel.eval_self(&x).sqrt();
+    model.swap_remove(min_i);
+    (RemovedSv { x, coeff }, err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Kernel;
+
+    #[test]
+    fn removes_smallest_and_reports_error() {
+        let mut f = SvModel::new(Kernel::Rbf { gamma: 1.0 }, 1);
+        f.push(1, &[0.0], 0.5);
+        f.push(2, &[1.0], -0.01);
+        f.push(3, &[2.0], 0.2);
+        let before = f.clone();
+        let (removed, err) = truncate_smallest(&mut f);
+        assert_eq!(removed.coeff, -0.01);
+        assert_eq!(removed.x, vec![1.0]);
+        assert!((err - 0.01).abs() < 1e-12);
+        assert_eq!(f.len(), 2);
+        // Exact perturbation check: ||f_after - f_before|| == err.
+        let real_err = f.distance_sq(&before).sqrt();
+        assert!((real_err - err).abs() < 1e-9, "{real_err} vs {err}");
+    }
+
+    #[test]
+    fn error_scales_with_kernel_self_value() {
+        // Polynomial kernel: k(x,x) != 1, the sqrt matters.
+        let mut f = SvModel::new(Kernel::Polynomial { degree: 2, c: 0.0 }, 1);
+        f.push(1, &[2.0], 0.5); // k(x,x) = 16, sqrt = 4
+        let (_, err) = truncate_smallest(&mut f);
+        assert!((err - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! Experiment configuration: a TOML-subset parser (offline replacement for
+//! `serde` + `toml`) plus the typed experiment schema every entry point of
+//! the system — CLI, benches, tests, examples — is driven by.
+
+mod schema;
+pub mod toml;
+
+pub use schema::{
+    CompressionConfig, DataConfig, ExperimentConfig, KernelConfig, LearnerConfig, LossKind,
+    ProtocolConfig, RuntimeBackend,
+};
+pub use toml::{parse as parse_toml, Table, TomlError, Value};

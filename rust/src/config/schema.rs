@@ -1,0 +1,665 @@
+//! Typed experiment schema. Every run of the system — CLI, benches,
+//! integration tests, examples — is described by an [`ExperimentConfig`],
+//! loadable from a TOML file or built from the named presets that mirror
+//! the paper's experimental setups.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::toml::{self, Table, Value};
+
+/// Which compute backend executes the kernel algebra.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RuntimeBackend {
+    /// Pure-Rust kernel math (always available; also the oracle).
+    Native,
+    /// PJRT CPU client executing the AOT artifacts from `artifacts/`.
+    Xla { artifacts_dir: String, variant: String },
+}
+
+/// Loss function of the online learner.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LossKind {
+    /// Hinge loss max(0, 1 - y f(x)) — classification.
+    Hinge,
+    /// Logistic loss ln(1 + exp(-y f(x))) — classification.
+    Logistic,
+    /// Squared loss 1/2 (f(x) - y)^2 — regression.
+    Squared,
+    /// eps-insensitive |f(x) - y|_eps — regression (PA-style).
+    EpsInsensitive(f64),
+}
+
+/// Kernel function of the hypothesis space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KernelConfig {
+    /// Plain linear models w^T x (the 2014 paper's setting).
+    Linear,
+    /// Gaussian RBF k(x, z) = exp(-gamma ||x - z||^2).
+    Rbf { gamma: f64 },
+    /// Random-Fourier-Features approximation of the RBF kernel with `dim`
+    /// features — a *fixed-size* model (paper §4 future work; Rahimi &
+    /// Recht 2007). Messages are constant-size like linear models.
+    Rff { gamma: f64, dim: usize },
+}
+
+/// Model-compression scheme bounding the support-vector count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CompressionConfig {
+    /// Unbounded support set (model grows with T).
+    None,
+    /// Truncation [Kivinen et al. 2004]: drop the oldest SV beyond `tau`
+    /// (its coefficient has decayed the most under (1 - eta*lambda) decay).
+    Truncation { tau: usize },
+    /// Projection [Orabona et al. 2009]: project a dropped SV onto the
+    /// span of the survivors instead of discarding its contribution.
+    Projection { tau: usize },
+}
+
+impl CompressionConfig {
+    /// Budget tau if the scheme bounds the model size.
+    pub fn budget(&self) -> Option<usize> {
+        match self {
+            CompressionConfig::None => None,
+            CompressionConfig::Truncation { tau } | CompressionConfig::Projection { tau } => {
+                Some(*tau)
+            }
+        }
+    }
+}
+
+/// The online learning algorithm `A = (H, phi, l)` run at each node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LearnerConfig {
+    /// Learning rate eta (update magnitude; Prop. 6's drift constant).
+    pub eta: f64,
+    /// Regularization lambda (coefficient decay (1 - eta*lambda) per step).
+    pub lambda: f64,
+    pub loss: LossKind,
+    pub kernel: KernelConfig,
+    pub compression: CompressionConfig,
+    /// Passive-aggressive updates (loss-proportional with gamma = 1 /
+    /// (||x||^2 + 1/(2C))) instead of plain SGD.
+    pub passive_aggressive: bool,
+}
+
+/// Synchronization operator sigma of the distributed protocol.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ProtocolConfig {
+    /// No communication at all — the m-isolated-learners extreme.
+    NoSync,
+    /// sigma_1: average every round.
+    Continuous,
+    /// sigma_b: average every `period` rounds.
+    Periodic { period: usize },
+    /// sigma_Delta: average only on local-condition violation (the paper's
+    /// contribution). `check_period` > 1 enables the §4 mini-batch check
+    /// that bounds peak communication.
+    Dynamic { delta: f64, check_period: usize },
+    /// sigma_{Delta_t} with the decaying threshold Delta_t = delta0 / sqrt(t)
+    /// — the schedule the paper notes achieves consistency for static
+    /// target distributions (Sec. 3, after Thm. 4).
+    DynamicDecay { delta0: f64, check_period: usize },
+    /// Serial oracle: all mT examples processed by one central learner.
+    Serial,
+}
+
+impl ProtocolConfig {
+    pub fn label(&self) -> String {
+        match self {
+            ProtocolConfig::NoSync => "nosync".into(),
+            ProtocolConfig::Continuous => "continuous".into(),
+            ProtocolConfig::Periodic { period } => format!("periodic(b={period})"),
+            ProtocolConfig::Dynamic {
+                delta,
+                check_period,
+            } => {
+                if *check_period > 1 {
+                    format!("dynamic(Δ={delta},b={check_period})")
+                } else {
+                    format!("dynamic(Δ={delta})")
+                }
+            }
+            ProtocolConfig::DynamicDecay { delta0, .. } => {
+                format!("dynamic-decay(Δ0={delta0})")
+            }
+            ProtocolConfig::Serial => "serial".into(),
+        }
+    }
+}
+
+/// Input stream configuration (all synthetic — see DESIGN.md §5).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DataConfig {
+    /// SUSY-like binary classification: 8 correlated "low-level" features
+    /// per class + 10 derived nonlinear features; not linearly separable.
+    Susy { noise: f64 },
+    /// Stock nowcasting regression: latent market + sector factors,
+    /// target = saturating nonlinear function of correlated lagged prices.
+    Stock { stocks: usize, noise: f64 },
+    /// Rotating-hyperplane drift benchmark (linear-friendly, drifting).
+    Hyperplane { dim: usize, drift: f64 },
+    /// Gaussian-mixture XOR-style classification (kernel-friendly).
+    Mixture { dim: usize, separation: f64 },
+}
+
+impl DataConfig {
+    /// Input dimensionality of the generated feature vectors.
+    pub fn dim(&self) -> usize {
+        match self {
+            DataConfig::Susy { .. } => 18,
+            DataConfig::Stock { stocks, .. } => *stocks,
+            DataConfig::Hyperplane { dim, .. } => *dim,
+            DataConfig::Mixture { dim, .. } => *dim,
+        }
+    }
+
+    /// Whether targets are +-1 labels (true) or real values (false).
+    pub fn is_classification(&self) -> bool {
+        !matches!(self, DataConfig::Stock { .. })
+    }
+}
+
+/// A full experiment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    /// Number of local learners m.
+    pub learners: usize,
+    /// Rounds T (each learner sees one example per round).
+    pub rounds: usize,
+    pub data: DataConfig,
+    pub learner: LearnerConfig,
+    pub protocol: ProtocolConfig,
+    pub backend: RuntimeBackend,
+    /// Record cumulative metrics every this many rounds (for the
+    /// over-time curves of Fig 1b / Fig 2b).
+    pub record_every: usize,
+    /// Partial-synchronization refinement (the local-balancing scheme of
+    /// [10] that Sec. 2 references): on violation, the coordinator first
+    /// tries to rebalance a *subset* of learners around the violators —
+    /// if the subset average satisfies `||avg_B - r||^2 <= Delta` the
+    /// members adopt it and the shared reference stays valid, so the rest
+    /// of the cluster neither hears about it nor transmits anything. Only
+    /// when no subset resolves does it escalate to a full sync.
+    pub partial_sync: bool,
+}
+
+impl ExperimentConfig {
+    // ----- presets mirroring the paper's setups ---------------------------
+
+    /// Fig 1 base geometry: SUSY-like, m = 4, 1000 instances per learner.
+    fn fig1_base(name: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            name: name.into(),
+            seed: 20190613,
+            learners: 4,
+            rounds: 1000,
+            data: DataConfig::Susy { noise: 0.08 },
+            learner: LearnerConfig {
+                eta: 0.35,
+                lambda: 1e-3,
+                loss: LossKind::Hinge,
+                kernel: KernelConfig::Rbf { gamma: 0.25 },
+                compression: CompressionConfig::None,
+                passive_aggressive: false,
+            },
+            protocol: ProtocolConfig::Continuous,
+            backend: RuntimeBackend::Native,
+            record_every: 10,
+            partial_sync: false,
+        }
+    }
+
+    pub fn fig1_linear(protocol: ProtocolConfig) -> ExperimentConfig {
+        let mut c = Self::fig1_base(&format!("fig1-linear-{}", protocol.label()));
+        c.learner.kernel = KernelConfig::Linear;
+        c.learner.eta = 0.05;
+        c.protocol = protocol;
+        c
+    }
+
+    pub fn fig1_kernel(protocol: ProtocolConfig) -> ExperimentConfig {
+        let mut c = Self::fig1_base(&format!("fig1-kernel-{}", protocol.label()));
+        c.protocol = protocol;
+        c
+    }
+
+    pub fn fig1_dynamic_kernel(delta: f64) -> ExperimentConfig {
+        Self::fig1_kernel(ProtocolConfig::Dynamic {
+            delta,
+            check_period: 1,
+        })
+    }
+
+    pub fn fig1_dynamic_kernel_compressed(delta: f64, tau: usize) -> ExperimentConfig {
+        let mut c = Self::fig1_dynamic_kernel(delta);
+        c.name = format!("fig1-kernel-trunc{tau}-dynamic(Δ={delta})");
+        c.learner.compression = CompressionConfig::Truncation { tau };
+        c
+    }
+
+    /// Fig 2 base geometry: stock nowcasting, m = 32, SGD, Gaussian kernel
+    /// truncated to 50 SVs (paper's setting).
+    fn fig2_base(name: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            name: name.into(),
+            seed: 20190802,
+            learners: 32,
+            rounds: 4000,
+            data: DataConfig::Stock {
+                stocks: 32,
+                noise: 0.02,
+            },
+            learner: LearnerConfig {
+                eta: 0.5,
+                lambda: 0.01,
+                loss: LossKind::Squared,
+                kernel: KernelConfig::Rbf { gamma: 0.5 },
+                compression: CompressionConfig::Truncation { tau: 50 },
+                passive_aggressive: false,
+            },
+            protocol: ProtocolConfig::Periodic { period: 1 },
+            backend: RuntimeBackend::Native,
+            record_every: 20,
+            partial_sync: false,
+        }
+    }
+
+    pub fn fig2_kernel(protocol: ProtocolConfig) -> ExperimentConfig {
+        let mut c = Self::fig2_base(&format!("fig2-kernel-{}", protocol.label()));
+        c.protocol = protocol;
+        c
+    }
+
+    pub fn fig2_linear(protocol: ProtocolConfig) -> ExperimentConfig {
+        let mut c = Self::fig2_base(&format!("fig2-linear-{}", protocol.label()));
+        // Tuned like the paper's dynamic linear system (they used a large
+        // eta = 1.0): the step is big enough that the linear model — which
+        // cannot fit the nonlinear target — keeps moving and keeps
+        // violating its local condition. That is exactly why the paper's
+        // linear baseline both errs ~18x more *and* keeps communicating
+        // while the dynamic kernel system quiesces. The eps-insensitive
+        // loss bounds the subgradient so the large step stays finite.
+        c.learner.kernel = KernelConfig::Linear;
+        c.learner.eta = 0.3;
+        c.learner.lambda = 0.02;
+        c.learner.loss = LossKind::EpsInsensitive(0.01);
+        c.learner.compression = CompressionConfig::None;
+        c.protocol = protocol;
+        c
+    }
+
+    /// Quickstart: small, fast, kernel + dynamic.
+    pub fn quickstart() -> ExperimentConfig {
+        let mut c = Self::fig1_dynamic_kernel_compressed(0.5, 32);
+        c.name = "quickstart".into();
+        c.learners = 2;
+        c.rounds = 200;
+        c
+    }
+
+    // ----- validation ------------------------------------------------------
+
+    pub fn validate(&self) -> Result<()> {
+        if self.learners == 0 {
+            bail!("learners must be >= 1");
+        }
+        if self.rounds == 0 {
+            bail!("rounds must be >= 1");
+        }
+        if self.record_every == 0 {
+            bail!("record_every must be >= 1");
+        }
+        if !(self.learner.eta > 0.0) {
+            bail!("eta must be > 0");
+        }
+        if self.learner.lambda < 0.0 {
+            bail!("lambda must be >= 0");
+        }
+        match self.learner.kernel {
+            KernelConfig::Rbf { gamma } if !(gamma >= 0.0) => bail!("gamma must be >= 0"),
+            KernelConfig::Rff { gamma, dim } => {
+                if !(gamma >= 0.0) {
+                    bail!("gamma must be >= 0");
+                }
+                if dim == 0 {
+                    bail!("rff feature dim must be >= 1");
+                }
+            }
+            _ => {}
+        }
+        if let Some(tau) = self.learner.compression.budget() {
+            if tau == 0 {
+                bail!("compression budget tau must be >= 1");
+            }
+        }
+        match self.protocol {
+            ProtocolConfig::Periodic { period } if period == 0 => {
+                bail!("periodic protocol needs period >= 1")
+            }
+            ProtocolConfig::Dynamic { delta, check_period } => {
+                if !(delta >= 0.0) {
+                    bail!("divergence threshold must be >= 0");
+                }
+                if check_period == 0 {
+                    bail!("check_period must be >= 1");
+                }
+            }
+            ProtocolConfig::DynamicDecay { delta0, check_period } => {
+                if !(delta0 > 0.0) {
+                    bail!("delta0 must be > 0");
+                }
+                if check_period == 0 {
+                    bail!("check_period must be >= 1");
+                }
+            }
+            _ => {}
+        }
+        if matches!(
+            self.learner.kernel,
+            KernelConfig::Linear | KernelConfig::Rff { .. }
+        ) && self.learner.compression.budget().is_some()
+        {
+            bail!("compression only applies to support-vector models");
+        }
+        match (&self.data, self.learner.loss) {
+            (d, LossKind::Squared) | (d, LossKind::EpsInsensitive(_)) if d.is_classification() => {
+                bail!("regression loss on a classification stream")
+            }
+            (d, LossKind::Hinge) | (d, LossKind::Logistic) if !d.is_classification() => {
+                bail!("classification loss on a regression stream")
+            }
+            _ => Ok(()),
+        }
+    }
+
+    // ----- TOML loading ----------------------------------------------------
+
+    /// Parse a config from TOML text.
+    pub fn from_toml(text: &str) -> Result<ExperimentConfig> {
+        let t = toml::parse(text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_table(&t)
+    }
+
+    /// Load from a file path.
+    pub fn from_path(path: &std::path::Path) -> Result<ExperimentConfig> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    fn from_table(t: &Table) -> Result<ExperimentConfig> {
+        let mut cfg = match get_str(t, "preset") {
+            Some("fig1") => Self::fig1_kernel(ProtocolConfig::Continuous),
+            Some("fig2") => Self::fig2_kernel(ProtocolConfig::Periodic { period: 1 }),
+            Some("quickstart") | None => Self::quickstart(),
+            Some(other) => bail!("unknown preset `{other}`"),
+        };
+        if let Some(v) = get_str(t, "name") {
+            cfg.name = v.to_string();
+        }
+        if let Some(v) = get_int(t, "seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = get_int(t, "learners") {
+            cfg.learners = v as usize;
+        }
+        if let Some(v) = get_int(t, "rounds") {
+            cfg.rounds = v as usize;
+        }
+        if let Some(v) = get_int(t, "record_every") {
+            cfg.record_every = v as usize;
+        }
+        if let Some(v) = t.get("partial_sync").and_then(Value::as_bool) {
+            cfg.partial_sync = v;
+        }
+        if let Some(d) = t.get("data").and_then(Value::as_table) {
+            cfg.data = parse_data(d)?;
+        }
+        if let Some(l) = t.get("learner").and_then(Value::as_table) {
+            cfg.learner = parse_learner(l, &cfg.learner)?;
+        }
+        if let Some(p) = t.get("protocol").and_then(Value::as_table) {
+            cfg.protocol = parse_protocol(p)?;
+        }
+        if let Some(r) = t.get("runtime").and_then(Value::as_table) {
+            cfg.backend = parse_backend(r)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+fn get_str<'a>(t: &'a Table, k: &str) -> Option<&'a str> {
+    t.get(k).and_then(Value::as_str)
+}
+fn get_int(t: &Table, k: &str) -> Option<i64> {
+    t.get(k).and_then(Value::as_int)
+}
+fn get_float(t: &Table, k: &str) -> Option<f64> {
+    t.get(k).and_then(Value::as_float)
+}
+
+fn parse_data(t: &Table) -> Result<DataConfig> {
+    match get_str(t, "kind") {
+        Some("susy") => Ok(DataConfig::Susy {
+            noise: get_float(t, "noise").unwrap_or(0.08),
+        }),
+        Some("stock") => Ok(DataConfig::Stock {
+            stocks: get_int(t, "stocks").unwrap_or(32) as usize,
+            noise: get_float(t, "noise").unwrap_or(0.02),
+        }),
+        Some("hyperplane") => Ok(DataConfig::Hyperplane {
+            dim: get_int(t, "dim").unwrap_or(10) as usize,
+            drift: get_float(t, "drift").unwrap_or(0.0),
+        }),
+        Some("mixture") => Ok(DataConfig::Mixture {
+            dim: get_int(t, "dim").unwrap_or(2) as usize,
+            separation: get_float(t, "separation").unwrap_or(2.0),
+        }),
+        other => bail!("unknown data kind {other:?}"),
+    }
+}
+
+fn parse_learner(t: &Table, base: &LearnerConfig) -> Result<LearnerConfig> {
+    let mut l = base.clone();
+    if let Some(v) = get_float(t, "eta") {
+        l.eta = v;
+    }
+    if let Some(v) = get_float(t, "lambda") {
+        l.lambda = v;
+    }
+    if let Some(v) = t.get("passive_aggressive").and_then(Value::as_bool) {
+        l.passive_aggressive = v;
+    }
+    if let Some(kind) = get_str(t, "kernel") {
+        l.kernel = match kind {
+            "linear" => KernelConfig::Linear,
+            "rbf" => KernelConfig::Rbf {
+                gamma: get_float(t, "gamma").unwrap_or(1.0),
+            },
+            "rff" => KernelConfig::Rff {
+                gamma: get_float(t, "gamma").unwrap_or(1.0),
+                dim: get_int(t, "rff_dim").unwrap_or(256) as usize,
+            },
+            other => bail!("unknown kernel `{other}`"),
+        };
+    }
+    if let Some(loss) = get_str(t, "loss") {
+        l.loss = match loss {
+            "hinge" => LossKind::Hinge,
+            "logistic" => LossKind::Logistic,
+            "squared" => LossKind::Squared,
+            "eps_insensitive" => LossKind::EpsInsensitive(get_float(t, "eps").unwrap_or(0.1)),
+            other => bail!("unknown loss `{other}`"),
+        };
+    }
+    if let Some(comp) = get_str(t, "compression") {
+        let tau = get_int(t, "tau").unwrap_or(50) as usize;
+        l.compression = match comp {
+            "none" => CompressionConfig::None,
+            "truncation" => CompressionConfig::Truncation { tau },
+            "projection" => CompressionConfig::Projection { tau },
+            other => bail!("unknown compression `{other}`"),
+        };
+    }
+    Ok(l)
+}
+
+fn parse_protocol(t: &Table) -> Result<ProtocolConfig> {
+    match get_str(t, "kind") {
+        Some("nosync") => Ok(ProtocolConfig::NoSync),
+        Some("continuous") => Ok(ProtocolConfig::Continuous),
+        Some("periodic") => Ok(ProtocolConfig::Periodic {
+            period: get_int(t, "period").unwrap_or(10) as usize,
+        }),
+        Some("dynamic") => Ok(ProtocolConfig::Dynamic {
+            delta: get_float(t, "delta").unwrap_or(0.1),
+            check_period: get_int(t, "check_period").unwrap_or(1) as usize,
+        }),
+        Some("dynamic-decay") => Ok(ProtocolConfig::DynamicDecay {
+            delta0: get_float(t, "delta0").unwrap_or(1.0),
+            check_period: get_int(t, "check_period").unwrap_or(1) as usize,
+        }),
+        Some("serial") => Ok(ProtocolConfig::Serial),
+        other => bail!("unknown protocol kind {other:?}"),
+    }
+}
+
+fn parse_backend(t: &Table) -> Result<RuntimeBackend> {
+    match get_str(t, "backend") {
+        Some("native") | None => Ok(RuntimeBackend::Native),
+        Some("xla") => Ok(RuntimeBackend::Xla {
+            artifacts_dir: get_str(t, "artifacts_dir").unwrap_or("artifacts").to_string(),
+            variant: get_str(t, "variant").unwrap_or("susy").to_string(),
+        }),
+        Some(other) => bail!("unknown backend `{other}`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for cfg in [
+            ExperimentConfig::quickstart(),
+            ExperimentConfig::fig1_linear(ProtocolConfig::Continuous),
+            ExperimentConfig::fig1_kernel(ProtocolConfig::NoSync),
+            ExperimentConfig::fig1_dynamic_kernel(0.2),
+            ExperimentConfig::fig1_dynamic_kernel_compressed(0.2, 50),
+            ExperimentConfig::fig2_kernel(ProtocolConfig::Dynamic {
+                delta: 0.05,
+                check_period: 1,
+            }),
+            ExperimentConfig::fig2_linear(ProtocolConfig::Periodic { period: 8 }),
+        ] {
+            cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+        }
+    }
+
+    #[test]
+    fn toml_roundtrip_overrides() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+preset = "fig1"
+name = "custom"
+learners = 8
+rounds = 50
+
+[learner]
+eta = 0.2
+kernel = "rbf"
+gamma = 0.7
+compression = "truncation"
+tau = 16
+
+[protocol]
+kind = "dynamic"
+delta = 0.33
+check_period = 4
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "custom");
+        assert_eq!(cfg.learners, 8);
+        assert_eq!(cfg.rounds, 50);
+        assert_eq!(cfg.learner.eta, 0.2);
+        assert_eq!(cfg.learner.kernel, KernelConfig::Rbf { gamma: 0.7 });
+        assert_eq!(
+            cfg.learner.compression,
+            CompressionConfig::Truncation { tau: 16 }
+        );
+        assert_eq!(
+            cfg.protocol,
+            ProtocolConfig::Dynamic {
+                delta: 0.33,
+                check_period: 4
+            }
+        );
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ExperimentConfig::quickstart();
+        c.learners = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::quickstart();
+        c.learner.eta = -1.0;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::quickstart();
+        c.protocol = ProtocolConfig::Dynamic {
+            delta: -0.5,
+            check_period: 1,
+        };
+        assert!(c.validate().is_err());
+
+        // Loss/stream mismatch.
+        let mut c = ExperimentConfig::quickstart();
+        c.learner.loss = LossKind::Squared;
+        assert!(c.validate().is_err());
+
+        // Compression on linear model.
+        let mut c = ExperimentConfig::fig1_linear(ProtocolConfig::Continuous);
+        c.learner.compression = CompressionConfig::Truncation { tau: 8 };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn protocol_labels() {
+        assert_eq!(ProtocolConfig::NoSync.label(), "nosync");
+        assert_eq!(
+            ProtocolConfig::Periodic { period: 8 }.label(),
+            "periodic(b=8)"
+        );
+        assert!(ProtocolConfig::Dynamic {
+            delta: 0.1,
+            check_period: 1
+        }
+        .label()
+        .contains("dynamic"));
+    }
+
+    #[test]
+    fn data_dims() {
+        assert_eq!(DataConfig::Susy { noise: 0.0 }.dim(), 18);
+        assert_eq!(
+            DataConfig::Stock {
+                stocks: 32,
+                noise: 0.0
+            }
+            .dim(),
+            32
+        );
+        assert!(DataConfig::Susy { noise: 0.0 }.is_classification());
+        assert!(!DataConfig::Stock {
+            stocks: 4,
+            noise: 0.0
+        }
+        .is_classification());
+    }
+}

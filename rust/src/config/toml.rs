@@ -1,0 +1,369 @@
+//! A small TOML-subset parser — enough for KDOL's config files and the
+//! artifact manifest, written from scratch because the offline build has no
+//! `toml`/`serde` crates.
+//!
+//! Supported: `[table]` headers, `[[array-of-tables]]` headers, dotted-free
+//! bare keys, `=` bindings with string / integer / float / boolean /
+//! homogeneous-array values, `#` comments, blank lines. Unsupported TOML
+//! (dotted keys, inline tables, multi-line strings, dates) is a parse
+//! error, not silent misbehaviour.
+
+use std::collections::BTreeMap;
+
+use thiserror::Error;
+
+/// Parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    Table(Table),
+    /// `[[name]]` array-of-tables.
+    TableArray(Vec<Table>),
+}
+
+/// A TOML table: ordered map from key to value.
+pub type Table = BTreeMap<String, Value>;
+
+/// Parse failure with 1-based line number.
+#[derive(Debug, Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> TomlError {
+    TomlError {
+        line,
+        msg: msg.into(),
+    }
+}
+
+/// Parse a TOML-subset document into its root table.
+pub fn parse(input: &str) -> Result<Table, TomlError> {
+    let mut root = Table::new();
+    // Path of the table currently being filled ([] = root).
+    let mut current: Vec<String> = Vec::new();
+    let mut current_is_array = false;
+
+    for (idx, raw) in input.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let name = name.trim();
+            validate_key(name, lineno)?;
+            let entry = root
+                .entry(name.to_string())
+                .or_insert_with(|| Value::TableArray(Vec::new()));
+            match entry {
+                Value::TableArray(ts) => ts.push(Table::new()),
+                _ => return Err(err(lineno, format!("`{name}` is not an array of tables"))),
+            }
+            current = vec![name.to_string()];
+            current_is_array = true;
+        } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let name = name.trim();
+            validate_key(name, lineno)?;
+            match root
+                .entry(name.to_string())
+                .or_insert_with(|| Value::Table(Table::new()))
+            {
+                Value::Table(_) => {}
+                _ => return Err(err(lineno, format!("`{name}` is not a table"))),
+            }
+            current = vec![name.to_string()];
+            current_is_array = false;
+        } else if let Some(eq) = find_unquoted(line, '=') {
+            let key = line[..eq].trim();
+            validate_key(key, lineno)?;
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            let target = resolve_target(&mut root, &current, current_is_array);
+            if target.insert(key.to_string(), value).is_some() {
+                return Err(err(lineno, format!("duplicate key `{key}`")));
+            }
+        } else {
+            return Err(err(lineno, format!("cannot parse `{line}`")));
+        }
+    }
+    Ok(root)
+}
+
+fn resolve_target<'a>(root: &'a mut Table, path: &[String], is_array: bool) -> &'a mut Table {
+    if path.is_empty() {
+        return root;
+    }
+    match root.get_mut(&path[0]).expect("table created on header") {
+        Value::Table(t) => t,
+        Value::TableArray(ts) if is_array => ts.last_mut().expect("pushed on header"),
+        _ => unreachable!("header type checked at creation"),
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    match find_unquoted(line, '#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Index of `needle` outside of any double-quoted string.
+fn find_unquoted(line: &str, needle: char) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            c if c == needle && !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn validate_key(key: &str, line: usize) -> Result<(), TomlError> {
+    if key.is_empty() {
+        return Err(err(line, "empty key"));
+    }
+    if key
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+    {
+        Ok(())
+    } else {
+        Err(err(line, format!("unsupported key syntax `{key}`")))
+    }
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, TomlError> {
+    if s.is_empty() {
+        return Err(err(line, "missing value"));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let Some(body) = body.strip_suffix('"') else {
+            return Err(err(line, "unterminated string"));
+        };
+        if body.contains('"') {
+            return Err(err(line, "embedded quotes unsupported"));
+        }
+        return Ok(Value::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let Some(body) = body.strip_suffix(']') else {
+            return Err(err(line, "unterminated array"));
+        };
+        let body = body.trim();
+        let mut items = Vec::new();
+        if !body.is_empty() {
+            for part in split_top_level(body) {
+                items.push(parse_value(part.trim(), line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    // Number: int if it parses as i64 and has no float syntax.
+    let is_floaty = s.contains('.') || s.contains('e') || s.contains('E');
+    if !is_floaty {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(line, format!("cannot parse value `{s}`")))
+}
+
+/// Split a flat array body on commas outside quotes (nested arrays are not
+/// supported — config never needs them).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+// --- typed accessors --------------------------------------------------------
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_table_array(&self) -> Option<&[Table]> {
+        match self {
+            Value::TableArray(t) => Some(t),
+            _ => None,
+        }
+    }
+    pub fn as_table(&self) -> Option<&Table> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+}
+
+/// Typed lookup helpers over a [`Table`].
+pub trait TableExt {
+    fn str_of(&self, key: &str) -> anyhow::Result<&str>;
+    fn int_of(&self, key: &str) -> anyhow::Result<i64>;
+    fn float_of(&self, key: &str) -> anyhow::Result<f64>;
+}
+
+impl TableExt for Table {
+    fn str_of(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid string key `{key}`"))
+    }
+    fn int_of(&self, key: &str) -> anyhow::Result<i64> {
+        self.get(key)
+            .and_then(Value::as_int)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid integer key `{key}`"))
+    }
+    fn float_of(&self, key: &str) -> anyhow::Result<f64> {
+        self.get(key)
+            .and_then(Value::as_float)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid float key `{key}`"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let doc = r#"
+# experiment
+name = "fig1"
+learners = 4
+delta = 0.25
+verbose = true
+
+[protocol]
+kind = "dynamic"
+check_period = 1
+"#;
+        let t = parse(doc).unwrap();
+        assert_eq!(t["name"], Value::Str("fig1".into()));
+        assert_eq!(t["learners"], Value::Int(4));
+        assert_eq!(t["delta"], Value::Float(0.25));
+        assert_eq!(t["verbose"], Value::Bool(true));
+        let proto = t["protocol"].as_table().unwrap();
+        assert_eq!(proto["kind"], Value::Str("dynamic".into()));
+    }
+
+    #[test]
+    fn parses_array_of_tables() {
+        let doc = r#"
+[[artifact]]
+name = "predict_susy"
+tau = 64
+
+[[artifact]]
+name = "gram_susy"
+tau = 64
+"#;
+        let t = parse(doc).unwrap();
+        let arts = t["artifact"].as_table_array().unwrap();
+        assert_eq!(arts.len(), 2);
+        assert_eq!(arts[0]["name"], Value::Str("predict_susy".into()));
+        assert_eq!(arts[1]["name"], Value::Str("gram_susy".into()));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let t = parse("xs = [1, 2, 3]\nys = [0.5, 1.5]\nzs = []\n").unwrap();
+        assert_eq!(
+            t["xs"],
+            Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+        assert_eq!(t["zs"], Value::Array(vec![]));
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let t = parse("a = \"x # y\" # trailing\n").unwrap();
+        assert_eq!(t["a"], Value::Str("x # y".into()));
+    }
+
+    #[test]
+    fn duplicate_key_is_error() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn bad_syntax_is_error_with_line() {
+        let e = parse("ok = 1\nnot a binding\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn scientific_floats() {
+        let t = parse("lr = 1e-10\n").unwrap();
+        assert_eq!(t["lr"], Value::Float(1e-10));
+    }
+
+    #[test]
+    fn negative_numbers() {
+        let t = parse("a = -3\nb = -0.5\n").unwrap();
+        assert_eq!(t["a"], Value::Int(-3));
+        assert_eq!(t["b"], Value::Float(-0.5));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        use super::TableExt;
+        let t = parse("s = \"x\"\ni = 3\nf = 2.5\n").unwrap();
+        assert_eq!(t.str_of("s").unwrap(), "x");
+        assert_eq!(t.int_of("i").unwrap(), 3);
+        assert_eq!(t.float_of("f").unwrap(), 2.5);
+        assert_eq!(t.float_of("i").unwrap(), 3.0); // int coerces to float
+        assert!(t.str_of("missing").is_err());
+    }
+}

@@ -1,0 +1,298 @@
+//! Leader node: owns the bus, triggers/serves synchronizations, and
+//! aggregates cluster metrics. One OS thread per worker; every exchanged
+//! byte really crosses a channel in serialized form.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::compression::Compressor;
+use crate::config::{ExperimentConfig, ProtocolConfig};
+use crate::data::build_streams;
+use crate::kernel::{Model, SvModel};
+use crate::learner::build_learner;
+use crate::network::{Bus, CommStats, DeltaDecoder, Message};
+use crate::protocol::sync::synchronize;
+
+/// Aggregate result of a threaded cluster run.
+#[derive(Debug)]
+pub struct ClusterOutcome {
+    pub cum_loss: f64,
+    pub cum_error: f64,
+    pub comm: CommStats,
+    /// Final synchronized model, if any sync happened.
+    pub final_model: Option<Model>,
+}
+
+/// Run the full cluster: spawns workers, drives the leader loop, joins.
+pub fn run_cluster(cfg: &ExperimentConfig) -> Result<ClusterOutcome> {
+    anyhow::ensure!(
+        cfg.protocol != ProtocolConfig::Serial,
+        "serial runs have no cluster"
+    );
+    let m = cfg.learners;
+    let (bus, endpoints) = Bus::new(m);
+    let streams = build_streams(&cfg.data, m, cfg.seed);
+
+    // Spawn workers.
+    let mut handles = Vec::with_capacity(m);
+    for (id, (endpoint, stream)) in endpoints.into_iter().zip(streams).enumerate() {
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            crate::coordinator::worker::run_worker(&cfg, id, endpoint, stream)
+        }));
+    }
+
+    let outcome = leader_loop(cfg, &bus);
+
+    // Always attempt shutdown, then join.
+    let _ = bus.broadcast(&Message::Shutdown);
+    for h in handles {
+        match h.join() {
+            Ok(r) => r?,
+            Err(_) => bail!("worker panicked"),
+        }
+    }
+    outcome
+}
+
+fn leader_loop(cfg: &ExperimentConfig, bus: &Bus) -> Result<ClusterOutcome> {
+    let m = cfg.learners;
+    let dim = cfg.data.dim();
+    let is_kernel = build_learner(&cfg.learner, dim, 0)
+        .snapshot()
+        .as_kernel()
+        .is_some();
+    let template = match cfg.learner.kernel {
+        crate::config::KernelConfig::Rbf { gamma } => {
+            SvModel::new(crate::kernel::Kernel::Rbf { gamma }, dim)
+        }
+        // Linear and RFF models sync through the fixed-size linear path;
+        // the SV template is unused for them.
+        crate::config::KernelConfig::Linear | crate::config::KernelConfig::Rff { .. } => {
+            SvModel::new(crate::kernel::Kernel::Linear, dim)
+        }
+    };
+    // Projection-compress the averaged model (see engine.rs rationale).
+    let compressor = match cfg.learner.compression.budget() {
+        Some(tau) => Compressor::Projection { tau },
+        None => Compressor::None,
+    };
+    let mut decoder = DeltaDecoder::new(m);
+    let mut comm = CommStats::new();
+    let mut done = vec![false; m];
+    let mut cum_loss = 0.0;
+    let mut cum_error = 0.0;
+    let mut final_model: Option<Model> = None;
+    let mut syncs: u64 = 0;
+    let timeout = Duration::from_secs(60);
+
+    // For scheduled protocols the workers initiate uploads themselves; the
+    // leader's job is identical in both cases once the first upload (or a
+    // violation) arrives.
+    while done.iter().any(|d| !d) {
+        let (from, msg, n) = bus.recv(timeout)?;
+        comm.record_up(n);
+        match msg {
+            Message::Done {
+                learner,
+                cum_loss: l,
+                cum_error: e,
+            } => {
+                done[learner as usize] = true;
+                cum_loss += l;
+                cum_error += e;
+                let _ = from;
+            }
+            Message::Violation { .. } => {
+                comm.record_violation();
+                // Trigger a full synchronization.
+                let req = Message::SyncRequest;
+                for i in 0..m {
+                    comm.record_down(bus.send_to(i, &req)?);
+                }
+                let model = collect_and_average(
+                    bus,
+                    m,
+                    &mut decoder,
+                    &template,
+                    compressor,
+                    is_kernel,
+                    &mut comm,
+                    &mut done,
+                    &mut cum_loss,
+                    &mut cum_error,
+                )?;
+                syncs += 1;
+                comm.record_sync(syncs);
+                final_model = Some(model);
+            }
+            Message::ModelUpload {
+                learner,
+                coeffs,
+                new_svs,
+            } => {
+                // Scheduled sync initiated by workers: this is the first
+                // upload; collect the rest.
+                let first = decoder.ingest_upload(learner as usize, &coeffs, &new_svs, &template)?;
+                let model = collect_rest_and_average(
+                    bus,
+                    m,
+                    Some((learner as usize, first)),
+                    None,
+                    &mut decoder,
+                    &template,
+                    compressor,
+                    &mut comm,
+                    &mut done,
+                    &mut cum_loss,
+                    &mut cum_error,
+                )?;
+                syncs += 1;
+                comm.record_sync(syncs);
+                final_model = Some(model);
+            }
+            Message::LinearUpload { learner, w } => {
+                let model = collect_rest_and_average(
+                    bus,
+                    m,
+                    None,
+                    Some((learner as usize, w)),
+                    &mut decoder,
+                    &template,
+                    compressor,
+                    &mut comm,
+                    &mut done,
+                    &mut cum_loss,
+                    &mut cum_error,
+                )?;
+                syncs += 1;
+                comm.record_sync(syncs);
+                final_model = Some(model);
+            }
+            other => bail!("leader: unexpected message {other:?}"),
+        }
+    }
+    comm.end_round();
+    Ok(ClusterOutcome {
+        cum_loss,
+        cum_error,
+        comm,
+        final_model,
+    })
+}
+
+/// Violation-triggered sync: every upload still outstanding.
+#[allow(clippy::too_many_arguments)]
+fn collect_and_average(
+    bus: &Bus,
+    m: usize,
+    decoder: &mut DeltaDecoder,
+    template: &SvModel,
+    compressor: Compressor,
+    _is_kernel: bool,
+    comm: &mut CommStats,
+    done: &mut [bool],
+    cum_loss: &mut f64,
+    cum_error: &mut f64,
+) -> Result<Model> {
+    collect_rest_and_average(
+        bus, m, None, None, decoder, template, compressor, comm, done, cum_loss, cum_error,
+    )
+}
+
+/// Collect the remaining uploads (kernel or linear), average, download.
+#[allow(clippy::too_many_arguments)]
+fn collect_rest_and_average(
+    bus: &Bus,
+    m: usize,
+    first_kernel: Option<(usize, SvModel)>,
+    first_linear: Option<(usize, Vec<f32>)>,
+    decoder: &mut DeltaDecoder,
+    template: &SvModel,
+    compressor: Compressor,
+    comm: &mut CommStats,
+    done: &mut [bool],
+    cum_loss: &mut f64,
+    cum_error: &mut f64,
+) -> Result<Model> {
+    let timeout = Duration::from_secs(60);
+    let mut kernels: Vec<Option<SvModel>> = vec![None; m];
+    let mut linears: Vec<Option<Vec<f32>>> = vec![None; m];
+    let mut have = 0usize;
+    if let Some((i, k)) = first_kernel {
+        kernels[i] = Some(k);
+        have += 1;
+    }
+    if let Some((i, w)) = first_linear {
+        linears[i] = Some(w);
+        have += 1;
+    }
+    while have < m {
+        let (_, msg, n) = bus.recv(timeout)?;
+        comm.record_up(n);
+        match msg {
+            Message::ModelUpload {
+                learner,
+                coeffs,
+                new_svs,
+            } => {
+                let k = decoder.ingest_upload(learner as usize, &coeffs, &new_svs, template)?;
+                if kernels[learner as usize].replace(k).is_none() {
+                    have += 1;
+                }
+            }
+            Message::LinearUpload { learner, w } => {
+                if linears[learner as usize].replace(w).is_none() {
+                    have += 1;
+                }
+            }
+            // Stale violations during collection are ignored.
+            Message::Violation { .. } => comm.record_violation(),
+            Message::Done {
+                learner,
+                cum_loss: l,
+                cum_error: e,
+            } => {
+                done[learner as usize] = true;
+                *cum_loss += l;
+                *cum_error += e;
+            }
+            other => bail!("unexpected message during sync collection: {other:?}"),
+        }
+    }
+
+    if kernels.iter().all(Option::is_some) {
+        let models: Vec<Model> = kernels
+            .into_iter()
+            .map(|k| Model::Kernel(k.unwrap()))
+            .collect();
+        let refs: Vec<&Model> = models.iter().collect();
+        let (avg, _eps) = synchronize(&refs, compressor);
+        let avg_k = avg.as_kernel().unwrap();
+        for i in 0..m {
+            let (coeffs, new_svs) = decoder.encode_download(i, avg_k);
+            let msg = Message::ModelDownload { coeffs, new_svs };
+            comm.record_down(bus.send_to(i, &msg)?);
+        }
+        Ok(avg)
+    } else if linears.iter().all(Option::is_some) {
+        let models: Vec<Model> = linears
+            .into_iter()
+            .map(|w| {
+                Model::Linear(crate::kernel::LinearModel::from_w(
+                    w.unwrap().iter().map(|&v| v as f64).collect(),
+                ))
+            })
+            .collect();
+        let refs: Vec<&Model> = models.iter().collect();
+        let (avg, _) = synchronize(&refs, Compressor::None);
+        let w32: Vec<f32> = avg.as_linear().unwrap().w.iter().map(|&v| v as f32).collect();
+        for i in 0..m {
+            comm.record_down(bus.send_to(i, &Message::LinearDownload { w: w32.clone() })?);
+        }
+        Ok(avg)
+    } else {
+        bail!("mixed kernel/linear uploads in one sync")
+    }
+}

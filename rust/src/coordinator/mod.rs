@@ -1,0 +1,16 @@
+//! The distributed runtime: a leader (coordinator node) and one worker
+//! thread per local learner, speaking the wire protocol of
+//! [`crate::network`] over the in-process bus. This is the deployable
+//! shape of the system; the deterministic [`crate::protocol::engine`] is
+//! its measurement twin.
+//!
+//! Also hosts the real-time [`service`]: the batched prediction service
+//! whose hot path executes the AOT XLA artifacts (Python never runs at
+//! request time).
+
+pub mod leader;
+pub mod service;
+pub mod worker;
+
+pub use leader::{run_cluster, ClusterOutcome};
+pub use service::{PredictionService, ScorePath};

@@ -1,0 +1,172 @@
+//! The real-time prediction service: the "low-latency service" the paper's
+//! introduction motivates. Queries are micro-batched and scored through
+//! the AOT XLA `predict` artifact (the PJRT hot path — Python never runs
+//! here); a native fallback serves models whose size exceeds the artifact
+//! budget or deployments without artifacts.
+
+use anyhow::Result;
+
+use crate::kernel::SvModel;
+use crate::runtime::{pad_expansion, pad_points, XlaRuntime};
+
+/// Which compute path scored a batch (exposed for tests / metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScorePath {
+    Xla,
+    Native,
+}
+
+/// Batched scoring service over the current synchronized model.
+pub struct PredictionService {
+    runtime: Option<XlaRuntime>,
+    model: SvModel,
+    gamma: f32,
+    /// Padded model tensors, rebuilt on model swap (not per query).
+    padded: Option<(Vec<f32>, Vec<f32>)>,
+    batch: usize,
+    queue: Vec<Vec<f64>>,
+    pub served: u64,
+    pub xla_batches: u64,
+    pub native_batches: u64,
+}
+
+impl PredictionService {
+    /// Build over an optional XLA runtime; `gamma` must match the model's
+    /// RBF bandwidth (the artifact takes it as a runtime input).
+    pub fn new(runtime: Option<XlaRuntime>, model: SvModel, gamma: f64) -> Result<Self> {
+        let batch = match &runtime {
+            Some(rt) => rt.spec("predict")?.batch,
+            None => 8,
+        };
+        let mut svc = PredictionService {
+            runtime,
+            model,
+            gamma: gamma as f32,
+            padded: None,
+            batch,
+            queue: Vec::new(),
+            served: 0,
+            xla_batches: 0,
+            native_batches: 0,
+        };
+        svc.repad()?;
+        Ok(svc)
+    }
+
+    /// Swap in a freshly synchronized model (e.g. after a protocol sync).
+    pub fn set_model(&mut self, model: SvModel) -> Result<()> {
+        self.model = model;
+        self.repad()
+    }
+
+    fn repad(&mut self) -> Result<()> {
+        self.padded = None;
+        if let Some(rt) = &self.runtime {
+            let spec = rt.spec("predict")?;
+            if self.model.len() <= spec.tau && self.model.dim == spec.d {
+                self.padded = Some(pad_expansion(&self.model, spec.tau)?);
+            }
+        }
+        Ok(())
+    }
+
+    /// Enqueue a query; returns scored results when a full batch flushed.
+    pub fn submit(&mut self, x: Vec<f64>) -> Result<Option<Vec<(Vec<f64>, f64)>>> {
+        self.queue.push(x);
+        if self.queue.len() >= self.batch {
+            Ok(Some(self.flush()?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Score all queued queries now (partial batch allowed).
+    pub fn flush(&mut self) -> Result<Vec<(Vec<f64>, f64)>> {
+        if self.queue.is_empty() {
+            return Ok(Vec::new());
+        }
+        let queries = std::mem::take(&mut self.queue);
+        let (scores, _path) = self.score_batch(&queries)?;
+        self.served += queries.len() as u64;
+        Ok(queries.into_iter().zip(scores).collect())
+    }
+
+    /// Score one batch, choosing the XLA path when available.
+    pub fn score_batch(&mut self, queries: &[Vec<f64>]) -> Result<(Vec<f64>, ScorePath)> {
+        if let (Some(rt), Some((svs, alphas))) = (&self.runtime, &self.padded) {
+            let spec = rt.spec("predict")?;
+            if queries.len() <= spec.batch {
+                let (x, n) = pad_points(queries, spec.batch, spec.d)?;
+                let y = rt.predict(svs, alphas, &x, self.gamma)?;
+                self.xla_batches += 1;
+                return Ok((y[..n].iter().map(|&v| v as f64).collect(), ScorePath::Xla));
+            }
+        }
+        // Native fallback.
+        self.native_batches += 1;
+        Ok((
+            queries.iter().map(|q| self.model.predict(q)).collect(),
+            ScorePath::Native,
+        ))
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Kernel;
+
+    fn model() -> SvModel {
+        let mut m = SvModel::new(Kernel::Rbf { gamma: 0.5 }, 2);
+        m.push(1, &[1.0, 0.0], 1.0);
+        m.push(2, &[-1.0, 0.0], -1.0);
+        m
+    }
+
+    #[test]
+    fn native_service_batches_and_scores() {
+        let mut svc = PredictionService::new(None, model(), 0.5).unwrap();
+        assert_eq!(svc.batch_size(), 8);
+        for i in 0..7 {
+            assert!(svc.submit(vec![i as f64 * 0.1, 0.0]).unwrap().is_none());
+        }
+        let out = svc.submit(vec![0.7, 0.0]).unwrap().unwrap();
+        assert_eq!(out.len(), 8);
+        assert_eq!(svc.served, 8);
+        // Scores match the model exactly on the native path.
+        let m = model();
+        for (x, y) in &out {
+            assert!((m.predict(x) - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn flush_scores_partial_batches() {
+        let mut svc = PredictionService::new(None, model(), 0.5).unwrap();
+        svc.submit(vec![1.0, 0.0]).unwrap();
+        let out = svc.flush().unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].1 > 0.0);
+        assert_eq!(svc.pending(), 0);
+        assert!(svc.flush().unwrap().is_empty());
+    }
+
+    #[test]
+    fn model_swap_rescores() {
+        let mut svc = PredictionService::new(None, model(), 0.5).unwrap();
+        let (before, _) = svc.score_batch(&[vec![1.0, 0.0]]).unwrap();
+        let mut m2 = SvModel::new(Kernel::Rbf { gamma: 0.5 }, 2);
+        m2.push(9, &[1.0, 0.0], 5.0);
+        svc.set_model(m2).unwrap();
+        let (after, _) = svc.score_batch(&[vec![1.0, 0.0]]).unwrap();
+        assert!(after[0] > before[0]);
+    }
+}

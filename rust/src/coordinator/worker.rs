@@ -1,0 +1,179 @@
+//! Worker node: runs one online learner over its stream, monitors its
+//! local condition, reports violations, and participates in
+//! synchronizations when the leader requests them.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::data::DataStream;
+use crate::kernel::Model;
+use crate::learner::{build_learner, OnlineLearner};
+use crate::network::{DeltaDecoder, DeltaEncoder, Endpoint, Message};
+use crate::protocol::{ConditionTracker, SyncPolicy};
+
+/// Run the worker loop to completion (responds to syncs even after its
+/// stream is exhausted, until `Shutdown`).
+pub fn run_worker(
+    cfg: &ExperimentConfig,
+    id: usize,
+    endpoint: Endpoint,
+    mut stream: Box<dyn DataStream>,
+) -> Result<()> {
+    let dim = cfg.data.dim();
+    let mut learner = build_learner(&cfg.learner, dim, id);
+    let mut tracker = ConditionTracker::new();
+    let mut encoder = DeltaEncoder::new();
+    let policy = SyncPolicy::new(cfg.protocol);
+    let is_kernel = learner.snapshot().as_kernel().is_some();
+
+    let mut cum_loss = 0.0;
+    let mut cum_error = 0.0;
+    let rounds = cfg.rounds as u64;
+
+    for round in 1..=rounds {
+        let (x, y) = stream.next_example();
+        let ev = learner.update(&x, y);
+        cum_loss += ev.loss;
+        cum_error += ev.error;
+        tracker.apply(&ev, &x, learner.norm_sq());
+
+        // Local condition (dynamic protocols only).
+        if let Some(delta) = policy.delta(round) {
+            if policy.checks_this_round(round) && tracker.violated(delta) {
+                endpoint.send(&Message::Violation {
+                    learner: id as u32,
+                    distance_sq: tracker.distance_sq(),
+                })?;
+            }
+        }
+
+        // Scheduled protocols synchronize unconditionally; dynamic ones
+        // wait for the leader's SyncRequest triggered by some violation.
+        let scheduled = matches!(
+            policy.decide(round, false),
+            crate::protocol::SyncDecision::Sync
+        );
+        if scheduled {
+            do_sync(
+                id,
+                &endpoint,
+                learner.as_mut(),
+                &mut tracker,
+                &mut encoder,
+                is_kernel,
+            )?;
+        } else {
+            // Service any pending leader requests without blocking.
+            while let Ok((msg, _)) = endpoint.recv(Duration::from_millis(0)) {
+                match msg {
+                    Message::SyncRequest => do_sync_reply(
+                        id,
+                        &endpoint,
+                        learner.as_mut(),
+                        &mut tracker,
+                        &mut encoder,
+                        is_kernel,
+                    )?,
+                    Message::Shutdown => return Ok(()),
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    endpoint.send(&Message::Done {
+        learner: id as u32,
+        cum_loss,
+        cum_error,
+    })?;
+
+    // Keep serving syncs until the leader shuts the cluster down.
+    loop {
+        match endpoint.recv(Duration::from_secs(30)) {
+            Ok((Message::SyncRequest, _)) => do_sync_reply(
+                id,
+                &endpoint,
+                learner.as_mut(),
+                &mut tracker,
+                &mut encoder,
+                is_kernel,
+            )?,
+            Ok((Message::Shutdown, _)) => return Ok(()),
+            Ok(_) => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Scheduled sync: upload immediately, then block for the download.
+fn do_sync(
+    id: usize,
+    endpoint: &Endpoint,
+    learner: &mut dyn OnlineLearner,
+    tracker: &mut ConditionTracker,
+    encoder: &mut DeltaEncoder,
+    is_kernel: bool,
+) -> Result<()> {
+    do_sync_reply(id, endpoint, learner, tracker, encoder, is_kernel)
+}
+
+/// Upload the model, wait for and adopt the synchronized model.
+fn do_sync_reply(
+    id: usize,
+    endpoint: &Endpoint,
+    learner: &mut dyn OnlineLearner,
+    tracker: &mut ConditionTracker,
+    encoder: &mut DeltaEncoder,
+    is_kernel: bool,
+) -> Result<()> {
+    let snap = learner.snapshot();
+    if is_kernel {
+        let exp = snap.as_kernel().unwrap();
+        let (coeffs, new_svs) = encoder.encode_upload(exp);
+        endpoint.send(&Message::ModelUpload {
+            learner: id as u32,
+            coeffs,
+            new_svs,
+        })?;
+        // Block for the download (skip any interleaved control messages).
+        loop {
+            let (msg, _) = endpoint.recv(Duration::from_secs(30))?;
+            match msg {
+                Message::ModelDownload { coeffs, new_svs } => {
+                    let adopted = DeltaDecoder::apply_download(exp, &coeffs, &new_svs)?;
+                    encoder.note_download(adopted.ids().iter().copied());
+                    let m = Model::Kernel(adopted);
+                    learner.set_model(m.clone());
+                    tracker.reset(m);
+                    return Ok(());
+                }
+                Message::SyncRequest => continue, // already mid-sync
+                Message::Shutdown => anyhow::bail!("shutdown mid-sync"),
+                other => anyhow::bail!("unexpected message during sync: {other:?}"),
+            }
+        }
+    } else {
+        let w32: Vec<f32> = snap.as_linear().unwrap().w.iter().map(|&v| v as f32).collect();
+        endpoint.send(&Message::LinearUpload {
+            learner: id as u32,
+            w: w32,
+        })?;
+        loop {
+            let (msg, _) = endpoint.recv(Duration::from_secs(30))?;
+            match msg {
+                Message::LinearDownload { w } => {
+                    let w64: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+                    let m = Model::Linear(crate::kernel::LinearModel::from_w(w64));
+                    learner.set_model(m.clone());
+                    tracker.reset(m);
+                    return Ok(());
+                }
+                Message::SyncRequest => continue,
+                Message::Shutdown => anyhow::bail!("shutdown mid-sync"),
+                other => anyhow::bail!("unexpected message during sync: {other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! CSV-backed stream for users with real datasets: rows of
+//! `x_1,...,x_d,y`, replayed (optionally cyclically). Written from scratch
+//! — no csv crate offline.
+
+use std::io::{BufRead, BufReader, Read};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{DataStream, Example};
+
+pub struct CsvStream {
+    rows: Vec<Example>,
+    dim: usize,
+    pos: usize,
+    cycle: bool,
+}
+
+impl CsvStream {
+    /// Parse all rows up front (streams are replayed many times across
+    /// protocol variants; parse once).
+    pub fn from_reader<R: Read>(reader: R, cycle: bool) -> Result<Self> {
+        let mut rows = Vec::new();
+        let mut dim = None;
+        for (i, line) in BufReader::new(reader).lines().enumerate() {
+            let line = line.context("reading csv")?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let vals: Result<Vec<f64>, _> =
+                line.split(',').map(|f| f.trim().parse::<f64>()).collect();
+            let vals = vals.with_context(|| format!("csv line {}", i + 1))?;
+            if vals.len() < 2 {
+                bail!("csv line {} has fewer than 2 fields", i + 1);
+            }
+            let d = vals.len() - 1;
+            match dim {
+                None => dim = Some(d),
+                Some(d0) if d0 != d => {
+                    bail!("csv line {}: dim {} != {}", i + 1, d, d0)
+                }
+                _ => {}
+            }
+            let (x, y) = vals.split_at(d);
+            rows.push((x.to_vec(), y[0]));
+        }
+        let dim = dim.context("csv file contains no data rows")?;
+        Ok(CsvStream {
+            rows,
+            dim,
+            pos: 0,
+            cycle,
+        })
+    }
+
+    pub fn from_path(path: &std::path::Path, cycle: bool) -> Result<Self> {
+        let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+        Self::from_reader(f, cycle)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+impl DataStream for CsvStream {
+    fn next_example(&mut self) -> Example {
+        if self.pos >= self.rows.len() {
+            if self.cycle {
+                self.pos = 0;
+            } else {
+                panic!("csv stream exhausted after {} rows", self.rows.len());
+            }
+        }
+        let ex = self.rows[self.pos].clone();
+        self.pos += 1;
+        ex
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = "# comment\n1.0, 2.0, 1\n3.0, 4.0, -1\n\n5.0,6.0,1\n";
+
+    #[test]
+    fn parses_rows_and_replays() {
+        let mut s = CsvStream::from_reader(DOC.as_bytes(), true).unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.dim(), 2);
+        assert_eq!(s.next_example(), (vec![1.0, 2.0], 1.0));
+        assert_eq!(s.next_example(), (vec![3.0, 4.0], -1.0));
+        assert_eq!(s.next_example(), (vec![5.0, 6.0], 1.0));
+        // cycles
+        assert_eq!(s.next_example(), (vec![1.0, 2.0], 1.0));
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(CsvStream::from_reader("1,2,3\n1,2\n".as_bytes(), false).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(CsvStream::from_reader("a,b,c\n".as_bytes(), false).is_err());
+        assert!(CsvStream::from_reader("".as_bytes(), false).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_cyclic_exhaustion_panics() {
+        let mut s = CsvStream::from_reader("1,2\n".as_bytes(), false).unwrap();
+        s.next_example();
+        s.next_example();
+    }
+}

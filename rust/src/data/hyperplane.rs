@@ -1,0 +1,104 @@
+//! Rotating-hyperplane stream: the classic drifting-concept benchmark.
+//! `y = sign(w_t . x)` where `w_t` rotates slowly — a time-variant P_t in
+//! the paper's sense. Used by the drift-adaptation example and the
+//! ablation on divergence thresholds under drift.
+
+use crate::data::{DataStream, Example};
+use crate::util::{Pcg64, Rng};
+
+pub struct HyperplaneStream {
+    rng: Pcg64,
+    w: Vec<f64>,
+    /// Rotation angle per step (radians) applied in the (0, 1) plane.
+    drift: f64,
+}
+
+impl HyperplaneStream {
+    pub fn new(mut rng: Pcg64, dim: usize, drift: f64) -> Self {
+        assert!(dim >= 2, "hyperplane needs dim >= 2");
+        let mut w = vec![0.0; dim];
+        for v in w.iter_mut() {
+            *v = rng.normal();
+        }
+        let n = crate::util::float::sq_norm(&w).sqrt();
+        for v in w.iter_mut() {
+            *v /= n;
+        }
+        HyperplaneStream { rng, w, drift }
+    }
+
+    pub fn concept(&self) -> &[f64] {
+        &self.w
+    }
+}
+
+impl DataStream for HyperplaneStream {
+    fn next_example(&mut self) -> Example {
+        // Rotate the concept in the first two coordinates.
+        if self.drift != 0.0 {
+            let (c, s) = (self.drift.cos(), self.drift.sin());
+            let (w0, w1) = (self.w[0], self.w[1]);
+            self.w[0] = c * w0 - s * w1;
+            self.w[1] = s * w0 + c * w1;
+        }
+        let x: Vec<f64> = (0..self.w.len()).map(|_| self.rng.normal()).collect();
+        let y = if crate::util::float::dot(&self.w, &x) > 0.0 {
+            1.0
+        } else {
+            -1.0
+        };
+        (x, y)
+    }
+
+    fn dim(&self) -> usize {
+        self.w.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_hyperplane_is_linearly_learnable() {
+        use crate::config::{CompressionConfig, KernelConfig, LearnerConfig, LossKind};
+        use crate::learner::build_learner;
+        let cfg = LearnerConfig {
+            eta: 0.1,
+            lambda: 0.0,
+            loss: LossKind::Hinge,
+            kernel: KernelConfig::Linear,
+            compression: CompressionConfig::None,
+            passive_aggressive: false,
+        };
+        let mut l = build_learner(&cfg, 5, 0);
+        let mut s = HyperplaneStream::new(Pcg64::seeded(9), 5, 0.0);
+        let mut tail_err = 0.0;
+        for t in 0..1200 {
+            let (x, y) = s.next_example();
+            let ev = l.update(&x, y);
+            if t >= 1000 {
+                tail_err += ev.error;
+            }
+        }
+        assert!(tail_err / 200.0 < 0.08, "late error {}", tail_err / 200.0);
+    }
+
+    #[test]
+    fn drift_rotates_concept() {
+        let mut s = HyperplaneStream::new(Pcg64::seeded(10), 3, 0.01);
+        let w0 = s.concept().to_vec();
+        for _ in 0..200 {
+            s.next_example();
+        }
+        let w1 = s.concept().to_vec();
+        let cos = crate::util::float::dot(&w0, &w1);
+        assert!(cos < 0.9, "concept should have rotated, cos {cos}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_one_rejected() {
+        let _ = HyperplaneStream::new(Pcg64::seeded(1), 1, 0.0);
+    }
+}

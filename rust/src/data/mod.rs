@@ -1,0 +1,104 @@
+//! Synthetic data streams standing in for the paper's datasets (the build
+//! environment has no network access — see DESIGN.md §5 for the
+//! substitution argument). Every stream is deterministic given
+//! (seed, learner-id), so different protocols compare on *identical*
+//! input sequences.
+
+mod csv;
+mod hyperplane;
+mod mixture;
+mod stock;
+mod susy;
+
+pub use csv::CsvStream;
+pub use hyperplane::HyperplaneStream;
+pub use mixture::MixtureStream;
+pub use stock::StockStream;
+pub use susy::SusyStream;
+
+use crate::config::DataConfig;
+use crate::util::Pcg64;
+
+/// One labelled example.
+pub type Example = (Vec<f64>, f64);
+
+/// An endless stream of examples drawn from a (possibly time-variant)
+/// distribution P_t.
+pub trait DataStream: Send {
+    /// Draw the next example.
+    fn next_example(&mut self) -> Example;
+
+    /// Feature dimensionality.
+    fn dim(&self) -> usize;
+}
+
+/// Build one stream per learner, each on an independent RNG stream of the
+/// same distribution (the paper's i.i.d.-across-learners setting).
+pub fn build_streams(cfg: &DataConfig, learners: usize, seed: u64) -> Vec<Box<dyn DataStream>> {
+    (0..learners)
+        .map(|i| build_stream(cfg, Pcg64::new(seed, i as u64 + 1)))
+        .collect()
+}
+
+/// Build a single stream from a config and RNG.
+pub fn build_stream(cfg: &DataConfig, rng: Pcg64) -> Box<dyn DataStream> {
+    match cfg {
+        DataConfig::Susy { noise } => Box::new(SusyStream::new(rng, *noise)),
+        DataConfig::Stock { stocks, noise } => Box::new(StockStream::new(rng, *stocks, *noise)),
+        DataConfig::Hyperplane { dim, drift } => {
+            Box::new(HyperplaneStream::new(rng, *dim, *drift))
+        }
+        DataConfig::Mixture { dim, separation } => {
+            Box::new(MixtureStream::new(rng, *dim, *separation))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streams_are_deterministic_per_seed() {
+        let cfg = DataConfig::Susy { noise: 0.1 };
+        let mut a = build_streams(&cfg, 2, 7);
+        let mut b = build_streams(&cfg, 2, 7);
+        for _ in 0..20 {
+            assert_eq!(a[0].next_example(), b[0].next_example());
+            assert_eq!(a[1].next_example(), b[1].next_example());
+        }
+    }
+
+    #[test]
+    fn learner_streams_differ() {
+        let cfg = DataConfig::Susy { noise: 0.1 };
+        let mut s = build_streams(&cfg, 2, 7);
+        let (x0, _) = s[0].next_example();
+        let (x1, _) = s[1].next_example();
+        assert_ne!(x0, x1);
+    }
+
+    #[test]
+    fn dims_match_config() {
+        for cfg in [
+            DataConfig::Susy { noise: 0.0 },
+            DataConfig::Stock {
+                stocks: 12,
+                noise: 0.0,
+            },
+            DataConfig::Hyperplane {
+                dim: 5,
+                drift: 0.01,
+            },
+            DataConfig::Mixture {
+                dim: 2,
+                separation: 2.0,
+            },
+        ] {
+            let mut s = build_stream(&cfg, Pcg64::seeded(1));
+            let (x, _) = s.next_example();
+            assert_eq!(x.len(), cfg.dim());
+            assert_eq!(s.dim(), cfg.dim());
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! The §4 headline factors of the paper, computed from Fig 2-geometry
+//! runs:
+//!
+//! * kernel vs linear cumulative error — paper: reduction by ~18x;
+//! * dynamic-kernel vs continuous-kernel communication — paper: ~2433x;
+//! * dynamic-kernel vs linear communication — paper: ~10x smaller;
+//! * quiescence round of the dynamic protocol — paper: < 2000.
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, ProtocolConfig};
+use crate::experiments::runner::run_experiment;
+use crate::metrics::Outcome;
+
+/// The four headline numbers (paper value, measured value).
+#[derive(Debug, Clone)]
+pub struct Headline {
+    pub error_reduction: f64,
+    pub comm_reduction_vs_continuous: f64,
+    pub comm_vs_linear: f64,
+    pub quiescence_round: Option<u64>,
+    pub outcomes: Vec<Outcome>,
+}
+
+/// Default divergence threshold for the headline systems (tuned on the
+/// synthetic stock stream the way the paper tunes on 200 held-out
+/// instances; see DESIGN.md §5).
+pub const DEFAULT_DELTA: f64 = 0.5;
+
+/// Run the three systems the headline compares and derive the factors.
+pub fn run(delta: f64, scale: f64) -> Result<Headline> {
+    let mut configs = vec![
+        ExperimentConfig::fig2_linear(ProtocolConfig::Dynamic {
+            delta,
+            check_period: 1,
+        }),
+        ExperimentConfig::fig2_kernel(ProtocolConfig::Continuous),
+        ExperimentConfig::fig2_kernel(ProtocolConfig::Dynamic {
+            delta,
+            check_period: 1,
+        }),
+    ];
+    for c in configs.iter_mut() {
+        c.rounds = ((c.rounds as f64 * scale) as usize).max(100);
+    }
+    let lin = run_experiment(&configs[0])?;
+    let ker_cont = run_experiment(&configs[1])?;
+    let ker_dyn = run_experiment(&configs[2])?;
+
+    let error_reduction = lin.cumulative_error / ker_dyn.cumulative_error.max(1e-9);
+    let comm_reduction_vs_continuous =
+        ker_cont.comm.total_bytes() as f64 / ker_dyn.comm.total_bytes().max(1) as f64;
+    let comm_vs_linear =
+        lin.comm.total_bytes() as f64 / ker_dyn.comm.total_bytes().max(1) as f64;
+    Ok(Headline {
+        error_reduction,
+        comm_reduction_vs_continuous,
+        comm_vs_linear,
+        quiescence_round: ker_dyn.quiescent_since(),
+        outcomes: vec![lin, ker_cont, ker_dyn],
+    })
+}
+
+impl Headline {
+    pub fn render(&self, rounds_hint: u64) -> String {
+        format!(
+            "headline factors (paper -> measured)\n\
+             error reduction kernel vs linear     : 18x    -> {:.1}x\n\
+             comm reduction vs continuous kernel  : 2433x  -> {:.0}x\n\
+             comm vs linear system (dyn kernel)   : 10x    -> {:.1}x\n\
+             quiescence (last sync round / horizon): <2000/4000 -> {}/{}\n",
+            self.error_reduction,
+            self.comm_reduction_vs_continuous,
+            self.comm_vs_linear,
+            self.quiescence_round
+                .map(|r| r.to_string())
+                .unwrap_or_else(|| "never-synced".into()),
+            rounds_hint,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_factors_point_the_right_way() {
+        let h = run(DEFAULT_DELTA, 0.1).unwrap();
+        // Direction (not magnitude) at 10% scale:
+        assert!(
+            h.error_reduction > 1.5,
+            "kernel should beat linear, got {}x",
+            h.error_reduction
+        );
+        assert!(
+            h.comm_reduction_vs_continuous > 1.5,
+            "dynamic should cut comm vs continuous, got {}x",
+            h.comm_reduction_vs_continuous
+        );
+        assert!(h.render(400).contains("headline"));
+    }
+}

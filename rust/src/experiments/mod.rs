@@ -1,0 +1,11 @@
+//! Experiment harness: runners for single configurations, the paper's
+//! figure reproductions (Fig 1, Fig 2, headline factors), and the
+//! ablation sweeps DESIGN.md §4 indexes.
+
+pub mod fig1;
+pub mod fig2;
+pub mod headline;
+pub mod runner;
+pub mod sweeps;
+
+pub use runner::{run_experiment, run_serial};

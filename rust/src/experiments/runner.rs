@@ -1,0 +1,98 @@
+//! Single-configuration runners, including the serial oracle (one central
+//! learner processing all mT examples — the consistency yardstick of
+//! Def. 1).
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, ProtocolConfig};
+use crate::data::build_streams;
+use crate::learner::build_learner;
+use crate::metrics::{MetricsRecorder, Outcome};
+use crate::network::CommStats;
+use crate::protocol::ProtocolEngine;
+use crate::util::Stopwatch;
+
+/// Run one experiment to its horizon.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Outcome> {
+    if cfg.protocol == ProtocolConfig::Serial {
+        return Ok(run_serial(cfg));
+    }
+    Ok(ProtocolEngine::new(cfg.clone())?.run())
+}
+
+/// Serial oracle: a single learner sees the m streams interleaved
+/// round-robin (mT examples total). Zero communication by definition;
+/// its cumulative loss is the `L_A(mT)` reference in the consistency
+/// criterion.
+pub fn run_serial(cfg: &ExperimentConfig) -> Outcome {
+    let dim = cfg.data.dim();
+    let mut learner = build_learner(&cfg.learner, dim, 0);
+    let mut streams = build_streams(&cfg.data, cfg.learners, cfg.seed);
+    let mut metrics = MetricsRecorder::new(cfg.record_every as u64);
+    let comm = CommStats::new();
+    let mut watch = Stopwatch::started();
+    for round in 1..=(cfg.rounds as u64) {
+        for s in streams.iter_mut() {
+            let (x, y) = s.next_example();
+            let ev = learner.update(&x, y);
+            metrics.record_update(ev.loss, ev.error, ev.total_drift(), ev.compression_err);
+        }
+        metrics.end_round(round, &comm, learner.sv_count() as f64);
+    }
+    watch.stop();
+    Outcome {
+        name: format!("{}-serial", cfg.name),
+        learners: cfg.learners,
+        rounds: cfg.rounds as u64,
+        cumulative_loss: metrics.cum_loss,
+        cumulative_error: metrics.cum_error,
+        cum_drift: metrics.cum_drift,
+        cum_compression_err: metrics.cum_compression_err,
+        mean_svs: learner.sv_count() as f64,
+        comm,
+        series: metrics.series,
+        wall_secs: watch.elapsed_secs(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_oracle_communicates_nothing() {
+        let mut cfg = ExperimentConfig::quickstart();
+        cfg.rounds = 40;
+        let o = run_serial(&cfg);
+        assert_eq!(o.comm.total_bytes(), 0);
+        assert!(o.cumulative_loss > 0.0);
+        assert_eq!(o.rounds, 40);
+    }
+
+    #[test]
+    fn run_experiment_dispatches_serial() {
+        let mut cfg = ExperimentConfig::quickstart();
+        cfg.rounds = 20;
+        cfg.protocol = ProtocolConfig::Serial;
+        let o = run_experiment(&cfg).unwrap();
+        assert!(o.name.ends_with("-serial"));
+    }
+
+    #[test]
+    fn serial_loss_is_below_isolated_learners() {
+        // One learner on mT examples should beat m isolated learners on T
+        // each (it sees more data per model) — the premise of Def. 1.
+        let mut cfg = ExperimentConfig::quickstart();
+        cfg.rounds = 150;
+        cfg.learners = 4;
+        let serial = run_serial(&cfg);
+        cfg.protocol = ProtocolConfig::NoSync;
+        let isolated = run_experiment(&cfg).unwrap();
+        assert!(
+            serial.cumulative_error < isolated.cumulative_error * 1.05,
+            "serial {} vs isolated {}",
+            serial.cumulative_error,
+            isolated.cumulative_error
+        );
+    }
+}

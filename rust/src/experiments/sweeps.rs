@@ -1,0 +1,208 @@
+//! Ablation sweeps (DESIGN.md §4: abl-delta, abl-tau, abl-batch,
+//! abl-ref, bound-comm): parameter grids around the Fig 1/Fig 2
+//! geometries exposing the protocol's trade-off knobs.
+
+use anyhow::Result;
+
+use crate::config::{CompressionConfig, ExperimentConfig, ProtocolConfig};
+use crate::experiments::runner::run_experiment;
+use crate::metrics::Outcome;
+
+/// abl-delta: divergence-threshold sweep — the loss/communication
+/// trade-off curve of the dynamic protocol. Models are budget-bounded
+/// (τ=50) so the sweep isolates Δ: with unbounded expansions the
+/// per-round reference evaluations grow O(T) and the sweep's cost blows
+/// up O(T^3) without changing the Δ trade-off shape.
+pub fn sweep_delta(deltas: &[f64], scale: f64) -> Result<Vec<Outcome>> {
+    let mut out = Vec::new();
+    for &d in deltas {
+        let mut cfg = ExperimentConfig::fig1_dynamic_kernel_compressed(d, 50);
+        cfg.rounds = ((cfg.rounds as f64 * scale) as usize).max(30);
+        out.push(run_experiment(&cfg)?);
+    }
+    Ok(out)
+}
+
+/// abl-tau: compression-budget sweep — model size vs accuracy vs bytes.
+pub fn sweep_tau(taus: &[usize], delta: f64, scale: f64) -> Result<Vec<Outcome>> {
+    let mut out = Vec::new();
+    for &tau in taus {
+        let mut cfg = ExperimentConfig::fig1_dynamic_kernel_compressed(delta, tau);
+        cfg.rounds = ((cfg.rounds as f64 * scale) as usize).max(30);
+        out.push(run_experiment(&cfg)?);
+    }
+    Ok(out)
+}
+
+/// abl-comp: truncation vs projection at the same budget.
+pub fn sweep_compression(tau: usize, delta: f64, scale: f64) -> Result<Vec<Outcome>> {
+    let mut out = Vec::new();
+    for (label, comp) in [
+        ("truncation", CompressionConfig::Truncation { tau }),
+        ("projection", CompressionConfig::Projection { tau }),
+    ] {
+        let mut cfg = ExperimentConfig::fig1_dynamic_kernel(delta);
+        cfg.name = format!("fig1-kernel-{label}{tau}-dynamic(Δ={delta})");
+        cfg.learner.compression = comp;
+        cfg.rounds = ((cfg.rounds as f64 * scale) as usize).max(30);
+        out.push(run_experiment(&cfg)?);
+    }
+    Ok(out)
+}
+
+/// abl-batch: mini-batched local-condition checks (§4) — peak
+/// communication vs total communication.
+pub fn sweep_check_period(periods: &[usize], delta: f64, scale: f64) -> Result<Vec<Outcome>> {
+    let mut out = Vec::new();
+    for &b in periods {
+        let mut cfg = ExperimentConfig::fig1_kernel(ProtocolConfig::Dynamic {
+            delta,
+            check_period: b,
+        });
+        // Budget-bound models: isolates the check-period effect (and keeps
+        // the sweep's cost linear in T — see sweep_delta note).
+        cfg.learner.compression = CompressionConfig::Truncation { tau: 50 };
+        cfg.rounds = ((cfg.rounds as f64 * scale) as usize).max(30);
+        out.push(run_experiment(&cfg)?);
+    }
+    Ok(out)
+}
+
+/// abl-rff: bounded-model alternatives at comparable message size —
+/// SV truncation at budget tau vs Random Fourier Features with the
+/// byte-equivalent feature count (one SV costs ~(4d + 24) wire bytes vs
+/// 4 bytes per RFF weight).
+pub fn sweep_rff(tau: usize, delta: f64, scale: f64) -> Result<Vec<Outcome>> {
+    let mut out = Vec::new();
+    let mut trunc = ExperimentConfig::fig1_dynamic_kernel_compressed(delta, tau);
+    trunc.rounds = ((trunc.rounds as f64 * scale) as usize).max(30);
+    let dim = trunc.data.dim();
+    out.push(run_experiment(&trunc)?);
+
+    let gamma = match trunc.learner.kernel {
+        crate::config::KernelConfig::Rbf { gamma } => gamma,
+        _ => unreachable!(),
+    };
+    // Byte-equivalent feature count.
+    let rff_dim = tau * (4 * dim + 24) / 4;
+    let mut rff = ExperimentConfig::fig1_kernel(ProtocolConfig::Dynamic {
+        delta,
+        check_period: 1,
+    });
+    rff.name = format!("fig1-rff{rff_dim}-dynamic(Δ={delta})");
+    rff.learner.kernel = crate::config::KernelConfig::Rff {
+        gamma,
+        dim: rff_dim,
+    };
+    rff.learner.compression = CompressionConfig::None;
+    rff.rounds = trunc.rounds;
+    out.push(run_experiment(&rff)?);
+    Ok(out)
+}
+
+/// abl-partial: full-sync-only dynamic protocol vs the partial-sync
+/// (subset balancing) refinement of [10] at the same threshold.
+pub fn sweep_partial(delta: f64, scale: f64) -> Result<Vec<Outcome>> {
+    let mut out = Vec::new();
+    for partial in [false, true] {
+        let mut cfg = ExperimentConfig::fig1_dynamic_kernel_compressed(delta, 50);
+        cfg.partial_sync = partial;
+        if partial {
+            cfg.name = format!("{}-partial", cfg.name);
+        }
+        cfg.rounds = ((cfg.rounds as f64 * scale) as usize).max(30);
+        out.push(run_experiment(&cfg)?);
+    }
+    Ok(out)
+}
+
+/// abl-decay: fixed threshold vs the consistency schedule
+/// Delta_t = Delta_0 / sqrt(t) (Sec. 3 / §4 future work).
+pub fn sweep_decay(delta0: f64, scale: f64) -> Result<Vec<Outcome>> {
+    let mut out = Vec::new();
+    for proto in [
+        ProtocolConfig::Dynamic {
+            delta: delta0,
+            check_period: 1,
+        },
+        ProtocolConfig::DynamicDecay {
+            delta0,
+            check_period: 1,
+        },
+    ] {
+        let mut cfg = ExperimentConfig::fig1_kernel(proto);
+        cfg.learner.compression = CompressionConfig::Truncation { tau: 50 };
+        cfg.rounds = ((cfg.rounds as f64 * scale) as usize).max(30);
+        out.push(run_experiment(&cfg)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_sweep_trades_comm_for_loss() {
+        let outs = sweep_delta(&[0.02, 2.0], 0.1).unwrap();
+        // Larger Delta => less communication.
+        assert!(
+            outs[1].comm.total_bytes() <= outs[0].comm.total_bytes(),
+            "comm: delta=2.0 {} vs delta=0.02 {}",
+            outs[1].comm.total_bytes(),
+            outs[0].comm.total_bytes()
+        );
+    }
+
+    #[test]
+    fn tau_sweep_bounds_model_size() {
+        let outs = sweep_tau(&[8, 32], 0.2, 0.05).unwrap();
+        assert!(outs[0].mean_svs <= 8.0 + 1e-9);
+        assert!(outs[1].mean_svs <= 32.0 + 1e-9);
+    }
+
+    #[test]
+    fn check_period_caps_peak_comm() {
+        let outs = sweep_check_period(&[1, 8], 0.05, 0.1).unwrap();
+        // With b = 8 the protocol can sync at most every 8th round: peak
+        // bytes per round can only shrink or stay equal.
+        assert!(outs[1].comm.syncs <= outs[0].comm.syncs);
+    }
+
+    #[test]
+    fn partial_sync_never_increases_full_syncs() {
+        let outs = sweep_partial(0.3, 0.1).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert!(outs[1].comm.syncs <= outs[0].comm.syncs);
+    }
+
+    #[test]
+    fn rff_is_fixed_size_and_learns() {
+        let outs = sweep_rff(16, 0.5, 0.1).unwrap();
+        assert_eq!(outs.len(), 2);
+        let rff = &outs[1];
+        assert!(rff.name.contains("rff"));
+        // RFF models have no support vectors.
+        assert_eq!(rff.mean_svs, 0.0);
+        // And still learn the nonlinear task (not chance level).
+        let rate = rff.cumulative_error / (rff.rounds as f64 * rff.learners as f64);
+        assert!(rate < 0.47, "rff error rate {rate}");
+    }
+
+    #[test]
+    fn decay_schedule_syncs_at_least_as_often_late() {
+        let outs = sweep_decay(1.0, 0.1).unwrap();
+        assert_eq!(outs.len(), 2);
+        // The decaying threshold tightens over time — it can only trigger
+        // at least as many syncs as the fixed one with the same Delta_0.
+        assert!(outs[1].comm.syncs >= outs[0].comm.syncs);
+    }
+
+    #[test]
+    fn compression_sweep_runs_both_schemes() {
+        let outs = sweep_compression(12, 0.2, 0.05).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert!(outs[0].name.contains("truncation"));
+        assert!(outs[1].name.contains("projection"));
+    }
+}

@@ -1,0 +1,90 @@
+//! Kernel functions k: X x X -> R. The paper's experiments use the
+//! Gaussian (RBF) kernel; linear and polynomial are provided for the
+//! baselines and tests.
+
+use crate::util::float::{dot, sq_dist};
+
+/// A positive-definite kernel function.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Kernel {
+    /// k(x, z) = <x, z>
+    Linear,
+    /// k(x, z) = exp(-gamma ||x - z||^2)
+    Rbf { gamma: f64 },
+    /// k(x, z) = (<x, z> + c)^p
+    Polynomial { degree: u32, c: f64 },
+}
+
+impl Kernel {
+    /// Evaluate k(x, z).
+    #[inline]
+    pub fn eval(&self, x: &[f64], z: &[f64]) -> f64 {
+        match *self {
+            Kernel::Linear => dot(x, z),
+            Kernel::Rbf { gamma } => (-gamma * sq_dist(x, z)).exp(),
+            Kernel::Polynomial { degree, c } => (dot(x, z) + c).powi(degree as i32),
+        }
+    }
+
+    /// k(x, x) — cheaper than `eval(x, x)` for RBF (always 1).
+    #[inline]
+    pub fn eval_self(&self, x: &[f64]) -> f64 {
+        match *self {
+            Kernel::Rbf { .. } => 1.0,
+            _ => self.eval(x, x),
+        }
+    }
+
+    /// From the config enum. RFF models do not live in a support-vector
+    /// expansion — they are linear in phi-space — so they have no Kernel.
+    pub fn from_config(c: crate::config::KernelConfig) -> Kernel {
+        match c {
+            crate::config::KernelConfig::Linear => Kernel::Linear,
+            crate::config::KernelConfig::Rbf { gamma } => Kernel::Rbf { gamma },
+            crate::config::KernelConfig::Rff { .. } => {
+                panic!("RFF models are linear in phi-space; no SV kernel")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_is_dot() {
+        assert_eq!(Kernel::Linear.eval(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn rbf_bounds_and_identity() {
+        let k = Kernel::Rbf { gamma: 0.5 };
+        assert!((k.eval(&[1.0, 2.0], &[1.0, 2.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(k.eval_self(&[9.0, 9.0]), 1.0);
+        let v = k.eval(&[0.0, 0.0], &[10.0, 10.0]);
+        assert!(v > 0.0 && v < 1e-10);
+    }
+
+    #[test]
+    fn rbf_symmetry() {
+        let k = Kernel::Rbf { gamma: 1.3 };
+        let (a, b) = ([0.3, -1.2, 0.7], [2.0, 0.1, -0.4]);
+        assert_eq!(k.eval(&a, &b), k.eval(&b, &a));
+    }
+
+    #[test]
+    fn polynomial() {
+        let k = Kernel::Polynomial { degree: 2, c: 1.0 };
+        assert_eq!(k.eval(&[1.0, 1.0], &[1.0, 1.0]), 9.0);
+    }
+
+    #[test]
+    fn rbf_monotone_in_distance() {
+        let k = Kernel::Rbf { gamma: 1.0 };
+        let o = [0.0, 0.0];
+        let near = k.eval(&o, &[0.5, 0.0]);
+        let far = k.eval(&o, &[1.5, 0.0]);
+        assert!(near > far);
+    }
+}

@@ -1,0 +1,212 @@
+//! Gram-matrix computation and small dense linear algebra (Cholesky solve)
+//! used by projection-based compression and the divergence service.
+
+use crate::kernel::functions::Kernel;
+
+/// Dense row-major Gram matrix K[i * cols + j] = k(a_i, b_j).
+#[derive(Debug, Clone)]
+pub struct Gram {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Gram {
+    /// Compute the Gram block between two flat point sets (`a` is
+    /// `rows x dim`, `b` is `cols x dim`).
+    pub fn compute(kernel: &Kernel, a: &[f64], b: &[f64], dim: usize) -> Gram {
+        assert_eq!(a.len() % dim, 0);
+        assert_eq!(b.len() % dim, 0);
+        let rows = a.len() / dim;
+        let cols = b.len() / dim;
+        let mut data = vec![0.0; rows * cols];
+        for i in 0..rows {
+            let ai = &a[i * dim..(i + 1) * dim];
+            let row = &mut data[i * cols..(i + 1) * cols];
+            for (j, rj) in row.iter_mut().enumerate() {
+                *rj = kernel.eval(ai, &b[j * dim..(j + 1) * dim]);
+            }
+        }
+        Gram { rows, cols, data }
+    }
+
+    /// Symmetric self-Gram of one point set, exploiting symmetry.
+    pub fn compute_symmetric(kernel: &Kernel, a: &[f64], dim: usize) -> Gram {
+        let n = a.len() / dim;
+        let mut data = vec![0.0; n * n];
+        for i in 0..n {
+            let ai = &a[i * dim..(i + 1) * dim];
+            data[i * n + i] = kernel.eval_self(ai);
+            for j in (i + 1)..n {
+                let v = kernel.eval(ai, &a[j * dim..(j + 1) * dim]);
+                data[i * n + j] = v;
+                data[j * n + i] = v;
+            }
+        }
+        Gram {
+            rows: n,
+            cols: n,
+            data,
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Quadratic form v^T K w.
+    pub fn quad_form(&self, v: &[f64], w: &[f64]) -> f64 {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(w.len(), self.cols);
+        let mut acc = 0.0;
+        for i in 0..self.rows {
+            if v[i] == 0.0 {
+                continue;
+            }
+            let row = &self.data[i * self.cols..(i + 1) * self.cols];
+            let mut ri = 0.0;
+            for (kij, wj) in row.iter().zip(w) {
+                ri += kij * wj;
+            }
+            acc += v[i] * ri;
+        }
+        acc
+    }
+}
+
+/// Lower-triangular Cholesky factor of (K + ridge I), row-major. None if
+/// not numerically PD even with the ridge.
+pub fn cholesky_factor(k: &Gram, ridge: f64) -> Option<Vec<f64>> {
+    assert_eq!(k.rows, k.cols);
+    let n = k.rows;
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = k.at(i, j) + if i == j { ridge } else { 0.0 };
+            for p in 0..j {
+                s -= l[i * n + p] * l[j * n + p];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L L^T x = b given the factor from [`cholesky_factor`].
+pub fn cholesky_solve_with(l: &[f64], b: &[f64]) -> Vec<f64> {
+    let n = b.len();
+    debug_assert_eq!(l.len(), n * n);
+    // Forward solve L y = b.
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for p in 0..i {
+            s -= l[i * n + p] * y[p];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    // Back solve L^T x = y.
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for p in (i + 1)..n {
+            s -= l[p * n + i] * x[p];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+/// Solve (K + ridge I) x = b for symmetric positive-definite K via
+/// Cholesky; used by projection compression. Returns None if the matrix is
+/// not numerically PD even with the ridge.
+pub fn cholesky_solve(k: &Gram, b: &[f64], ridge: f64) -> Option<Vec<f64>> {
+    let l = cholesky_factor(k, ridge)?;
+    Some(cholesky_solve_with(&l, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::float::allclose;
+
+    #[test]
+    fn gram_matches_pairwise_eval() {
+        let k = Kernel::Rbf { gamma: 0.7 };
+        let a = [0.0, 0.0, 1.0, 0.0, 0.0, 2.0]; // 3 points in R^2
+        let b = [1.0, 1.0, -1.0, 0.5]; // 2 points
+        let g = Gram::compute(&k, &a, &b, 2);
+        assert_eq!((g.rows, g.cols), (3, 2));
+        for i in 0..3 {
+            for j in 0..2 {
+                let want = k.eval(&a[i * 2..i * 2 + 2], &b[j * 2..j * 2 + 2]);
+                assert!((g.at(i, j) - want).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_matches_general() {
+        let k = Kernel::Rbf { gamma: 1.1 };
+        let a = [0.3, 1.0, -0.5, 0.2, 2.0, -1.0, 0.0, 0.0];
+        let g1 = Gram::compute(&k, &a, &a, 2);
+        let g2 = Gram::compute_symmetric(&k, &a, 2);
+        assert!(allclose(&g1.data, &g2.data, 1e-12, 1e-15));
+    }
+
+    #[test]
+    fn quad_form_is_norm() {
+        let k = Kernel::Rbf { gamma: 0.5 };
+        let a = [0.0, 1.0, 2.0]; // 3 points in R^1
+        let alpha = [1.0, -0.5, 0.25];
+        let g = Gram::compute_symmetric(&k, &a, 1);
+        let mut want = 0.0;
+        for i in 0..3 {
+            for j in 0..3 {
+                want += alpha[i] * alpha[j] * k.eval(&a[i..i + 1], &a[j..j + 1]);
+            }
+        }
+        assert!((g.quad_form(&alpha, &alpha) - want).abs() < 1e-14);
+    }
+
+    #[test]
+    fn cholesky_solves_identity() {
+        let g = Gram {
+            rows: 3,
+            cols: 3,
+            data: vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0],
+        };
+        let x = cholesky_solve(&g, &[1.0, 2.0, 3.0], 0.0).unwrap();
+        assert!(allclose(&x, &[1.0, 2.0, 3.0], 1e-12, 1e-14));
+    }
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        // K = [[2, 1], [1, 2]], b = [3, 3] -> x = [1, 1].
+        let g = Gram {
+            rows: 2,
+            cols: 2,
+            data: vec![2.0, 1.0, 1.0, 2.0],
+        };
+        let x = cholesky_solve(&g, &[3.0, 3.0], 0.0).unwrap();
+        assert!(allclose(&x, &[1.0, 1.0], 1e-12, 1e-14));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let g = Gram {
+            rows: 2,
+            cols: 2,
+            data: vec![1.0, 2.0, 2.0, 1.0], // eigenvalues 3, -1
+        };
+        assert!(cholesky_solve(&g, &[1.0, 1.0], 0.0).is_none());
+    }
+}

@@ -1,0 +1,97 @@
+//! Primal linear models w^T x — the hypothesis class of the original 2014
+//! protocol and the baseline the paper compares against.
+
+use crate::util::float::{axpy, dot, scale, sq_dist};
+
+/// Dense linear model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinearModel {
+    pub w: Vec<f64>,
+}
+
+impl LinearModel {
+    pub fn zeros(dim: usize) -> Self {
+        LinearModel { w: vec![0.0; dim] }
+    }
+
+    pub fn from_w(w: Vec<f64>) -> Self {
+        LinearModel { w }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    #[inline]
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        dot(&self.w, x)
+    }
+
+    /// w += c * x.
+    pub fn add_scaled(&mut self, c: f64, x: &[f64]) {
+        axpy(c, x, &mut self.w);
+    }
+
+    /// w *= c (regularization shrinkage).
+    pub fn scale(&mut self, c: f64) {
+        scale(c, &mut self.w);
+    }
+
+    /// ||w - v||^2 — the Euclidean model distance used by the 2014 local
+    /// conditions.
+    pub fn distance_sq(&self, other: &LinearModel) -> f64 {
+        sq_dist(&self.w, &other.w)
+    }
+
+    pub fn norm_sq(&self) -> f64 {
+        dot(&self.w, &self.w)
+    }
+
+    /// Elementwise average of a configuration.
+    pub fn average(models: &[&LinearModel]) -> LinearModel {
+        assert!(!models.is_empty());
+        let dim = models[0].dim();
+        let mut avg = vec![0.0; dim];
+        for m in models {
+            axpy(1.0, &m.w, &mut avg);
+        }
+        scale(1.0 / models.len() as f64, &mut avg);
+        LinearModel { w: avg }
+    }
+
+    pub fn set(&mut self, other: &LinearModel) {
+        self.w.copy_from_slice(&other.w);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_and_update() {
+        let mut m = LinearModel::zeros(3);
+        assert_eq!(m.predict(&[1.0, 2.0, 3.0]), 0.0);
+        m.add_scaled(2.0, &[1.0, 0.0, -1.0]);
+        assert_eq!(m.w, vec![2.0, 0.0, -2.0]);
+        assert_eq!(m.predict(&[1.0, 1.0, 1.0]), 0.0);
+        assert_eq!(m.predict(&[1.0, 0.0, 0.0]), 2.0);
+    }
+
+    #[test]
+    fn average_and_distance() {
+        let a = LinearModel::from_w(vec![0.0, 0.0]);
+        let b = LinearModel::from_w(vec![2.0, 4.0]);
+        let avg = LinearModel::average(&[&a, &b]);
+        assert_eq!(avg.w, vec![1.0, 2.0]);
+        assert_eq!(a.distance_sq(&b), 20.0);
+        assert_eq!(a.distance_sq(&a), 0.0);
+    }
+
+    #[test]
+    fn scale_shrinks() {
+        let mut m = LinearModel::from_w(vec![2.0, -4.0]);
+        m.scale(0.5);
+        assert_eq!(m.w, vec![1.0, -2.0]);
+    }
+}

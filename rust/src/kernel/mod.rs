@@ -1,0 +1,14 @@
+//! RKHS algebra in Rust: kernel functions, support-vector-expansion models
+//! (the paper's dual representation), Gram matrices and model averaging
+//! (Prop. 2). This is both the native compute backend and the oracle the
+//! PJRT path is tested against.
+
+pub mod functions;
+pub mod gram;
+pub mod linear;
+pub mod model;
+
+pub use functions::Kernel;
+pub use gram::Gram;
+pub use linear::LinearModel;
+pub use model::{Model, SvModel};

@@ -1,0 +1,419 @@
+//! Support-vector-expansion models — the paper's dual representation
+//! `f(.) = sum_{x in S} alpha_x k(x, .)` — plus the unified [`Model`] type
+//! (linear or kernelized) the learners and protocols operate on.
+
+use crate::kernel::functions::Kernel;
+use crate::kernel::linear::LinearModel;
+use crate::util::float::axpy;
+
+/// Globally unique support-vector identity.
+///
+/// The paper's "trivial communication reduction strategy" (Sec. 3) sends a
+/// support vector's coordinates only once and refers to it by identity
+/// afterwards; ids also make the union in Prop. 2 a set union rather than a
+/// multiset. Ids are `learner_id << 40 | local_counter`, so two learners
+/// never mint the same id.
+pub type SvId = u64;
+
+/// Compose an [`SvId`] from learner index and local counter.
+#[inline]
+pub fn make_sv_id(learner: usize, counter: u64) -> SvId {
+    ((learner as u64 + 1) << 40) | counter
+}
+
+/// A kernel model in its support-vector expansion.
+///
+/// Storage is flat (`xs[i * dim .. (i+1) * dim]` is SV `i`) so prediction
+/// walks memory linearly; `ids[i]` and `alpha[i]` are parallel arrays.
+/// The RKHS norm ||f||^2 is maintained incrementally where cheap and
+/// recomputed exactly where not — see [`SvModel::norm_sq`].
+#[derive(Debug, Clone)]
+pub struct SvModel {
+    pub kernel: Kernel,
+    pub dim: usize,
+    xs: Vec<f64>,
+    alpha: Vec<f64>,
+    ids: Vec<SvId>,
+}
+
+impl SvModel {
+    pub fn new(kernel: Kernel, dim: usize) -> Self {
+        SvModel {
+            kernel,
+            dim,
+            xs: Vec::new(),
+            alpha: Vec::new(),
+            ids: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.alpha.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.alpha.is_empty()
+    }
+
+    /// Support vector `i` as a slice.
+    #[inline]
+    pub fn sv(&self, i: usize) -> &[f64] {
+        &self.xs[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    pub fn alpha_mut(&mut self) -> &mut [f64] {
+        &mut self.alpha
+    }
+
+    pub fn ids(&self) -> &[SvId] {
+        &self.ids
+    }
+
+    /// Raw flat SV storage (row-major `len x dim`).
+    pub fn xs_flat(&self) -> &[f64] {
+        &self.xs
+    }
+
+    /// Append a support vector.
+    pub fn push(&mut self, id: SvId, x: &[f64], alpha: f64) {
+        debug_assert_eq!(x.len(), self.dim);
+        self.xs.extend_from_slice(x);
+        self.alpha.push(alpha);
+        self.ids.push(id);
+    }
+
+    /// Remove support vector `i` (swap-remove; order is not semantic).
+    pub fn swap_remove(&mut self, i: usize) {
+        let n = self.len();
+        debug_assert!(i < n);
+        let last = n - 1;
+        if i != last {
+            let (head, tail) = self.xs.split_at_mut(last * self.dim);
+            head[i * self.dim..(i + 1) * self.dim].copy_from_slice(&tail[..self.dim]);
+        }
+        self.xs.truncate(last * self.dim);
+        self.alpha.swap_remove(i);
+        self.ids.swap_remove(i);
+    }
+
+    /// Remove support vector `i` preserving insertion order (needed by
+    /// truncation, which drops the *oldest*).
+    pub fn remove_ordered(&mut self, i: usize) {
+        let n = self.len();
+        debug_assert!(i < n);
+        self.xs.drain(i * self.dim..(i + 1) * self.dim);
+        self.alpha.remove(i);
+        self.ids.remove(i);
+    }
+
+    /// Multiply every coefficient by `c` (the (1 - eta lambda) decay).
+    pub fn scale(&mut self, c: f64) {
+        for a in &mut self.alpha {
+            *a *= c;
+        }
+    }
+
+    /// Drop SVs with |alpha| below `tol` (keeps the expansion tidy after
+    /// decay; exact up to the discarded mass).
+    pub fn prune(&mut self, tol: f64) {
+        let mut i = 0;
+        while i < self.len() {
+            if self.alpha[i].abs() < tol {
+                self.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// f(x) = sum_i alpha_i k(sv_i, x). The system's hot path.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..self.len() {
+            acc += self.alpha[i] * self.kernel.eval(self.sv(i), x);
+        }
+        acc
+    }
+
+    /// <f, g> in the RKHS: sum_ij alpha_i beta_j k(x_i, z_j).
+    pub fn inner(&self, other: &SvModel) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..self.len() {
+            let xi = self.sv(i);
+            let ai = self.alpha[i];
+            if ai == 0.0 {
+                continue;
+            }
+            for j in 0..other.len() {
+                let bj = other.alpha[j];
+                if bj == 0.0 {
+                    continue;
+                }
+                acc += ai * bj * self.kernel.eval(xi, other.sv(j));
+            }
+        }
+        acc
+    }
+
+    /// ||f||^2 = <f, f>.
+    pub fn norm_sq(&self) -> f64 {
+        self.inner(self)
+    }
+
+    /// ||f - g||^2 = ||f||^2 + ||g||^2 - 2 <f, g>, clamped at 0 against
+    /// floating-point cancellation.
+    pub fn distance_sq(&self, other: &SvModel) -> f64 {
+        (self.norm_sq() + other.norm_sq() - 2.0 * self.inner(other)).max(0.0)
+    }
+
+    /// Replace the whole expansion (used when adopting a synchronized
+    /// model from the coordinator).
+    pub fn replace_with(&mut self, other: &SvModel) {
+        self.xs.clear();
+        self.xs.extend_from_slice(&other.xs);
+        self.alpha.clear();
+        self.alpha.extend_from_slice(&other.alpha);
+        self.ids.clear();
+        self.ids.extend_from_slice(&other.ids);
+    }
+
+    /// Prop. 2: average of a model configuration. Support set is the
+    /// *union* (by id) of all local support sets; each union coefficient is
+    /// `1/m` times the sum of the local coefficients carried by that id.
+    pub fn average(models: &[&SvModel]) -> SvModel {
+        assert!(!models.is_empty());
+        let m = models.len() as f64;
+        let mut avg = SvModel::new(models[0].kernel, models[0].dim);
+        let mut index: std::collections::HashMap<SvId, usize> = std::collections::HashMap::new();
+        for f in models {
+            for i in 0..f.len() {
+                let id = f.ids[i];
+                match index.get(&id) {
+                    Some(&j) => avg.alpha[j] += f.alpha[i] / m,
+                    None => {
+                        index.insert(id, avg.len());
+                        avg.push(id, f.sv(i), f.alpha[i] / m);
+                    }
+                }
+            }
+        }
+        avg
+    }
+}
+
+/// A local model: either a primal linear weight vector or a kernel
+/// expansion. The protocol layer is generic over this.
+#[derive(Debug, Clone)]
+pub enum Model {
+    Linear(LinearModel),
+    Kernel(SvModel),
+}
+
+impl Model {
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        match self {
+            Model::Linear(m) => m.predict(x),
+            Model::Kernel(m) => m.predict(x),
+        }
+    }
+
+    /// ||f - g||^2 in the respective Hilbert space.
+    pub fn distance_sq(&self, other: &Model) -> f64 {
+        match (self, other) {
+            (Model::Linear(a), Model::Linear(b)) => a.distance_sq(b),
+            (Model::Kernel(a), Model::Kernel(b)) => a.distance_sq(b),
+            _ => panic!("cannot mix linear and kernel models"),
+        }
+    }
+
+    /// Average a configuration (Prop. 2 for kernels, elementwise for
+    /// linear).
+    pub fn average(models: &[&Model]) -> Model {
+        match models[0] {
+            Model::Linear(_) => {
+                let ws: Vec<&LinearModel> = models
+                    .iter()
+                    .map(|m| match m {
+                        Model::Linear(l) => l,
+                        _ => panic!("mixed configuration"),
+                    })
+                    .collect();
+                Model::Linear(LinearModel::average(&ws))
+            }
+            Model::Kernel(_) => {
+                let fs: Vec<&SvModel> = models
+                    .iter()
+                    .map(|m| match m {
+                        Model::Kernel(k) => k,
+                        _ => panic!("mixed configuration"),
+                    })
+                    .collect();
+                Model::Kernel(SvModel::average(&fs))
+            }
+        }
+    }
+
+    pub fn as_kernel(&self) -> Option<&SvModel> {
+        match self {
+            Model::Kernel(k) => Some(k),
+            _ => None,
+        }
+    }
+
+    pub fn as_linear(&self) -> Option<&LinearModel> {
+        match self {
+            Model::Linear(l) => Some(l),
+            _ => None,
+        }
+    }
+
+    /// Number of parameters the model would transmit if sent whole
+    /// (coefficients + vectors for kernels; weights for linear).
+    pub fn size_params(&self) -> usize {
+        match self {
+            Model::Linear(l) => l.w.len(),
+            Model::Kernel(k) => k.len() * (k.dim + 1),
+        }
+    }
+}
+
+/// Weighted residual helper used by PA updates on linear models: compute
+/// w + c * x into a fresh vector.
+pub fn linear_step(w: &[f64], c: f64, x: &[f64]) -> Vec<f64> {
+    let mut out = w.to_vec();
+    axpy(c, x, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rbf() -> Kernel {
+        Kernel::Rbf { gamma: 0.5 }
+    }
+
+    #[test]
+    fn empty_model_predicts_zero() {
+        let f = SvModel::new(rbf(), 3);
+        assert_eq!(f.predict(&[1.0, 2.0, 3.0]), 0.0);
+        assert_eq!(f.norm_sq(), 0.0);
+    }
+
+    #[test]
+    fn predict_single_sv() {
+        let mut f = SvModel::new(rbf(), 2);
+        f.push(1, &[1.0, 0.0], 2.0);
+        assert!((f.predict(&[1.0, 0.0]) - 2.0).abs() < 1e-12);
+        let far = f.predict(&[100.0, 0.0]);
+        assert!(far.abs() < 1e-12);
+    }
+
+    #[test]
+    fn norm_and_distance() {
+        let mut f = SvModel::new(rbf(), 1);
+        f.push(1, &[0.0], 1.0);
+        let mut g = SvModel::new(rbf(), 1);
+        g.push(2, &[1.0], 1.0);
+        // ||f||^2 = 1, ||g||^2 = 1, <f,g> = exp(-0.5)
+        let want = 2.0 - 2.0 * (-0.5f64).exp();
+        assert!((f.distance_sq(&g) - want).abs() < 1e-12);
+        assert_eq!(f.distance_sq(&f), 0.0);
+    }
+
+    #[test]
+    fn swap_remove_keeps_layout() {
+        let mut f = SvModel::new(rbf(), 2);
+        f.push(1, &[1.0, 1.0], 0.1);
+        f.push(2, &[2.0, 2.0], 0.2);
+        f.push(3, &[3.0, 3.0], 0.3);
+        f.swap_remove(0);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.sv(0), &[3.0, 3.0]);
+        assert_eq!(f.alpha()[0], 0.3);
+        assert_eq!(f.ids()[0], 3);
+        assert_eq!(f.sv(1), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn remove_ordered_preserves_order() {
+        let mut f = SvModel::new(rbf(), 1);
+        for i in 0..4 {
+            f.push(i as u64, &[i as f64], i as f64);
+        }
+        f.remove_ordered(1);
+        assert_eq!(f.ids(), &[0, 2, 3]);
+        assert_eq!(f.sv(1), &[2.0]);
+    }
+
+    #[test]
+    fn average_unions_by_id() {
+        // Learner A and B share SV id 10 (from an earlier sync); each also
+        // has one private SV.
+        let mut a = SvModel::new(rbf(), 1);
+        a.push(10, &[0.0], 1.0);
+        a.push(make_sv_id(0, 1), &[1.0], 0.5);
+        let mut b = SvModel::new(rbf(), 1);
+        b.push(10, &[0.0], 3.0);
+        b.push(make_sv_id(1, 1), &[2.0], -0.5);
+
+        let avg = SvModel::average(&[&a, &b]);
+        assert_eq!(avg.len(), 3); // shared id collapses
+        let i10 = avg.ids().iter().position(|&i| i == 10).unwrap();
+        assert!((avg.alpha()[i10] - 2.0).abs() < 1e-12); // (1 + 3) / 2
+
+        // Prop. 2 semantics: avg.predict == mean of member predictions.
+        for x in [-1.0, 0.0, 0.7, 2.5] {
+            let want = (a.predict(&[x]) + b.predict(&[x])) / 2.0;
+            assert!((avg.predict(&[x]) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn average_identical_models_is_identity() {
+        let mut a = SvModel::new(rbf(), 2);
+        a.push(1, &[1.0, 2.0], 0.7);
+        a.push(2, &[0.5, -1.0], -0.3);
+        let avg = SvModel::average(&[&a, &a, &a]);
+        assert!(avg.distance_sq(&a) < 1e-20);
+    }
+
+    #[test]
+    fn scale_and_prune() {
+        let mut f = SvModel::new(rbf(), 1);
+        f.push(1, &[0.0], 1.0);
+        f.push(2, &[1.0], 1e-9);
+        f.scale(0.5);
+        assert_eq!(f.alpha(), &[0.5, 5e-10]);
+        f.prune(1e-8);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.ids(), &[1]);
+    }
+
+    #[test]
+    fn model_enum_average_linear() {
+        let a = Model::Linear(LinearModel::from_w(vec![1.0, 2.0]));
+        let b = Model::Linear(LinearModel::from_w(vec![3.0, 4.0]));
+        let avg = Model::average(&[&a, &b]);
+        assert_eq!(avg.as_linear().unwrap().w, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mixed_distance_panics() {
+        let a = Model::Linear(LinearModel::from_w(vec![1.0]));
+        let b = Model::Kernel(SvModel::new(rbf(), 1));
+        let _ = a.distance_sq(&b);
+    }
+
+    #[test]
+    fn sv_id_composition() {
+        let id = make_sv_id(3, 77);
+        assert_ne!(make_sv_id(2, 77), id);
+        assert_ne!(make_sv_id(3, 78), id);
+    }
+}

@@ -1,0 +1,100 @@
+//! Update events: the exact description of one model transition
+//! `f_t -> phi~(f_t, x, y)`, emitted by every learner update. The protocol
+//! layer consumes these to maintain `||f - r||^2` incrementally (instead of
+//! an O(|S|^2 d) recomputation per round) and to account the Prop. 6 drift
+//! `||f - phi~(f)|| <= eta * loss`.
+
+use crate::kernel::model::SvId;
+
+/// A support vector removed from the expansion by compression.
+#[derive(Debug, Clone)]
+pub struct RemovedSv {
+    pub x: Vec<f64>,
+    /// Coefficient it carried at removal time (post-decay).
+    pub coeff: f64,
+}
+
+/// A surviving support vector whose coefficient was adjusted by projection
+/// compression.
+#[derive(Debug, Clone)]
+pub struct AdjustedSv {
+    pub x: Vec<f64>,
+    /// Additive coefficient change.
+    pub delta: f64,
+}
+
+/// Everything that happened in one `update(x, y)` call.
+#[derive(Debug, Clone, Default)]
+pub struct UpdateEvent {
+    /// Loss suffered before the update (the service-quality signal).
+    pub loss: f64,
+    /// The paper's figure metric: 0/1 mistake (classification) or squared
+    /// error (regression).
+    pub error: f64,
+    /// Prediction made before the update.
+    pub pred: f64,
+    /// Multiplicative decay `s = 1 - eta * lambda` applied to all
+    /// coefficients (1.0 if none).
+    pub scale: f64,
+    /// Coefficient of the support vector added at the observed `x`
+    /// (0.0 if the update added none). For linear learners this is the
+    /// scale on `x` added into `w`.
+    pub added_coeff: f64,
+    /// Identity of the added support vector, if any.
+    pub added_id: Option<SvId>,
+    /// Support vectors removed by compression this step.
+    pub removed: Vec<RemovedSv>,
+    /// Coefficient adjustments from projection compression this step.
+    pub adjusted: Vec<AdjustedSv>,
+    /// Exact RKHS drift ||f_{t+1} - f_t|| of this update (decay + add),
+    /// *excluding* the compression perturbation which is reported
+    /// separately as `compression_err`.
+    pub drift: f64,
+    /// Compression perturbation ||phi~(f) - phi(f)|| <= eps of this step.
+    pub compression_err: f64,
+}
+
+impl UpdateEvent {
+    /// Did this update change the model at all?
+    pub fn changed(&self) -> bool {
+        self.scale != 1.0
+            || self.added_coeff != 0.0
+            || !self.removed.is_empty()
+            || !self.adjusted.is_empty()
+    }
+
+    /// Total drift including compression (triangle inequality upper bound).
+    pub fn total_drift(&self) -> f64 {
+        self.drift + self.compression_err
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_noop() {
+        let ev = UpdateEvent {
+            scale: 1.0,
+            ..Default::default()
+        };
+        assert!(!ev.changed());
+        assert_eq!(ev.total_drift(), 0.0);
+    }
+
+    #[test]
+    fn changed_detection() {
+        let ev = UpdateEvent {
+            scale: 0.99,
+            ..Default::default()
+        };
+        assert!(ev.changed());
+        let ev = UpdateEvent {
+            scale: 1.0,
+            added_coeff: 0.1,
+            ..Default::default()
+        };
+        assert!(ev.changed());
+    }
+}

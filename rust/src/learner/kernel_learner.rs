@@ -1,0 +1,393 @@
+//! Kernelized online learner: NORMA-style SGD [Kivinen et al. 2004] and
+//! kernel passive-aggressive updates [Crammer et al. 2006], with optional
+//! model compression making the update rule *approximately*
+//! loss-proportional (the paper's Sec. 2 relaxation).
+//!
+//! One update step on example (x, y):
+//!   1. predict p = f(x), suffer loss l(p, y);
+//!   2. decay all coefficients by s = (1 - eta * lambda)   (regularization);
+//!   3. if dl(p, y) != 0, add x as a support vector with coefficient
+//!      c = -eta * dl(p, y)            (SGD) or the PA step size;
+//!   4. compress back to the budget tau (truncation / projection).
+//!
+//! The learner maintains ||f||^2 incrementally: decay scales it by s^2, the
+//! new SV contributes c^2 k(x,x) + 2 c s p, a removal of (x_r, a) subtracts
+//! 2 a f(x_r) - a^2 k(x_r,x_r). Every `RENORM_PERIOD` updates it is
+//! recomputed exactly to stop numerical drift from accumulating.
+
+use crate::compression::Compressor;
+use crate::config::LearnerConfig;
+use crate::kernel::model::{make_sv_id, SvModel};
+use crate::kernel::{Kernel, Model};
+use crate::learner::losses::Loss;
+use crate::learner::{OnlineLearner, UpdateEvent};
+
+/// Exact-renormalization period for the incremental ||f||^2.
+const RENORM_PERIOD: u64 = 256;
+
+/// NORMA / kernel-PA learner over a support-vector expansion.
+pub struct KernelLearner {
+    model: SvModel,
+    loss: Loss,
+    eta: f64,
+    lambda: f64,
+    passive_aggressive: bool,
+    compressor: Compressor,
+    learner_id: usize,
+    sv_counter: u64,
+    updates: u64,
+    norm_sq: f64,
+}
+
+impl KernelLearner {
+    pub fn new(cfg: LearnerConfig, dim: usize, learner_id: usize) -> Self {
+        let kernel = Kernel::from_config(cfg.kernel);
+        KernelLearner {
+            model: SvModel::new(kernel, dim),
+            loss: Loss::new(cfg.loss),
+            eta: cfg.eta,
+            lambda: cfg.lambda,
+            passive_aggressive: cfg.passive_aggressive,
+            compressor: Compressor::from_config(cfg.compression),
+            learner_id,
+            sv_counter: 0,
+            updates: 0,
+            norm_sq: 0.0,
+        }
+    }
+
+    pub fn sv_count(&self) -> usize {
+        self.model.len()
+    }
+
+    /// Step size of the new support vector's coefficient.
+    fn step_coeff(&self, p: f64, y: f64, loss: f64, x: &[f64]) -> f64 {
+        if self.passive_aggressive {
+            // PA-I step: tau = min(C, l / k(x,x)); direction opposes the
+            // loss subgradient. C = eta doubles as the aggressiveness cap.
+            let kxx = self.model.kernel.eval_self(x);
+            let tau = (loss / kxx.max(1e-12)).min(self.eta);
+            -tau * self.loss.dloss(p, y).signum()
+        } else {
+            -self.eta * self.loss.dloss(p, y)
+        }
+    }
+}
+
+impl OnlineLearner for KernelLearner {
+    fn snapshot(&self) -> Model {
+        Model::Kernel(self.model.clone())
+    }
+
+    fn predict(&self, x: &[f64]) -> f64 {
+        self.model.predict(x)
+    }
+
+    fn peek_loss(&self, x: &[f64], y: f64) -> f64 {
+        self.loss.loss(self.model.predict(x), y)
+    }
+
+    fn update(&mut self, x: &[f64], y: f64) -> UpdateEvent {
+        let p = self.model.predict(x);
+        let l = self.loss.loss(p, y);
+        let err = self.loss.error(p, y);
+        let dl = self.loss.dloss(p, y);
+
+        let s = if self.lambda > 0.0 {
+            1.0 - self.eta * self.lambda
+        } else {
+            1.0
+        };
+        let mut ev = UpdateEvent {
+            loss: l,
+            error: err,
+            pred: p,
+            scale: s,
+            ..Default::default()
+        };
+
+        // (2) decay.
+        if s != 1.0 {
+            self.model.scale(s);
+            self.norm_sq *= s * s;
+        }
+
+        // (3) loss-proportional step.
+        let mut drift_sq = (s - 1.0) * (s - 1.0) * self.norm_sq / (s * s).max(1e-300);
+        if dl != 0.0 && l > 0.0 {
+            let c = self.step_coeff(p, y, l, x);
+            if c != 0.0 {
+                self.sv_counter += 1;
+                let id = make_sv_id(self.learner_id, self.sv_counter);
+                let kxx = self.model.kernel.eval_self(x);
+                // ||f' - f||^2 where f' = sf + c k_x and f the pre-decay
+                // model: (s-1)^2 ||f||^2_old + c^2 k(x,x) + 2 (s-1) c f_old(x).
+                let norm_old = self.norm_sq / (s * s).max(1e-300);
+                drift_sq = (s - 1.0) * (s - 1.0) * norm_old
+                    + c * c * kxx
+                    + 2.0 * (s - 1.0) * c * p;
+                // Incremental ||f||^2: post-decay model is s*f_old, so
+                // f_post_decay(x) = s * p.
+                self.norm_sq += c * c * kxx + 2.0 * c * (s * p);
+                self.model.push(id, x, c);
+                ev.added_coeff = c;
+                ev.added_id = Some(id);
+            }
+        }
+        ev.drift = drift_sq.max(0.0).sqrt();
+
+        // (4) compression.
+        let comp = self.compressor.compress(&mut self.model);
+        if !comp.is_noop() {
+            // Norm bookkeeping. The steady-state case (budget full, one
+            // new SV added, one truncated) admits an exact O(tau d)
+            // incremental update: removing (x_r, a) from f gives
+            // g = f - a k_r with ||g||^2 = ||f||^2 - 2 a g(x_r) - a^2 k_rr
+            // (expressed via the post-removal model g we already hold).
+            // The O(tau^2 d) exact recompute — formerly every round on a
+            // full budget, the L3 hot-path bottleneck (§Perf L3-1) — now
+            // only runs for multi-removal / projection outcomes.
+            if comp.adjusted.is_empty() && comp.removed.len() == 1 {
+                let rem = &comp.removed[0];
+                let a = rem.coeff;
+                let k_rr = self.model.kernel.eval_self(&rem.x);
+                self.norm_sq -= 2.0 * a * self.model.predict(&rem.x) + a * a * k_rr;
+                self.norm_sq = self.norm_sq.max(0.0);
+            } else {
+                self.norm_sq = self.model.norm_sq();
+            }
+            ev.compression_err = comp.err;
+            ev.removed = comp.removed;
+            ev.adjusted = comp.adjusted;
+        }
+
+        // Periodic exact renormalization.
+        self.updates += 1;
+        if self.updates % RENORM_PERIOD == 0 {
+            self.norm_sq = self.model.norm_sq();
+        }
+        ev
+    }
+
+    fn set_model(&mut self, model: Model) {
+        match model {
+            Model::Kernel(k) => {
+                debug_assert_eq!(k.dim, self.model.dim);
+                self.model = k;
+                self.norm_sq = self.model.norm_sq();
+            }
+            Model::Linear(_) => panic!("kernel learner cannot adopt a linear model"),
+        }
+    }
+
+    fn norm_sq(&self) -> f64 {
+        self.norm_sq
+    }
+
+    fn sv_count(&self) -> usize {
+        self.model.len()
+    }
+}
+
+impl KernelLearner {
+    /// Direct view of the expansion (tests, divergence service).
+    pub fn expansion(&self) -> &SvModel {
+        &self.model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CompressionConfig, KernelConfig, LossKind};
+
+    fn cfg() -> LearnerConfig {
+        LearnerConfig {
+            eta: 0.5,
+            lambda: 0.01,
+            loss: LossKind::Hinge,
+            kernel: KernelConfig::Rbf { gamma: 0.5 },
+            compression: CompressionConfig::None,
+            passive_aggressive: false,
+        }
+    }
+
+    #[test]
+    fn learns_a_separable_toy_problem() {
+        let mut l = KernelLearner::new(cfg(), 1, 0);
+        // +1 at x=1, -1 at x=-1; after a few passes loss -> 0.
+        let mut last_losses = 0.0;
+        for round in 0..50 {
+            let a = l.update(&[1.0], 1.0);
+            let b = l.update(&[-1.0], -1.0);
+            if round >= 45 {
+                last_losses += a.loss + b.loss;
+            }
+        }
+        assert!(last_losses < 0.8, "loss still {last_losses}");
+        assert!(l.predict(&[1.0]) > 0.0);
+        assert!(l.predict(&[-1.0]) < 0.0);
+    }
+
+    #[test]
+    fn no_update_when_margin_satisfied() {
+        let mut l = KernelLearner::new(
+            LearnerConfig {
+                lambda: 0.0,
+                ..cfg()
+            },
+            1,
+            0,
+        );
+        // Teach it hard, then a correctly-classified example with margin
+        // must not change the model. (Hinge SGD converges to p = 1.0
+        // exactly at the margin, where the subgradient is already 0.)
+        for _ in 0..80 {
+            l.update(&[1.0], 1.0);
+        }
+        assert!(l.predict(&[1.0]) >= 1.0 - 1e-9);
+        let n = l.sv_count();
+        let ev = l.update(&[1.0], 1.0);
+        assert_eq!(ev.loss, 0.0);
+        assert!(!ev.changed());
+        assert_eq!(l.sv_count(), n);
+        assert_eq!(ev.drift, 0.0);
+    }
+
+    #[test]
+    fn drift_matches_exact_distance() {
+        let mut l = KernelLearner::new(cfg(), 2, 0);
+        let examples: Vec<(Vec<f64>, f64)> = vec![
+            (vec![1.0, 0.3], 1.0),
+            (vec![-0.5, 1.0], -1.0),
+            (vec![0.2, -0.7], 1.0),
+            (vec![0.9, 0.9], -1.0),
+        ];
+        for (x, y) in &examples {
+            let before = l.expansion().clone();
+            let ev = l.update(x, *y);
+            let exact = l.expansion().distance_sq(&before).sqrt();
+            assert!(
+                (ev.drift - exact).abs() < 1e-8,
+                "drift {} vs exact {}",
+                ev.drift,
+                exact
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_drift_is_eta_bounded_and_loss_gated() {
+        // Hinge SGD is eta-bounded: drift <= eta (|subgradient| <= 1,
+        // RBF k(x,x) = 1) and exactly 0 when no loss is suffered. (The
+        // strict Prop. 6 premise ||f - phi(f)|| <= eta*loss is the PA
+        // property — tested below.)
+        let mut l = KernelLearner::new(
+            LearnerConfig {
+                lambda: 0.0,
+                ..cfg()
+            },
+            1,
+            0,
+        );
+        let mut r = crate::util::Pcg64::seeded(5);
+        use crate::util::Rng;
+        for _ in 0..200 {
+            let x = [r.normal()];
+            let y = if r.chance(0.5) { 1.0 } else { -1.0 };
+            let ev = l.update(&x, y);
+            assert!(ev.drift <= 0.5 + 1e-9, "drift {}", ev.drift);
+            if ev.loss == 0.0 {
+                assert_eq!(ev.drift, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pa_drift_is_loss_proportional() {
+        // Prop. 6 premise: ||f - phi(f)|| <= eta * loss — exact for
+        // passive-aggressive updates (with eta = 1 and RBF k(x,x) = 1,
+        // drift = min(C, loss) <= loss).
+        let mut c = cfg();
+        c.passive_aggressive = true;
+        c.lambda = 0.0;
+        c.eta = 1.0; // aggressiveness cap C
+        let mut l = KernelLearner::new(c, 1, 0);
+        let mut r = crate::util::Pcg64::seeded(5);
+        use crate::util::Rng;
+        for _ in 0..200 {
+            let x = [r.normal()];
+            let y = if r.chance(0.5) { 1.0 } else { -1.0 };
+            let ev = l.update(&x, y);
+            assert!(
+                ev.drift <= 1.0 * ev.loss + 1e-9,
+                "drift {} loss {}",
+                ev.drift,
+                ev.loss
+            );
+        }
+    }
+
+    #[test]
+    fn incremental_norm_stays_exact() {
+        let mut l = KernelLearner::new(cfg(), 2, 0);
+        let mut r = crate::util::Pcg64::seeded(6);
+        use crate::util::Rng;
+        for _ in 0..100 {
+            let x = [r.normal(), r.normal()];
+            let y = if r.chance(0.5) { 1.0 } else { -1.0 };
+            l.update(&x, y);
+        }
+        let exact = l.expansion().norm_sq();
+        assert!(
+            (l.norm_sq() - exact).abs() < 1e-6 * exact.max(1.0),
+            "incr {} exact {}",
+            l.norm_sq(),
+            exact
+        );
+    }
+
+    #[test]
+    fn truncation_keeps_budget_and_reports_eps() {
+        let mut c = cfg();
+        c.compression = CompressionConfig::Truncation { tau: 10 };
+        let mut l = KernelLearner::new(c, 1, 0);
+        let mut r = crate::util::Pcg64::seeded(7);
+        use crate::util::Rng;
+        let mut eps_seen = 0.0;
+        for _ in 0..100 {
+            let x = [r.normal() * 2.0];
+            let y = if x[0] > 0.0 { 1.0 } else { -1.0 };
+            let ev = l.update(&x, y);
+            eps_seen += ev.compression_err;
+            assert!(l.sv_count() <= 10);
+        }
+        assert!(eps_seen > 0.0, "compression should have fired");
+    }
+
+    #[test]
+    fn pa_step_is_loss_proportional() {
+        let mut c = cfg();
+        c.passive_aggressive = true;
+        c.lambda = 0.0;
+        c.eta = 10.0; // effectively uncapped
+        let mut l = KernelLearner::new(c, 1, 0);
+        let ev = l.update(&[0.5], 1.0); // p = 0, hinge loss 1
+        assert_eq!(ev.loss, 1.0);
+        // PA: coefficient = loss / k(x,x) = 1.0 (RBF, k=1), signed +.
+        assert!((ev.added_coeff - 1.0).abs() < 1e-12);
+        // Next prediction at the same point is exactly corrected.
+        assert!((l.predict(&[0.5]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn set_model_resets_norm() {
+        let mut l = KernelLearner::new(cfg(), 1, 0);
+        l.update(&[1.0], 1.0);
+        let mut other = SvModel::new(Kernel::Rbf { gamma: 0.5 }, 1);
+        other.push(99, &[0.0], 2.0);
+        l.set_model(Model::Kernel(other));
+        assert!((l.norm_sq() - 4.0).abs() < 1e-12);
+        assert_eq!(l.sv_count(), 1);
+    }
+}

@@ -1,0 +1,178 @@
+//! Linear online learner — the hypothesis class of the original 2014
+//! protocol and the baseline in both of the paper's figures. SGD with
+//! multiplicative regularization decay, or passive-aggressive steps.
+
+use crate::config::LearnerConfig;
+use crate::kernel::{LinearModel, Model};
+use crate::learner::losses::Loss;
+use crate::learner::{OnlineLearner, UpdateEvent};
+use crate::util::float::{sq_norm, sq_dist};
+
+/// Primal linear learner w^T x.
+pub struct LinearLearner {
+    model: LinearModel,
+    loss: Loss,
+    eta: f64,
+    lambda: f64,
+    passive_aggressive: bool,
+}
+
+impl LinearLearner {
+    pub fn new(cfg: LearnerConfig, dim: usize) -> Self {
+        LinearLearner {
+            model: LinearModel::zeros(dim),
+            loss: Loss::new(cfg.loss),
+            eta: cfg.eta,
+            lambda: cfg.lambda,
+            passive_aggressive: cfg.passive_aggressive,
+        }
+    }
+
+    pub fn weights(&self) -> &LinearModel {
+        &self.model
+    }
+}
+
+impl OnlineLearner for LinearLearner {
+    fn snapshot(&self) -> Model {
+        Model::Linear(self.model.clone())
+    }
+
+    fn predict(&self, x: &[f64]) -> f64 {
+        self.model.predict(x)
+    }
+
+    fn peek_loss(&self, x: &[f64], y: f64) -> f64 {
+        self.loss.loss(self.model.predict(x), y)
+    }
+
+    fn update(&mut self, x: &[f64], y: f64) -> UpdateEvent {
+        let p = self.model.predict(x);
+        let l = self.loss.loss(p, y);
+        let err = self.loss.error(p, y);
+        let dl = self.loss.dloss(p, y);
+
+        let before = self.model.w.clone();
+        let s = if self.lambda > 0.0 {
+            1.0 - self.eta * self.lambda
+        } else {
+            1.0
+        };
+        if s != 1.0 {
+            self.model.scale(s);
+        }
+        let mut c = 0.0;
+        if dl != 0.0 && l > 0.0 {
+            c = if self.passive_aggressive {
+                // PA-I: tau = min(C, l / ||x||^2), signed against the
+                // subgradient.
+                let tau = (l / sq_norm(x).max(1e-12)).min(self.eta);
+                -tau * dl.signum()
+            } else {
+                -self.eta * dl
+            };
+            self.model.add_scaled(c, x);
+        }
+        let drift = sq_dist(&self.model.w, &before).sqrt();
+        UpdateEvent {
+            loss: l,
+            error: err,
+            pred: p,
+            scale: s,
+            added_coeff: c,
+            added_id: None,
+            drift,
+            ..Default::default()
+        }
+    }
+
+    fn set_model(&mut self, model: Model) {
+        match model {
+            Model::Linear(w) => {
+                debug_assert_eq!(w.dim(), self.model.dim());
+                self.model = w;
+            }
+            Model::Kernel(_) => panic!("linear learner cannot adopt a kernel model"),
+        }
+    }
+
+    fn norm_sq(&self) -> f64 {
+        self.model.norm_sq()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CompressionConfig, KernelConfig, LossKind};
+
+    fn cfg(loss: LossKind) -> LearnerConfig {
+        LearnerConfig {
+            eta: 0.1,
+            lambda: 0.0,
+            loss,
+            kernel: KernelConfig::Linear,
+            compression: CompressionConfig::None,
+            passive_aggressive: false,
+        }
+    }
+
+    #[test]
+    fn learns_linearly_separable() {
+        let mut l = LinearLearner::new(cfg(LossKind::Hinge), 2);
+        use crate::util::{Pcg64, Rng};
+        let mut r = Pcg64::seeded(1);
+        let mut late_mistakes = 0.0;
+        for t in 0..500 {
+            let x = [r.normal(), r.normal()];
+            let y = if x[0] + 0.5 * x[1] > 0.0 { 1.0 } else { -1.0 };
+            let ev = l.update(&x, y);
+            if t >= 400 {
+                late_mistakes += ev.error;
+            }
+        }
+        assert!(late_mistakes <= 8.0, "late mistakes {late_mistakes}");
+    }
+
+    #[test]
+    fn regression_squared_loss_converges() {
+        let mut c = cfg(LossKind::Squared);
+        c.eta = 0.05;
+        let mut l = LinearLearner::new(c, 1);
+        for _ in 0..300 {
+            l.update(&[1.0], 2.0);
+        }
+        assert!((l.predict(&[1.0]) - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn drift_is_exact() {
+        let mut c = cfg(LossKind::Hinge);
+        c.lambda = 0.1;
+        let mut l = LinearLearner::new(c, 2);
+        let before = l.weights().clone();
+        let ev = l.update(&[1.0, -1.0], 1.0);
+        let exact = before.distance_sq(l.weights()).sqrt();
+        assert!((ev.drift - exact).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pa_corrects_exactly() {
+        let mut c = cfg(LossKind::Hinge);
+        c.passive_aggressive = true;
+        c.eta = 100.0;
+        let mut l = LinearLearner::new(c, 2);
+        let x = [1.0, 1.0];
+        l.update(&x, 1.0);
+        // PA on hinge: post-update margin is exactly 1.
+        assert!((l.predict(&x) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn set_model_adopts() {
+        let mut l = LinearLearner::new(cfg(LossKind::Hinge), 2);
+        l.set_model(Model::Linear(LinearModel::from_w(vec![1.0, -1.0])));
+        assert_eq!(l.predict(&[1.0, 0.0]), 1.0);
+        assert_eq!(l.norm_sq(), 2.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Loss functions and their derivatives with respect to the prediction.
+//!
+//! The protocol's guarantees need gamma-loss-proportional updates; all four
+//! losses here have (sub)gradients with |dl/dp| <= 1, so an SGD step of
+//! size eta moves the model by at most eta * |dl| * sqrt(k(x,x)) — the
+//! `eta * loss` drift bound of Prop. 6 (hinge/eps-insensitive are exactly
+//! loss-proportional near the margin; logistic/squared are the standard
+//! smooth surrogates).
+
+use crate::config::LossKind;
+
+/// A loss function l(p, y) over prediction p and target y.
+#[derive(Debug, Clone, Copy)]
+pub struct Loss {
+    kind: LossKind,
+}
+
+impl Loss {
+    pub fn new(kind: LossKind) -> Self {
+        Loss { kind }
+    }
+
+    pub fn kind(&self) -> LossKind {
+        self.kind
+    }
+
+    /// l(p, y).
+    pub fn loss(&self, p: f64, y: f64) -> f64 {
+        match self.kind {
+            LossKind::Hinge => (1.0 - y * p).max(0.0),
+            LossKind::Logistic => {
+                // Numerically stable ln(1 + exp(-yp)).
+                let z = -y * p;
+                if z > 30.0 {
+                    z
+                } else {
+                    z.exp().ln_1p()
+                }
+            }
+            LossKind::Squared => 0.5 * (p - y) * (p - y),
+            LossKind::EpsInsensitive(eps) => ((p - y).abs() - eps).max(0.0),
+        }
+    }
+
+    /// dl/dp (a subgradient where the loss is non-smooth).
+    pub fn dloss(&self, p: f64, y: f64) -> f64 {
+        match self.kind {
+            LossKind::Hinge => {
+                if 1.0 - y * p > 0.0 {
+                    -y
+                } else {
+                    0.0
+                }
+            }
+            LossKind::Logistic => {
+                let z = -y * p;
+                // -y * sigmoid(-yp), stable in both tails.
+                let s = if z >= 0.0 {
+                    1.0 / (1.0 + (-z).exp())
+                } else {
+                    let e = z.exp();
+                    e / (1.0 + e)
+                };
+                -y * s
+            }
+            LossKind::Squared => p - y,
+            LossKind::EpsInsensitive(eps) => {
+                let r = p - y;
+                if r.abs() > eps {
+                    r.signum()
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// The service-quality "error" reported by the paper's figures:
+    /// 0/1 mistakes for classification losses, squared error for
+    /// regression losses.
+    pub fn error(&self, p: f64, y: f64) -> f64 {
+        match self.kind {
+            LossKind::Hinge | LossKind::Logistic => {
+                if p * y <= 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            LossKind::Squared | LossKind::EpsInsensitive(_) => (p - y) * (p - y),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hinge() {
+        let l = Loss::new(LossKind::Hinge);
+        assert_eq!(l.loss(2.0, 1.0), 0.0);
+        assert_eq!(l.loss(0.0, 1.0), 1.0);
+        assert_eq!(l.loss(-1.0, 1.0), 2.0);
+        assert_eq!(l.dloss(0.0, 1.0), -1.0);
+        assert_eq!(l.dloss(2.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn logistic_stable_at_extremes() {
+        let l = Loss::new(LossKind::Logistic);
+        assert!(l.loss(1000.0, 1.0) < 1e-10);
+        assert!((l.loss(-1000.0, 1.0) - 1000.0).abs() < 1e-9);
+        assert!(l.dloss(1000.0, 1.0).abs() < 1e-10);
+        assert!((l.dloss(-1000.0, 1.0) + 1.0).abs() < 1e-10);
+        assert!(l.loss(0.0, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn squared() {
+        let l = Loss::new(LossKind::Squared);
+        assert_eq!(l.loss(3.0, 1.0), 2.0);
+        assert_eq!(l.dloss(3.0, 1.0), 2.0);
+        assert_eq!(l.dloss(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn eps_insensitive_dead_zone() {
+        let l = Loss::new(LossKind::EpsInsensitive(0.5));
+        assert_eq!(l.loss(1.2, 1.0), 0.0);
+        assert_eq!(l.dloss(1.2, 1.0), 0.0);
+        assert_eq!(l.loss(2.0, 1.0), 0.5);
+        assert_eq!(l.dloss(2.0, 1.0), 1.0);
+        assert_eq!(l.dloss(0.0, 1.0), -1.0);
+    }
+
+    #[test]
+    fn error_metric() {
+        let c = Loss::new(LossKind::Hinge);
+        assert_eq!(c.error(0.4, 1.0), 0.0);
+        assert_eq!(c.error(-0.4, 1.0), 1.0);
+        let r = Loss::new(LossKind::Squared);
+        assert_eq!(r.error(3.0, 1.0), 4.0);
+    }
+
+    #[test]
+    fn subgradient_bounded_by_one() {
+        for kind in [
+            LossKind::Hinge,
+            LossKind::Logistic,
+            LossKind::EpsInsensitive(0.1),
+        ] {
+            let l = Loss::new(kind);
+            for p in [-5.0, -1.0, 0.0, 0.3, 2.0] {
+                for y in [-1.0, 1.0] {
+                    assert!(l.dloss(p, y).abs() <= 1.0 + 1e-12);
+                }
+            }
+        }
+    }
+}

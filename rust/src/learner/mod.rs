@@ -1,0 +1,89 @@
+//! Online learning algorithms `A = (H, phi, l)` run at each local node.
+//!
+//! All learners here perform (approximately) loss-proportional convex
+//! updates in the sense of the paper: the model moves toward the convex set
+//! of zero-loss models with magnitude proportional to the instantaneous
+//! loss (SGD / passive-aggressive), and compression perturbs the update by
+//! at most `eps` (Lemma 3). Each update returns an [`UpdateEvent`]
+//! describing the exact model delta, which the protocol layer uses for
+//! incremental local-condition tracking.
+
+mod event;
+mod kernel_learner;
+mod linear_learner;
+pub mod losses;
+mod rff;
+
+pub use event::{AdjustedSv, RemovedSv, UpdateEvent};
+pub use kernel_learner::KernelLearner;
+pub use linear_learner::LinearLearner;
+pub use losses::Loss;
+pub use rff::RffLearner;
+
+use crate::config::{KernelConfig, LearnerConfig};
+use crate::kernel::Model;
+
+/// The interface the distributed protocol drives.
+pub trait OnlineLearner: Send {
+    /// Clone of the current local model (taken at synchronization time —
+    /// the copy is inherent there, the model goes over the wire).
+    fn snapshot(&self) -> Model;
+
+    /// Predict the target/score for an input.
+    fn predict(&self, x: &[f64]) -> f64;
+
+    /// Observe one example: predict, suffer loss, update. Returns the full
+    /// description of what changed.
+    fn update(&mut self, x: &[f64], y: f64) -> UpdateEvent;
+
+    /// Adopt a synchronized model from the coordinator.
+    fn set_model(&mut self, model: Model);
+
+    /// ||f||^2 of the current model, maintained incrementally (exact up to
+    /// periodic recomputation).
+    fn norm_sq(&self) -> f64;
+
+    /// Loss the current model would suffer on (x, y) without updating.
+    fn peek_loss(&self, x: &[f64], y: f64) -> f64;
+
+    /// Number of support vectors (0 for linear models).
+    fn sv_count(&self) -> usize {
+        0
+    }
+}
+
+/// Construct the learner described by a [`LearnerConfig`].
+pub fn build_learner(cfg: &LearnerConfig, dim: usize, learner_id: usize) -> Box<dyn OnlineLearner> {
+    match cfg.kernel {
+        KernelConfig::Linear => Box::new(LinearLearner::new(cfg.clone(), dim)),
+        KernelConfig::Rbf { .. } => Box::new(KernelLearner::new(cfg.clone(), dim, learner_id)),
+        KernelConfig::Rff { gamma, dim: d_feat } => {
+            Box::new(RffLearner::new(cfg.clone(), dim, gamma, d_feat))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CompressionConfig, LossKind};
+
+    fn cfg(kernel: KernelConfig) -> LearnerConfig {
+        LearnerConfig {
+            eta: 0.5,
+            lambda: 0.01,
+            loss: LossKind::Hinge,
+            kernel,
+            compression: CompressionConfig::None,
+            passive_aggressive: false,
+        }
+    }
+
+    #[test]
+    fn factory_builds_matching_model_kind() {
+        let l = build_learner(&cfg(KernelConfig::Linear), 3, 0);
+        assert!(l.snapshot().as_linear().is_some());
+        let k = build_learner(&cfg(KernelConfig::Rbf { gamma: 1.0 }), 3, 0);
+        assert!(k.snapshot().as_kernel().is_some());
+    }
+}

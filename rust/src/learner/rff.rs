@@ -1,0 +1,227 @@
+//! Random-Fourier-Features learner — the paper's §4 "alternative approach
+//! to ensuring constant model size": approximate the RBF kernel with an
+//! explicit finite feature map `phi(x) = sqrt(2/D) cos(Wx + b)`
+//! [Rahimi & Recht 2007] and run a *linear* learner in phi-space.
+//!
+//! The decisive protocol property: the model is a fixed-size D-vector, so
+//! synchronization messages are constant-size like plain linear models
+//! (Cor. 8 applies verbatim) while the hypothesis space approximates the
+//! RKHS. W and b are drawn from a seed derived *only from the
+//! configuration*, so every learner shares the same feature map — without
+//! that, averaging in phi-space would be meaningless.
+
+use crate::config::LearnerConfig;
+use crate::kernel::{LinearModel, Model};
+use crate::learner::losses::Loss;
+use crate::learner::{OnlineLearner, UpdateEvent};
+use crate::util::float::{sq_dist, sq_norm};
+use crate::util::{Pcg64, Rng};
+
+/// Shared-seed RFF linear learner.
+pub struct RffLearner {
+    model: LinearModel,
+    loss: Loss,
+    eta: f64,
+    lambda: f64,
+    passive_aggressive: bool,
+    /// Projection matrix, row-major (D x d).
+    w: Vec<f64>,
+    /// Phase offsets (D).
+    b: Vec<f64>,
+    d_in: usize,
+    d_feat: usize,
+    scale: f64,
+}
+
+impl RffLearner {
+    /// `gamma` is the RBF bandwidth being approximated; `d_feat` the
+    /// number of random features D.
+    pub fn new(cfg: LearnerConfig, dim: usize, gamma: f64, d_feat: usize) -> Self {
+        // Feature map seeded by (gamma, dims) only — identical across
+        // learners by construction.
+        let seed = 0x5EED_0FF5 ^ (gamma.to_bits().rotate_left(17)) ^ (d_feat as u64);
+        let mut rng = Pcg64::new(seed, 7);
+        let sd = (2.0 * gamma).sqrt();
+        let w: Vec<f64> = (0..d_feat * dim).map(|_| sd * rng.normal()).collect();
+        let b: Vec<f64> = (0..d_feat)
+            .map(|_| rng.uniform(0.0, std::f64::consts::TAU))
+            .collect();
+        RffLearner {
+            model: LinearModel::zeros(d_feat),
+            loss: Loss::new(cfg.loss),
+            eta: cfg.eta,
+            lambda: cfg.lambda,
+            passive_aggressive: cfg.passive_aggressive,
+            w,
+            b,
+            d_in: dim,
+            d_feat,
+            scale: (2.0 / d_feat as f64).sqrt(),
+        }
+    }
+
+    /// phi(x) = sqrt(2/D) cos(Wx + b).
+    pub fn features(&self, x: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(x.len(), self.d_in);
+        let mut phi = Vec::with_capacity(self.d_feat);
+        for j in 0..self.d_feat {
+            let row = &self.w[j * self.d_in..(j + 1) * self.d_in];
+            let proj: f64 = row.iter().zip(x).map(|(&wv, &xv)| wv * xv).sum();
+            phi.push(self.scale * (proj + self.b[j]).cos());
+        }
+        phi
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.d_feat
+    }
+}
+
+impl OnlineLearner for RffLearner {
+    fn snapshot(&self) -> Model {
+        Model::Linear(self.model.clone())
+    }
+
+    fn predict(&self, x: &[f64]) -> f64 {
+        self.model.predict(&self.features(x))
+    }
+
+    fn peek_loss(&self, x: &[f64], y: f64) -> f64 {
+        self.loss.loss(self.predict(x), y)
+    }
+
+    fn update(&mut self, x: &[f64], y: f64) -> UpdateEvent {
+        let phi = self.features(x);
+        let p = self.model.predict(&phi);
+        let l = self.loss.loss(p, y);
+        let err = self.loss.error(p, y);
+        let dl = self.loss.dloss(p, y);
+
+        let before = self.model.w.clone();
+        let s = if self.lambda > 0.0 {
+            1.0 - self.eta * self.lambda
+        } else {
+            1.0
+        };
+        if s != 1.0 {
+            self.model.scale(s);
+        }
+        let mut c = 0.0;
+        if dl != 0.0 && l > 0.0 {
+            c = if self.passive_aggressive {
+                let tau = (l / sq_norm(&phi).max(1e-12)).min(self.eta);
+                -tau * dl.signum()
+            } else {
+                -self.eta * dl
+            };
+            self.model.add_scaled(c, &phi);
+        }
+        UpdateEvent {
+            loss: l,
+            error: err,
+            pred: p,
+            scale: s,
+            added_coeff: c,
+            drift: sq_dist(&self.model.w, &before).sqrt(),
+            ..Default::default()
+        }
+    }
+
+    fn set_model(&mut self, model: Model) {
+        match model {
+            Model::Linear(w) => {
+                assert_eq!(w.dim(), self.d_feat, "phi-space dimensionality");
+                self.model = w;
+            }
+            Model::Kernel(_) => panic!("RFF learner holds a linear phi-space model"),
+        }
+    }
+
+    fn norm_sq(&self) -> f64 {
+        self.model.norm_sq()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CompressionConfig, KernelConfig, LossKind};
+
+    fn cfg() -> LearnerConfig {
+        LearnerConfig {
+            eta: 0.5,
+            lambda: 1e-3,
+            loss: LossKind::Hinge,
+            kernel: KernelConfig::Rbf { gamma: 0.5 },
+            compression: CompressionConfig::None,
+            passive_aggressive: false,
+        }
+    }
+
+    #[test]
+    fn feature_map_is_shared_across_learners() {
+        let a = RffLearner::new(cfg(), 3, 0.5, 64);
+        let b = RffLearner::new(cfg(), 3, 0.5, 64);
+        let x = [0.3, -0.7, 1.1];
+        assert_eq!(a.features(&x), b.features(&x));
+        // Different gamma -> different map.
+        let c = RffLearner::new(cfg(), 3, 1.5, 64);
+        assert_ne!(a.features(&x), c.features(&x));
+    }
+
+    #[test]
+    fn inner_products_approximate_rbf() {
+        // <phi(x), phi(z)> -> exp(-gamma ||x-z||^2) for large D.
+        let l = RffLearner::new(cfg(), 2, 0.5, 4096);
+        let x = [0.4, -0.2];
+        let z = [-0.3, 0.5];
+        let dot: f64 = l
+            .features(&x)
+            .iter()
+            .zip(l.features(&z))
+            .map(|(a, b)| a * b)
+            .sum();
+        let exact = (-0.5 * sq_dist(&x, &z)).exp();
+        assert!((dot - exact).abs() < 0.05, "rff {dot} vs rbf {exact}");
+    }
+
+    #[test]
+    fn solves_xor_like_a_kernel_machine() {
+        use crate::data::{DataStream, MixtureStream};
+        let mut l = RffLearner::new(cfg(), 2, 0.5, 256);
+        let mut s = MixtureStream::new(crate::util::Pcg64::seeded(4), 2, 3.0);
+        let mut tail = 0.0;
+        for t in 0..800 {
+            let (x, y) = s.next_example();
+            let ev = l.update(&x, y);
+            if t >= 700 {
+                tail += ev.error;
+            }
+        }
+        assert!(tail / 100.0 < 0.15, "late error {}", tail / 100.0);
+    }
+
+    #[test]
+    fn snapshot_is_fixed_size_linear() {
+        let l = RffLearner::new(cfg(), 5, 0.5, 128);
+        let snap = l.snapshot();
+        assert_eq!(snap.as_linear().unwrap().dim(), 128);
+    }
+
+    #[test]
+    fn averaging_in_phi_space_is_sound() {
+        // Two learners trained on the same stream halves; their phi-space
+        // average predicts the mean of their predictions.
+        let mut a = RffLearner::new(cfg(), 2, 0.5, 64);
+        let mut b = RffLearner::new(cfg(), 2, 0.5, 64);
+        a.update(&[1.0, 1.0], 1.0);
+        b.update(&[-1.0, 1.0], -1.0);
+        let (sa, sb) = (a.snapshot(), b.snapshot());
+        let avg = Model::average(&[&sa, &sb]);
+        let mut c = RffLearner::new(cfg(), 2, 0.5, 64);
+        c.set_model(avg);
+        let x = [0.2, 0.4];
+        let want = (a.predict(&x) + b.predict(&x)) / 2.0;
+        assert!((c.predict(&x) - want).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,46 @@
+//! # KDOL — Communication-Efficient Distributed Online Learning with Kernels
+//!
+//! Rust coordinator (Layer 3) of the three-layer reproduction of
+//! Kamp et al., *"Communication-Efficient Distributed Online Learning with
+//! Kernels"* (2019). The paper's contribution — the dynamic model-
+//! synchronization protocol `σ_Δ` extended to reproducing-kernel Hilbert
+//! spaces, plus the consistency/adaptivity efficiency criterion — lives in
+//! [`protocol`]; everything else is the substrate a deployable system needs.
+//!
+//! ## Layers
+//! * **L3 (this crate)** — protocols, learners, simulated cluster, byte
+//!   accounting, metrics, experiments, CLI. Python never runs here.
+//! * **L2/L1 (python/compile)** — JAX graphs + Pallas RBF-Gram kernel,
+//!   AOT-lowered to `artifacts/*.hlo.txt` at build time.
+//! * **[`runtime`]** — PJRT CPU client loading those artifacts.
+//!
+//! ## Quick start
+//! ```no_run
+//! use kdol::config::ExperimentConfig;
+//! use kdol::experiments::runner::run_experiment;
+//!
+//! let cfg = ExperimentConfig::fig1_dynamic_kernel(0.1);
+//! let outcome = run_experiment(&cfg).unwrap();
+//! println!("cumulative error = {}", outcome.cumulative_loss);
+//! println!("cumulative bytes = {}", outcome.comm.total_bytes());
+//! ```
+
+pub mod bench_util;
+pub mod cli;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod kernel;
+pub mod learner;
+pub mod metrics;
+pub mod network;
+pub mod protocol;
+pub mod runtime;
+pub mod ser;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

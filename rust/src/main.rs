@@ -1,0 +1,6 @@
+//! `kdol` binary — see `kdol help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(kdol::cli::main_with_args(argv));
+}

@@ -1,0 +1,174 @@
+//! The paper's efficiency criterion (Def. 1) made executable:
+//!
+//! * **Consistency** — the distributed protocol retains the serial loss
+//!   bound: `L_Pi(T, m) in O(L_A(mT))`. Checked empirically as a ratio
+//!   against a serial run on the same mT examples.
+//! * **Adaptivity** — communication is bounded by `O(m * L_A(mT))`;
+//!   operationally we verify the *measured* communication against the
+//!   Prop. 6 / Thm. 7 bounds evaluated with the run's own quantities.
+
+use crate::metrics::Outcome;
+
+/// One analytic bound versus its measured counterpart.
+#[derive(Debug, Clone)]
+pub struct BoundCheck {
+    pub name: &'static str,
+    pub measured: f64,
+    pub bound: f64,
+}
+
+impl BoundCheck {
+    pub fn holds(&self) -> bool {
+        self.measured <= self.bound * (1.0 + 1e-9)
+    }
+
+    /// Slack factor bound/measured (>= 1 when the bound holds).
+    pub fn slack(&self) -> f64 {
+        if self.measured == 0.0 {
+            f64::INFINITY
+        } else {
+            self.bound / self.measured
+        }
+    }
+}
+
+/// Efficiency evaluation of a dynamic-protocol run.
+#[derive(Debug, Clone)]
+pub struct EfficiencyReport {
+    pub checks: Vec<BoundCheck>,
+    /// L_D(T, m) / L_serial(mT) — consistency ratio (finite sample).
+    pub consistency_ratio: Option<f64>,
+}
+
+impl EfficiencyReport {
+    /// Evaluate Prop. 6 (violation count) and Thm. 7 (communication) for a
+    /// dynamic run.
+    ///
+    /// * `eta` — the learner's update-magnitude constant
+    ///   (||f - phi(f)|| <= eta * loss).
+    /// * `delta` — the divergence threshold.
+    /// * `sbar` — |union of final support sets| (0 for linear models).
+    /// * `dim` — input dimensionality.
+    /// * `serial_loss` — cumulative loss of the serial oracle on mT
+    ///   examples, if available.
+    pub fn evaluate(
+        outcome: &Outcome,
+        eta: f64,
+        delta: f64,
+        sbar: usize,
+        dim: usize,
+        serial_loss: Option<f64>,
+    ) -> EfficiencyReport {
+        let m = outcome.learners as f64;
+        let mut checks = Vec::new();
+
+        if delta > 0.0 {
+            // Prop. 6: V_D(T) <= (eta / sqrt(Delta)) L_D(T, m).
+            // We use the tighter drift form: V <= (sum drifts) / sqrt(Delta),
+            // and also report the loss form the paper states.
+            checks.push(BoundCheck {
+                name: "Prop6 syncs <= drift/sqrt(Delta)",
+                measured: outcome.comm.syncs as f64,
+                bound: outcome.cum_drift / delta.sqrt(),
+            });
+            checks.push(BoundCheck {
+                name: "Prop6 syncs <= eta*L/sqrt(Delta)",
+                measured: outcome.comm.syncs as f64,
+                bound: eta * outcome.cumulative_loss / delta.sqrt(),
+            });
+
+            // Thm. 7: C_D <= V * 2m|Sbar|B_alpha + m|Sbar|B_x
+            // with B_alpha = 8 (f64 coeff + its id costs 16 on our wire;
+            // use the wire's true per-coeff cost) and B_x = 4d + 8.
+            let b_alpha = 16.0; // id (8) + f64 coefficient (8)
+            let b_x = 4.0 * dim as f64 + 8.0;
+            let v = outcome.cum_drift / delta.sqrt();
+            let sbar_f = sbar as f64;
+            // Framing overhead per message (tag + learner + counts) is
+            // <= 21 bytes; V syncs move <= 2m messages each.
+            let framing = v * 2.0 * m * 24.0;
+            checks.push(BoundCheck {
+                name: "Thm7 comm bound",
+                measured: outcome.comm.total_bytes() as f64,
+                bound: v * 2.0 * m * sbar_f * b_alpha + 2.0 * m * sbar_f * b_x + framing,
+            });
+        }
+
+        let consistency_ratio = serial_loss.map(|s| {
+            if s == 0.0 {
+                f64::INFINITY
+            } else {
+                outcome.cumulative_loss / s
+            }
+        });
+
+        EfficiencyReport {
+            checks,
+            consistency_ratio,
+        }
+    }
+
+    pub fn all_hold(&self) -> bool {
+        self.checks.iter().all(BoundCheck::holds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::CommStats;
+
+    fn outcome(syncs: u64, drift: f64, loss: f64, bytes: u64) -> Outcome {
+        let mut comm = CommStats::new();
+        comm.syncs = syncs;
+        comm.up_bytes = bytes;
+        Outcome {
+            name: "t".into(),
+            learners: 4,
+            rounds: 100,
+            cumulative_loss: loss,
+            cumulative_error: 0.0,
+            cum_drift: drift,
+            cum_compression_err: 0.0,
+            comm,
+            series: vec![],
+            mean_svs: 10.0,
+            wall_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn bound_check_arithmetic() {
+        let b = BoundCheck {
+            name: "x",
+            measured: 5.0,
+            bound: 10.0,
+        };
+        assert!(b.holds());
+        assert_eq!(b.slack(), 2.0);
+        let b = BoundCheck {
+            name: "x",
+            measured: 11.0,
+            bound: 10.0,
+        };
+        assert!(!b.holds());
+    }
+
+    #[test]
+    fn prop6_holds_for_consistent_numbers() {
+        // 3 syncs, total drift 4.0, delta 1.0 -> bound 4 >= 3.
+        let o = outcome(3, 4.0, 10.0, 1000);
+        let r = EfficiencyReport::evaluate(&o, 1.0, 1.0, 20, 18, Some(9.0));
+        let p6 = &r.checks[0];
+        assert!(p6.holds(), "{p6:?}");
+        assert!((r.consistency_ratio.unwrap() - 10.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn violated_bound_detected() {
+        let o = outcome(100, 1.0, 1.0, 10);
+        let r = EfficiencyReport::evaluate(&o, 1.0, 1.0, 20, 18, None);
+        assert!(!r.checks[0].holds());
+        assert!(!r.all_hold());
+    }
+}

@@ -1,0 +1,10 @@
+//! Metrics: cumulative loss/error recording, over-time series (the
+//! material of every figure), report formatting, and the paper's
+//! efficiency-criterion checks (Def. 1 / Prop. 6 / Thm. 7 bounds).
+
+pub mod efficiency;
+pub mod recorder;
+pub mod report;
+
+pub use efficiency::{BoundCheck, EfficiencyReport};
+pub use recorder::{MetricsRecorder, Outcome, Sample};

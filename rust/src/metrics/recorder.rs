@@ -1,0 +1,121 @@
+//! Cumulative metrics recording and the per-run [`Outcome`].
+
+use crate::network::CommStats;
+
+/// One point of the over-time series (sampled every `record_every` rounds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub round: u64,
+    pub cum_loss: f64,
+    pub cum_error: f64,
+    pub cum_bytes: u64,
+    pub cum_msgs: u64,
+    pub syncs: u64,
+    /// Mean support-vector count across learners at this point.
+    pub mean_svs: f64,
+}
+
+/// Rolling recorder fed by the protocol engine.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRecorder {
+    pub cum_loss: f64,
+    pub cum_error: f64,
+    /// Sum over learners and rounds of the compression perturbation
+    /// (the epsilon budget of Lemma 3 / Thm. 4).
+    pub cum_compression_err: f64,
+    /// Sum of per-update drifts (Prop. 6's violation-bound numerator).
+    pub cum_drift: f64,
+    pub series: Vec<Sample>,
+    record_every: u64,
+}
+
+impl MetricsRecorder {
+    pub fn new(record_every: u64) -> Self {
+        MetricsRecorder {
+            record_every: record_every.max(1),
+            ..Default::default()
+        }
+    }
+
+    /// Fold in one learner-update's observables.
+    pub fn record_update(&mut self, loss: f64, error: f64, drift: f64, compression_err: f64) {
+        self.cum_loss += loss;
+        self.cum_error += error;
+        self.cum_drift += drift;
+        self.cum_compression_err += compression_err;
+    }
+
+    /// Close a round: maybe emit a series sample.
+    pub fn end_round(&mut self, round: u64, comm: &CommStats, mean_svs: f64) {
+        if round % self.record_every == 0 || round == 1 {
+            self.series.push(Sample {
+                round,
+                cum_loss: self.cum_loss,
+                cum_error: self.cum_error,
+                cum_bytes: comm.total_bytes(),
+                cum_msgs: comm.total_msgs(),
+                syncs: comm.syncs,
+                mean_svs,
+            });
+        }
+    }
+}
+
+/// Final result of one experiment run.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub name: String,
+    pub learners: usize,
+    pub rounds: u64,
+    pub cumulative_loss: f64,
+    pub cumulative_error: f64,
+    pub cum_drift: f64,
+    pub cum_compression_err: f64,
+    pub comm: CommStats,
+    pub series: Vec<Sample>,
+    /// Final mean SV count (model size proxy).
+    pub mean_svs: f64,
+    pub wall_secs: f64,
+}
+
+impl Outcome {
+    /// Error rate per example (classification) / mean squared error
+    /// (regression).
+    pub fn error_rate(&self) -> f64 {
+        self.cumulative_error / (self.rounds as f64 * self.learners as f64)
+    }
+
+    /// Did communication stop well before the end (Fig 2b's quiescence)?
+    pub fn quiescent_since(&self) -> Option<u64> {
+        self.comm.last_sync_round
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_on_schedule() {
+        let mut rec = MetricsRecorder::new(10);
+        let comm = CommStats::new();
+        for round in 1..=35 {
+            rec.record_update(1.0, 0.5, 0.1, 0.0);
+            rec.end_round(round, &comm, 3.0);
+        }
+        let rounds: Vec<u64> = rec.series.iter().map(|s| s.round).collect();
+        assert_eq!(rounds, vec![1, 10, 20, 30]);
+        assert_eq!(rec.series.last().unwrap().cum_loss, 30.0);
+    }
+
+    #[test]
+    fn accumulates_all_channels() {
+        let mut rec = MetricsRecorder::new(1);
+        rec.record_update(2.0, 1.0, 0.5, 0.25);
+        rec.record_update(1.0, 0.0, 0.1, 0.0);
+        assert_eq!(rec.cum_loss, 3.0);
+        assert_eq!(rec.cum_error, 1.0);
+        assert_eq!(rec.cum_drift, 0.6);
+        assert_eq!(rec.cum_compression_err, 0.25);
+    }
+}

@@ -1,0 +1,125 @@
+//! Human-readable tables and CSV emission for experiment results — the
+//! output format of every bench and example.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::Outcome;
+
+/// Render a comparison table over outcomes (one row per system), in the
+/// shape of the paper's figures: cumulative error vs cumulative
+/// communication.
+pub fn comparison_table(title: &str, outcomes: &[&Outcome]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "== {title} ==");
+    let _ = writeln!(
+        s,
+        "{:<42} {:>12} {:>12} {:>14} {:>8} {:>10} {:>9}",
+        "system", "cum-error", "cum-loss", "comm-bytes", "syncs", "last-sync", "mean-SVs"
+    );
+    for o in outcomes {
+        let _ = writeln!(
+            s,
+            "{:<42} {:>12.2} {:>12.2} {:>14} {:>8} {:>10} {:>9.1}",
+            o.name,
+            o.cumulative_error,
+            o.cumulative_loss,
+            o.comm.total_bytes(),
+            o.comm.syncs,
+            o.quiescent_since()
+                .map(|r| r.to_string())
+                .unwrap_or_else(|| "-".into()),
+            o.mean_svs,
+        );
+    }
+    s
+}
+
+/// Emit the over-time series of several outcomes as CSV:
+/// `system,round,cum_loss,cum_error,cum_bytes,cum_msgs,syncs,mean_svs`.
+pub fn series_csv(outcomes: &[&Outcome]) -> String {
+    let mut s = String::from("system,round,cum_loss,cum_error,cum_bytes,cum_msgs,syncs,mean_svs\n");
+    for o in outcomes {
+        for p in &o.series {
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{},{},{},{}",
+                o.name, p.round, p.cum_loss, p.cum_error, p.cum_bytes, p.cum_msgs, p.syncs, p.mean_svs
+            );
+        }
+    }
+    s
+}
+
+/// Write a string to a file, creating parent directories.
+pub fn write_report(path: &Path, content: &str) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).context("creating report dir")?;
+    }
+    let mut f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    f.write_all(content.as_bytes()).context("writing report")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Sample;
+    use crate::network::CommStats;
+
+    fn outcome(name: &str) -> Outcome {
+        Outcome {
+            name: name.into(),
+            learners: 2,
+            rounds: 10,
+            cumulative_loss: 5.0,
+            cumulative_error: 3.0,
+            cum_drift: 1.0,
+            cum_compression_err: 0.0,
+            comm: CommStats::new(),
+            series: vec![Sample {
+                round: 10,
+                cum_loss: 5.0,
+                cum_error: 3.0,
+                cum_bytes: 123,
+                cum_msgs: 4,
+                syncs: 1,
+                mean_svs: 2.5,
+            }],
+            mean_svs: 2.5,
+            wall_secs: 0.01,
+        }
+    }
+
+    #[test]
+    fn table_contains_rows() {
+        let a = outcome("sys-a");
+        let b = outcome("sys-b");
+        let t = comparison_table("test", &[&a, &b]);
+        assert!(t.contains("sys-a"));
+        assert!(t.contains("sys-b"));
+        assert!(t.contains("cum-error"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let a = outcome("sys-a");
+        let csv = series_csv(&[&a]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("system,round"));
+        assert!(lines[1].starts_with("sys-a,10,5,3,123"));
+    }
+
+    #[test]
+    fn write_report_roundtrip() {
+        let dir = std::env::temp_dir().join("kdol_report_test");
+        let path = dir.join("sub/out.txt");
+        write_report(&path, "hello").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "hello");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,117 @@
+//! Communication accounting: the paper's `C(T, m) = sum_t c(f_t)` with
+//! `c` measured in real wire bytes. Tracks direction, message counts,
+//! synchronization events and the over-time series behind Fig 1(b)/2(b),
+//! plus peak-communication statistics (§4 discussion).
+
+/// Cumulative communication statistics.
+#[derive(Debug, Clone, Default)]
+pub struct CommStats {
+    /// Bytes learners -> coordinator.
+    pub up_bytes: u64,
+    /// Bytes coordinator -> learners.
+    pub down_bytes: u64,
+    /// Total messages in each direction.
+    pub up_msgs: u64,
+    pub down_msgs: u64,
+    /// Number of synchronization events (V_D(T) in Prop. 6).
+    pub syncs: u64,
+    /// Number of local-condition violations observed.
+    pub violations: u64,
+    /// Round of the last synchronization (quiescence detection).
+    pub last_sync_round: Option<u64>,
+    /// Largest number of bytes moved within a single round (peak comm).
+    pub peak_round_bytes: u64,
+    bytes_this_round: u64,
+}
+
+impl CommStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.up_bytes + self.down_bytes
+    }
+
+    pub fn total_msgs(&self) -> u64 {
+        self.up_msgs + self.down_msgs
+    }
+
+    /// Record an upstream (learner -> coordinator) message.
+    pub fn record_up(&mut self, bytes: usize) {
+        self.up_bytes += bytes as u64;
+        self.up_msgs += 1;
+        self.bytes_this_round += bytes as u64;
+    }
+
+    /// Record a downstream (coordinator -> learner) message.
+    pub fn record_down(&mut self, bytes: usize) {
+        self.down_bytes += bytes as u64;
+        self.down_msgs += 1;
+        self.bytes_this_round += bytes as u64;
+    }
+
+    pub fn record_violation(&mut self) {
+        self.violations += 1;
+    }
+
+    pub fn record_sync(&mut self, round: u64) {
+        self.syncs += 1;
+        self.last_sync_round = Some(round);
+    }
+
+    /// Close the current round (updates peak tracking).
+    pub fn end_round(&mut self) {
+        if self.bytes_this_round > self.peak_round_bytes {
+            self.peak_round_bytes = self.bytes_this_round;
+        }
+        self.bytes_this_round = 0;
+    }
+
+    /// Rounds since the last sync at time `now` — "quiescent for" metric.
+    pub fn quiescent_rounds(&self, now: u64) -> u64 {
+        match self.last_sync_round {
+            Some(r) => now.saturating_sub(r),
+            None => now,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_by_direction() {
+        let mut c = CommStats::new();
+        c.record_up(100);
+        c.record_up(50);
+        c.record_down(200);
+        assert_eq!(c.up_bytes, 150);
+        assert_eq!(c.down_bytes, 200);
+        assert_eq!(c.total_bytes(), 350);
+        assert_eq!(c.total_msgs(), 3);
+    }
+
+    #[test]
+    fn peak_round_tracking() {
+        let mut c = CommStats::new();
+        c.record_up(10);
+        c.end_round();
+        c.record_up(100);
+        c.record_down(100);
+        c.end_round();
+        c.record_up(5);
+        c.end_round();
+        assert_eq!(c.peak_round_bytes, 200);
+    }
+
+    #[test]
+    fn quiescence() {
+        let mut c = CommStats::new();
+        assert_eq!(c.quiescent_rounds(500), 500);
+        c.record_sync(100);
+        assert_eq!(c.quiescent_rounds(500), 400);
+        assert_eq!(c.syncs, 1);
+    }
+}

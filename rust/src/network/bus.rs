@@ -1,0 +1,157 @@
+//! In-process message bus for the leader/worker runtime: one bidirectional
+//! channel pair per learner, every payload actually serialized through the
+//! wire format (so the threaded runtime observes byte-identical
+//! communication to the deterministic engine).
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::network::message::Message;
+use crate::ser::{from_bytes, to_bytes};
+
+/// A framed, serialized message in flight.
+#[derive(Debug)]
+pub struct Frame {
+    pub from: usize,
+    pub bytes: Vec<u8>,
+}
+
+/// Learner-side endpoint: send to / receive from the coordinator.
+pub struct Endpoint {
+    pub id: usize,
+    to_coord: Sender<Frame>,
+    from_coord: Receiver<Frame>,
+}
+
+impl Endpoint {
+    /// Serialize and send; returns the wire size.
+    pub fn send(&self, msg: &Message) -> Result<usize> {
+        let bytes = to_bytes(msg);
+        let n = bytes.len();
+        self.to_coord
+            .send(Frame {
+                from: self.id,
+                bytes,
+            })
+            .map_err(|_| anyhow!("coordinator hung up"))?;
+        Ok(n)
+    }
+
+    /// Blocking receive with timeout.
+    pub fn recv(&self, timeout: Duration) -> Result<(Message, usize)> {
+        match self.from_coord.recv_timeout(timeout) {
+            Ok(f) => {
+                let n = f.bytes.len();
+                Ok((from_bytes(&f.bytes)?, n))
+            }
+            Err(RecvTimeoutError::Timeout) => Err(anyhow!("recv timeout")),
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow!("coordinator hung up")),
+        }
+    }
+}
+
+/// Coordinator-side bus over all learners.
+pub struct Bus {
+    from_learners: Receiver<Frame>,
+    to_learners: Vec<Sender<Frame>>,
+}
+
+impl Bus {
+    /// Create a bus and the per-learner endpoints.
+    pub fn new(learners: usize) -> (Bus, Vec<Endpoint>) {
+        let (up_tx, up_rx) = channel::<Frame>();
+        let mut to_learners = Vec::with_capacity(learners);
+        let mut endpoints = Vec::with_capacity(learners);
+        for id in 0..learners {
+            let (down_tx, down_rx) = channel::<Frame>();
+            to_learners.push(down_tx);
+            endpoints.push(Endpoint {
+                id,
+                to_coord: up_tx.clone(),
+                from_coord: down_rx,
+            });
+        }
+        (
+            Bus {
+                from_learners: up_rx,
+                to_learners,
+            },
+            endpoints,
+        )
+    }
+
+    /// Send to one learner; returns wire size.
+    pub fn send_to(&self, learner: usize, msg: &Message) -> Result<usize> {
+        let bytes = to_bytes(msg);
+        let n = bytes.len();
+        self.to_learners[learner]
+            .send(Frame { from: usize::MAX, bytes })
+            .map_err(|_| anyhow!("learner {learner} hung up"))?;
+        Ok(n)
+    }
+
+    /// Broadcast to all learners; returns total wire bytes.
+    pub fn broadcast(&self, msg: &Message) -> Result<usize> {
+        let mut total = 0;
+        for i in 0..self.to_learners.len() {
+            total += self.send_to(i, msg)?;
+        }
+        Ok(total)
+    }
+
+    /// Blocking receive from any learner.
+    pub fn recv(&self, timeout: Duration) -> Result<(usize, Message, usize)> {
+        match self.from_learners.recv_timeout(timeout) {
+            Ok(f) => {
+                let n = f.bytes.len();
+                Ok((f.from, from_bytes(&f.bytes)?, n))
+            }
+            Err(RecvTimeoutError::Timeout) => Err(anyhow!("recv timeout")),
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow!("all learners hung up")),
+        }
+    }
+
+    pub fn learners(&self) -> usize {
+        self.to_learners.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_bus() {
+        let (bus, eps) = Bus::new(2);
+        let t = std::thread::spawn(move || {
+            let n = eps[1]
+                .send(&Message::Violation {
+                    learner: 1,
+                    distance_sq: 0.7,
+                })
+                .unwrap();
+            assert!(n > 0);
+            let (msg, _) = eps[1].recv(Duration::from_secs(1)).unwrap();
+            assert_eq!(msg, Message::SyncRequest);
+        });
+        let (from, msg, n) = bus.recv(Duration::from_secs(1)).unwrap();
+        assert_eq!(from, 1);
+        assert!(n > 0);
+        assert!(matches!(msg, Message::Violation { learner: 1, .. }));
+        bus.send_to(1, &Message::SyncRequest).unwrap();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn broadcast_reaches_everyone() {
+        let (bus, eps) = Bus::new(3);
+        let total = bus.broadcast(&Message::Shutdown).unwrap();
+        assert_eq!(total, 3); // Shutdown is 1 byte each
+        for ep in &eps {
+            let (msg, _) = ep.recv(Duration::from_secs(1)).unwrap();
+            assert_eq!(msg, Message::Shutdown);
+        }
+    }
+}

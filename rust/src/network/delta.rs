@@ -1,0 +1,296 @@
+//! The paper's "trivial communication reduction strategy" (Sec. 3):
+//! support vectors are transmitted at most once in each direction.
+//!
+//! * A learner uploading its model sends *all* coefficients but only the
+//!   support vectors the coordinator has not seen (`S_t^i \ S_{t'}`).
+//! * The coordinator sends back all coefficients of the averaged model but
+//!   only the support vectors the learner does not currently hold
+//!   (`Sbar_t \ S_t^i`).
+//!
+//! [`DeltaEncoder`] lives at the learner side and tracks which ids the
+//! coordinator knows; [`DeltaDecoder`] lives at the coordinator and keeps
+//! the id -> coordinates store (the "higher memory usage at the
+//! coordinator side" the paper trades for bandwidth).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::kernel::SvModel;
+use crate::network::message::SvBlock;
+
+/// Learner-side delta state.
+#[derive(Debug, Default)]
+pub struct DeltaEncoder {
+    /// Ids whose coordinates the coordinator already has (from our uploads
+    /// or its downloads).
+    coordinator_knows: HashSet<u64>,
+}
+
+impl DeltaEncoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build the upload payload for the current model: full coefficient
+    /// list + coordinates only for ids the coordinator hasn't seen.
+    pub fn encode_upload(&mut self, model: &SvModel) -> (Vec<(u64, f64)>, SvBlock) {
+        let coeffs: Vec<(u64, f64)> = model
+            .ids()
+            .iter()
+            .zip(model.alpha())
+            .map(|(&id, &a)| (id, a))
+            .collect();
+        let mut ids = Vec::new();
+        let mut coords = Vec::new();
+        for i in 0..model.len() {
+            let id = model.ids()[i];
+            if self.coordinator_knows.insert(id) {
+                ids.push(id);
+                coords.extend(model.sv(i).iter().map(|&v| v as f32));
+            }
+        }
+        (
+            coeffs,
+            SvBlock {
+                ids,
+                dim: model.dim as u32,
+                coords,
+            },
+        )
+    }
+
+    /// Record that a download exposed these ids (the coordinator clearly
+    /// knows them).
+    pub fn note_download(&mut self, ids: impl IntoIterator<Item = u64>) {
+        self.coordinator_knows.extend(ids);
+    }
+
+    pub fn known(&self) -> usize {
+        self.coordinator_knows.len()
+    }
+}
+
+/// Coordinator-side delta state: the global id -> coordinates store plus
+/// per-learner knowledge of the current support set.
+#[derive(Debug, Default)]
+pub struct DeltaDecoder {
+    /// Every support vector ever uploaded or distributed, by id.
+    store: HashMap<u64, Vec<f64>>,
+    /// Ids each learner currently holds (from its latest upload) plus ids
+    /// we have already shipped to it.
+    learner_has: Vec<HashSet<u64>>,
+}
+
+impl DeltaDecoder {
+    pub fn new(learners: usize) -> Self {
+        DeltaDecoder {
+            store: HashMap::new(),
+            learner_has: vec![HashSet::new(); learners],
+        }
+    }
+
+    /// Ingest an upload from `learner`: register new coordinates and
+    /// rebuild the learner's current id set from its coefficient list.
+    /// Returns the reconstructed model given a kernel/dim template.
+    pub fn ingest_upload(
+        &mut self,
+        learner: usize,
+        coeffs: &[(u64, f64)],
+        new_svs: &SvBlock,
+        template: &SvModel,
+    ) -> anyhow::Result<SvModel> {
+        anyhow::ensure!(new_svs.is_consistent(), "inconsistent SV block");
+        for (i, &id) in new_svs.ids.iter().enumerate() {
+            self.store.insert(id, new_svs.coords_f64(i));
+        }
+        // The learner's model is exactly the coefficient list.
+        let has = &mut self.learner_has[learner];
+        has.clear();
+        let mut model = SvModel::new(template.kernel, template.dim);
+        for &(id, a) in coeffs {
+            let x = self
+                .store
+                .get(&id)
+                .ok_or_else(|| anyhow::anyhow!("upload references unknown sv id {id}"))?;
+            model.push(id, x, a);
+            has.insert(id);
+        }
+        Ok(model)
+    }
+
+    /// Build the download payload of `avg` for `learner`: all coefficients
+    /// + coordinates for ids the learner lacks. Marks those ids as shipped.
+    pub fn encode_download(&mut self, learner: usize, avg: &SvModel) -> (Vec<(u64, f64)>, SvBlock) {
+        let coeffs: Vec<(u64, f64)> = avg
+            .ids()
+            .iter()
+            .zip(avg.alpha())
+            .map(|(&id, &a)| (id, a))
+            .collect();
+        let mut ids = Vec::new();
+        let mut coords = Vec::new();
+        let has = &mut self.learner_has[learner];
+        for i in 0..avg.len() {
+            let id = avg.ids()[i];
+            // Ensure the store can serve future downloads of this id.
+            self.store
+                .entry(id)
+                .or_insert_with(|| avg.sv(i).to_vec());
+            if has.insert(id) {
+                ids.push(id);
+                coords.extend(avg.sv(i).iter().map(|&v| v as f32));
+            }
+        }
+        (
+            coeffs,
+            SvBlock {
+                ids,
+                dim: avg.dim as u32,
+                coords,
+            },
+        )
+    }
+
+    /// Apply a download at the learner side: rebuild the model from the
+    /// coefficient list, taking coordinates from the local model where
+    /// available and from the message otherwise.
+    pub fn apply_download(
+        local: &SvModel,
+        coeffs: &[(u64, f64)],
+        new_svs: &SvBlock,
+    ) -> anyhow::Result<SvModel> {
+        anyhow::ensure!(new_svs.is_consistent(), "inconsistent SV block");
+        let mut from_msg: HashMap<u64, Vec<f64>> = HashMap::new();
+        for (i, &id) in new_svs.ids.iter().enumerate() {
+            from_msg.insert(id, new_svs.coords_f64(i));
+        }
+        let mut local_idx: HashMap<u64, usize> = HashMap::new();
+        for (i, &id) in local.ids().iter().enumerate() {
+            local_idx.insert(id, i);
+        }
+        let mut model = SvModel::new(local.kernel, local.dim);
+        for &(id, a) in coeffs {
+            if let Some(&i) = local_idx.get(&id) {
+                model.push(id, local.sv(i), a);
+            } else if let Some(x) = from_msg.get(&id) {
+                model.push(id, x, a);
+            } else {
+                anyhow::bail!("download references sv id {id} unknown to learner");
+            }
+        }
+        Ok(model)
+    }
+
+    /// Number of distinct support vectors the coordinator stores
+    /// (|union of all S^i over time| — the memory cost of the strategy).
+    pub fn store_size(&self) -> usize {
+        self.store.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Kernel;
+
+    fn model(ids: &[(u64, f64)], dim: usize) -> SvModel {
+        let mut m = SvModel::new(Kernel::Rbf { gamma: 1.0 }, dim);
+        for &(id, a) in ids {
+            let x: Vec<f64> = (0..dim).map(|j| id as f64 + j as f64 * 0.1).collect();
+            m.push(id, &x, a);
+        }
+        m
+    }
+
+    #[test]
+    fn first_upload_sends_everything_second_sends_nothing_new() {
+        let mut enc = DeltaEncoder::new();
+        let m = model(&[(1, 0.5), (2, -0.5)], 2);
+        let (coeffs, block) = enc.encode_upload(&m);
+        assert_eq!(coeffs.len(), 2);
+        assert_eq!(block.len(), 2);
+        // Re-upload unchanged: coefficients still sent, no coordinates.
+        let (coeffs2, block2) = enc.encode_upload(&m);
+        assert_eq!(coeffs2.len(), 2);
+        assert!(block2.is_empty());
+    }
+
+    #[test]
+    fn coordinator_reconstructs_model_exactly() {
+        let mut enc = DeltaEncoder::new();
+        let mut dec = DeltaDecoder::new(1);
+        let m = model(&[(1, 0.5), (2, -0.5), (3, 0.25)], 3);
+        let (coeffs, block) = enc.encode_upload(&m);
+        let rebuilt = dec
+            .ingest_upload(0, &coeffs, &block, &SvModel::new(m.kernel, m.dim))
+            .unwrap();
+        assert_eq!(rebuilt.len(), m.len());
+        // f32 quantization of coordinates is the only difference.
+        for x in [[0.0, 0.0, 0.0], [1.05, 1.1, 1.2]] {
+            assert!((rebuilt.predict(&x) - m.predict(&x)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn download_ships_only_missing_svs() {
+        let mut enc = DeltaEncoder::new();
+        let mut dec = DeltaDecoder::new(2);
+        // Learner 0 has {1, 2}; learner 1 has {3}.
+        let m0 = model(&[(1, 1.0), (2, 1.0)], 2);
+        let m1 = model(&[(3, 1.0)], 2);
+        let t = SvModel::new(m0.kernel, 2);
+        let (c0, b0) = enc.encode_upload(&m0);
+        dec.ingest_upload(0, &c0, &b0, &t).unwrap();
+        let mut enc1 = DeltaEncoder::new();
+        let (c1, b1) = enc1.encode_upload(&m1);
+        dec.ingest_upload(1, &c1, &b1, &t).unwrap();
+
+        // Average holds the union {1, 2, 3}.
+        let avg = model(&[(1, 0.5), (2, 0.5), (3, 0.5)], 2);
+        let (dc0, db0) = dec.encode_download(0, &avg);
+        assert_eq!(dc0.len(), 3);
+        assert_eq!(db0.ids, vec![3]); // learner 0 lacks only id 3
+        let (dc1, db1) = dec.encode_download(1, &avg);
+        assert_eq!(dc1.len(), 3);
+        let mut ids = db1.ids.clone();
+        ids.sort();
+        assert_eq!(ids, vec![1, 2]); // learner 1 lacks 1 and 2
+
+        // Learner 0 applies the download and ends with the average.
+        let adopted = DeltaDecoder::apply_download(&m0, &dc0, &db0).unwrap();
+        assert_eq!(adopted.len(), 3);
+        for x in [[0.0, 0.0], [1.5, -0.5]] {
+            assert!((adopted.predict(&x) - avg.predict(&x)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn redundant_downloads_ship_no_coordinates() {
+        let mut dec = DeltaDecoder::new(1);
+        let avg = model(&[(1, 0.5)], 2);
+        let (_, b_first) = dec.encode_download(0, &avg);
+        assert_eq!(b_first.len(), 1);
+        let (_, b_second) = dec.encode_download(0, &avg);
+        assert!(b_second.is_empty());
+    }
+
+    #[test]
+    fn unknown_id_in_upload_fails_cleanly() {
+        let mut dec = DeltaDecoder::new(1);
+        let t = model(&[], 2);
+        let res = dec.ingest_upload(0, &[(99, 1.0)], &SvBlock::default(), &t);
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn store_grows_with_distinct_ids_only() {
+        let mut enc = DeltaEncoder::new();
+        let mut dec = DeltaDecoder::new(1);
+        let t = model(&[], 1);
+        for round in 0..5u64 {
+            let m = model(&[(round % 2, 1.0)], 1); // alternates ids 0, 1
+            let (c, b) = enc.encode_upload(&m);
+            dec.ingest_upload(0, &c, &b, &t).unwrap();
+        }
+        assert_eq!(dec.store_size(), 2);
+    }
+}

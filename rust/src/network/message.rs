@@ -1,0 +1,323 @@
+//! Protocol messages exchanged between local learners and the coordinator.
+//!
+//! Sizes follow the paper's accounting: a coefficient costs `B_alpha`
+//! (8 bytes, f64) and a support vector costs `B_x` in O(d) (4 bytes per
+//! f32 coordinate). Every message carries its learner/tag framing, and the
+//! *encoded length* of the message is what the communication accounting
+//! records — no modelled sizes anywhere.
+
+use crate::ser::{Decode, DecodeError, Encode, Reader, Writer};
+
+/// Bytes per support-vector coefficient (f64).
+pub const B_ALPHA: usize = 8;
+/// Bytes per support-vector coordinate (f32); a d-dimensional SV costs
+/// `4 * d + 8` (coordinates + id).
+pub const B_COORD: usize = 4;
+
+/// A block of support vectors: ids + flat f32 coordinates.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SvBlock {
+    pub ids: Vec<u64>,
+    pub dim: u32,
+    /// Row-major `ids.len() x dim` coordinates.
+    pub coords: Vec<f32>,
+}
+
+impl SvBlock {
+    pub fn is_consistent(&self) -> bool {
+        self.coords.len() == self.ids.len() * self.dim as usize
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Coordinates of the i-th vector, widened to f64.
+    pub fn coords_f64(&self, i: usize) -> Vec<f64> {
+        let d = self.dim as usize;
+        self.coords[i * d..(i + 1) * d]
+            .iter()
+            .map(|&c| c as f64)
+            .collect()
+    }
+}
+
+impl Encode for SvBlock {
+    fn encode(&self, w: &mut Writer) {
+        w.u32(self.ids.len() as u32);
+        w.u32(self.dim);
+        for &id in &self.ids {
+            w.u64(id);
+        }
+        w.f32_slice(&self.coords);
+    }
+
+    fn encoded_len(&self) -> usize {
+        8 + self.ids.len() * 8 + self.coords.len() * B_COORD
+    }
+}
+
+impl Decode for SvBlock {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        let n = r.u32()? as usize;
+        let dim = r.u32()?;
+        r.check_capacity(n.saturating_mul(8))?;
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            ids.push(r.u64()?);
+        }
+        let coords = r.f32_vec(n * dim as usize)?;
+        Ok(SvBlock { ids, dim, coords })
+    }
+}
+
+/// A protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Learner -> coordinator: local condition violated.
+    Violation { learner: u32, distance_sq: f64 },
+    /// Coordinator -> learner: send me your model.
+    SyncRequest,
+    /// Learner -> coordinator: full coefficient list (id, alpha) of the
+    /// current model + coordinates of SVs the coordinator hasn't seen
+    /// from this learner.
+    ModelUpload {
+        learner: u32,
+        coeffs: Vec<(u64, f64)>,
+        new_svs: SvBlock,
+    },
+    /// Coordinator -> learner: the synchronized model — coefficients of
+    /// the (possibly compressed) average + coordinates the learner lacks.
+    ModelDownload {
+        coeffs: Vec<(u64, f64)>,
+        new_svs: SvBlock,
+    },
+    /// Linear-model upload (fixed size — the 2014 regime).
+    LinearUpload { learner: u32, w: Vec<f32> },
+    /// Linear-model download.
+    LinearDownload { w: Vec<f32> },
+    /// Worker -> coordinator: finished its stream; carries final local
+    /// metrics for aggregation.
+    Done {
+        learner: u32,
+        cum_loss: f64,
+        cum_error: f64,
+    },
+    /// Graceful shutdown of a worker (runtime control).
+    Shutdown,
+}
+
+const TAG_VIOLATION: u8 = 1;
+const TAG_SYNC_REQUEST: u8 = 2;
+const TAG_MODEL_UPLOAD: u8 = 3;
+const TAG_MODEL_DOWNLOAD: u8 = 4;
+const TAG_LINEAR_UPLOAD: u8 = 5;
+const TAG_LINEAR_DOWNLOAD: u8 = 6;
+const TAG_SHUTDOWN: u8 = 7;
+const TAG_DONE: u8 = 8;
+
+fn encode_coeffs(w: &mut Writer, coeffs: &[(u64, f64)]) {
+    w.u32(coeffs.len() as u32);
+    for &(id, a) in coeffs {
+        w.u64(id);
+        w.f64(a);
+    }
+}
+
+fn decode_coeffs(r: &mut Reader<'_>) -> Result<Vec<(u64, f64)>, DecodeError> {
+    let n = r.u32()? as usize;
+    r.check_capacity(n.saturating_mul(16))?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = r.u64()?;
+        let a = r.f64()?;
+        out.push((id, a));
+    }
+    Ok(out)
+}
+
+impl Encode for Message {
+    fn encode(&self, w: &mut Writer) {
+        match self {
+            Message::Violation {
+                learner,
+                distance_sq,
+            } => {
+                w.u8(TAG_VIOLATION);
+                w.u32(*learner);
+                w.f64(*distance_sq);
+            }
+            Message::SyncRequest => w.u8(TAG_SYNC_REQUEST),
+            Message::ModelUpload {
+                learner,
+                coeffs,
+                new_svs,
+            } => {
+                w.u8(TAG_MODEL_UPLOAD);
+                w.u32(*learner);
+                encode_coeffs(w, coeffs);
+                new_svs.encode(w);
+            }
+            Message::ModelDownload { coeffs, new_svs } => {
+                w.u8(TAG_MODEL_DOWNLOAD);
+                encode_coeffs(w, coeffs);
+                new_svs.encode(w);
+            }
+            Message::LinearUpload { learner, w: wv } => {
+                w.u8(TAG_LINEAR_UPLOAD);
+                w.u32(*learner);
+                w.u32(wv.len() as u32);
+                w.f32_slice(wv);
+            }
+            Message::LinearDownload { w: wv } => {
+                w.u8(TAG_LINEAR_DOWNLOAD);
+                w.u32(wv.len() as u32);
+                w.f32_slice(wv);
+            }
+            Message::Done {
+                learner,
+                cum_loss,
+                cum_error,
+            } => {
+                w.u8(TAG_DONE);
+                w.u32(*learner);
+                w.f64(*cum_loss);
+                w.f64(*cum_error);
+            }
+            Message::Shutdown => w.u8(TAG_SHUTDOWN),
+        }
+    }
+}
+
+impl Decode for Message {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        match r.u8()? {
+            TAG_VIOLATION => Ok(Message::Violation {
+                learner: r.u32()?,
+                distance_sq: r.f64()?,
+            }),
+            TAG_SYNC_REQUEST => Ok(Message::SyncRequest),
+            TAG_MODEL_UPLOAD => Ok(Message::ModelUpload {
+                learner: r.u32()?,
+                coeffs: decode_coeffs(r)?,
+                new_svs: SvBlock::decode(r)?,
+            }),
+            TAG_MODEL_DOWNLOAD => Ok(Message::ModelDownload {
+                coeffs: decode_coeffs(r)?,
+                new_svs: SvBlock::decode(r)?,
+            }),
+            TAG_LINEAR_UPLOAD => {
+                let learner = r.u32()?;
+                let n = r.u32()? as usize;
+                Ok(Message::LinearUpload {
+                    learner,
+                    w: r.f32_vec(n)?,
+                })
+            }
+            TAG_LINEAR_DOWNLOAD => {
+                let n = r.u32()? as usize;
+                Ok(Message::LinearDownload { w: r.f32_vec(n)? })
+            }
+            TAG_DONE => Ok(Message::Done {
+                learner: r.u32()?,
+                cum_loss: r.f64()?,
+                cum_error: r.f64()?,
+            }),
+            TAG_SHUTDOWN => Ok(Message::Shutdown),
+            t => Err(DecodeError::BadTag(t)),
+        }
+    }
+}
+
+impl Message {
+    /// Exact wire size in bytes (what the accounting records).
+    pub fn wire_bytes(&self) -> usize {
+        self.encoded_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::{from_bytes, to_bytes};
+
+    fn block() -> SvBlock {
+        SvBlock {
+            ids: vec![10, 20],
+            dim: 3,
+            coords: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        let msgs = vec![
+            Message::Violation {
+                learner: 3,
+                distance_sq: 0.5,
+            },
+            Message::SyncRequest,
+            Message::ModelUpload {
+                learner: 1,
+                coeffs: vec![(10, 0.5), (20, -0.25)],
+                new_svs: block(),
+            },
+            Message::ModelDownload {
+                coeffs: vec![(10, 0.125)],
+                new_svs: block(),
+            },
+            Message::LinearUpload {
+                learner: 2,
+                w: vec![1.0, -2.0],
+            },
+            Message::LinearDownload { w: vec![0.5] },
+            Message::Done {
+                learner: 7,
+                cum_loss: 1.5,
+                cum_error: 3.0,
+            },
+            Message::Shutdown,
+        ];
+        for m in msgs {
+            let bytes = to_bytes(&m);
+            assert_eq!(bytes.len(), m.wire_bytes());
+            let back: Message = from_bytes(&bytes).unwrap();
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn sv_block_consistency() {
+        assert!(block().is_consistent());
+        let mut b = block();
+        b.coords.pop();
+        assert!(!b.is_consistent());
+    }
+
+    #[test]
+    fn upload_size_matches_paper_accounting() {
+        // |S| coefficients at B_alpha each + new SVs at ~B_x each + framing.
+        let m = Message::ModelUpload {
+            learner: 0,
+            coeffs: vec![(1, 0.1); 50].iter().map(|&(i, a)| (i, a)).collect(),
+            new_svs: SvBlock {
+                ids: vec![7],
+                dim: 18,
+                coords: vec![0.0; 18],
+            },
+        };
+        let bytes = m.wire_bytes();
+        // 1 tag + 4 learner + 4 count + 50 * (8 id + 8 alpha) + block(8 hdr + 8 id + 72 coords)
+        assert_eq!(bytes, 1 + 4 + 4 + 50 * 16 + 8 + 8 + 72);
+    }
+
+    #[test]
+    fn corrupt_tag_rejected() {
+        let bytes = vec![99u8];
+        assert!(from_bytes::<Message>(&bytes).is_err());
+    }
+}

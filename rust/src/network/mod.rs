@@ -1,0 +1,14 @@
+//! Cluster networking: protocol messages, the support-vector delta
+//! encoding (the paper's "trivial communication reduction strategy"),
+//! byte-exact communication accounting, and the thread/channel message bus
+//! used by the leader/worker runtime.
+
+pub mod accounting;
+pub mod bus;
+pub mod delta;
+pub mod message;
+
+pub use accounting::CommStats;
+pub use bus::{Bus, Endpoint};
+pub use delta::{DeltaDecoder, DeltaEncoder};
+pub use message::{Message, SvBlock};

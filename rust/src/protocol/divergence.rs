@@ -1,0 +1,90 @@
+//! Eq. 1: the model-configuration divergence
+//! `delta(f) = 1/m sum_i ||f^i - fbar||^2`, computed exactly in the dual
+//! representation (Sec. 2's extension to kernel Hilbert spaces).
+
+use crate::kernel::{Model, SvModel};
+
+/// Divergence of a configuration plus the per-learner distances.
+#[derive(Debug, Clone)]
+pub struct Divergence {
+    pub delta: f64,
+    pub per_learner: Vec<f64>,
+}
+
+/// Compute `delta(f)` and `||f^i - fbar||^2` for each learner.
+///
+/// For kernel models the average is the Prop. 2 union expansion; the
+/// distances are quadratic forms over the union Gram matrix. Cost is
+/// O((sum_i |S^i|)^2 d) — it runs at synchronization points only, and has
+/// an XLA twin (`divergence_*.hlo.txt`) used by the PJRT backend.
+pub fn configuration_divergence(models: &[&Model]) -> Divergence {
+    assert!(!models.is_empty());
+    let avg = Model::average(models);
+    let per_learner: Vec<f64> = models.iter().map(|m| m.distance_sq(&avg)).collect();
+    let delta = per_learner.iter().sum::<f64>() / models.len() as f64;
+    Divergence { delta, per_learner }
+}
+
+/// Divergence for kernel expansions given directly (used by the runtime
+/// integration tests to compare against the XLA artifact).
+pub fn kernel_divergence(models: &[&SvModel]) -> Divergence {
+    let wrapped: Vec<Model> = models.iter().map(|m| Model::Kernel((*m).clone())).collect();
+    let refs: Vec<&Model> = wrapped.iter().collect();
+    configuration_divergence(&refs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{Kernel, LinearModel};
+
+    fn k() -> Kernel {
+        Kernel::Rbf { gamma: 0.5 }
+    }
+
+    #[test]
+    fn identical_models_have_zero_divergence() {
+        let mut f = SvModel::new(k(), 1);
+        f.push(1, &[0.5], 1.0);
+        let m1 = Model::Kernel(f.clone());
+        let m2 = Model::Kernel(f);
+        let d = configuration_divergence(&[&m1, &m2]);
+        assert!(d.delta < 1e-20);
+        assert!(d.per_learner.iter().all(|&v| v < 1e-20));
+    }
+
+    #[test]
+    fn two_point_configuration_matches_hand_computation() {
+        // f1 = k(0, .), f2 = -k(0, .): fbar = 0, ||f_i - fbar||^2 = 1.
+        let mut f1 = SvModel::new(k(), 1);
+        f1.push(1, &[0.0], 1.0);
+        let mut f2 = SvModel::new(k(), 1);
+        f2.push(1, &[0.0], -1.0);
+        let d = kernel_divergence(&[&f1, &f2]);
+        assert!((d.delta - 1.0).abs() < 1e-12, "delta {}", d.delta);
+    }
+
+    #[test]
+    fn linear_divergence_is_euclidean() {
+        let a = Model::Linear(LinearModel::from_w(vec![0.0, 0.0]));
+        let b = Model::Linear(LinearModel::from_w(vec![2.0, 0.0]));
+        // avg = [1, 0]; both distances 1; delta = 1.
+        let d = configuration_divergence(&[&a, &b]);
+        assert!((d.delta - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn divergence_nonnegative_and_symmetric_under_permutation() {
+        let mut f1 = SvModel::new(k(), 2);
+        f1.push(1, &[0.0, 1.0], 0.7);
+        f1.push(2, &[1.0, 0.0], -0.2);
+        let mut f2 = SvModel::new(k(), 2);
+        f2.push(3, &[0.5, 0.5], 1.1);
+        let mut f3 = SvModel::new(k(), 2);
+        f3.push(4, &[-1.0, 0.3], 0.4);
+        let d1 = kernel_divergence(&[&f1, &f2, &f3]);
+        let d2 = kernel_divergence(&[&f3, &f1, &f2]);
+        assert!(d1.delta >= 0.0);
+        assert!((d1.delta - d2.delta).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,636 @@
+//! The deterministic protocol engine: drives m learners over T rounds
+//! under a synchronization policy, constructing *real wire messages* for
+//! every exchange so communication is measured, not modelled. This is the
+//! reference implementation the threaded leader/worker runtime
+//! ([`crate::coordinator`]) must agree with byte-for-byte.
+
+use crate::compression::Compressor;
+use crate::config::{ExperimentConfig, ProtocolConfig};
+use crate::data::{build_streams, DataStream};
+use crate::kernel::{Model, SvModel};
+use crate::learner::{build_learner, OnlineLearner};
+use crate::metrics::{MetricsRecorder, Outcome};
+use crate::network::{CommStats, DeltaDecoder, DeltaEncoder, Message};
+use crate::protocol::local_condition::ConditionTracker;
+use crate::protocol::sync::{synchronize, SyncDecision, SyncPolicy};
+use crate::util::Stopwatch;
+
+/// Per-round report (exposed for tests and the serving layer).
+#[derive(Debug, Clone)]
+pub struct RoundReport {
+    pub round: u64,
+    pub synced: bool,
+    pub violations: usize,
+    pub round_loss: f64,
+}
+
+/// The engine over one experiment configuration.
+pub struct ProtocolEngine {
+    cfg: ExperimentConfig,
+    learners: Vec<Box<dyn OnlineLearner>>,
+    trackers: Vec<ConditionTracker>,
+    encoders: Vec<DeltaEncoder>,
+    decoder: DeltaDecoder,
+    streams: Vec<Box<dyn DataStream>>,
+    policy: SyncPolicy,
+    avg_compressor: Compressor,
+    pub comm: CommStats,
+    pub metrics: MetricsRecorder,
+    round: u64,
+    is_kernel: bool,
+    /// True divergence at each sync (recorded when `record_divergence`).
+    pub sync_divergences: Vec<(u64, f64)>,
+    pub record_divergence: bool,
+    /// Violations resolved by subset balancing (partial-sync refinement).
+    pub partial_syncs: u64,
+    watch: Stopwatch,
+}
+
+impl ProtocolEngine {
+    pub fn new(cfg: ExperimentConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            cfg.protocol != ProtocolConfig::Serial,
+            "serial oracle runs through experiments::runner::run_serial"
+        );
+        let dim = cfg.data.dim();
+        let m = cfg.learners;
+        let learners: Vec<Box<dyn OnlineLearner>> = (0..m)
+            .map(|i| build_learner(&cfg.learner, dim, i))
+            .collect();
+        let is_kernel = learners[0].snapshot().as_kernel().is_some();
+        let streams = build_streams(&cfg.data, m, cfg.seed);
+        // The coordinator compresses the union-average back to the
+        // learners' budget. Truncation would discard exactly the fresh
+        // per-learner updates (their coefficients carry the 1/m averaging
+        // factor, making them the smallest); projection folds that mass
+        // onto the shared support set instead — same bound, far better
+        // learning dynamics. See sync.rs docs + abl-comp.
+        let avg_compressor = match cfg.learner.compression.budget() {
+            Some(tau) => Compressor::Projection { tau },
+            None => Compressor::None,
+        };
+        Ok(ProtocolEngine {
+            policy: SyncPolicy::new(cfg.protocol),
+            avg_compressor,
+            trackers: vec![ConditionTracker::new(); m],
+            encoders: (0..m).map(|_| DeltaEncoder::new()).collect(),
+            decoder: DeltaDecoder::new(m),
+            comm: CommStats::new(),
+            metrics: MetricsRecorder::new(cfg.record_every as u64),
+            round: 0,
+            is_kernel,
+            sync_divergences: Vec::new(),
+            record_divergence: false,
+            partial_syncs: 0,
+            watch: Stopwatch::new(),
+            learners,
+            streams,
+            cfg,
+        })
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Immutable access to a learner (tests / serving).
+    pub fn learner(&self, i: usize) -> &dyn OnlineLearner {
+        self.learners[i].as_ref()
+    }
+
+    fn mean_svs(&self) -> f64 {
+        let total: usize = self.learners.iter().map(|l| l.sv_count()).sum();
+        total as f64 / self.learners.len() as f64
+    }
+
+    /// Execute one round: local updates, condition checks, possibly a
+    /// synchronization.
+    pub fn step(&mut self) -> RoundReport {
+        self.watch.start();
+        self.round += 1;
+        let round = self.round;
+        let m = self.learners.len();
+        let mut round_loss = 0.0;
+
+        // --- local updates -------------------------------------------------
+        for i in 0..m {
+            let (x, y) = self.streams[i].next_example();
+            let ev = self.learners[i].update(&x, y);
+            round_loss += ev.loss;
+            self.metrics
+                .record_update(ev.loss, ev.error, ev.total_drift(), ev.compression_err);
+            self.trackers[i].apply(&ev, &x, self.learners[i].norm_sq());
+        }
+
+        // --- condition checks (dynamic only) --------------------------------
+        let mut violations = 0usize;
+        let mut violators: Vec<usize> = Vec::new();
+        if let Some(delta) = self.policy.delta(round) {
+            if self.policy.checks_this_round(round) {
+                for i in 0..m {
+                    if self.trackers[i].violated(delta) {
+                        violations += 1;
+                        violators.push(i);
+                        // The violation notice really crosses the network.
+                        let msg = Message::Violation {
+                            learner: i as u32,
+                            distance_sq: self.trackers[i].distance_sq(),
+                        };
+                        self.comm.record_up(msg.wire_bytes());
+                        self.comm.record_violation();
+                    }
+                }
+            }
+        }
+
+        // --- synchronization -------------------------------------------------
+        let decision = self.policy.decide(round, violations > 0);
+        let mut synced = decision == SyncDecision::Sync;
+        if synced && self.cfg.partial_sync && violations > 0 {
+            let delta = self.policy.delta(round).expect("dynamic");
+            if self.try_partial_sync(&violators, delta) {
+                // Resolved locally — no global synchronization event.
+                synced = false;
+                self.partial_syncs += 1;
+            } else {
+                self.run_sync(true);
+            }
+        } else if synced {
+            self.run_sync(violations > 0);
+        }
+
+        self.comm.end_round();
+        self.metrics.end_round(round, &self.comm, self.mean_svs());
+        self.watch.stop();
+        RoundReport {
+            round,
+            synced,
+            violations,
+            round_loss,
+        }
+    }
+
+    /// Partial synchronization (the [10] local-balancing refinement):
+    /// grow a balancing set B around the violators; if the B-average lands
+    /// back inside the safe zone `||avg_B - r||^2 <= Delta`, only B's
+    /// members exchange models and adopt it — the shared reference model r
+    /// is untouched, so every local condition proof stays valid. Returns
+    /// false if B grew to the full cluster (caller escalates to full sync).
+    ///
+    /// Only kernel engines support this (linear balancing is possible but
+    /// the messages are already tiny); falls back to full sync otherwise.
+    fn try_partial_sync(&mut self, violators: &[usize], delta: f64) -> bool {
+        if !self.is_kernel || violators.is_empty() {
+            return false;
+        }
+        let m = self.learners.len();
+        // The reference model is common; take it from any tracker (all
+        // reset to the same model at the last full sync; None = zero fn).
+        let reference = self.trackers[0].reference().cloned();
+        let mut in_b = vec![false; m];
+        let mut b: Vec<usize> = Vec::new();
+        let mut uploaded: Vec<Option<SvModel>> = vec![None; m];
+        for &v in violators {
+            in_b[v] = true;
+            b.push(v);
+        }
+        // Deterministic extension order (ascending, consumed from the
+        // back): learners farthest from the reference join first — they
+        // carry the most balancing mass against the violators' drift.
+        let mut extension: Vec<usize> = (0..m).filter(|i| !in_b[*i]).collect();
+        extension.sort_by(|&x, &y| {
+            self.trackers[x]
+                .distance_sq()
+                .partial_cmp(&self.trackers[y].distance_sq())
+                .unwrap()
+        });
+
+        loop {
+            if b.len() == m {
+                return false; // escalate: full sync with a fresh reference
+            }
+            // Upload any new members of B (delta-encoded, byte-counted).
+            for &i in &b {
+                if uploaded[i].is_none() {
+                    let snap = self.learners[i].snapshot();
+                    let exp = snap.as_kernel().unwrap();
+                    let (coeffs, block) = self.encoders[i].encode_upload(exp);
+                    let msg = Message::ModelUpload {
+                        learner: i as u32,
+                        coeffs,
+                        new_svs: block,
+                    };
+                    self.comm.record_up(msg.wire_bytes());
+                    let (coeffs, block) = match msg {
+                        Message::ModelUpload {
+                            coeffs, new_svs, ..
+                        } => (coeffs, new_svs),
+                        _ => unreachable!(),
+                    };
+                    uploaded[i] = Some(
+                        self.decoder
+                            .ingest_upload(i, &coeffs, &block, exp)
+                            .expect("upload consistent"),
+                    );
+                }
+            }
+            // B-average (Prop. 2 over the subset), budget-compressed.
+            let models: Vec<Model> = b
+                .iter()
+                .map(|&i| Model::Kernel(uploaded[i].clone().unwrap()))
+                .collect();
+            let refs: Vec<&Model> = models.iter().collect();
+            let (avg_b, eps) = synchronize(&refs, self.avg_compressor);
+            // Safe-zone check against the *global* reference.
+            let dist = match &reference {
+                Some(r) => avg_b.distance_sq(r),
+                None => match &avg_b {
+                    Model::Kernel(k) => k.norm_sq(),
+                    Model::Linear(l) => l.norm_sq(),
+                },
+            };
+            if dist <= delta {
+                if eps > 0.0 {
+                    self.metrics.record_update(0.0, 0.0, 0.0, eps);
+                }
+                let avg_k = avg_b.as_kernel().unwrap();
+                for &i in &b {
+                    let (coeffs, block) = self.decoder.encode_download(i, avg_k);
+                    let msg = Message::ModelDownload {
+                        coeffs,
+                        new_svs: block,
+                    };
+                    self.comm.record_down(msg.wire_bytes());
+                    let (coeffs, block) = match msg {
+                        Message::ModelDownload { coeffs, new_svs } => (coeffs, new_svs),
+                        _ => unreachable!(),
+                    };
+                    let local_snap = self.learners[i].snapshot();
+                    let local = local_snap.as_kernel().unwrap();
+                    let adopted = DeltaDecoder::apply_download(local, &coeffs, &block)
+                        .expect("download consistent");
+                    self.encoders[i].note_download(adopted.ids().iter().copied());
+                    let adopted_model = Model::Kernel(adopted);
+                    self.learners[i].set_model(adopted_model.clone());
+                    // Reference unchanged: recalibrate ||f - r||^2 exactly.
+                    self.trackers[i].recalibrate(&adopted_model);
+                }
+                return true;
+            }
+            // Extend B with the next candidate.
+            match extension.pop() {
+                Some(next) => {
+                    in_b[next] = true;
+                    b.push(next);
+                }
+                None => return false,
+            }
+        }
+    }
+
+    /// One full synchronization: upload all models, average (Prop. 2),
+    /// compress the average if a budget is configured, download.
+    fn run_sync(&mut self, triggered_by_violation: bool) {
+        let m = self.learners.len();
+        // Dynamic syncs are coordinator-initiated on violation: the
+        // coordinator asks every learner for its model. Scheduled
+        // protocols need no request round-trip.
+        if triggered_by_violation {
+            let req = Message::SyncRequest;
+            for _ in 0..m {
+                self.comm.record_down(req.wire_bytes());
+            }
+        }
+
+        if self.is_kernel {
+            self.sync_kernel();
+        } else {
+            self.sync_linear();
+        }
+        self.comm.record_sync(self.round);
+    }
+
+    fn sync_kernel(&mut self) {
+        let m = self.learners.len();
+        // --- uploads: full coefficients + new SVs only ---------------------
+        let mut uploaded: Vec<SvModel> = Vec::with_capacity(m);
+        for i in 0..m {
+            let snap = self.learners[i].snapshot();
+            let exp = snap.as_kernel().expect("kernel engine");
+            let (coeffs, block) = self.encoders[i].encode_upload(exp);
+            let msg = Message::ModelUpload {
+                learner: i as u32,
+                coeffs,
+                new_svs: block,
+            };
+            self.comm.record_up(msg.wire_bytes());
+            // Coordinator ingests (decode path mirrors the wire contents).
+            let (coeffs, block) = match msg {
+                Message::ModelUpload {
+                    coeffs, new_svs, ..
+                } => (coeffs, new_svs),
+                _ => unreachable!(),
+            };
+            let rebuilt = self
+                .decoder
+                .ingest_upload(i, &coeffs, &block, exp)
+                .expect("upload consistent by construction");
+            uploaded.push(rebuilt);
+        }
+
+        if self.record_divergence {
+            let models: Vec<Model> = uploaded.iter().cloned().map(Model::Kernel).collect();
+            let refs: Vec<&Model> = models.iter().collect();
+            let d = crate::protocol::divergence::configuration_divergence(&refs);
+            self.sync_divergences.push((self.round, d.delta));
+        }
+
+        // --- average + optional compression of the average ------------------
+        let models: Vec<Model> = uploaded.into_iter().map(Model::Kernel).collect();
+        let refs: Vec<&Model> = models.iter().collect();
+        let (avg, eps) = synchronize(&refs, self.avg_compressor);
+        if eps > 0.0 {
+            // The average's compression perturbs every learner's adopted
+            // model once.
+            self.metrics.record_update(0.0, 0.0, 0.0, eps);
+        }
+        let avg_k = avg.as_kernel().expect("kernel average");
+
+        // --- downloads: full coefficients + missing SVs only -----------------
+        for i in 0..m {
+            let (coeffs, block) = self.decoder.encode_download(i, avg_k);
+            let msg = Message::ModelDownload {
+                coeffs,
+                new_svs: block,
+            };
+            self.comm.record_down(msg.wire_bytes());
+            let (coeffs, block) = match msg {
+                Message::ModelDownload { coeffs, new_svs } => (coeffs, new_svs),
+                _ => unreachable!(),
+            };
+            let local_snap = self.learners[i].snapshot();
+            let local = local_snap.as_kernel().unwrap();
+            let adopted = DeltaDecoder::apply_download(local, &coeffs, &block)
+                .expect("download consistent by construction");
+            self.encoders[i].note_download(adopted.ids().iter().copied());
+            let adopted_model = Model::Kernel(adopted);
+            self.learners[i].set_model(adopted_model.clone());
+            self.trackers[i].reset(adopted_model);
+        }
+    }
+
+    fn sync_linear(&mut self) {
+        let m = self.learners.len();
+        let mut snaps: Vec<Model> = Vec::with_capacity(m);
+        for i in 0..m {
+            let snap = self.learners[i].snapshot();
+            let w32: Vec<f32> = snap
+                .as_linear()
+                .expect("linear engine")
+                .w
+                .iter()
+                .map(|&v| v as f32)
+                .collect();
+            let msg = Message::LinearUpload {
+                learner: i as u32,
+                w: w32,
+            };
+            self.comm.record_up(msg.wire_bytes());
+            snaps.push(snap);
+        }
+        if self.record_divergence {
+            let refs: Vec<&Model> = snaps.iter().collect();
+            let d = crate::protocol::divergence::configuration_divergence(&refs);
+            self.sync_divergences.push((self.round, d.delta));
+        }
+        let refs: Vec<&Model> = snaps.iter().collect();
+        let (avg, _) = synchronize(&refs, Compressor::None);
+        let w32: Vec<f32> = avg
+            .as_linear()
+            .unwrap()
+            .w
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        for i in 0..m {
+            let msg = Message::LinearDownload { w: w32.clone() };
+            self.comm.record_down(msg.wire_bytes());
+            self.learners[i].set_model(avg.clone());
+            self.trackers[i].reset(avg.clone());
+        }
+    }
+
+    /// Run to the configured horizon and return the outcome.
+    pub fn run(mut self) -> Outcome {
+        let rounds = self.cfg.rounds as u64;
+        while self.round < rounds {
+            self.step();
+        }
+        self.into_outcome()
+    }
+
+    /// Finalize into an [`Outcome`] at the current round.
+    pub fn into_outcome(self) -> Outcome {
+        Outcome {
+            name: self.cfg.name.clone(),
+            learners: self.cfg.learners,
+            rounds: self.round,
+            cumulative_loss: self.metrics.cum_loss,
+            cumulative_error: self.metrics.cum_error,
+            cum_drift: self.metrics.cum_drift,
+            cum_compression_err: self.metrics.cum_compression_err,
+            mean_svs: {
+                let total: usize = self.learners.iter().map(|l| l.sv_count()).sum();
+                total as f64 / self.learners.len() as f64
+            },
+            comm: self.comm,
+            series: self.metrics.series,
+            wall_secs: self.watch.elapsed_secs(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CompressionConfig, ExperimentConfig, ProtocolConfig};
+
+    fn small(protocol: ProtocolConfig) -> ExperimentConfig {
+        let mut c = ExperimentConfig::quickstart();
+        c.protocol = protocol;
+        c.rounds = 60;
+        c.learners = 3;
+        c
+    }
+
+    #[test]
+    fn nosync_never_communicates() {
+        let o = ProtocolEngine::new(small(ProtocolConfig::NoSync))
+            .unwrap()
+            .run();
+        assert_eq!(o.comm.total_bytes(), 0);
+        assert_eq!(o.comm.syncs, 0);
+    }
+
+    #[test]
+    fn continuous_syncs_every_round() {
+        let o = ProtocolEngine::new(small(ProtocolConfig::Continuous))
+            .unwrap()
+            .run();
+        assert_eq!(o.comm.syncs, 60);
+        assert!(o.comm.total_bytes() > 0);
+    }
+
+    #[test]
+    fn periodic_syncs_on_schedule() {
+        let o = ProtocolEngine::new(small(ProtocolConfig::Periodic { period: 10 }))
+            .unwrap()
+            .run();
+        assert_eq!(o.comm.syncs, 6);
+    }
+
+    #[test]
+    fn dynamic_syncs_less_than_continuous_with_similar_loss() {
+        let dynamic = ProtocolEngine::new(small(ProtocolConfig::Dynamic {
+            delta: 0.5,
+            check_period: 1,
+        }))
+        .unwrap()
+        .run();
+        let continuous = ProtocolEngine::new(small(ProtocolConfig::Continuous))
+            .unwrap()
+            .run();
+        assert!(dynamic.comm.syncs < continuous.comm.syncs);
+        assert!(dynamic.comm.total_bytes() < continuous.comm.total_bytes());
+        // Loss should not explode relative to continuous.
+        assert!(dynamic.cumulative_loss < 3.0 * continuous.cumulative_loss + 10.0);
+    }
+
+    #[test]
+    fn after_sync_models_agree() {
+        let mut e = ProtocolEngine::new(small(ProtocolConfig::Continuous)).unwrap();
+        for _ in 0..5 {
+            e.step();
+        }
+        // All learners hold (nearly — f32 SV quantization) the same model.
+        let m0 = e.learner(0).snapshot();
+        for i in 1..3 {
+            let mi = e.learner(i).snapshot();
+            assert!(
+                m0.distance_sq(&mi) < 1e-8,
+                "learner {i} diverged: {}",
+                m0.distance_sq(&mi)
+            );
+        }
+    }
+
+    #[test]
+    fn dynamic_guarantee_no_violation_implies_small_divergence() {
+        // While no sync has been triggered, the true divergence must stay
+        // <= Delta (the local-condition safe-zone argument).
+        let delta = 1.0;
+        let mut e = ProtocolEngine::new(small(ProtocolConfig::Dynamic {
+            delta,
+            check_period: 1,
+        }))
+        .unwrap();
+        for _ in 0..40 {
+            let rep = e.step();
+            if !rep.synced {
+                let snaps: Vec<Model> = (0..3).map(|i| e.learner(i).snapshot()).collect();
+                let refs: Vec<&Model> = snaps.iter().collect();
+                let d = crate::protocol::divergence::configuration_divergence(&refs);
+                assert!(
+                    d.delta <= delta + 1e-6,
+                    "round {}: divergence {} > Delta {delta}",
+                    rep.round,
+                    d.delta
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_average_respects_budget() {
+        let mut cfg = small(ProtocolConfig::Continuous);
+        cfg.learner.compression = CompressionConfig::Truncation { tau: 8 };
+        let mut e = ProtocolEngine::new(cfg).unwrap();
+        for _ in 0..30 {
+            e.step();
+        }
+        for i in 0..3 {
+            let snap = e.learner(i).snapshot();
+            assert!(snap.as_kernel().unwrap().len() <= 8);
+        }
+    }
+
+    #[test]
+    fn linear_engine_runs_and_communicates_fixed_size() {
+        let mut cfg = small(ProtocolConfig::Continuous);
+        cfg.learner.kernel = crate::config::KernelConfig::Linear;
+        cfg.learner.compression = CompressionConfig::None;
+        let o = ProtocolEngine::new(cfg).unwrap().run();
+        assert_eq!(o.comm.syncs, 60);
+        // Fixed-size messages: per sync, m uploads + m downloads of
+        // 18-dim f32 vectors (SUSY geometry). Upload: 1 tag + 4 learner +
+        // 4 count + 72 = 81; download: 1 + 4 + 72 = 77.
+        assert_eq!(o.comm.total_bytes(), 60 * 3 * (81 + 77));
+    }
+
+    #[test]
+    fn partial_sync_resolves_locally_and_keeps_guarantee() {
+        let delta = 0.5;
+        let mut cfg = small(ProtocolConfig::Dynamic {
+            delta,
+            check_period: 1,
+        });
+        cfg.partial_sync = true;
+        cfg.learners = 4;
+        let mut full_cfg = cfg.clone();
+        full_cfg.partial_sync = false;
+
+        let mut e = ProtocolEngine::new(cfg).unwrap();
+        for _ in 0..60 {
+            let rep = e.step();
+            if !rep.synced {
+                // Whether quiet or partially balanced, the divergence
+                // guarantee must hold.
+                let snaps: Vec<Model> = (0..4).map(|i| e.learner(i).snapshot()).collect();
+                let refs: Vec<&Model> = snaps.iter().collect();
+                let d = crate::protocol::divergence::configuration_divergence(&refs);
+                assert!(
+                    d.delta <= delta + 1e-6,
+                    "round {}: divergence {} > Delta",
+                    rep.round,
+                    d.delta
+                );
+            }
+        }
+        let partial = e.partial_syncs;
+        let partial_outcome = e.into_outcome();
+
+        let full_outcome = ProtocolEngine::new(full_cfg).unwrap().run();
+        // Partial balancing should resolve at least some violations
+        // without a full sync, reducing global sync count.
+        if partial > 0 {
+            assert!(partial_outcome.comm.syncs <= full_outcome.comm.syncs);
+        }
+    }
+
+    #[test]
+    fn outcome_series_is_monotone() {
+        let o = ProtocolEngine::new(small(ProtocolConfig::Periodic { period: 7 }))
+            .unwrap()
+            .run();
+        for w in o.series.windows(2) {
+            assert!(w[1].cum_loss >= w[0].cum_loss);
+            assert!(w[1].cum_bytes >= w[0].cum_bytes);
+            assert!(w[1].round > w[0].round);
+        }
+    }
+}

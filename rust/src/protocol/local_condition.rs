@@ -1,0 +1,228 @@
+//! Local condition monitoring: each learner checks `||f_t^i - r_t||^2 <= Delta`
+//! against the shared reference model `r_t` (the average from the last
+//! synchronization). If no local condition is violated, the configuration
+//! divergence cannot exceed `Delta` (Sec. 2; the geometric-monitoring
+//! safe-zone argument of [11, 19]).
+//!
+//! The naive check recomputes `||f - r||^2` every round — O((|S_f| + |S_r|)^2 d)
+//! in the dual representation. This tracker maintains the three terms
+//! `||f||^2`, `<f, r>`, `||r||^2` *incrementally* from the exact model
+//! deltas reported in [`UpdateEvent`]s, for O(|S_r| d) per round (one
+//! r(x) evaluation per model change) — the optimization quantified in
+//! EXPERIMENTS.md §Perf.
+
+use crate::kernel::{Model, SvModel};
+use crate::learner::UpdateEvent;
+
+/// Incremental tracker of `||f - r||^2` for one learner.
+#[derive(Debug, Clone)]
+pub struct ConditionTracker {
+    /// Shared reference model r (None before the first synchronization —
+    /// all models start equal so r = the common initial model, distance 0).
+    reference: Option<Model>,
+    /// ||r||^2 (cached).
+    norm_r_sq: f64,
+    /// <f, r> maintained incrementally.
+    inner_fr: f64,
+    /// ||f||^2 — supplied by the learner (it maintains its own norm).
+    norm_f_sq: f64,
+}
+
+impl Default for ConditionTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ConditionTracker {
+    pub fn new() -> Self {
+        ConditionTracker {
+            reference: None,
+            norm_r_sq: 0.0,
+            inner_fr: 0.0,
+            norm_f_sq: 0.0,
+        }
+    }
+
+    /// Adopt a new reference model after a synchronization. The local
+    /// model `f` equals `r` right after adopting the average, so
+    /// `<f, r> = ||r||^2` exactly.
+    pub fn reset(&mut self, reference: Model) {
+        let norm_r = match &reference {
+            Model::Linear(l) => l.norm_sq(),
+            Model::Kernel(f) => f.norm_sq(),
+        };
+        self.norm_r_sq = norm_r;
+        self.inner_fr = norm_r;
+        self.norm_f_sq = norm_r;
+        self.reference = Some(reference);
+    }
+
+    /// Value r(x) of the reference model (0 before the first sync — the
+    /// initial common model is the zero function).
+    pub fn reference_value(&self, x: &[f64]) -> f64 {
+        match &self.reference {
+            Some(m) => m.predict(x),
+            None => 0.0,
+        }
+    }
+
+    pub fn reference(&self) -> Option<&Model> {
+        self.reference.as_ref()
+    }
+
+    /// Fold one model update into the tracked inner product.
+    ///
+    /// The update transformed `f -> s*f + c*k_x + sum_removed (-a_j k_xj)
+    /// + sum_adjusted (d_j k_xj)`; by bilinearity `<f', r>` needs only
+    /// `r(.)` at the changed points.
+    pub fn apply(&mut self, ev: &UpdateEvent, x: &[f64], new_norm_f_sq: f64) {
+        let mut inner = self.inner_fr * ev.scale;
+        if ev.added_coeff != 0.0 {
+            inner += ev.added_coeff * self.reference_value(x);
+        }
+        for rem in &ev.removed {
+            inner -= rem.coeff * self.reference_value(&rem.x);
+        }
+        for adj in &ev.adjusted {
+            inner += adj.delta * self.reference_value(&adj.x);
+        }
+        self.inner_fr = inner;
+        self.norm_f_sq = new_norm_f_sq;
+    }
+
+    /// Current `||f - r||^2` (clamped at 0 against cancellation).
+    pub fn distance_sq(&self) -> f64 {
+        (self.norm_f_sq - 2.0 * self.inner_fr + self.norm_r_sq).max(0.0)
+    }
+
+    /// The local condition: is `||f - r||^2 > Delta`?
+    pub fn violated(&self, delta: f64) -> bool {
+        self.distance_sq() > delta
+    }
+
+    /// Exact recomputation against the true model — used on sync and by
+    /// the property tests to pin the incremental path.
+    pub fn exact_distance_sq(&self, f: &Model) -> f64 {
+        match (&self.reference, f) {
+            (None, Model::Kernel(k)) => k.norm_sq(),
+            (None, Model::Linear(l)) => l.norm_sq(),
+            (Some(r), f) => f.distance_sq(r),
+        }
+    }
+
+    /// Re-pin the incremental state to the exact values (kills accumulated
+    /// floating-point drift; called on every sync).
+    pub fn recalibrate(&mut self, f: &Model) {
+        self.norm_f_sq = match f {
+            Model::Kernel(k) => k.norm_sq(),
+            Model::Linear(l) => l.norm_sq(),
+        };
+        self.inner_fr = match (&self.reference, f) {
+            (None, _) => 0.0,
+            (Some(Model::Kernel(r)), Model::Kernel(k)) => k.inner(r),
+            (Some(Model::Linear(r)), Model::Linear(l)) => {
+                crate::util::float::dot(&l.w, &r.w)
+            }
+            _ => panic!("mixed model kinds"),
+        };
+    }
+}
+
+/// Convenience: exact `||f - r||^2` for a kernel model against a kernel
+/// reference (native twin of the `norm_diff` XLA artifact).
+pub fn norm_diff(f: &SvModel, r: &SvModel) -> f64 {
+    f.distance_sq(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CompressionConfig, KernelConfig, LearnerConfig, LossKind};
+    use crate::learner::{KernelLearner, OnlineLearner};
+    use crate::util::{Pcg64, Rng};
+
+    fn cfg(compression: CompressionConfig) -> LearnerConfig {
+        LearnerConfig {
+            eta: 0.4,
+            lambda: 0.02,
+            loss: LossKind::Hinge,
+            kernel: KernelConfig::Rbf { gamma: 0.5 },
+            compression,
+            passive_aggressive: false,
+        }
+    }
+
+    /// Drive a learner and verify the incremental distance tracks the
+    /// exact one.
+    fn run_and_compare(compression: CompressionConfig, rounds: usize) {
+        let mut learner = KernelLearner::new(cfg(compression), 2, 0);
+        let mut tracker = ConditionTracker::new();
+        let mut rng = Pcg64::seeded(42);
+        for t in 0..rounds {
+            let x = [rng.normal(), rng.normal()];
+            let y = if x[0] * x[1] > 0.0 { 1.0 } else { -1.0 };
+            let ev = learner.update(&x, y);
+            tracker.apply(&ev, &x, learner.norm_sq());
+            let exact = tracker.exact_distance_sq(&learner.snapshot());
+            let incr = tracker.distance_sq();
+            assert!(
+                (exact - incr).abs() < 1e-6 * exact.max(1.0),
+                "round {t}: incremental {incr} vs exact {exact}"
+            );
+            // Occasionally simulate a sync.
+            if t % 25 == 24 {
+                let avg = learner.snapshot();
+                learner.set_model(avg.clone());
+                tracker.reset(avg);
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_matches_exact_no_compression() {
+        run_and_compare(CompressionConfig::None, 120);
+    }
+
+    #[test]
+    fn incremental_matches_exact_truncation() {
+        run_and_compare(CompressionConfig::Truncation { tau: 8 }, 120);
+    }
+
+    #[test]
+    fn incremental_matches_exact_projection() {
+        run_and_compare(CompressionConfig::Projection { tau: 8 }, 80);
+    }
+
+    #[test]
+    fn fresh_tracker_distance_is_norm() {
+        let mut learner = KernelLearner::new(cfg(CompressionConfig::None), 1, 0);
+        let mut tracker = ConditionTracker::new();
+        let ev = learner.update(&[0.3], 1.0);
+        tracker.apply(&ev, &[0.3], learner.norm_sq());
+        // r = zero function: ||f - r||^2 = ||f||^2.
+        assert!((tracker.distance_sq() - learner.norm_sq()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_zeroes_distance() {
+        let mut learner = KernelLearner::new(cfg(CompressionConfig::None), 1, 0);
+        let mut tracker = ConditionTracker::new();
+        for _ in 0..5 {
+            let ev = learner.update(&[0.5], 1.0);
+            tracker.apply(&ev, &[0.5], learner.norm_sq());
+        }
+        let snap = learner.snapshot();
+        tracker.reset(snap);
+        assert!(tracker.distance_sq() < 1e-12);
+        assert!(!tracker.violated(0.0001));
+    }
+
+    #[test]
+    fn violation_triggers_at_threshold() {
+        let mut t = ConditionTracker::new();
+        t.norm_f_sq = 2.0; // ||f - 0||^2 = 2
+        assert!(t.violated(1.0));
+        assert!(!t.violated(2.5));
+    }
+}

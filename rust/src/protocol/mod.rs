@@ -1,0 +1,23 @@
+//! The paper's contribution: distributed online learning protocols
+//! `Pi = (A, sigma)` over kernel Hilbert spaces.
+//!
+//! * [`divergence`] — Eq. 1 model-configuration divergence in dual form.
+//! * [`local_condition`] — per-learner `||f - r||^2 <= Delta` monitoring,
+//!   maintained incrementally from [`crate::learner::UpdateEvent`]s.
+//! * [`sync`] — the synchronization operators: continuous `sigma_1`,
+//!   periodic `sigma_b`, dynamic `sigma_Delta` (with the §4 mini-batched
+//!   check), plus nosync and the serial oracle.
+//! * [`engine`] — the deterministic round-based protocol engine driving
+//!   m learners, used by experiments, benches and tests. The threaded
+//!   leader/worker runtime in [`crate::coordinator`] speaks the same
+//!   messages over real channels.
+
+pub mod divergence;
+pub mod engine;
+pub mod local_condition;
+pub mod sync;
+
+pub use divergence::configuration_divergence;
+pub use engine::{ProtocolEngine, RoundReport};
+pub use local_condition::ConditionTracker;
+pub use sync::{SyncDecision, SyncPolicy};

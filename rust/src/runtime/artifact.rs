@@ -1,0 +1,132 @@
+//! Artifact manifest: `artifacts/manifest.toml` describes every compiled
+//! entry point (function, shape variant, file, output arity). Parsed with
+//! the in-repo TOML parser.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::toml::{parse, Value};
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Entry-point function: predict / gram / norm_diff / divergence /
+    /// rff_predict.
+    pub fn_name: String,
+    /// Shape-variant label (e.g. "susy", "stock").
+    pub variant: String,
+    pub file: PathBuf,
+    pub m: usize,
+    pub tau: usize,
+    pub d: usize,
+    pub batch: usize,
+    pub rff_dim: usize,
+    pub outputs: usize,
+    pub sha256: String,
+}
+
+/// Parse `manifest.toml` in `dir`, returning specs with absolute paths.
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let path = dir.join("manifest.toml");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading manifest {}", path.display()))?;
+    let table = parse(&text).map_err(|e| anyhow!("{e}"))?;
+    let arts = table
+        .get("artifact")
+        .and_then(Value::as_table_array)
+        .ok_or_else(|| anyhow!("manifest has no [[artifact]] entries"))?;
+    let mut specs = Vec::with_capacity(arts.len());
+    for a in arts {
+        let get_s = |k: &str| {
+            a.get(k)
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("artifact missing key `{k}`"))
+        };
+        let get_i = |k: &str| {
+            a.get(k)
+                .and_then(Value::as_int)
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("artifact missing key `{k}`"))
+        };
+        let file = dir.join(get_s("file")?);
+        anyhow::ensure!(file.exists(), "artifact file missing: {}", file.display());
+        specs.push(ArtifactSpec {
+            name: get_s("name")?,
+            fn_name: get_s("fn")?,
+            variant: get_s("variant")?,
+            file,
+            m: get_i("m")?,
+            tau: get_i("tau")?,
+            d: get_i("d")?,
+            batch: get_i("batch")?,
+            rff_dim: get_i("rff_dim")?,
+            outputs: get_i("outputs")?,
+            sha256: get_s("sha256")?,
+        });
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("predict_t.hlo.txt"), "HloModule x\n").unwrap();
+        std::fs::write(
+            dir.join("manifest.toml"),
+            r#"
+[[artifact]]
+name = "predict_t"
+fn = "predict"
+variant = "t"
+file = "predict_t.hlo.txt"
+m = 2
+tau = 8
+d = 3
+batch = 4
+rff_dim = 16
+outputs = 1
+sha256 = "abc"
+"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("kdol_manifest_test");
+        write_fixture(&dir);
+        let specs = load_manifest(&dir).unwrap();
+        assert_eq!(specs.len(), 1);
+        let s = &specs[0];
+        assert_eq!(s.fn_name, "predict");
+        assert_eq!((s.m, s.tau, s.d, s.batch), (2, 8, 3, 4));
+        assert!(s.file.ends_with("predict_t.hlo.txt"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = std::env::temp_dir().join("kdol_manifest_test2");
+        write_fixture(&dir);
+        std::fs::remove_file(dir.join("predict_t.hlo.txt")).unwrap();
+        assert!(load_manifest(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn real_artifacts_manifest_parses_if_present() {
+        // When `make artifacts` has run, validate the real manifest.
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.toml").exists() {
+            let specs = load_manifest(dir).unwrap();
+            assert!(specs.iter().any(|s| s.fn_name == "predict"));
+            assert!(specs.iter().any(|s| s.fn_name == "divergence"));
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! The XLA execution client: one compiled PJRT executable per entry point
+//! of the selected shape variant, with typed call wrappers.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::artifact::{load_manifest, ArtifactSpec};
+
+/// A loaded, compiled entry point.
+struct Loaded {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU runtime over one shape variant's artifacts.
+pub struct XlaRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    entries: HashMap<String, Loaded>,
+    variant: String,
+}
+
+impl XlaRuntime {
+    /// Load and compile all artifacts of `variant` from `dir`.
+    pub fn load(dir: &Path, variant: &str) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let specs = load_manifest(dir)?;
+        let mut entries = HashMap::new();
+        for spec in specs.into_iter().filter(|s| s.variant == variant) {
+            let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
+            entries.insert(spec.fn_name.clone(), Loaded { spec, exe });
+        }
+        anyhow::ensure!(
+            !entries.is_empty(),
+            "no artifacts for variant `{variant}` in {}",
+            dir.display()
+        );
+        Ok(XlaRuntime {
+            client,
+            entries,
+            variant: variant.to_string(),
+        })
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    /// Spec of an entry point (shapes the caller must pad to).
+    pub fn spec(&self, fn_name: &str) -> Result<&ArtifactSpec> {
+        self.entries
+            .get(fn_name)
+            .map(|l| &l.spec)
+            .ok_or_else(|| anyhow!("entry point `{fn_name}` not loaded"))
+    }
+
+    fn call(&self, fn_name: &str, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let loaded = self
+            .entries
+            .get(fn_name)
+            .ok_or_else(|| anyhow!("entry point `{fn_name}` not loaded"))?;
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {fn_name}: {e:?}"))?;
+        result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {fn_name} result: {e:?}"))
+    }
+
+    /// `predict(sv[tau*d], alpha[tau], x[batch*d], gamma) -> y[batch]`.
+    pub fn predict(
+        &self,
+        svs: &[f32],
+        alphas: &[f32],
+        x: &[f32],
+        gamma: f32,
+    ) -> Result<Vec<f32>> {
+        let spec = self.spec("predict")?;
+        let (tau, d, b) = (spec.tau as i64, spec.d as i64, spec.batch as i64);
+        anyhow::ensure!(svs.len() == (tau * d) as usize, "svs shape");
+        anyhow::ensure!(alphas.len() == tau as usize, "alphas shape");
+        anyhow::ensure!(x.len() == (b * d) as usize, "x shape");
+        let args = [
+            xla::Literal::vec1(svs).reshape(&[tau, d])?,
+            xla::Literal::vec1(alphas),
+            xla::Literal::vec1(x).reshape(&[b, d])?,
+            xla::Literal::scalar(gamma),
+        ];
+        let out = self.call("predict", &args)?.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// `gram(a[tau*d], b[tau*d], gamma) -> K[tau*tau]` (row-major).
+    pub fn gram(&self, a: &[f32], b: &[f32], gamma: f32) -> Result<Vec<f32>> {
+        let spec = self.spec("gram")?;
+        let (tau, d) = (spec.tau as i64, spec.d as i64);
+        let args = [
+            xla::Literal::vec1(a).reshape(&[tau, d])?,
+            xla::Literal::vec1(b).reshape(&[tau, d])?,
+            xla::Literal::scalar(gamma),
+        ];
+        let out = self.call("gram", &args)?.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// `norm_diff(sv_f, alpha_f, sv_r, alpha_r, gamma) -> ||f - r||^2`.
+    pub fn norm_diff(
+        &self,
+        sv_f: &[f32],
+        alpha_f: &[f32],
+        sv_r: &[f32],
+        alpha_r: &[f32],
+        gamma: f32,
+    ) -> Result<f32> {
+        let spec = self.spec("norm_diff")?;
+        let (tau, d) = (spec.tau as i64, spec.d as i64);
+        let args = [
+            xla::Literal::vec1(sv_f).reshape(&[tau, d])?,
+            xla::Literal::vec1(alpha_f),
+            xla::Literal::vec1(sv_r).reshape(&[tau, d])?,
+            xla::Literal::vec1(alpha_r),
+            xla::Literal::scalar(gamma),
+        ];
+        let out = self.call("norm_diff", &args)?.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?[0])
+    }
+
+    /// `divergence(svs[m*tau*d], alphas[m*tau], gamma) -> (delta, dists[m])`.
+    pub fn divergence(
+        &self,
+        svs: &[f32],
+        alphas: &[f32],
+        gamma: f32,
+    ) -> Result<(f32, Vec<f32>)> {
+        let spec = self.spec("divergence")?;
+        let (m, tau, d) = (spec.m as i64, spec.tau as i64, spec.d as i64);
+        anyhow::ensure!(svs.len() == (m * tau * d) as usize, "svs shape");
+        anyhow::ensure!(alphas.len() == (m * tau) as usize, "alphas shape");
+        let args = [
+            xla::Literal::vec1(svs).reshape(&[m, tau, d])?,
+            xla::Literal::vec1(alphas).reshape(&[m, tau])?,
+            xla::Literal::scalar(gamma),
+        ];
+        let (delta, dists) = self.call("divergence", &args)?.to_tuple2()?;
+        Ok((delta.to_vec::<f32>()?[0], dists.to_vec::<f32>()?))
+    }
+
+    /// `rff_predict(wvec[D], x[batch*d], w[D*d], b[D]) -> y[batch]`.
+    pub fn rff_predict(
+        &self,
+        wvec: &[f32],
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+    ) -> Result<Vec<f32>> {
+        let spec = self.spec("rff_predict")?;
+        let (dd, d, batch) = (spec.rff_dim as i64, spec.d as i64, spec.batch as i64);
+        let args = [
+            xla::Literal::vec1(wvec),
+            xla::Literal::vec1(x).reshape(&[batch, d])?,
+            xla::Literal::vec1(w).reshape(&[dd, d])?,
+            xla::Literal::vec1(b),
+        ];
+        let out = self.call("rff_predict", &args)?.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Convenience: locate the default artifacts directory (env override
+    /// `KDOL_ARTIFACTS`, else `artifacts/` relative to the workspace).
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var("KDOL_ARTIFACTS")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+    }
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "XlaRuntime(variant={}, entries=[{}])",
+            self.variant,
+            self.entries
+                .keys()
+                .cloned()
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    }
+}
+
+// NOTE: correctness of every wrapper against the native kernel math is
+// pinned in rust/tests/integration_runtime.rs (requires `make artifacts`).

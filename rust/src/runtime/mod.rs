@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client —
+//! the compute path of the three-layer architecture. Python never runs
+//! here; the artifacts are self-contained.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+mod artifact;
+mod client;
+mod padding;
+
+pub use artifact::{load_manifest, ArtifactSpec};
+pub use client::XlaRuntime;
+pub use padding::{pad_expansion, pad_points};

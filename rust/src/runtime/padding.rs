@@ -1,0 +1,86 @@
+//! Padding between the dynamic-size native models and the fixed-shape AOT
+//! artifacts. Unused SV slots carry `alpha = 0`, which contributes exactly
+//! nothing to predictions, norms and divergences (pinned by the python
+//! test `test_predict_padding_is_exact`).
+
+use anyhow::{bail, Result};
+
+use crate::kernel::SvModel;
+
+/// Pad a support-vector expansion to `(tau, d)` f32 arrays.
+/// Returns `(svs[tau * d], alphas[tau])`.
+pub fn pad_expansion(model: &SvModel, tau: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+    if model.len() > tau {
+        bail!(
+            "model has {} support vectors, artifact budget is {tau}",
+            model.len()
+        );
+    }
+    let d = model.dim;
+    let mut svs = vec![0.0f32; tau * d];
+    let mut alphas = vec![0.0f32; tau];
+    for i in 0..model.len() {
+        for (j, &v) in model.sv(i).iter().enumerate() {
+            svs[i * d + j] = v as f32;
+        }
+        alphas[i] = model.alpha()[i] as f32;
+    }
+    Ok((svs, alphas))
+}
+
+/// Pad a batch of query points to `(batch, d)`; surplus rows are zeros
+/// (their outputs are ignored by the caller). Returns the flat array and
+/// the true row count.
+pub fn pad_points(points: &[Vec<f64>], batch: usize, d: usize) -> Result<(Vec<f32>, usize)> {
+    if points.len() > batch {
+        bail!(
+            "query batch {} exceeds artifact batch {batch}",
+            points.len()
+        );
+    }
+    let mut flat = vec![0.0f32; batch * d];
+    for (i, p) in points.iter().enumerate() {
+        if p.len() != d {
+            bail!("point {i} has dim {} != {d}", p.len());
+        }
+        for (j, &v) in p.iter().enumerate() {
+            flat[i * d + j] = v as f32;
+        }
+    }
+    Ok((flat, points.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Kernel;
+
+    #[test]
+    fn pads_with_zero_alpha() {
+        let mut m = SvModel::new(Kernel::Rbf { gamma: 1.0 }, 2);
+        m.push(1, &[1.0, 2.0], 0.5);
+        let (svs, alphas) = pad_expansion(&m, 3).unwrap();
+        assert_eq!(svs, vec![1.0, 2.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(alphas, vec![0.5, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn over_budget_rejected() {
+        let mut m = SvModel::new(Kernel::Rbf { gamma: 1.0 }, 1);
+        m.push(1, &[0.0], 1.0);
+        m.push(2, &[1.0], 1.0);
+        assert!(pad_expansion(&m, 1).is_err());
+    }
+
+    #[test]
+    fn pad_points_roundtrip() {
+        let (flat, n) = pad_points(&[vec![1.0, 2.0], vec![3.0, 4.0]], 4, 2).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(flat.len(), 8);
+        assert_eq!(&flat[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&flat[4..], &[0.0; 4]);
+        assert!(pad_points(&[vec![1.0]], 4, 2).is_err()); // dim mismatch
+        let too_many: Vec<Vec<f64>> = (0..5).map(|_| vec![1.0, 2.0]).collect();
+        assert!(pad_points(&too_many, 4, 2).is_err()); // too many
+    }
+}

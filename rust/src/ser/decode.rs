@@ -1,0 +1,140 @@
+//! Decoding half of the wire format: a bounds-checked cursor over a byte
+//! slice. All failures are explicit errors — a malformed message from a
+//! peer must never panic the coordinator.
+
+use thiserror::Error;
+
+/// Wire-format decoding failure.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum DecodeError {
+    #[error("unexpected end of message (needed {needed} more bytes)")]
+    Eof { needed: usize },
+    #[error("trailing garbage: {remaining} unconsumed bytes")]
+    Trailing { remaining: usize },
+    #[error("length prefix exceeds message size")]
+    LengthOverflow,
+    #[error("invalid utf-8 in string field")]
+    InvalidUtf8,
+    #[error("invalid enum tag {0}")]
+    BadTag(u8),
+}
+
+/// Bounds-checked reading cursor.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Guard against hostile length prefixes: a collection of `n` elements
+    /// needs at least `n` bytes still in the buffer (every element encodes
+    /// to >= 1 byte), so huge prefixes fail fast instead of OOM-ing.
+    pub fn check_capacity(&self, n: usize) -> Result<(), DecodeError> {
+        if n > self.remaining() {
+            Err(DecodeError::LengthOverflow)
+        } else {
+            Ok(())
+        }
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.remaining() < n {
+            return Err(DecodeError::Eof {
+                needed: n - self.remaining(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    #[inline]
+    pub fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    #[inline]
+    pub fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn f32(&mut self) -> Result<f32, DecodeError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn f64(&mut self) -> Result<f64, DecodeError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Bulk-decode `n` f32 values.
+    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, DecodeError> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Bulk-decode `n` f64 values.
+    pub fn f64_vec(&mut self, n: usize) -> Result<Vec<f64>, DecodeError> {
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Require that the whole message was consumed.
+    pub fn finish(&self) -> Result<(), DecodeError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(DecodeError::Trailing {
+                remaining: self.remaining(),
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eof_reports_shortfall() {
+        let mut r = Reader::new(&[1, 2]);
+        assert_eq!(r.u64().unwrap_err(), DecodeError::Eof { needed: 6 });
+    }
+
+    #[test]
+    fn bulk_roundtrip() {
+        let mut w = crate::ser::Writer::new();
+        w.f64_slice(&[1.0, -2.5, 3.25]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.f64_vec(3).unwrap(), vec![1.0, -2.5, 3.25]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn capacity_guard() {
+        let r = Reader::new(&[0; 8]);
+        assert!(r.check_capacity(9).is_err());
+        assert!(r.check_capacity(8).is_ok());
+    }
+}

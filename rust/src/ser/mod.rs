@@ -1,0 +1,236 @@
+//! Binary wire format with byte-exact size accounting.
+//!
+//! The paper's communication measure `C(T, m)` counts the *bytes* the
+//! protocol moves (`B_α` per coefficient, `B_x ∈ O(d)` per support vector).
+//! Instead of estimating, every protocol message in KDOL is actually
+//! serialized through this module and its encoded length is what the
+//! accounting layer records — so measured communication is the ground
+//! truth, not a model.
+//!
+//! Format: little-endian, length-prefixed, no self-description (both ends
+//! share the schema — this is an internal cluster protocol, not an
+//! interchange format).
+
+mod decode;
+mod encode;
+
+pub use decode::{DecodeError, Reader};
+pub use encode::Writer;
+
+/// Types that know how to encode themselves into the wire format.
+pub trait Encode {
+    fn encode(&self, w: &mut Writer);
+
+    /// Exact number of bytes `encode` will produce; the default encodes to
+    /// a scratch buffer, concrete types override with O(1) arithmetic where
+    /// it matters.
+    fn encoded_len(&self) -> usize {
+        let mut w = Writer::new();
+        self.encode(&mut w);
+        w.len()
+    }
+}
+
+/// Types that can decode themselves from the wire format.
+pub trait Decode: Sized {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError>;
+}
+
+/// Encode a value into a fresh byte vector.
+pub fn to_bytes<T: Encode>(v: &T) -> Vec<u8> {
+    let mut w = Writer::new();
+    v.encode(&mut w);
+    w.into_bytes()
+}
+
+/// Decode a value from a byte slice, requiring full consumption.
+pub fn from_bytes<T: Decode>(bytes: &[u8]) -> Result<T, DecodeError> {
+    let mut r = Reader::new(bytes);
+    let v = T::decode(&mut r)?;
+    r.finish()?;
+    Ok(v)
+}
+
+// --- blanket impls for primitives & containers -----------------------------
+
+impl Encode for u8 {
+    fn encode(&self, w: &mut Writer) {
+        w.u8(*self);
+    }
+    fn encoded_len(&self) -> usize {
+        1
+    }
+}
+
+impl Decode for u8 {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        r.u8()
+    }
+}
+
+impl Encode for u32 {
+    fn encode(&self, w: &mut Writer) {
+        w.u32(*self);
+    }
+    fn encoded_len(&self) -> usize {
+        4
+    }
+}
+
+impl Decode for u32 {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        r.u32()
+    }
+}
+
+impl Encode for u64 {
+    fn encode(&self, w: &mut Writer) {
+        w.u64(*self);
+    }
+    fn encoded_len(&self) -> usize {
+        8
+    }
+}
+
+impl Decode for u64 {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        r.u64()
+    }
+}
+
+impl Encode for f32 {
+    fn encode(&self, w: &mut Writer) {
+        w.f32(*self);
+    }
+    fn encoded_len(&self) -> usize {
+        4
+    }
+}
+
+impl Decode for f32 {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        r.f32()
+    }
+}
+
+impl Encode for f64 {
+    fn encode(&self, w: &mut Writer) {
+        w.f64(*self);
+    }
+    fn encoded_len(&self) -> usize {
+        8
+    }
+}
+
+impl Decode for f64 {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        r.f64()
+    }
+}
+
+impl Encode for bool {
+    fn encode(&self, w: &mut Writer) {
+        w.u8(*self as u8);
+    }
+    fn encoded_len(&self) -> usize {
+        1
+    }
+}
+
+impl Decode for bool {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        Ok(r.u8()? != 0)
+    }
+}
+
+impl<T: Encode> Encode for Vec<T> {
+    fn encode(&self, w: &mut Writer) {
+        w.u32(self.len() as u32);
+        for v in self {
+            v.encode(w);
+        }
+    }
+    fn encoded_len(&self) -> usize {
+        4 + self.iter().map(Encode::encoded_len).sum::<usize>()
+    }
+}
+
+impl<T: Decode> Decode for Vec<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        let n = r.u32()? as usize;
+        r.check_capacity(n)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(T::decode(r)?);
+        }
+        Ok(out)
+    }
+}
+
+impl Encode for String {
+    fn encode(&self, w: &mut Writer) {
+        w.u32(self.len() as u32);
+        w.bytes(self.as_bytes());
+    }
+    fn encoded_len(&self) -> usize {
+        4 + self.len()
+    }
+}
+
+impl Decode for String {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, DecodeError> {
+        let n = r.u32()? as usize;
+        let bytes = r.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| DecodeError::InvalidUtf8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_primitives() {
+        assert_eq!(from_bytes::<u64>(&to_bytes(&42u64)).unwrap(), 42);
+        assert_eq!(from_bytes::<f64>(&to_bytes(&1.5f64)).unwrap(), 1.5);
+        assert_eq!(from_bytes::<f32>(&to_bytes(&-0.25f32)).unwrap(), -0.25);
+        assert!(from_bytes::<bool>(&to_bytes(&true)).unwrap());
+    }
+
+    #[test]
+    fn roundtrip_vec_and_string() {
+        let v = vec![1.0f64, -2.0, 3.5];
+        assert_eq!(from_bytes::<Vec<f64>>(&to_bytes(&v)).unwrap(), v);
+        let s = "kdol".to_string();
+        assert_eq!(from_bytes::<String>(&to_bytes(&s)).unwrap(), s);
+    }
+
+    #[test]
+    fn encoded_len_matches_actual() {
+        let v = vec![1.0f64; 17];
+        assert_eq!(v.encoded_len(), to_bytes(&v).len());
+        let s = "hello world".to_string();
+        assert_eq!(s.encoded_len(), to_bytes(&s).len());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = to_bytes(&7u32);
+        bytes.push(0);
+        assert!(from_bytes::<u32>(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let bytes = to_bytes(&vec![1.0f64; 4]);
+        assert!(from_bytes::<Vec<f64>>(&bytes[..bytes.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn hostile_length_prefix_rejected() {
+        // Claims 2^31 elements but provides none — must not OOM.
+        let mut w = Writer::new();
+        w.u32(u32::MAX);
+        assert!(from_bytes::<Vec<f64>>(&w.into_bytes()).is_err());
+    }
+}

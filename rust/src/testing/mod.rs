@@ -1,0 +1,90 @@
+//! Property-testing harness (offline replacement for `proptest`):
+//! seeded generators + a driver that runs a property over many random
+//! cases and reports the failing seed for deterministic reproduction.
+
+use crate::util::{Pcg64, Rng};
+
+/// Number of cases per property (overridable via `KDOL_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("KDOL_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` seeded RNGs; panics with the failing seed.
+pub fn check<F: FnMut(&mut Pcg64)>(name: &str, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case as u64;
+        let mut rng = Pcg64::seeded(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Generators for common test inputs.
+pub mod gen {
+    use super::*;
+
+    /// Random vector with entries ~ N(0, scale^2).
+    pub fn vector(rng: &mut Pcg64, dim: usize, scale: f64) -> Vec<f64> {
+        (0..dim).map(|_| scale * rng.normal()).collect()
+    }
+
+    /// Random SvModel with n SVs in dim dims.
+    pub fn sv_model(
+        rng: &mut Pcg64,
+        kernel: crate::kernel::Kernel,
+        n: usize,
+        dim: usize,
+        id_base: u64,
+    ) -> crate::kernel::SvModel {
+        let mut m = crate::kernel::SvModel::new(kernel, dim);
+        for i in 0..n {
+            let x = vector(rng, dim, 1.0);
+            m.push(id_base + i as u64, &x, rng.normal());
+        }
+        m
+    }
+
+    /// Uniform integer in [lo, hi].
+    pub fn int(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo + 1) as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check("counter", 10, |_| count += 1);
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failure() {
+        check("fails", 5, |rng| {
+            assert!(rng.f64() < 0.0, "always fails");
+        });
+    }
+
+    #[test]
+    fn generators_have_right_shapes() {
+        let mut rng = Pcg64::seeded(1);
+        assert_eq!(gen::vector(&mut rng, 7, 1.0).len(), 7);
+        let m = gen::sv_model(&mut rng, crate::kernel::Kernel::Linear, 5, 3, 100);
+        assert_eq!(m.len(), 5);
+        assert_eq!(m.dim, 3);
+        for _ in 0..100 {
+            let v = gen::int(&mut rng, 2, 4);
+            assert!((2..=4).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Small floating-point helpers shared across modules.
+
+/// Approximate equality with both absolute and relative tolerance —
+/// mirrors `numpy.allclose` semantics so Rust-side oracles agree with the
+/// python tests.
+#[inline]
+pub fn approx_eq(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs()
+}
+
+/// Allclose over slices.
+pub fn allclose(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(&x, &y)| approx_eq(x, y, rtol, atol))
+}
+
+/// Maximum absolute difference between two slices (inf if length mismatch).
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    if a.len() != b.len() {
+        return f64::INFINITY;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Mean of a slice (0 for empty).
+#[inline]
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population variance of a slice.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// p-quantile (nearest-rank on a sorted copy); p in [0, 1].
+pub fn quantile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((s.len() as f64 - 1.0) * p).round() as usize;
+    s[idx.min(s.len() - 1)]
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x - y;
+            d * d
+        })
+        .sum()
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn sq_norm(a: &[f64]) -> f64 {
+    a.iter().map(|&x| x * x).sum()
+}
+
+/// `y += c * x` (axpy).
+#[inline]
+pub fn axpy(c: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += c * xi;
+    }
+}
+
+/// `y *= c` in place.
+#[inline]
+pub fn scale(c: f64, y: &mut [f64]) {
+    for yi in y.iter_mut() {
+        *yi *= c;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_basic() {
+        assert!(approx_eq(1.0, 1.0 + 1e-9, 1e-6, 0.0));
+        assert!(!approx_eq(1.0, 1.1, 1e-6, 1e-6));
+        assert!(approx_eq(0.0, 1e-9, 0.0, 1e-8));
+    }
+
+    #[test]
+    fn stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+    }
+
+    #[test]
+    fn linalg() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        assert_eq!(sq_dist(&a, &b), 27.0);
+        assert_eq!(sq_norm(&a), 14.0);
+        let mut y = [1.0, 1.0, 1.0];
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, [1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn max_diff_mismatched_lengths() {
+        assert!(max_abs_diff(&[1.0], &[1.0, 2.0]).is_infinite());
+    }
+}

@@ -1,0 +1,77 @@
+//! Minimal `log` backend (offline replacement for `env_logger`):
+//! timestamped, level-filtered stderr logging, configured via
+//! `KDOL_LOG={error,warn,info,debug,trace}`.
+
+use std::sync::Once;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+static INIT: Once = Once::new();
+static mut START: Option<Instant> = None;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!(
+            "[{:>8.3}s {} {}] {}",
+            t.as_secs_f64(),
+            lvl,
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; later calls are no-ops. Level from `KDOL_LOG`
+/// (default `warn` so tests stay quiet).
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("KDOL_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("info") => LevelFilter::Info,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Warn,
+        };
+        let logger = Box::leak(Box::new(StderrLogger {
+            start: Instant::now(),
+        }));
+        let _ = log::set_logger(logger);
+        log::set_max_level(level);
+        unsafe {
+            START = Some(logger.start);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke");
+    }
+}

@@ -1,0 +1,10 @@
+//! General-purpose substrate utilities built from scratch (the build is
+//! fully offline; `rand`, `env_logger` etc. are not available).
+
+pub mod float;
+pub mod logging;
+pub mod rng;
+pub mod timer;
+
+pub use rng::{Pcg64, Rng};
+pub use timer::Stopwatch;

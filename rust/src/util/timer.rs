@@ -1,0 +1,84 @@
+//! Simple wall-clock stopwatch used by the bench harness and experiments.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch: can be started/stopped repeatedly.
+#[derive(Debug)]
+pub struct Stopwatch {
+    acc: Duration,
+    since: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch {
+            acc: Duration::ZERO,
+            since: None,
+        }
+    }
+
+    /// A stopwatch that is already running.
+    pub fn started() -> Self {
+        let mut s = Self::new();
+        s.start();
+        s
+    }
+
+    pub fn start(&mut self) {
+        if self.since.is_none() {
+            self.since = Some(Instant::now());
+        }
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(s) = self.since.take() {
+            self.acc += s.elapsed();
+        }
+    }
+
+    /// Total accumulated time (including a currently running span).
+    pub fn elapsed(&self) -> Duration {
+        self.acc + self.since.map(|s| s.elapsed()).unwrap_or(Duration::ZERO)
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.acc = Duration::ZERO;
+        self.since = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        let a = sw.elapsed();
+        assert!(a >= Duration::from_millis(4));
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.elapsed() > a);
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut sw = Stopwatch::new();
+        sw.stop();
+        assert_eq!(sw.elapsed(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,115 @@
+//! End-to-end experiment shape tests: small-scale versions of every
+//! figure/table in DESIGN.md §4 must exhibit the paper's qualitative
+//! structure (who wins, what grows, what saturates).
+
+use kdol::experiments::{fig1, fig2, headline, sweeps};
+use kdol::metrics::Outcome;
+
+fn find<'a>(outcomes: &'a [Outcome], pat: &str) -> &'a Outcome {
+    outcomes
+        .iter()
+        .find(|o| o.name.contains(pat))
+        .unwrap_or_else(|| panic!("no outcome matching `{pat}`"))
+}
+
+/// Error accumulated in the second half of the run — isolates converged
+/// behaviour from the (shared) early transient.
+fn tail_error(o: &Outcome) -> f64 {
+    let half = o.rounds / 2;
+    let at_half = o
+        .series
+        .iter()
+        .take_while(|s| s.round <= half)
+        .last()
+        .map(|s| s.cum_error)
+        .unwrap_or(0.0);
+    o.cumulative_error - at_half
+}
+
+#[test]
+fn fig1_shape() {
+    let outcomes = fig1::run(&[0.2], 50, 0.3).unwrap();
+    let lin_ns = find(&outcomes, "linear-nosync");
+    let lin_c = find(&outcomes, "linear-continuous");
+    let ker_c = find(&outcomes, "kernel-continuous");
+    let ker_d = find(&outcomes, "fig1-kernel-dynamic");
+    let ker_t = find(&outcomes, "trunc50");
+
+    // Linear suffers much more error than kernel once past the transient
+    // (the hypothesis-class gap Fig 1 is about).
+    assert!(
+        tail_error(lin_c) > 1.3 * tail_error(ker_c),
+        "tail: linear {} vs kernel {}",
+        tail_error(lin_c),
+        tail_error(ker_c)
+    );
+    // Continuous kernel sync is the most expensive system by far.
+    assert!(ker_c.comm.total_bytes() > 3 * lin_c.comm.total_bytes());
+    // Dynamic slashes kernel communication.
+    assert!(ker_d.comm.total_bytes() < ker_c.comm.total_bytes() / 2);
+    // Compression reduces communication further (or at least not worse).
+    assert!(ker_t.comm.total_bytes() <= ker_d.comm.total_bytes());
+    // Isolated linear learners communicate nothing.
+    assert_eq!(lin_ns.comm.total_bytes(), 0);
+}
+
+#[test]
+fn fig2_shape() {
+    let outcomes = fig2::run(&[1], &[0.5], 0.04).unwrap();
+    let lin = find(&outcomes, "linear-periodic(b=1)");
+    let ker_p = find(&outcomes, "kernel-periodic(b=1)");
+    let ker_d = find(&outcomes, "fig2-kernel-dynamic");
+    // Kernel fits the nonlinear stock target better.
+    assert!(ker_p.cumulative_error < lin.cumulative_error);
+    // Periodic kernel sync with m=32 moves far more bytes than dynamic.
+    assert!(ker_d.comm.total_bytes() < ker_p.comm.total_bytes());
+}
+
+#[test]
+fn headline_directions() {
+    let h = headline::run(headline::DEFAULT_DELTA, 0.1).unwrap();
+    assert!(h.error_reduction > 1.0, "error reduction {}", h.error_reduction);
+    assert!(
+        h.comm_reduction_vs_continuous > 2.0,
+        "comm reduction {}",
+        h.comm_reduction_vs_continuous
+    );
+}
+
+#[test]
+fn delta_sweep_is_monotone_in_comm() {
+    let outs = sweeps::sweep_delta(&[0.01, 0.3, 3.0], 0.08).unwrap();
+    let bytes: Vec<u64> = outs.iter().map(|o| o.comm.total_bytes()).collect();
+    assert!(
+        bytes[0] >= bytes[1] && bytes[1] >= bytes[2],
+        "comm not monotone in Delta: {bytes:?}"
+    );
+}
+
+#[test]
+fn tau_sweep_controls_model_and_bytes() {
+    let outs = sweeps::sweep_tau(&[8, 64], 0.2, 0.08).unwrap();
+    assert!(outs[0].mean_svs <= 8.0 + 1e-9);
+    assert!(outs[1].mean_svs <= 64.0 + 1e-9);
+    // Smaller budget, smaller sync messages (when any syncs happened).
+    if outs[0].comm.syncs > 0 && outs[1].comm.syncs > 0 {
+        let per0 = outs[0].comm.total_bytes() as f64 / outs[0].comm.syncs as f64;
+        let per1 = outs[1].comm.total_bytes() as f64 / outs[1].comm.syncs as f64;
+        assert!(per0 <= per1 * 1.2, "per-sync bytes {per0} vs {per1}");
+    }
+}
+
+#[test]
+fn check_period_trades_peak_for_latency() {
+    let outs = sweeps::sweep_check_period(&[1, 16], 0.02, 0.08).unwrap();
+    // Fewer check rounds => at most as many syncs.
+    assert!(outs[1].comm.syncs <= outs[0].comm.syncs);
+}
+
+#[test]
+fn compression_schemes_both_bound_models() {
+    let outs = sweeps::sweep_compression(16, 0.2, 0.08).unwrap();
+    for o in &outs {
+        assert!(o.mean_svs <= 16.0 + 1e-9, "{}: {}", o.name, o.mean_svs);
+    }
+}

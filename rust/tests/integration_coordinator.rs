@@ -1,0 +1,77 @@
+//! Integration tests of the threaded leader/worker cluster runtime: the
+//! deployable topology must reproduce the engine's qualitative behaviour
+//! over real (serialized, channel-crossing) messages.
+
+use kdol::config::{ExperimentConfig, KernelConfig, ProtocolConfig};
+use kdol::coordinator::run_cluster;
+
+fn cfg(protocol: ProtocolConfig) -> ExperimentConfig {
+    let mut c = ExperimentConfig::quickstart();
+    c.learners = 3;
+    c.rounds = 60;
+    c.protocol = protocol;
+    c.name = format!("cluster-{}", protocol.label());
+    c
+}
+
+#[test]
+fn cluster_runs_periodic_kernel() {
+    let out = run_cluster(&cfg(ProtocolConfig::Periodic { period: 10 })).unwrap();
+    assert!(out.cum_loss > 0.0);
+    assert!(out.comm.total_bytes() > 0);
+    assert!(out.comm.syncs >= 5, "syncs {}", out.comm.syncs);
+    assert!(out.final_model.is_some());
+}
+
+#[test]
+fn cluster_runs_dynamic_kernel() {
+    let out = run_cluster(&cfg(ProtocolConfig::Dynamic {
+        delta: 0.2,
+        check_period: 1,
+    }))
+    .unwrap();
+    // Dynamic: some violations should have occurred on this task, and the
+    // cluster must shut down cleanly either way.
+    assert!(out.cum_loss > 0.0);
+    if out.comm.syncs > 0 {
+        assert!(out.comm.total_bytes() > 0);
+        assert!(out.final_model.is_some());
+    }
+}
+
+#[test]
+fn cluster_runs_linear_models() {
+    let mut c = cfg(ProtocolConfig::Periodic { period: 5 });
+    c.learner.kernel = KernelConfig::Linear;
+    c.learner.compression = kdol::config::CompressionConfig::None;
+    let out = run_cluster(&c).unwrap();
+    assert!(out.comm.syncs >= 10);
+    assert!(out.final_model.unwrap().as_linear().is_some());
+}
+
+#[test]
+fn cluster_nosync_exchanges_only_done_messages() {
+    let out = run_cluster(&cfg(ProtocolConfig::NoSync)).unwrap();
+    assert_eq!(out.comm.syncs, 0);
+    // Only the m Done messages cross the wire.
+    assert_eq!(out.comm.up_msgs, 3);
+    assert_eq!(out.comm.down_msgs, 0);
+}
+
+#[test]
+fn cluster_loss_comparable_to_engine() {
+    // Thread interleaving changes sync timing for dynamic protocols, but a
+    // scheduled (periodic) cluster must match the engine's cumulative loss
+    // closely: same streams, same update rule, same sync schedule.
+    let c = cfg(ProtocolConfig::Periodic { period: 10 });
+    let cluster = run_cluster(&c).unwrap();
+    let engine = kdol::experiments::run_experiment(&c).unwrap();
+    let rel = (cluster.cum_loss - engine.cumulative_loss).abs()
+        / engine.cumulative_loss.max(1e-9);
+    assert!(
+        rel < 0.35,
+        "cluster loss {} vs engine {} (rel {rel})",
+        cluster.cum_loss,
+        engine.cumulative_loss
+    );
+}

@@ -1,0 +1,203 @@
+//! Integration tests over the protocol engine: cross-protocol invariants
+//! on identical input streams, and the qualitative claims of the paper's
+//! figures at reduced scale.
+
+use kdol::config::{CompressionConfig, ExperimentConfig, KernelConfig, ProtocolConfig};
+use kdol::experiments::{run_experiment, run_serial};
+use kdol::protocol::ProtocolEngine;
+
+fn base() -> ExperimentConfig {
+    let mut c = ExperimentConfig::fig1_kernel(ProtocolConfig::Continuous);
+    c.learners = 4;
+    c.rounds = 150;
+    c
+}
+
+fn with_protocol(p: ProtocolConfig) -> ExperimentConfig {
+    let mut c = base();
+    c.protocol = p;
+    c.name = format!("it-{}", p.label());
+    c
+}
+
+#[test]
+fn identical_streams_across_protocols() {
+    // Same seed => byte-identical inputs => nosync cumulative loss is a
+    // pure function of the seed. Run twice to pin determinism end-to-end.
+    let a = run_experiment(&with_protocol(ProtocolConfig::NoSync)).unwrap();
+    let b = run_experiment(&with_protocol(ProtocolConfig::NoSync)).unwrap();
+    assert_eq!(a.cumulative_loss, b.cumulative_loss);
+    assert_eq!(a.cumulative_error, b.cumulative_error);
+}
+
+#[test]
+fn communication_ordering_continuous_periodic_dynamic_nosync() {
+    let cont = run_experiment(&with_protocol(ProtocolConfig::Continuous)).unwrap();
+    let peri = run_experiment(&with_protocol(ProtocolConfig::Periodic { period: 10 })).unwrap();
+    let dyna = run_experiment(&with_protocol(ProtocolConfig::Dynamic {
+        delta: 0.5,
+        check_period: 1,
+    }))
+    .unwrap();
+    let none = run_experiment(&with_protocol(ProtocolConfig::NoSync)).unwrap();
+    assert!(cont.comm.total_bytes() > peri.comm.total_bytes());
+    assert!(peri.comm.total_bytes() > 0);
+    assert!(dyna.comm.total_bytes() < cont.comm.total_bytes());
+    assert_eq!(none.comm.total_bytes(), 0);
+}
+
+#[test]
+fn synchronization_helps_accuracy() {
+    // Averaging m learners' models should beat isolated learners on this
+    // kernel-friendly task (the premise of distributed learning).
+    let cont = run_experiment(&with_protocol(ProtocolConfig::Continuous)).unwrap();
+    let none = run_experiment(&with_protocol(ProtocolConfig::NoSync)).unwrap();
+    assert!(
+        cont.cumulative_error <= none.cumulative_error * 1.10,
+        "continuous {} vs isolated {}",
+        cont.cumulative_error,
+        none.cumulative_error
+    );
+}
+
+#[test]
+fn dynamic_interpolates_loss_between_extremes() {
+    let cont = run_experiment(&with_protocol(ProtocolConfig::Continuous)).unwrap();
+    let dyna = run_experiment(&with_protocol(ProtocolConfig::Dynamic {
+        delta: 0.2,
+        check_period: 1,
+    }))
+    .unwrap();
+    // Dynamic must not be wildly worse than continuous on loss...
+    assert!(dyna.cumulative_loss < 2.0 * cont.cumulative_loss + 20.0);
+    // ...while communicating less (the margin is modest at this horizon:
+    // the early transient keeps local conditions firing — see fig1/fig2
+    // shape tests for the post-transient factors).
+    assert!(
+        dyna.comm.total_bytes() < cont.comm.total_bytes() * 4 / 5,
+        "dynamic {} vs continuous {}",
+        dyna.comm.total_bytes(),
+        cont.comm.total_bytes()
+    );
+}
+
+#[test]
+fn tighter_threshold_means_more_communication() {
+    let tight = run_experiment(&with_protocol(ProtocolConfig::Dynamic {
+        delta: 0.01,
+        check_period: 1,
+    }))
+    .unwrap();
+    let loose = run_experiment(&with_protocol(ProtocolConfig::Dynamic {
+        delta: 1.0,
+        check_period: 1,
+    }))
+    .unwrap();
+    assert!(tight.comm.syncs >= loose.comm.syncs);
+    assert!(tight.comm.total_bytes() >= loose.comm.total_bytes());
+}
+
+#[test]
+fn check_period_bounds_sync_rate() {
+    // With checks every b rounds, syncs <= rounds / b (the §4 peak bound).
+    let b = 8usize;
+    let o = run_experiment(&with_protocol(ProtocolConfig::Dynamic {
+        delta: 0.001, // essentially always violated
+        check_period: b,
+    }))
+    .unwrap();
+    assert!(
+        o.comm.syncs <= (o.rounds / b as u64) + 1,
+        "syncs {} exceed rounds/b {}",
+        o.comm.syncs,
+        o.rounds / b as u64
+    );
+}
+
+#[test]
+fn compression_caps_message_growth() {
+    let mut uncomp = with_protocol(ProtocolConfig::Continuous);
+    uncomp.rounds = 120;
+    let mut comp = uncomp.clone();
+    comp.learner.compression = CompressionConfig::Truncation { tau: 20 };
+    comp.name = "it-compressed".into();
+    let o_un = run_experiment(&uncomp).unwrap();
+    let o_c = run_experiment(&comp).unwrap();
+    // Bounded models => strictly less communication than unbounded ones.
+    assert!(o_c.comm.total_bytes() < o_un.comm.total_bytes());
+    assert!(o_c.mean_svs <= 20.0 + 1e-9);
+}
+
+#[test]
+fn serial_oracle_and_consistency_direction() {
+    let cfg = with_protocol(ProtocolConfig::Continuous);
+    let serial = run_serial(&cfg);
+    let cont = run_experiment(&cfg).unwrap();
+    // Finite-sample consistency: distributed loss within a constant factor
+    // of serial loss on the same mT examples.
+    let ratio = cont.cumulative_loss / serial.cumulative_loss.max(1e-9);
+    assert!(ratio < 4.0, "consistency ratio {ratio}");
+}
+
+#[test]
+fn linear_protocol_stack_works_end_to_end() {
+    let mut cfg = with_protocol(ProtocolConfig::Dynamic {
+        delta: 0.05,
+        check_period: 1,
+    });
+    cfg.learner.kernel = KernelConfig::Linear;
+    cfg.learner.compression = CompressionConfig::None;
+    cfg.learner.eta = 0.05;
+    let o = run_experiment(&cfg).unwrap();
+    assert!(o.cumulative_loss > 0.0);
+    // Linear messages are fixed-size: bytes/sync bounded by
+    // m * (upload + download) with d = 18 floats (+ violations/requests).
+    if o.comm.syncs > 0 {
+        let per_sync = o.comm.total_bytes() as f64 / o.comm.syncs as f64;
+        let d_bytes = 18 * 4;
+        let upper = (cfg.learners * (2 * d_bytes + 64)) as f64 + 64.0;
+        assert!(per_sync <= upper, "per-sync {per_sync} > {upper}");
+    }
+}
+
+#[test]
+fn engine_records_divergence_when_asked() {
+    let mut e =
+        ProtocolEngine::new(with_protocol(ProtocolConfig::Periodic { period: 25 })).unwrap();
+    e.record_divergence = true;
+    for _ in 0..100 {
+        e.step();
+    }
+    assert_eq!(e.sync_divergences.len(), 4);
+    for (_, d) in &e.sync_divergences {
+        assert!(*d >= 0.0);
+    }
+}
+
+#[test]
+fn quiescence_on_learnable_stationary_task() {
+    // On a margin-separable task with lambda = 0 (no perpetual decay
+    // drift) the learners eventually suffer zero hinge loss, updates stop,
+    // and the dynamic protocol goes quiescent — the paper's central
+    // behavioural claim (communication vanishes as loss approaches zero).
+    let mut cfg = with_protocol(ProtocolConfig::Dynamic {
+        delta: 0.8,
+        check_period: 1,
+    });
+    cfg.data = kdol::config::DataConfig::Mixture {
+        dim: 2,
+        separation: 4.0,
+    };
+    cfg.learners = 3;
+    cfg.rounds = 700;
+    cfg.learner.lambda = 0.0;
+    cfg.learner.eta = 0.5;
+    cfg.learner.kernel = kdol::config::KernelConfig::Rbf { gamma: 0.5 };
+    let o = run_experiment(&cfg).unwrap();
+    match o.quiescent_since() {
+        None => {} // never needed to sync at all: quiescent from the start
+        Some(last) => assert!(last < 600, "still syncing at round {last} of {}", o.rounds),
+    }
+    // And communication indeed stopped: quiescent for >= 100 rounds.
+    assert!(o.comm.quiescent_rounds(o.rounds) >= 100);
+}

@@ -1,0 +1,171 @@
+//! PJRT runtime integration: every XLA artifact must agree with the
+//! native RKHS math on the same padded inputs. Requires `make artifacts`;
+//! every test is skipped (with a loud message) when artifacts are absent
+//! so `cargo test` works on a fresh checkout.
+
+use kdol::kernel::{Kernel, SvModel};
+use kdol::protocol::divergence::kernel_divergence;
+use kdol::runtime::{pad_expansion, XlaRuntime};
+use kdol::util::{Pcg64, Rng};
+
+fn runtime() -> Option<XlaRuntime> {
+    let dir = XlaRuntime::default_dir();
+    if !dir.join("manifest.toml").exists() {
+        eprintln!("SKIP: no artifacts in {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(XlaRuntime::load(&dir, "susy").expect("artifacts load"))
+}
+
+static NEXT_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+/// Random expansion with globally unique SV ids (the system invariant —
+/// ids are minted per learner via `make_sv_id`; reusing them across models
+/// would make the id-merging average incorrect).
+fn random_model(rng: &mut Pcg64, n: usize, d: usize, gamma: f64) -> SvModel {
+    let mut m = SvModel::new(Kernel::Rbf { gamma }, d);
+    for _ in 0..n {
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let id = NEXT_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        m.push(id, &x, rng.normal());
+    }
+    m
+}
+
+#[test]
+fn xla_predict_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.spec("predict").unwrap().clone();
+    let gamma = 0.25f64;
+    let mut rng = Pcg64::seeded(11);
+    for n in [0, 1, spec.tau / 2, spec.tau] {
+        let model = random_model(&mut rng, n, spec.d, gamma);
+        let (svs, alphas) = pad_expansion(&model, spec.tau).unwrap();
+        let queries: Vec<Vec<f64>> = (0..spec.batch)
+            .map(|_| (0..spec.d).map(|_| rng.normal()).collect())
+            .collect();
+        let mut flat = Vec::new();
+        for q in &queries {
+            flat.extend(q.iter().map(|&v| v as f32));
+        }
+        let got = rt.predict(&svs, &alphas, &flat, gamma as f32).unwrap();
+        for (q, g) in queries.iter().zip(&got) {
+            let want = model.predict(q);
+            assert!(
+                (want - *g as f64).abs() < 1e-3,
+                "n={n}: native {want} vs xla {g}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_gram_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.spec("gram").unwrap().clone();
+    let gamma = 0.4f64;
+    let mut rng = Pcg64::seeded(12);
+    let a = random_model(&mut rng, spec.tau, spec.d, gamma);
+    let b = random_model(&mut rng, spec.tau, spec.d, gamma);
+    let (fa, _) = pad_expansion(&a, spec.tau).unwrap();
+    let (fb, _) = pad_expansion(&b, spec.tau).unwrap();
+    let k = rt.gram(&fa, &fb, gamma as f32).unwrap();
+    let kern = Kernel::Rbf { gamma };
+    for i in 0..spec.tau {
+        for j in 0..spec.tau {
+            let want = kern.eval(a.sv(i), b.sv(j));
+            let got = k[i * spec.tau + j] as f64;
+            assert!(
+                (want - got).abs() < 1e-4,
+                "K[{i},{j}]: native {want} vs xla {got}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_norm_diff_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.spec("norm_diff").unwrap().clone();
+    let gamma = 0.3f64;
+    let mut rng = Pcg64::seeded(13);
+    let f = random_model(&mut rng, spec.tau / 2, spec.d, gamma);
+    let r = random_model(&mut rng, spec.tau / 3, spec.d, gamma);
+    let (sf, af) = pad_expansion(&f, spec.tau).unwrap();
+    let (sr, ar) = pad_expansion(&r, spec.tau).unwrap();
+    let got = rt.norm_diff(&sf, &af, &sr, &ar, gamma as f32).unwrap() as f64;
+    let want = f.distance_sq(&r);
+    assert!(
+        (want - got).abs() < 1e-3 * want.max(1.0),
+        "native {want} vs xla {got}"
+    );
+    // Identical models -> ~0.
+    let got0 = rt.norm_diff(&sf, &af, &sf, &af, gamma as f32).unwrap();
+    assert!(got0.abs() < 1e-3, "self distance {got0}");
+}
+
+#[test]
+fn xla_divergence_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.spec("divergence").unwrap().clone();
+    let gamma = 0.25f64;
+    let mut rng = Pcg64::seeded(14);
+    let models: Vec<SvModel> = (0..spec.m)
+        .map(|_| random_model(&mut rng, spec.tau / 2, spec.d, gamma))
+        .collect();
+    let mut svs = Vec::new();
+    let mut alphas = Vec::new();
+    for m in &models {
+        let (s, a) = pad_expansion(m, spec.tau).unwrap();
+        svs.extend(s);
+        alphas.extend(a);
+    }
+    let (delta, dists) = rt.divergence(&svs, &alphas, gamma as f32).unwrap();
+    let refs: Vec<&SvModel> = models.iter().collect();
+    let want = kernel_divergence(&refs);
+    assert!(
+        (want.delta - delta as f64).abs() < 1e-2 * want.delta.max(1.0),
+        "native {} vs xla {}",
+        want.delta,
+        delta
+    );
+    for (w, g) in want.per_learner.iter().zip(&dists) {
+        assert!((w - *g as f64).abs() < 2e-2 * w.max(1.0), "{w} vs {g}");
+    }
+}
+
+#[test]
+fn xla_rff_predict_executes() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.spec("rff_predict").unwrap().clone();
+    let mut rng = Pcg64::seeded(15);
+    let wvec: Vec<f32> = (0..spec.rff_dim).map(|_| rng.normal() as f32).collect();
+    let x: Vec<f32> = (0..spec.batch * spec.d).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..spec.rff_dim * spec.d).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..spec.rff_dim)
+        .map(|_| (rng.f64() * std::f64::consts::TAU) as f32)
+        .collect();
+    let y = rt.rff_predict(&wvec, &x, &w, &b).unwrap();
+    assert_eq!(y.len(), spec.batch);
+    assert!(y.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn service_xla_path_agrees_with_native() {
+    let Some(rt) = runtime() else { return };
+    use kdol::coordinator::{PredictionService, ScorePath};
+    let spec = rt.spec("predict").unwrap().clone();
+    let gamma = 0.25;
+    let mut rng = Pcg64::seeded(16);
+    let model = random_model(&mut rng, spec.tau / 2, spec.d, gamma);
+    let native = model.clone();
+    let mut svc = PredictionService::new(Some(rt), model, gamma).unwrap();
+    let queries: Vec<Vec<f64>> = (0..spec.batch)
+        .map(|_| (0..spec.d).map(|_| rng.normal()).collect())
+        .collect();
+    let (scores, path) = svc.score_batch(&queries).unwrap();
+    assert_eq!(path, ScorePath::Xla);
+    for (q, s) in queries.iter().zip(&scores) {
+        assert!((native.predict(q) - s).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,161 @@
+//! Property tests on the RKHS algebra: Gram identities, Cholesky solves,
+//! learner invariants — the native twins of the python hypothesis sweeps.
+
+use kdol::config::{CompressionConfig, KernelConfig, LearnerConfig, LossKind};
+use kdol::kernel::gram::{cholesky_solve, Gram};
+use kdol::kernel::Kernel;
+use kdol::learner::{build_learner, KernelLearner, OnlineLearner};
+use kdol::testing::{check, default_cases, gen};
+use kdol::util::Rng;
+
+fn rbf(gamma: f64) -> Kernel {
+    Kernel::Rbf { gamma }
+}
+
+#[test]
+fn prop_gram_psd_quadratic_forms() {
+    // v^T K v = ||sum_i v_i phi(x_i)||^2 >= 0 for any v.
+    check("gram-psd", default_cases(), |rng| {
+        let dim = gen::int(rng, 1, 4);
+        let n = gen::int(rng, 1, 10);
+        let pts: Vec<f64> = gen::vector(rng, n * dim, 1.0);
+        let g = Gram::compute_symmetric(&rbf(0.7), &pts, dim);
+        let v = gen::vector(rng, n, 1.0);
+        assert!(g.quad_form(&v, &v) >= -1e-9);
+    });
+}
+
+#[test]
+fn prop_gram_symmetric_consistency() {
+    check("gram-sym", default_cases(), |rng| {
+        let dim = gen::int(rng, 1, 4);
+        let n = gen::int(rng, 1, 8);
+        let pts: Vec<f64> = gen::vector(rng, n * dim, 1.0);
+        let g1 = Gram::compute(&rbf(1.1), &pts, &pts, dim);
+        let g2 = Gram::compute_symmetric(&rbf(1.1), &pts, dim);
+        for (a, b) in g1.data.iter().zip(&g2.data) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_cholesky_solves_spd_systems() {
+    check("chol", default_cases(), |rng| {
+        let dim = gen::int(rng, 1, 3);
+        let n = gen::int(rng, 1, 8);
+        // Distinct points => PD Gram (with a small ridge).
+        let pts: Vec<f64> = gen::vector(rng, n * dim, 2.0);
+        let g = Gram::compute_symmetric(&rbf(0.5), &pts, dim);
+        let b = gen::vector(rng, n, 1.0);
+        if let Some(x) = cholesky_solve(&g, &b, 1e-8) {
+            // Residual of (K + ridge I) x = b.
+            for i in 0..n {
+                let mut kx = 1e-8 * x[i];
+                for j in 0..n {
+                    kx += g.at(i, j) * x[j];
+                }
+                assert!((kx - b[i]).abs() < 1e-5, "residual {}", (kx - b[i]).abs());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_learner_drift_is_exact() {
+    // The incremental drift every update reports equals the true RKHS
+    // distance between consecutive models — the quantity Prop. 6 sums.
+    check("drift-exact", default_cases() / 2, |rng| {
+        let cfg = LearnerConfig {
+            eta: 0.3 + rng.f64() * 0.4,
+            lambda: rng.f64() * 0.05,
+            loss: LossKind::Hinge,
+            kernel: KernelConfig::Rbf { gamma: 0.5 },
+            compression: CompressionConfig::None,
+            passive_aggressive: false,
+        };
+        let dim = gen::int(rng, 1, 3);
+        let mut learner = KernelLearner::new(cfg, dim, 0);
+        for _ in 0..15 {
+            let x = gen::vector(rng, dim, 1.0);
+            let y = if rng.chance(0.5) { 1.0 } else { -1.0 };
+            let before = learner.expansion().clone();
+            let ev = learner.update(&x, y);
+            let exact = learner.expansion().distance_sq(&before).sqrt();
+            assert!(
+                (ev.drift - exact).abs() < 1e-7 * exact.max(1.0),
+                "drift {} vs exact {}",
+                ev.drift,
+                exact
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_learner_drift_bounds() {
+    // SGD (lambda = 0, RBF k(x,x) = 1): drift <= eta and 0 at zero loss.
+    // PA: exactly loss-proportional — drift <= loss (Prop. 6 premise).
+    check("drift-bound", default_cases() / 2, |rng| {
+        for loss in [LossKind::Hinge, LossKind::Logistic] {
+            let eta = 0.2 + rng.f64() * 0.6;
+            for pa in [false, true] {
+                let cfg = LearnerConfig {
+                    eta: if pa { 1.0 } else { eta },
+                    lambda: 0.0,
+                    loss,
+                    kernel: KernelConfig::Rbf { gamma: 0.5 },
+                    compression: CompressionConfig::None,
+                    passive_aggressive: pa,
+                };
+                let dim = gen::int(rng, 1, 3);
+                let mut learner = build_learner(&cfg, dim, 0);
+                for _ in 0..10 {
+                    let x = gen::vector(rng, dim, 1.0);
+                    let y = if rng.chance(0.5) { 1.0 } else { -1.0 };
+                    let ev = learner.update(&x, y);
+                    if pa {
+                        assert!(
+                            ev.drift <= ev.loss + 1e-9,
+                            "{loss:?} PA: drift {} > loss {}",
+                            ev.drift,
+                            ev.loss
+                        );
+                    } else {
+                        assert!(ev.drift <= eta + 1e-9, "{loss:?}: drift {}", ev.drift);
+                        if ev.loss == 0.0 {
+                            assert_eq!(ev.drift, 0.0);
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_padding_preserves_predictions() {
+    // The XLA padding convention (alpha = 0 slots) is exact, natively.
+    use kdol::runtime::pad_expansion;
+    check("padding", default_cases(), |rng| {
+        let dim = gen::int(rng, 1, 4);
+        let n = gen::int(rng, 0, 10);
+        let model = gen::sv_model(rng, rbf(0.5), n, dim, 99);
+        let tau = n + gen::int(rng, 0, 6);
+        let (svs, alphas) = pad_expansion(&model, tau).unwrap();
+        // Rebuild a model from the padded arrays; predictions must match
+        // (up to f32 quantization of the padded representation).
+        let mut rebuilt = kdol::kernel::SvModel::new(rbf(0.5), dim);
+        for i in 0..tau {
+            let x: Vec<f64> = (0..dim).map(|j| svs[i * dim + j] as f64).collect();
+            rebuilt.push(i as u64, &x, alphas[i] as f64);
+        }
+        for _ in 0..3 {
+            let q = gen::vector(rng, dim, 1.0);
+            assert!(
+                (model.predict(&q) - rebuilt.predict(&q)).abs() < 1e-4,
+                "padding changed prediction"
+            );
+        }
+    });
+}

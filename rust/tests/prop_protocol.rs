@@ -1,0 +1,226 @@
+//! Property tests on the protocol's core invariants, driven by the
+//! in-repo property harness (`kdol::testing`).
+
+use kdol::compression::Compressor;
+use kdol::kernel::{Kernel, Model, SvModel};
+use kdol::protocol::configuration_divergence;
+use kdol::protocol::sync::synchronize;
+use kdol::testing::{check, default_cases, gen};
+use kdol::util::Rng;
+
+fn rbf() -> Kernel {
+    Kernel::Rbf { gamma: 0.5 }
+}
+
+#[test]
+fn prop_average_is_mean_of_predictions() {
+    // Prop. 2: the dual-form average evaluates to the pointwise mean of
+    // the member models, everywhere.
+    check("avg-pointwise", default_cases(), |rng| {
+        let m = gen::int(rng, 2, 5);
+        let dim = gen::int(rng, 1, 4);
+        let models: Vec<Model> = (0..m)
+            .map(|i| {
+                let n = gen::int(rng, 0, 8);
+                Model::Kernel(gen::sv_model(rng, rbf(), n, dim, (i as u64 + 1) << 32))
+            })
+            .collect();
+        let refs: Vec<&Model> = models.iter().collect();
+        let avg = Model::average(&refs);
+        for _ in 0..5 {
+            let x = gen::vector(rng, dim, 1.5);
+            let mean: f64 =
+                models.iter().map(|f| f.predict(&x)).sum::<f64>() / m as f64;
+            assert!(
+                (avg.predict(&x) - mean).abs() < 1e-9,
+                "avg {} vs mean {}",
+                avg.predict(&x),
+                mean
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_divergence_zero_iff_equal_configuration() {
+    check("div-zero", default_cases(), |rng| {
+        let dim = gen::int(rng, 1, 4);
+        let n = gen::int(rng, 1, 6);
+        let f = gen::sv_model(rng, rbf(), n, dim, 7);
+        let m = gen::int(rng, 2, 5);
+        let models: Vec<Model> = (0..m).map(|_| Model::Kernel(f.clone())).collect();
+        let refs: Vec<&Model> = models.iter().collect();
+        let d = configuration_divergence(&refs);
+        assert!(d.delta < 1e-12, "equal configuration diverged: {}", d.delta);
+    });
+}
+
+#[test]
+fn prop_divergence_nonnegative() {
+    check("div-nonneg", default_cases(), |rng| {
+        let dim = gen::int(rng, 1, 3);
+        let m = gen::int(rng, 2, 5);
+        let models: Vec<Model> = (0..m)
+            .map(|i| {
+                let n = gen::int(rng, 0, 6);
+                Model::Kernel(gen::sv_model(rng, rbf(), n, dim, (i as u64 + 1) << 20))
+            })
+            .collect();
+        let refs: Vec<&Model> = models.iter().collect();
+        let d = configuration_divergence(&refs);
+        assert!(d.delta >= -1e-12);
+        for v in d.per_learner {
+            assert!(v >= -1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_averaging_is_contractive() {
+    // After replacing every model by the average, divergence is 0 and each
+    // learner's distance to any fixed reference shrinks on average
+    // (variance decomposition).
+    check("avg-contracts", default_cases(), |rng| {
+        let dim = gen::int(rng, 1, 3);
+        let m = gen::int(rng, 2, 4);
+        let models: Vec<Model> = (0..m)
+            .map(|i| {
+                let n = gen::int(rng, 1, 5);
+                Model::Kernel(gen::sv_model(rng, rbf(), n, dim, (i as u64 + 1) << 20))
+            })
+            .collect();
+        let refs: Vec<&Model> = models.iter().collect();
+        let before = configuration_divergence(&refs).delta;
+        let (avg, _) = synchronize(&refs, Compressor::None);
+        let synced: Vec<Model> = (0..m).map(|_| avg.clone()).collect();
+        let srefs: Vec<&Model> = synced.iter().collect();
+        let after = configuration_divergence(&srefs).delta;
+        assert!(after < 1e-10);
+        assert!(after <= before + 1e-12);
+    });
+}
+
+#[test]
+fn prop_compression_error_matches_reported() {
+    // The compressor's reported eps upper-bounds the true RKHS
+    // perturbation (triangle inequality across steps; exact per step).
+    check("comp-eps", default_cases(), |rng| {
+        let dim = gen::int(rng, 1, 3);
+        let n = gen::int(rng, 4, 12);
+        let tau = gen::int(rng, 1, 3);
+        let model = gen::sv_model(rng, rbf(), n, dim, 50);
+        for comp in [
+            Compressor::Truncation { tau },
+            Compressor::Projection { tau },
+        ] {
+            let mut c = model.clone();
+            let out = comp.compress(&mut c);
+            let true_err = c.distance_sq(&model).sqrt();
+            assert!(
+                true_err <= out.err + 1e-6,
+                "true {true_err} > reported {}",
+                out.err
+            );
+            assert!(c.len() <= tau);
+        }
+    });
+}
+
+#[test]
+fn prop_distance_is_a_metric_ish() {
+    // Symmetry and the triangle inequality for the RKHS distance.
+    check("metric", default_cases(), |rng| {
+        let dim = gen::int(rng, 1, 3);
+        let (na, nb, nc) = (
+            gen::int(rng, 0, 5),
+            gen::int(rng, 0, 5),
+            gen::int(rng, 0, 5),
+        );
+        let a = gen::sv_model(rng, rbf(), na, dim, 1 << 10);
+        let b = gen::sv_model(rng, rbf(), nb, dim, 2 << 10);
+        let c = gen::sv_model(rng, rbf(), nc, dim, 3 << 10);
+        let dab = a.distance_sq(&b).sqrt();
+        let dba = b.distance_sq(&a).sqrt();
+        assert!((dab - dba).abs() < 1e-9);
+        let dac = a.distance_sq(&c).sqrt();
+        let dcb = c.distance_sq(&b).sqrt();
+        assert!(dab <= dac + dcb + 1e-9, "triangle: {dab} > {dac} + {dcb}");
+    });
+}
+
+#[test]
+fn prop_wire_roundtrip_arbitrary_messages() {
+    use kdol::network::{Message, SvBlock};
+    use kdol::ser::{from_bytes, to_bytes};
+    check("wire-roundtrip", default_cases(), |rng| {
+        let n = gen::int(rng, 0, 20);
+        let dim = gen::int(rng, 1, 8);
+        let coeffs: Vec<(u64, f64)> = (0..n).map(|i| (i as u64, rng.normal())).collect();
+        let k = gen::int(rng, 0, n.max(1));
+        let block = SvBlock {
+            ids: (0..k as u64).collect(),
+            dim: dim as u32,
+            coords: (0..k * dim).map(|_| rng.normal() as f32).collect(),
+        };
+        let msg = Message::ModelUpload {
+            learner: gen::int(rng, 0, 31) as u32,
+            coeffs,
+            new_svs: block,
+        };
+        let bytes = to_bytes(&msg);
+        assert_eq!(bytes.len(), msg.wire_bytes());
+        let back: Message = from_bytes(&bytes).unwrap();
+        assert_eq!(back, msg);
+    });
+}
+
+#[test]
+fn prop_toml_numbers_roundtrip() {
+    use kdol::config::parse_toml;
+    check("toml-numbers", default_cases(), |rng| {
+        let i = rng.next_u64() as i64 / 2;
+        let f = rng.normal() * 1e3;
+        let doc = format!("a = {i}\nb = {f:e}\n");
+        let t = parse_toml(&doc).unwrap();
+        assert_eq!(t["a"].as_int(), Some(i));
+        let fb = t["b"].as_float().unwrap();
+        assert!((fb - f).abs() <= 1e-9 * f.abs().max(1.0));
+    });
+}
+
+#[test]
+fn prop_sv_model_incremental_ops_consistent() {
+    // push/swap_remove/scale keep predict() consistent with a naive model.
+    check("svmodel-ops", default_cases(), |rng| {
+        let dim = gen::int(rng, 1, 3);
+        let mut model = SvModel::new(rbf(), dim);
+        let mut naive: Vec<(Vec<f64>, f64)> = Vec::new();
+        for step in 0..20 {
+            match gen::int(rng, 0, 2) {
+                0 => {
+                    let x = gen::vector(rng, dim, 1.0);
+                    let a = rng.normal();
+                    model.push(step as u64, &x, a);
+                    naive.push((x, a));
+                }
+                1 if !naive.is_empty() => {
+                    let i = gen::int(rng, 0, naive.len() - 1);
+                    model.swap_remove(i);
+                    naive.swap_remove(i);
+                }
+                _ => {
+                    model.scale(0.9);
+                    for (_, a) in naive.iter_mut() {
+                        *a *= 0.9;
+                    }
+                }
+            }
+            let x = gen::vector(rng, dim, 1.0);
+            let want: f64 = naive
+                .iter()
+                .map(|(s, a)| a * rbf().eval(s, &x))
+                .sum();
+            assert!((model.predict(&x) - want).abs() < 1e-9);
+        }
+    });
+}
