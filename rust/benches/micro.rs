@@ -88,6 +88,7 @@ fn main() {
         let (coeffs, block) = enc.encode_upload(&model);
         let msg = Message::ModelUpload {
             learner: 0,
+            round: 1,
             coeffs,
             new_svs: block,
         };

@@ -58,8 +58,6 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
         cfg.seed = s;
     }
     if args.has("partial") {
-        // Partial-sync refinement is implemented in the deterministic
-        // engine (the threaded cluster always escalates to full syncs).
         cfg.partial_sync = true;
     }
     cfg.validate()
@@ -187,7 +185,7 @@ fn cmd_bounds(scale: f64) -> Result<()> {
 fn cmd_cluster(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "config", "preset", "protocol", "delta", "period", "check-period", "learners", "rounds",
-        "seed",
+        "seed", "partial",
     ])?;
     let cfg = load_config(args)?;
     let out = crate::coordinator::run_cluster(&cfg)?;
@@ -195,8 +193,15 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     println!("cumulative loss  : {:.2}", out.cum_loss);
     println!("cumulative error : {:.2}", out.cum_error);
     println!("total bytes      : {}", out.comm.total_bytes());
+    println!("peak round bytes : {}", out.comm.peak_round_bytes);
     println!("messages         : {}", out.comm.total_msgs());
     println!("syncs            : {}", out.comm.syncs);
+    println!("partial syncs    : {}", out.partial_syncs);
+    println!("violations       : {}", out.comm.violations);
+    println!(
+        "quiescent for    : {} rounds",
+        out.comm.quiescent_rounds(out.rounds)
+    );
     Ok(())
 }
 

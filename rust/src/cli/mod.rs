@@ -33,6 +33,10 @@ RUN FLAGS:
     --divergence           record true divergence at syncs
     --partial              enable partial-sync (subset balancing) refinement
 
+CLUSTER FLAGS:
+    same as RUN (minus --csv/--divergence); --partial enables subset
+    balancing in the threaded leader/worker runtime
+
 BENCH FLAGS:
     bench <target>         fig1 | fig2 | headline | sweep-delta |
                            sweep-tau | sweep-checkperiod | sweep-comp | bounds

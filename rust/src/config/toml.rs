@@ -9,8 +9,7 @@
 //! error, not silent misbehaviour.
 
 use std::collections::BTreeMap;
-
-use thiserror::Error;
+use std::fmt;
 
 /// Parsed TOML value.
 #[derive(Debug, Clone, PartialEq)]
@@ -29,12 +28,19 @@ pub enum Value {
 pub type Table = BTreeMap<String, Value>;
 
 /// Parse failure with 1-based line number.
-#[derive(Debug, Error)]
-#[error("toml parse error at line {line}: {msg}")]
+#[derive(Debug, Clone)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 fn err(line: usize, msg: impl Into<String>) -> TomlError {
     TomlError {

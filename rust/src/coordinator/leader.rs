@@ -1,6 +1,22 @@
-//! Leader node: owns the bus, triggers/serves synchronizations, and
-//! aggregates cluster metrics. One OS thread per worker; every exchanged
-//! byte really crosses a channel in serialized form.
+//! Leader node: owns the bus, triggers/serves full and partial
+//! synchronizations, and aggregates cluster metrics. One OS thread per
+//! worker; every exchanged byte really crosses a channel in serialized
+//! form.
+//!
+//! The leader is the cluster twin of [`crate::protocol::engine`]: for
+//! scheduled protocols the two must agree byte-for-byte (asserted by the
+//! `parity_engine_cluster` test module); for dynamic protocols worker
+//! asynchrony shifts sync timing, so agreement is qualitative (bounded
+//! tolerance on event counts).
+//!
+//! Communication accounting counts protocol messages only — `Done` /
+//! `Shutdown` are runtime control and cross the wire uncounted, exactly
+//! as they have no engine counterpart. Each completed synchronization
+//! event closes an accounting round ([`CommStats::end_round`]), so
+//! `peak_round_bytes` measures the largest single exchange, and
+//! [`CommStats::record_sync`] is stamped with the protocol round that
+//! triggered the event (carried in violation/upload messages), so
+//! quiescence statistics refer to protocol rounds, not event counts.
 
 use std::time::Duration;
 
@@ -13,14 +29,19 @@ use crate::kernel::{Model, SvModel};
 use crate::learner::build_learner;
 use crate::network::{Bus, CommStats, DeltaDecoder, Message};
 use crate::protocol::sync::synchronize;
+use crate::protocol::SyncPolicy;
 
 /// Aggregate result of a threaded cluster run.
 #[derive(Debug)]
 pub struct ClusterOutcome {
     pub cum_loss: f64,
     pub cum_error: f64,
+    /// Rounds per learner (the configured horizon).
+    pub rounds: u64,
     pub comm: CommStats,
-    /// Final synchronized model, if any sync happened.
+    /// Violations resolved by subset balancing without a full sync.
+    pub partial_syncs: u64,
+    /// Final globally synchronized model, if any full sync happened.
     pub final_model: Option<Model>,
 }
 
@@ -56,6 +77,33 @@ pub fn run_cluster(cfg: &ExperimentConfig) -> Result<ClusterOutcome> {
     outcome
 }
 
+/// Leader-side state for one cluster run.
+struct Leader<'a> {
+    bus: &'a Bus,
+    m: usize,
+    is_kernel: bool,
+    partial_sync: bool,
+    policy: SyncPolicy,
+    template: SvModel,
+    compressor: Compressor,
+    decoder: DeltaDecoder,
+    comm: CommStats,
+    done: Vec<bool>,
+    cum_loss: f64,
+    cum_error: f64,
+    /// Shared reference model r (None before the first full sync — the
+    /// common initial model is the zero function).
+    reference: Option<Model>,
+    final_model: Option<Model>,
+    partial_syncs: u64,
+    /// Per-worker round of its last model adoption (the round carried in
+    /// the upload it contributed to that sync event). Violations stamped
+    /// with an older round were sent before the worker adopted the new
+    /// model and are dropped as stale.
+    adopted_round: Vec<u64>,
+    timeout: Duration,
+}
+
 fn leader_loop(cfg: &ExperimentConfig, bus: &Bus) -> Result<ClusterOutcome> {
     let m = cfg.learners;
     let dim = cfg.data.dim();
@@ -78,221 +126,438 @@ fn leader_loop(cfg: &ExperimentConfig, bus: &Bus) -> Result<ClusterOutcome> {
         Some(tau) => Compressor::Projection { tau },
         None => Compressor::None,
     };
-    let mut decoder = DeltaDecoder::new(m);
-    let mut comm = CommStats::new();
-    let mut done = vec![false; m];
-    let mut cum_loss = 0.0;
-    let mut cum_error = 0.0;
-    let mut final_model: Option<Model> = None;
-    let mut syncs: u64 = 0;
-    let timeout = Duration::from_secs(60);
-
-    // For scheduled protocols the workers initiate uploads themselves; the
-    // leader's job is identical in both cases once the first upload (or a
-    // violation) arrives.
-    while done.iter().any(|d| !d) {
-        let (from, msg, n) = bus.recv(timeout)?;
-        comm.record_up(n);
-        match msg {
-            Message::Done {
-                learner,
-                cum_loss: l,
-                cum_error: e,
-            } => {
-                done[learner as usize] = true;
-                cum_loss += l;
-                cum_error += e;
-                let _ = from;
-            }
-            Message::Violation { .. } => {
-                comm.record_violation();
-                // Trigger a full synchronization.
-                let req = Message::SyncRequest;
-                for i in 0..m {
-                    comm.record_down(bus.send_to(i, &req)?);
-                }
-                let model = collect_and_average(
-                    bus,
-                    m,
-                    &mut decoder,
-                    &template,
-                    compressor,
-                    is_kernel,
-                    &mut comm,
-                    &mut done,
-                    &mut cum_loss,
-                    &mut cum_error,
-                )?;
-                syncs += 1;
-                comm.record_sync(syncs);
-                final_model = Some(model);
-            }
-            Message::ModelUpload {
-                learner,
-                coeffs,
-                new_svs,
-            } => {
-                // Scheduled sync initiated by workers: this is the first
-                // upload; collect the rest.
-                let first = decoder.ingest_upload(learner as usize, &coeffs, &new_svs, &template)?;
-                let model = collect_rest_and_average(
-                    bus,
-                    m,
-                    Some((learner as usize, first)),
-                    None,
-                    &mut decoder,
-                    &template,
-                    compressor,
-                    &mut comm,
-                    &mut done,
-                    &mut cum_loss,
-                    &mut cum_error,
-                )?;
-                syncs += 1;
-                comm.record_sync(syncs);
-                final_model = Some(model);
-            }
-            Message::LinearUpload { learner, w } => {
-                let model = collect_rest_and_average(
-                    bus,
-                    m,
-                    None,
-                    Some((learner as usize, w)),
-                    &mut decoder,
-                    &template,
-                    compressor,
-                    &mut comm,
-                    &mut done,
-                    &mut cum_loss,
-                    &mut cum_error,
-                )?;
-                syncs += 1;
-                comm.record_sync(syncs);
-                final_model = Some(model);
-            }
-            other => bail!("leader: unexpected message {other:?}"),
-        }
-    }
-    comm.end_round();
+    let mut leader = Leader {
+        bus,
+        m,
+        is_kernel,
+        partial_sync: cfg.partial_sync,
+        policy: SyncPolicy::new(cfg.protocol),
+        template,
+        compressor,
+        decoder: DeltaDecoder::new(m),
+        comm: CommStats::new(),
+        done: vec![false; m],
+        cum_loss: 0.0,
+        cum_error: 0.0,
+        reference: None,
+        final_model: None,
+        partial_syncs: 0,
+        adopted_round: vec![0; m],
+        timeout: Duration::from_secs(60),
+    };
+    leader.run()?;
     Ok(ClusterOutcome {
-        cum_loss,
-        cum_error,
-        comm,
-        final_model,
+        cum_loss: leader.cum_loss,
+        cum_error: leader.cum_error,
+        rounds: cfg.rounds as u64,
+        comm: leader.comm,
+        partial_syncs: leader.partial_syncs,
+        final_model: leader.final_model,
     })
 }
 
-/// Violation-triggered sync: every upload still outstanding.
-#[allow(clippy::too_many_arguments)]
-fn collect_and_average(
-    bus: &Bus,
-    m: usize,
-    decoder: &mut DeltaDecoder,
-    template: &SvModel,
-    compressor: Compressor,
-    _is_kernel: bool,
-    comm: &mut CommStats,
-    done: &mut [bool],
-    cum_loss: &mut f64,
-    cum_error: &mut f64,
-) -> Result<Model> {
-    collect_rest_and_average(
-        bus, m, None, None, decoder, template, compressor, comm, done, cum_loss, cum_error,
-    )
-}
-
-/// Collect the remaining uploads (kernel or linear), average, download.
-#[allow(clippy::too_many_arguments)]
-fn collect_rest_and_average(
-    bus: &Bus,
-    m: usize,
-    first_kernel: Option<(usize, SvModel)>,
-    first_linear: Option<(usize, Vec<f32>)>,
-    decoder: &mut DeltaDecoder,
-    template: &SvModel,
-    compressor: Compressor,
-    comm: &mut CommStats,
-    done: &mut [bool],
-    cum_loss: &mut f64,
-    cum_error: &mut f64,
-) -> Result<Model> {
-    let timeout = Duration::from_secs(60);
-    let mut kernels: Vec<Option<SvModel>> = vec![None; m];
-    let mut linears: Vec<Option<Vec<f32>>> = vec![None; m];
-    let mut have = 0usize;
-    if let Some((i, k)) = first_kernel {
-        kernels[i] = Some(k);
-        have += 1;
-    }
-    if let Some((i, w)) = first_linear {
-        linears[i] = Some(w);
-        have += 1;
-    }
-    while have < m {
-        let (_, msg, n) = bus.recv(timeout)?;
-        comm.record_up(n);
-        match msg {
-            Message::ModelUpload {
-                learner,
-                coeffs,
-                new_svs,
-            } => {
-                let k = decoder.ingest_upload(learner as usize, &coeffs, &new_svs, template)?;
-                if kernels[learner as usize].replace(k).is_none() {
-                    have += 1;
+impl Leader<'_> {
+    /// Main loop: react to worker messages until every worker is done.
+    ///
+    /// For scheduled protocols the workers initiate uploads themselves;
+    /// for dynamic protocols the leader reacts to violation notices.
+    fn run(&mut self) -> Result<()> {
+        while self.done.iter().any(|d| !d) {
+            let (_, msg, n) = self.bus.recv(self.timeout)?;
+            match msg {
+                Message::Done {
+                    learner,
+                    cum_loss,
+                    cum_error,
+                } => self.note_done(learner, cum_loss, cum_error),
+                Message::Violation {
+                    learner,
+                    round,
+                    distance_sq,
+                } => {
+                    self.comm.record_up(n);
+                    self.comm.record_violation();
+                    if round > self.adopted_round[learner as usize] {
+                        self.handle_violation(learner as usize, round, distance_sq)?;
+                    }
                 }
-            }
-            Message::LinearUpload { learner, w } => {
-                if linears[learner as usize].replace(w).is_none() {
-                    have += 1;
+                Message::ModelUpload {
+                    learner,
+                    round,
+                    coeffs,
+                    new_svs,
+                } => {
+                    // Scheduled sync initiated by workers: this is the
+                    // first upload; collect the rest.
+                    self.comm.record_up(n);
+                    let i = learner as usize;
+                    let first = self
+                        .decoder
+                        .ingest_upload(i, &coeffs, &new_svs, &self.template)?;
+                    let mut kernels: Vec<Option<SvModel>> = vec![None; self.m];
+                    kernels[i] = Some(first);
+                    let mut up_round = vec![0u64; self.m];
+                    up_round[i] = round;
+                    self.collect_and_finish(kernels, vec![None; self.m], 1, up_round, round)?;
                 }
+                Message::LinearUpload { learner, round, w } => {
+                    self.comm.record_up(n);
+                    let i = learner as usize;
+                    let mut linears: Vec<Option<Vec<f32>>> = vec![None; self.m];
+                    linears[i] = Some(w);
+                    let mut up_round = vec![0u64; self.m];
+                    up_round[i] = round;
+                    self.collect_and_finish(vec![None; self.m], linears, 1, up_round, round)?;
+                }
+                other => bail!("leader: unexpected message {other:?}"),
             }
-            // Stale violations during collection are ignored.
-            Message::Violation { .. } => comm.record_violation(),
-            Message::Done {
-                learner,
-                cum_loss: l,
-                cum_error: e,
-            } => {
-                done[learner as usize] = true;
-                *cum_loss += l;
-                *cum_error += e;
-            }
-            other => bail!("unexpected message during sync collection: {other:?}"),
         }
+        // Close the trailing accounting round (violations observed after
+        // the last synchronization event).
+        self.comm.end_round();
+        Ok(())
     }
 
-    if kernels.iter().all(Option::is_some) {
-        let models: Vec<Model> = kernels
-            .into_iter()
-            .map(|k| Model::Kernel(k.unwrap()))
-            .collect();
-        let refs: Vec<&Model> = models.iter().collect();
-        let (avg, _eps) = synchronize(&refs, compressor);
-        let avg_k = avg.as_kernel().unwrap();
-        for i in 0..m {
-            let (coeffs, new_svs) = decoder.encode_download(i, avg_k);
-            let msg = Message::ModelDownload { coeffs, new_svs };
-            comm.record_down(bus.send_to(i, &msg)?);
+    fn note_done(&mut self, learner: u32, cum_loss: f64, cum_error: f64) {
+        // Runtime control: not recorded as protocol communication.
+        self.done[learner as usize] = true;
+        self.cum_loss += cum_loss;
+        self.cum_error += cum_error;
+    }
+
+    /// React to a fresh violation: try subset balancing first (when
+    /// enabled), escalating to a full synchronization when the balancing
+    /// set would grow to the whole cluster.
+    fn handle_violation(&mut self, learner: usize, round: u64, distance_sq: f64) -> Result<()> {
+        // Gather co-violators already queued — the engine sees all of a
+        // round's violations at once; the cluster drains what has arrived.
+        let mut in_set = vec![false; self.m];
+        in_set[learner] = true;
+        let mut violators: Vec<(usize, f64)> = vec![(learner, distance_sq)];
+        while let Ok((_, msg, n)) = self.bus.recv(Duration::from_millis(0)) {
+            match msg {
+                Message::Violation {
+                    learner,
+                    round: r,
+                    distance_sq,
+                } => {
+                    self.comm.record_up(n);
+                    self.comm.record_violation();
+                    let i = learner as usize;
+                    if !in_set[i] && r > self.adopted_round[i] {
+                        in_set[i] = true;
+                        violators.push((i, distance_sq));
+                    }
+                }
+                Message::Done {
+                    learner,
+                    cum_loss,
+                    cum_error,
+                } => self.note_done(learner, cum_loss, cum_error),
+                other => bail!("leader: unexpected message before sync: {other:?}"),
+            }
         }
-        Ok(avg)
-    } else if linears.iter().all(Option::is_some) {
-        let models: Vec<Model> = linears
-            .into_iter()
-            .map(|w| {
-                Model::Linear(crate::kernel::LinearModel::from_w(
-                    w.unwrap().iter().map(|&v| v as f64).collect(),
-                ))
-            })
-            .collect();
-        let refs: Vec<&Model> = models.iter().collect();
-        let (avg, _) = synchronize(&refs, Compressor::None);
-        let w32: Vec<f32> = avg.as_linear().unwrap().w.iter().map(|&v| v as f32).collect();
-        for i in 0..m {
-            comm.record_down(bus.send_to(i, &Message::LinearDownload { w: w32.clone() })?);
+        // The engine seeds the balancing set in ascending learner order.
+        violators.sort_by_key(|&(i, _)| i);
+
+        if self.partial_sync && self.is_kernel && violators.len() < self.m {
+            let delta = self
+                .policy
+                .delta(round)
+                .expect("violations only occur under dynamic protocols");
+            if self.try_partial_sync(&violators, delta)? {
+                self.partial_syncs += 1;
+                return Ok(());
+            }
         }
-        Ok(avg)
-    } else {
-        bail!("mixed kernel/linear uploads in one sync")
+        // Full synchronization: ask every worker for its model. Workers
+        // still blocked inside a partial exchange answer with a fresh
+        // upload (escalation).
+        for i in 0..self.m {
+            self.comm.record_down(self.bus.send_to(i, &Message::SyncRequest)?);
+        }
+        self.collect_and_finish(
+            vec![None; self.m],
+            vec![None; self.m],
+            0,
+            vec![0u64; self.m],
+            round,
+        )
+    }
+
+    /// Partial synchronization (the local-balancing refinement; cluster
+    /// twin of `ProtocolEngine::try_partial_sync`): grow a balancing set
+    /// B around the violators in farthest-from-reference-first order; if
+    /// the B-average lands back inside the safe zone
+    /// `||avg_B - r||^2 <= Delta`, only B's members exchange models and
+    /// adopt it — the shared reference model r is untouched, so every
+    /// local condition proof stays valid. Returns Ok(false) if B grew to
+    /// the full cluster (caller escalates to a full sync).
+    fn try_partial_sync(&mut self, violators: &[(usize, f64)], delta: f64) -> Result<bool> {
+        let m = self.m;
+        let mut in_b = vec![false; m];
+        let mut b: Vec<usize> = Vec::new();
+        let mut uploaded: Vec<Option<SvModel>> = vec![None; m];
+        let mut up_round = vec![0u64; m];
+        let mut distances: Vec<Option<f64>> = vec![None; m];
+        for &(i, d) in violators {
+            in_b[i] = true;
+            b.push(i);
+            distances[i] = Some(d);
+        }
+
+        // Probe the remaining workers' distances to the reference. The
+        // engine reads its trackers directly; the cluster pays a small
+        // (counted) wire cost for the same information.
+        let mut expected = 0usize;
+        for i in 0..m {
+            if !in_b[i] {
+                self.comm
+                    .record_down(self.bus.send_to(i, &Message::DistanceRequest)?);
+                expected += 1;
+            }
+        }
+        let mut got = 0usize;
+        while got < expected {
+            let (_, msg, n) = self.bus.recv(self.timeout)?;
+            match msg {
+                Message::DistanceReport {
+                    learner,
+                    distance_sq,
+                    ..
+                } => {
+                    self.comm.record_up(n);
+                    let i = learner as usize;
+                    if !in_b[i] && distances[i].replace(distance_sq).is_none() {
+                        got += 1;
+                    }
+                }
+                // Violations racing the probe are counted; their senders
+                // stay outside the seed set (they will re-report if the
+                // balancing leaves them violated).
+                Message::Violation { .. } => {
+                    self.comm.record_up(n);
+                    self.comm.record_violation();
+                }
+                Message::Done {
+                    learner,
+                    cum_loss,
+                    cum_error,
+                } => self.note_done(learner, cum_loss, cum_error),
+                other => bail!("leader: unexpected message during distance probe: {other:?}"),
+            }
+        }
+
+        // Deterministic extension order mirroring the engine: ascending
+        // distance, consumed from the back — learners farthest from the
+        // reference join first (they carry the most balancing mass).
+        let mut extension: Vec<usize> = (0..m).filter(|&i| !in_b[i]).collect();
+        extension.sort_by(|&x, &y| {
+            distances[x]
+                .unwrap()
+                .total_cmp(&distances[y].unwrap())
+        });
+
+        loop {
+            if b.len() == m {
+                return Ok(false); // escalate: full sync with a fresh reference
+            }
+            // Request uploads from the new members of B.
+            let pending: Vec<usize> = b
+                .iter()
+                .copied()
+                .filter(|&i| uploaded[i].is_none())
+                .collect();
+            for &i in &pending {
+                self.comm
+                    .record_down(self.bus.send_to(i, &Message::PartialSyncRequest)?);
+            }
+            let mut waiting = pending.len();
+            while waiting > 0 {
+                let (_, msg, n) = self.bus.recv(self.timeout)?;
+                match msg {
+                    Message::ModelUpload {
+                        learner,
+                        round,
+                        coeffs,
+                        new_svs,
+                    } => {
+                        self.comm.record_up(n);
+                        let i = learner as usize;
+                        let k = self
+                            .decoder
+                            .ingest_upload(i, &coeffs, &new_svs, &self.template)?;
+                        if uploaded[i].replace(k).is_none() {
+                            waiting -= 1;
+                        }
+                        up_round[i] = round;
+                    }
+                    Message::Violation { .. } => {
+                        self.comm.record_up(n);
+                        self.comm.record_violation();
+                    }
+                    Message::DistanceReport { .. } => self.comm.record_up(n),
+                    Message::Done {
+                        learner,
+                        cum_loss,
+                        cum_error,
+                    } => self.note_done(learner, cum_loss, cum_error),
+                    other => bail!("leader: unexpected message during balancing: {other:?}"),
+                }
+            }
+            // B-average (Prop. 2 over the subset), budget-compressed, and
+            // the safe-zone check against the *global* reference.
+            let models: Vec<Model> = b
+                .iter()
+                .map(|&i| Model::Kernel(uploaded[i].clone().unwrap()))
+                .collect();
+            let refs: Vec<&Model> = models.iter().collect();
+            let (avg_b, _eps) = synchronize(&refs, self.compressor);
+            let dist = match &self.reference {
+                Some(r) => avg_b.distance_sq(r),
+                None => match &avg_b {
+                    Model::Kernel(k) => k.norm_sq(),
+                    Model::Linear(l) => l.norm_sq(),
+                },
+            };
+            if dist <= delta {
+                let avg_k = avg_b.as_kernel().unwrap();
+                for &i in &b {
+                    let (coeffs, new_svs) = self.decoder.encode_download(i, avg_k);
+                    let msg = Message::ModelDownload {
+                        coeffs,
+                        new_svs,
+                        partial: true,
+                    };
+                    self.comm.record_down(self.bus.send_to(i, &msg)?);
+                    self.adopted_round[i] = self.adopted_round[i].max(up_round[i]);
+                }
+                // A partial sync is a complete communication event but not
+                // a global synchronization: no record_sync, reference and
+                // final_model unchanged.
+                self.comm.end_round();
+                return Ok(true);
+            }
+            match extension.pop() {
+                Some(next) => {
+                    in_b[next] = true;
+                    b.push(next);
+                }
+                None => return Ok(false),
+            }
+        }
+    }
+
+    /// Collect uploads until every learner has contributed, then average,
+    /// download to everyone, and close the synchronization event.
+    ///
+    /// `trigger_round` is the protocol round that initiated the event (a
+    /// violation's round, or the first scheduled upload's round) — the
+    /// round the engine twin would stamp on this sync.
+    fn collect_and_finish(
+        &mut self,
+        mut kernels: Vec<Option<SvModel>>,
+        mut linears: Vec<Option<Vec<f32>>>,
+        mut have: usize,
+        mut up_round: Vec<u64>,
+        trigger_round: u64,
+    ) -> Result<()> {
+        while have < self.m {
+            let (_, msg, n) = self.bus.recv(self.timeout)?;
+            match msg {
+                Message::ModelUpload {
+                    learner,
+                    round,
+                    coeffs,
+                    new_svs,
+                } => {
+                    self.comm.record_up(n);
+                    let i = learner as usize;
+                    let k = self
+                        .decoder
+                        .ingest_upload(i, &coeffs, &new_svs, &self.template)?;
+                    if kernels[i].replace(k).is_none() {
+                        have += 1;
+                    }
+                    up_round[i] = round;
+                }
+                Message::LinearUpload { learner, round, w } => {
+                    self.comm.record_up(n);
+                    let i = learner as usize;
+                    if linears[i].replace(w).is_none() {
+                        have += 1;
+                    }
+                    up_round[i] = round;
+                }
+                // Stale violations during collection are counted only.
+                Message::Violation { .. } => {
+                    self.comm.record_up(n);
+                    self.comm.record_violation();
+                }
+                Message::DistanceReport { .. } => self.comm.record_up(n),
+                Message::Done {
+                    learner,
+                    cum_loss,
+                    cum_error,
+                } => self.note_done(learner, cum_loss, cum_error),
+                other => bail!("unexpected message during sync collection: {other:?}"),
+            }
+        }
+
+        let avg = if kernels.iter().all(Option::is_some) {
+            let models: Vec<Model> = kernels
+                .into_iter()
+                .map(|k| Model::Kernel(k.unwrap()))
+                .collect();
+            let refs: Vec<&Model> = models.iter().collect();
+            let (avg, _eps) = synchronize(&refs, self.compressor);
+            let avg_k = avg.as_kernel().unwrap();
+            for i in 0..self.m {
+                let (coeffs, new_svs) = self.decoder.encode_download(i, avg_k);
+                let msg = Message::ModelDownload {
+                    coeffs,
+                    new_svs,
+                    partial: false,
+                };
+                self.comm.record_down(self.bus.send_to(i, &msg)?);
+            }
+            avg
+        } else if linears.iter().all(Option::is_some) {
+            let models: Vec<Model> = linears
+                .into_iter()
+                .map(|w| {
+                    Model::Linear(crate::kernel::LinearModel::from_w(
+                        w.unwrap().iter().map(|&v| v as f64).collect(),
+                    ))
+                })
+                .collect();
+            let refs: Vec<&Model> = models.iter().collect();
+            let (avg, _) = synchronize(&refs, Compressor::None);
+            let w32: Vec<f32> = avg
+                .as_linear()
+                .unwrap()
+                .w
+                .iter()
+                .map(|&v| v as f32)
+                .collect();
+            for i in 0..self.m {
+                self.comm
+                    .record_down(self.bus.send_to(i, &Message::LinearDownload { w: w32.clone() })?);
+            }
+            avg
+        } else {
+            bail!("mixed kernel/linear uploads in one sync")
+        };
+
+        // The sync event is stamped with the protocol round that
+        // initiated it, not the event count — finished workers upload
+        // with their round pinned at the horizon, so max(up_round) would
+        // wrongly zero the quiescence metric on late dynamic syncs.
+        self.adopted_round.copy_from_slice(&up_round);
+        self.comm.record_sync(trigger_round);
+        self.comm.end_round();
+        self.reference = Some(avg.clone());
+        self.final_model = Some(avg);
+        Ok(())
     }
 }

@@ -2,7 +2,51 @@
 //! thread per local learner, speaking the wire protocol of
 //! [`crate::network`] over the in-process bus. This is the deployable
 //! shape of the system; the deterministic [`crate::protocol::engine`] is
-//! its measurement twin.
+//! its measurement twin (scheduled protocols must agree byte-for-byte —
+//! see the `parity_engine_cluster` test module).
+//!
+//! # Synchronization message flow
+//!
+//! Scheduled protocols (continuous / periodic) are worker-initiated:
+//!
+//! ```text
+//! worker i --- ModelUpload{round} ---------------------------> leader
+//!          (leader collects all m uploads, averages, compresses)
+//! worker i <-- ModelDownload{partial: false} ----------------- leader
+//!          (worker adopts; tracker.reset installs the new reference)
+//! ```
+//!
+//! Dynamic protocols are violation-driven. With `partial_sync` off, a
+//! violation escalates straight to a full synchronization:
+//!
+//! ```text
+//! worker v --- Violation{round, distance_sq} ----------------> leader
+//! worker i <-- SyncRequest ----------------------------------- leader   (all i)
+//! worker i --- ModelUpload{round} ---------------------------> leader   (all i)
+//! worker i <-- ModelDownload{partial: false} ----------------- leader   (all i)
+//! ```
+//!
+//! With `partial_sync` on, the leader first tries to balance a subset B
+//! around the violators (the local-balancing refinement):
+//!
+//! ```text
+//! worker v --- Violation{round, distance_sq} ----------------> leader
+//! worker j <-- DistanceRequest ------------------------------- leader   (all j not in B)
+//! worker j --- DistanceReport{distance_sq} ------------------> leader   (all j not in B)
+//!          (extension order: farthest from the reference first)
+//! worker b <-- PartialSyncRequest ---------------------------- leader   (new members of B)
+//! worker b --- ModelUpload{round} ---------------------------> leader
+//!          (leader checks ||avg_B - r||^2 <= Delta; on failure B grows
+//!           and the three steps above repeat for the new member)
+//! worker b <-- ModelDownload{partial: true} ------------------ leader   (all b in B)
+//!          (worker adopts; tracker.recalibrate keeps the reference r)
+//! ```
+//!
+//! If B would grow to the whole cluster the leader escalates: it
+//! broadcasts `SyncRequest` (workers blocked mid-partial answer with a
+//! fresh upload) and finishes as a full synchronization. `Done` and
+//! `Shutdown` are runtime control and are never counted as protocol
+//! communication.
 //!
 //! Also hosts the real-time [`service`]: the batched prediction service
 //! whose hot path executes the AOT XLA artifacts (Python never runs at

@@ -28,6 +28,13 @@ pub struct PredictionService {
     pub served: u64,
     pub xla_batches: u64,
     pub native_batches: u64,
+    /// Model refreshes absorbed from full synchronizations (the served
+    /// model is the cluster's shared reference).
+    pub full_refreshes: u64,
+    /// Model refreshes absorbed from partial (subset-balancing)
+    /// synchronizations — the reference is unchanged but a balanced
+    /// member's model moved (see [`crate::coordinator`] message flow).
+    pub partial_refreshes: u64,
 }
 
 impl PredictionService {
@@ -48,6 +55,8 @@ impl PredictionService {
             served: 0,
             xla_batches: 0,
             native_batches: 0,
+            full_refreshes: 0,
+            partial_refreshes: 0,
         };
         svc.repad()?;
         Ok(svc)
@@ -57,6 +66,18 @@ impl PredictionService {
     pub fn set_model(&mut self, model: SvModel) -> Result<()> {
         self.model = model;
         self.repad()
+    }
+
+    /// Swap in a model produced by a cluster synchronization, recording
+    /// its provenance: `partial = true` for a subset-balancing (partial)
+    /// sync, `false` for a full sync that replaced the shared reference.
+    pub fn set_model_from_sync(&mut self, model: SvModel, partial: bool) -> Result<()> {
+        if partial {
+            self.partial_refreshes += 1;
+        } else {
+            self.full_refreshes += 1;
+        }
+        self.set_model(model)
     }
 
     fn repad(&mut self) -> Result<()> {
@@ -157,6 +178,16 @@ mod tests {
         assert!(out[0].1 > 0.0);
         assert_eq!(svc.pending(), 0);
         assert!(svc.flush().unwrap().is_empty());
+    }
+
+    #[test]
+    fn refresh_provenance_counters() {
+        let mut svc = PredictionService::new(None, model(), 0.5).unwrap();
+        svc.set_model_from_sync(model(), false).unwrap();
+        svc.set_model_from_sync(model(), true).unwrap();
+        svc.set_model_from_sync(model(), true).unwrap();
+        assert_eq!(svc.full_refreshes, 1);
+        assert_eq!(svc.partial_refreshes, 2);
     }
 
     #[test]

@@ -1,6 +1,19 @@
 //! Worker node: runs one online learner over its stream, monitors its
-//! local condition, reports violations, and participates in
-//! synchronizations when the leader requests them.
+//! local condition, reports violations, and participates in full and
+//! partial synchronizations when the leader requests them.
+//!
+//! A worker reacts to four leader requests (see [`crate::coordinator`]
+//! for the full message flow):
+//!
+//! * [`Message::SyncRequest`] — upload the model, block for the averaged
+//!   download, adopt it as the new shared reference (`tracker.reset`).
+//! * [`Message::PartialSyncRequest`] — upload the model for subset
+//!   balancing and block exactly like a full sync; the download's
+//!   `partial` flag decides whether the reference survives
+//!   (`tracker.recalibrate`) or is replaced (`tracker.reset`).
+//! * [`Message::DistanceRequest`] — report `||f - r||^2` so the leader
+//!   can grow the balancing set farthest-first like the engine.
+//! * [`Message::Shutdown`] — exit.
 
 use std::time::Duration;
 
@@ -11,7 +24,24 @@ use crate::data::DataStream;
 use crate::kernel::Model;
 use crate::learner::{build_learner, OnlineLearner};
 use crate::network::{DeltaDecoder, DeltaEncoder, Endpoint, Message};
-use crate::protocol::{ConditionTracker, SyncPolicy};
+use crate::protocol::{ConditionTracker, SyncDecision, SyncPolicy};
+
+/// What a served request asks the worker loop to do next.
+#[derive(Debug, PartialEq, Eq)]
+enum Served {
+    Continue,
+    Shutdown,
+}
+
+/// Mutable learner-side state shared by the main loop and the post-`Done`
+/// serve loop.
+struct Worker {
+    id: usize,
+    learner: Box<dyn OnlineLearner>,
+    tracker: ConditionTracker,
+    encoder: DeltaEncoder,
+    is_kernel: bool,
+}
 
 /// Run the worker loop to completion (responds to syncs even after its
 /// stream is exhausted, until `Shutdown`).
@@ -22,11 +52,16 @@ pub fn run_worker(
     mut stream: Box<dyn DataStream>,
 ) -> Result<()> {
     let dim = cfg.data.dim();
-    let mut learner = build_learner(&cfg.learner, dim, id);
-    let mut tracker = ConditionTracker::new();
-    let mut encoder = DeltaEncoder::new();
-    let policy = SyncPolicy::new(cfg.protocol);
+    let learner = build_learner(&cfg.learner, dim, id);
     let is_kernel = learner.snapshot().as_kernel().is_some();
+    let mut w = Worker {
+        id,
+        learner,
+        tracker: ConditionTracker::new(),
+        encoder: DeltaEncoder::new(),
+        is_kernel,
+    };
+    let policy = SyncPolicy::new(cfg.protocol);
 
     let mut cum_loss = 0.0;
     let mut cum_error = 0.0;
@@ -34,50 +69,33 @@ pub fn run_worker(
 
     for round in 1..=rounds {
         let (x, y) = stream.next_example();
-        let ev = learner.update(&x, y);
+        let ev = w.learner.update(&x, y);
         cum_loss += ev.loss;
         cum_error += ev.error;
-        tracker.apply(&ev, &x, learner.norm_sq());
+        w.tracker.apply(&ev, &x, w.learner.norm_sq());
 
         // Local condition (dynamic protocols only).
         if let Some(delta) = policy.delta(round) {
-            if policy.checks_this_round(round) && tracker.violated(delta) {
+            if policy.checks_this_round(round) && w.tracker.violated(delta) {
                 endpoint.send(&Message::Violation {
                     learner: id as u32,
-                    distance_sq: tracker.distance_sq(),
+                    round,
+                    distance_sq: w.tracker.distance_sq(),
                 })?;
             }
         }
 
         // Scheduled protocols synchronize unconditionally; dynamic ones
-        // wait for the leader's SyncRequest triggered by some violation.
-        let scheduled = matches!(
-            policy.decide(round, false),
-            crate::protocol::SyncDecision::Sync
-        );
+        // wait for the leader's (partial) sync request triggered by some
+        // violation.
+        let scheduled = policy.decide(round, false) == SyncDecision::Sync;
         if scheduled {
-            do_sync(
-                id,
-                &endpoint,
-                learner.as_mut(),
-                &mut tracker,
-                &mut encoder,
-                is_kernel,
-            )?;
+            w.sync_exchange(&endpoint, round)?;
         } else {
             // Service any pending leader requests without blocking.
             while let Ok((msg, _)) = endpoint.recv(Duration::from_millis(0)) {
-                match msg {
-                    Message::SyncRequest => do_sync_reply(
-                        id,
-                        &endpoint,
-                        learner.as_mut(),
-                        &mut tracker,
-                        &mut encoder,
-                        is_kernel,
-                    )?,
-                    Message::Shutdown => return Ok(()),
-                    _ => {}
+                if w.serve_one(&endpoint, msg, round)? == Served::Shutdown {
+                    return Ok(());
                 }
             }
         }
@@ -89,88 +107,113 @@ pub fn run_worker(
         cum_error,
     })?;
 
-    // Keep serving syncs until the leader shuts the cluster down.
+    // Keep serving syncs and distance probes until the leader shuts the
+    // cluster down (its round is pinned at the horizon from here on).
     loop {
-        match endpoint.recv(Duration::from_secs(30)) {
-            Ok((Message::SyncRequest, _)) => do_sync_reply(
-                id,
-                &endpoint,
-                learner.as_mut(),
-                &mut tracker,
-                &mut encoder,
-                is_kernel,
-            )?,
-            Ok((Message::Shutdown, _)) => return Ok(()),
-            Ok(_) => {}
-            Err(e) => return Err(e),
+        let (msg, _) = endpoint.recv(Duration::from_secs(30))?;
+        if w.serve_one(&endpoint, msg, rounds)? == Served::Shutdown {
+            return Ok(());
         }
     }
 }
 
-/// Scheduled sync: upload immediately, then block for the download.
-fn do_sync(
-    id: usize,
-    endpoint: &Endpoint,
-    learner: &mut dyn OnlineLearner,
-    tracker: &mut ConditionTracker,
-    encoder: &mut DeltaEncoder,
-    is_kernel: bool,
-) -> Result<()> {
-    do_sync_reply(id, endpoint, learner, tracker, encoder, is_kernel)
-}
+impl Worker {
+    /// Handle one leader request outside a synchronization.
+    fn serve_one(&mut self, endpoint: &Endpoint, msg: Message, round: u64) -> Result<Served> {
+        match msg {
+            Message::SyncRequest | Message::PartialSyncRequest => {
+                self.sync_exchange(endpoint, round)?;
+                Ok(Served::Continue)
+            }
+            Message::DistanceRequest => {
+                self.report_distance(endpoint, round)?;
+                Ok(Served::Continue)
+            }
+            Message::Shutdown => Ok(Served::Shutdown),
+            _ => Ok(Served::Continue),
+        }
+    }
 
-/// Upload the model, wait for and adopt the synchronized model.
-fn do_sync_reply(
-    id: usize,
-    endpoint: &Endpoint,
-    learner: &mut dyn OnlineLearner,
-    tracker: &mut ConditionTracker,
-    encoder: &mut DeltaEncoder,
-    is_kernel: bool,
-) -> Result<()> {
-    let snap = learner.snapshot();
-    if is_kernel {
-        let exp = snap.as_kernel().unwrap();
-        let (coeffs, new_svs) = encoder.encode_upload(exp);
-        endpoint.send(&Message::ModelUpload {
-            learner: id as u32,
-            coeffs,
-            new_svs,
+    fn report_distance(&self, endpoint: &Endpoint, round: u64) -> Result<()> {
+        endpoint.send(&Message::DistanceReport {
+            learner: self.id as u32,
+            round,
+            distance_sq: self.tracker.distance_sq(),
         })?;
-        // Block for the download (skip any interleaved control messages).
+        Ok(())
+    }
+
+    /// Upload the current model (kernel delta-encoded, linear fixed-size).
+    fn upload(&mut self, endpoint: &Endpoint, round: u64) -> Result<()> {
+        let snap = self.learner.snapshot();
+        if self.is_kernel {
+            let exp = snap.as_kernel().unwrap();
+            let (coeffs, new_svs) = self.encoder.encode_upload(exp);
+            endpoint.send(&Message::ModelUpload {
+                learner: self.id as u32,
+                round,
+                coeffs,
+                new_svs,
+            })?;
+        } else {
+            let w32: Vec<f32> = snap
+                .as_linear()
+                .unwrap()
+                .w
+                .iter()
+                .map(|&v| v as f32)
+                .collect();
+            endpoint.send(&Message::LinearUpload {
+                learner: self.id as u32,
+                round,
+                w: w32,
+            })?;
+        }
+        Ok(())
+    }
+
+    /// One synchronization exchange: upload the model, block for the
+    /// download, adopt it. A `partial` download leaves the shared
+    /// reference untouched (exact recalibration of `||f - r||^2`); a full
+    /// download installs the model as the new reference.
+    fn sync_exchange(&mut self, endpoint: &Endpoint, round: u64) -> Result<()> {
+        self.upload(endpoint, round)?;
         loop {
             let (msg, _) = endpoint.recv(Duration::from_secs(30))?;
             match msg {
-                Message::ModelDownload { coeffs, new_svs } => {
-                    let adopted = DeltaDecoder::apply_download(exp, &coeffs, &new_svs)?;
-                    encoder.note_download(adopted.ids().iter().copied());
-                    let m = Model::Kernel(adopted);
-                    learner.set_model(m.clone());
-                    tracker.reset(m);
+                Message::ModelDownload {
+                    coeffs,
+                    new_svs,
+                    partial,
+                } => {
+                    let snap = self.learner.snapshot();
+                    let local = snap.as_kernel().unwrap();
+                    let adopted = DeltaDecoder::apply_download(local, &coeffs, &new_svs)?;
+                    self.encoder.note_download(adopted.ids().iter().copied());
+                    let model = Model::Kernel(adopted);
+                    self.learner.set_model(model.clone());
+                    if partial {
+                        self.tracker.recalibrate(&model);
+                    } else {
+                        self.tracker.reset(model);
+                    }
                     return Ok(());
                 }
-                Message::SyncRequest => continue, // already mid-sync
-                Message::Shutdown => anyhow::bail!("shutdown mid-sync"),
-                other => anyhow::bail!("unexpected message during sync: {other:?}"),
-            }
-        }
-    } else {
-        let w32: Vec<f32> = snap.as_linear().unwrap().w.iter().map(|&v| v as f32).collect();
-        endpoint.send(&Message::LinearUpload {
-            learner: id as u32,
-            w: w32,
-        })?;
-        loop {
-            let (msg, _) = endpoint.recv(Duration::from_secs(30))?;
-            match msg {
                 Message::LinearDownload { w } => {
                     let w64: Vec<f64> = w.iter().map(|&v| v as f64).collect();
-                    let m = Model::Linear(crate::kernel::LinearModel::from_w(w64));
-                    learner.set_model(m.clone());
-                    tracker.reset(m);
+                    let model = Model::Linear(crate::kernel::LinearModel::from_w(w64));
+                    self.learner.set_model(model.clone());
+                    self.tracker.reset(model);
                     return Ok(());
                 }
-                Message::SyncRequest => continue,
+                // The leader escalated a partial synchronization to a full
+                // one (the balancing set grew to the whole cluster) and is
+                // asking for a fresh upload; the bytes cross the wire
+                // again, mirroring the engine's escalation accounting.
+                Message::SyncRequest | Message::PartialSyncRequest => {
+                    self.upload(endpoint, round)?;
+                }
+                Message::DistanceRequest => self.report_distance(endpoint, round)?,
                 Message::Shutdown => anyhow::bail!("shutdown mid-sync"),
                 other => anyhow::bail!("unexpected message during sync: {other:?}"),
             }

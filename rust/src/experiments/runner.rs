@@ -50,6 +50,7 @@ pub fn run_serial(cfg: &ExperimentConfig) -> Outcome {
         cum_compression_err: metrics.cum_compression_err,
         mean_svs: learner.sv_count() as f64,
         comm,
+        partial_syncs: 0,
         series: metrics.series,
         wall_secs: watch.elapsed_secs(),
     }

@@ -131,6 +131,7 @@ mod tests {
             cum_drift: drift,
             cum_compression_err: 0.0,
             comm,
+            partial_syncs: 0,
             series: vec![],
             mean_svs: 10.0,
             wall_secs: 0.0,

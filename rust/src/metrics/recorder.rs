@@ -72,6 +72,9 @@ pub struct Outcome {
     pub cum_drift: f64,
     pub cum_compression_err: f64,
     pub comm: CommStats,
+    /// Violations resolved by subset balancing without a global sync
+    /// (the partial-synchronization refinement; 0 when disabled).
+    pub partial_syncs: u64,
     pub series: Vec<Sample>,
     /// Final mean SV count (model size proxy).
     pub mean_svs: f64,

@@ -80,6 +80,7 @@ mod tests {
             cum_drift: 1.0,
             cum_compression_err: 0.0,
             comm: CommStats::new(),
+            partial_syncs: 0,
             series: vec![Sample {
                 round: 10,
                 cum_loss: 5.0,

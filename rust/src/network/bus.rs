@@ -129,6 +129,7 @@ mod tests {
             let n = eps[1]
                 .send(&Message::Violation {
                     learner: 1,
+                    round: 1,
                     distance_sq: 0.7,
                 })
                 .unwrap();

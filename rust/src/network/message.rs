@@ -78,30 +78,64 @@ impl Decode for SvBlock {
 /// A protocol message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
-    /// Learner -> coordinator: local condition violated.
-    Violation { learner: u32, distance_sq: f64 },
-    /// Coordinator -> learner: send me your model.
+    /// Learner -> coordinator: local condition violated. Carries the
+    /// learner's current round (so the coordinator can timestamp the
+    /// resulting synchronization event and discard notices that predate
+    /// the learner's last model adoption) and its distance to the shared
+    /// reference (a balancing-set seed for partial synchronization).
+    Violation {
+        learner: u32,
+        round: u64,
+        distance_sq: f64,
+    },
+    /// Coordinator -> learner: send me your model (full synchronization).
     SyncRequest,
+    /// Coordinator -> learner: send me your model for subset balancing
+    /// (partial synchronization). The learner uploads and then blocks for
+    /// a download exactly as for [`Message::SyncRequest`]; the download's
+    /// `partial` flag tells it how to adopt.
+    PartialSyncRequest,
+    /// Coordinator -> learner: report `||f - r||^2` (used to grow the
+    /// balancing set in farthest-first order, mirroring the engine).
+    DistanceRequest,
+    /// Learner -> coordinator: reply to [`Message::DistanceRequest`].
+    DistanceReport {
+        learner: u32,
+        round: u64,
+        distance_sq: f64,
+    },
     /// Learner -> coordinator: full coefficient list (id, alpha) of the
     /// current model + coordinates of SVs the coordinator hasn't seen
-    /// from this learner.
+    /// from this learner. `round` is the learner's local round at upload
+    /// time (the coordinator records it as the synchronization round).
     ModelUpload {
         learner: u32,
+        round: u64,
         coeffs: Vec<(u64, f64)>,
         new_svs: SvBlock,
     },
     /// Coordinator -> learner: the synchronized model — coefficients of
     /// the (possibly compressed) average + coordinates the learner lacks.
+    /// `partial = false`: a full synchronization; the learner adopts the
+    /// model as the new shared reference (tracker reset). `partial =
+    /// true`: a balancing-set average; the learner adopts the model but
+    /// the shared reference is untouched (tracker recalibration).
     ModelDownload {
         coeffs: Vec<(u64, f64)>,
         new_svs: SvBlock,
+        partial: bool,
     },
     /// Linear-model upload (fixed size — the 2014 regime).
-    LinearUpload { learner: u32, w: Vec<f32> },
+    LinearUpload {
+        learner: u32,
+        round: u64,
+        w: Vec<f32>,
+    },
     /// Linear-model download.
     LinearDownload { w: Vec<f32> },
     /// Worker -> coordinator: finished its stream; carries final local
-    /// metrics for aggregation.
+    /// metrics for aggregation. Runtime control — not counted as protocol
+    /// communication.
     Done {
         learner: u32,
         cum_loss: f64,
@@ -119,6 +153,9 @@ const TAG_LINEAR_UPLOAD: u8 = 5;
 const TAG_LINEAR_DOWNLOAD: u8 = 6;
 const TAG_SHUTDOWN: u8 = 7;
 const TAG_DONE: u8 = 8;
+const TAG_PARTIAL_SYNC_REQUEST: u8 = 9;
+const TAG_DISTANCE_REQUEST: u8 = 10;
+const TAG_DISTANCE_REPORT: u8 = 11;
 
 fn encode_coeffs(w: &mut Writer, coeffs: &[(u64, f64)]) {
     w.u32(coeffs.len() as u32);
@@ -145,31 +182,57 @@ impl Encode for Message {
         match self {
             Message::Violation {
                 learner,
+                round,
                 distance_sq,
             } => {
                 w.u8(TAG_VIOLATION);
                 w.u32(*learner);
+                w.u64(*round);
                 w.f64(*distance_sq);
             }
             Message::SyncRequest => w.u8(TAG_SYNC_REQUEST),
+            Message::PartialSyncRequest => w.u8(TAG_PARTIAL_SYNC_REQUEST),
+            Message::DistanceRequest => w.u8(TAG_DISTANCE_REQUEST),
+            Message::DistanceReport {
+                learner,
+                round,
+                distance_sq,
+            } => {
+                w.u8(TAG_DISTANCE_REPORT);
+                w.u32(*learner);
+                w.u64(*round);
+                w.f64(*distance_sq);
+            }
             Message::ModelUpload {
                 learner,
+                round,
                 coeffs,
                 new_svs,
             } => {
                 w.u8(TAG_MODEL_UPLOAD);
                 w.u32(*learner);
+                w.u64(*round);
                 encode_coeffs(w, coeffs);
                 new_svs.encode(w);
             }
-            Message::ModelDownload { coeffs, new_svs } => {
+            Message::ModelDownload {
+                coeffs,
+                new_svs,
+                partial,
+            } => {
                 w.u8(TAG_MODEL_DOWNLOAD);
+                w.u8(u8::from(*partial));
                 encode_coeffs(w, coeffs);
                 new_svs.encode(w);
             }
-            Message::LinearUpload { learner, w: wv } => {
+            Message::LinearUpload {
+                learner,
+                round,
+                w: wv,
+            } => {
                 w.u8(TAG_LINEAR_UPLOAD);
                 w.u32(*learner);
+                w.u64(*round);
                 w.u32(wv.len() as u32);
                 w.f32_slice(wv);
             }
@@ -198,23 +261,35 @@ impl Decode for Message {
         match r.u8()? {
             TAG_VIOLATION => Ok(Message::Violation {
                 learner: r.u32()?,
+                round: r.u64()?,
                 distance_sq: r.f64()?,
             }),
             TAG_SYNC_REQUEST => Ok(Message::SyncRequest),
+            TAG_PARTIAL_SYNC_REQUEST => Ok(Message::PartialSyncRequest),
+            TAG_DISTANCE_REQUEST => Ok(Message::DistanceRequest),
+            TAG_DISTANCE_REPORT => Ok(Message::DistanceReport {
+                learner: r.u32()?,
+                round: r.u64()?,
+                distance_sq: r.f64()?,
+            }),
             TAG_MODEL_UPLOAD => Ok(Message::ModelUpload {
                 learner: r.u32()?,
+                round: r.u64()?,
                 coeffs: decode_coeffs(r)?,
                 new_svs: SvBlock::decode(r)?,
             }),
             TAG_MODEL_DOWNLOAD => Ok(Message::ModelDownload {
+                partial: r.u8()? != 0,
                 coeffs: decode_coeffs(r)?,
                 new_svs: SvBlock::decode(r)?,
             }),
             TAG_LINEAR_UPLOAD => {
                 let learner = r.u32()?;
+                let round = r.u64()?;
                 let n = r.u32()? as usize;
                 Ok(Message::LinearUpload {
                     learner,
+                    round,
                     w: r.f32_vec(n)?,
                 })
             }
@@ -258,20 +333,36 @@ mod tests {
         let msgs = vec![
             Message::Violation {
                 learner: 3,
+                round: 17,
                 distance_sq: 0.5,
             },
             Message::SyncRequest,
+            Message::PartialSyncRequest,
+            Message::DistanceRequest,
+            Message::DistanceReport {
+                learner: 4,
+                round: 18,
+                distance_sq: 0.25,
+            },
             Message::ModelUpload {
                 learner: 1,
+                round: 42,
                 coeffs: vec![(10, 0.5), (20, -0.25)],
                 new_svs: block(),
             },
             Message::ModelDownload {
                 coeffs: vec![(10, 0.125)],
                 new_svs: block(),
+                partial: true,
+            },
+            Message::ModelDownload {
+                coeffs: vec![(10, 0.125)],
+                new_svs: block(),
+                partial: false,
             },
             Message::LinearUpload {
                 learner: 2,
+                round: 9,
                 w: vec![1.0, -2.0],
             },
             Message::LinearDownload { w: vec![0.5] },
@@ -303,6 +394,7 @@ mod tests {
         // |S| coefficients at B_alpha each + new SVs at ~B_x each + framing.
         let m = Message::ModelUpload {
             learner: 0,
+            round: 1,
             coeffs: vec![(1, 0.1); 50].iter().map(|&(i, a)| (i, a)).collect(),
             new_svs: SvBlock {
                 ids: vec![7],
@@ -311,8 +403,9 @@ mod tests {
             },
         };
         let bytes = m.wire_bytes();
-        // 1 tag + 4 learner + 4 count + 50 * (8 id + 8 alpha) + block(8 hdr + 8 id + 72 coords)
-        assert_eq!(bytes, 1 + 4 + 4 + 50 * 16 + 8 + 8 + 72);
+        // 1 tag + 4 learner + 8 round + 4 count + 50 * (8 id + 8 alpha)
+        //   + block(8 hdr + 8 id + 72 coords)
+        assert_eq!(bytes, 1 + 4 + 8 + 4 + 50 * 16 + 8 + 8 + 72);
     }
 
     #[test]

@@ -139,6 +139,7 @@ impl ProtocolEngine {
                         // The violation notice really crosses the network.
                         let msg = Message::Violation {
                             learner: i as u32,
+                            round,
                             distance_sq: self.trackers[i].distance_sq(),
                         };
                         self.comm.record_up(msg.wire_bytes());
@@ -222,6 +223,7 @@ impl ProtocolEngine {
                     let (coeffs, block) = self.encoders[i].encode_upload(exp);
                     let msg = Message::ModelUpload {
                         learner: i as u32,
+                        round: self.round,
                         coeffs,
                         new_svs: block,
                     };
@@ -264,10 +266,13 @@ impl ProtocolEngine {
                     let msg = Message::ModelDownload {
                         coeffs,
                         new_svs: block,
+                        partial: true,
                     };
                     self.comm.record_down(msg.wire_bytes());
                     let (coeffs, block) = match msg {
-                        Message::ModelDownload { coeffs, new_svs } => (coeffs, new_svs),
+                        Message::ModelDownload {
+                            coeffs, new_svs, ..
+                        } => (coeffs, new_svs),
                         _ => unreachable!(),
                     };
                     let local_snap = self.learners[i].snapshot();
@@ -325,6 +330,7 @@ impl ProtocolEngine {
             let (coeffs, block) = self.encoders[i].encode_upload(exp);
             let msg = Message::ModelUpload {
                 learner: i as u32,
+                round: self.round,
                 coeffs,
                 new_svs: block,
             };
@@ -367,10 +373,13 @@ impl ProtocolEngine {
             let msg = Message::ModelDownload {
                 coeffs,
                 new_svs: block,
+                partial: false,
             };
             self.comm.record_down(msg.wire_bytes());
             let (coeffs, block) = match msg {
-                Message::ModelDownload { coeffs, new_svs } => (coeffs, new_svs),
+                Message::ModelDownload {
+                    coeffs, new_svs, ..
+                } => (coeffs, new_svs),
                 _ => unreachable!(),
             };
             let local_snap = self.learners[i].snapshot();
@@ -398,6 +407,7 @@ impl ProtocolEngine {
                 .collect();
             let msg = Message::LinearUpload {
                 learner: i as u32,
+                round: self.round,
                 w: w32,
             };
             self.comm.record_up(msg.wire_bytes());
@@ -449,6 +459,7 @@ impl ProtocolEngine {
                 total as f64 / self.learners.len() as f64
             },
             comm: self.comm,
+            partial_syncs: self.partial_syncs,
             series: self.metrics.series,
             wall_secs: self.watch.elapsed_secs(),
         }
@@ -578,8 +589,8 @@ mod tests {
         assert_eq!(o.comm.syncs, 60);
         // Fixed-size messages: per sync, m uploads + m downloads of
         // 18-dim f32 vectors (SUSY geometry). Upload: 1 tag + 4 learner +
-        // 4 count + 72 = 81; download: 1 + 4 + 72 = 77.
-        assert_eq!(o.comm.total_bytes(), 60 * 3 * (81 + 77));
+        // 8 round + 4 count + 72 = 89; download: 1 + 4 + 72 = 77.
+        assert_eq!(o.comm.total_bytes(), 60 * 3 * (89 + 77));
     }
 
     #[test]

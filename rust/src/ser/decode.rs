@@ -2,22 +2,35 @@
 //! slice. All failures are explicit errors — a malformed message from a
 //! peer must never panic the coordinator.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Wire-format decoding failure.
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum DecodeError {
-    #[error("unexpected end of message (needed {needed} more bytes)")]
     Eof { needed: usize },
-    #[error("trailing garbage: {remaining} unconsumed bytes")]
     Trailing { remaining: usize },
-    #[error("length prefix exceeds message size")]
     LengthOverflow,
-    #[error("invalid utf-8 in string field")]
     InvalidUtf8,
-    #[error("invalid enum tag {0}")]
     BadTag(u8),
 }
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecodeError::Eof { needed } => {
+                write!(f, "unexpected end of message (needed {needed} more bytes)")
+            }
+            DecodeError::Trailing { remaining } => {
+                write!(f, "trailing garbage: {remaining} unconsumed bytes")
+            }
+            DecodeError::LengthOverflow => write!(f, "length prefix exceeds message size"),
+            DecodeError::InvalidUtf8 => write!(f, "invalid utf-8 in string field"),
+            DecodeError::BadTag(t) => write!(f, "invalid enum tag {t}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 /// Bounds-checked reading cursor.
 pub struct Reader<'a> {

@@ -1,0 +1,157 @@
+//! Engine ↔ cluster parity: the threaded leader/worker runtime is the
+//! deployable twin of the deterministic `ProtocolEngine` and must agree
+//! with it.
+//!
+//! * Scheduled protocols (continuous / periodic, kernel and linear) are
+//!   lockstep in both runtimes: sync counts, bytes in each direction,
+//!   the recorded sync round, and even the peak-round bytes must match
+//!   **exactly**.
+//! * Dynamic protocols are violation-driven; worker asynchrony shifts
+//!   which round a violation is observed in, so only bounded agreement
+//!   of resolution-event counts (syncs + partial syncs) is required.
+//!   The stated tolerance: within a factor of 3 plus an absolute slack
+//!   of 3 events, and "no events at all" must agree exactly (identical
+//!   trajectories until a first violation exists at all).
+//!
+//! Also hosts the regression tests for the two cluster accounting fixes:
+//! per-event `end_round` (peak bytes < total bytes in any multi-sync
+//! run) and round-stamped `record_sync` (quiescence consistent with the
+//! protocol horizon).
+
+use kdol::config::{ExperimentConfig, KernelConfig, ProtocolConfig};
+use kdol::coordinator::run_cluster;
+use kdol::experiments::run_experiment;
+
+fn cfg(protocol: ProtocolConfig) -> ExperimentConfig {
+    let mut c = ExperimentConfig::quickstart();
+    c.learners = 3;
+    c.rounds = 60;
+    c.protocol = protocol;
+    c.name = format!("parity-{}", protocol.label());
+    c
+}
+
+/// Assert exact communication parity between engine and cluster for one
+/// scheduled configuration.
+fn assert_exact_parity(c: &ExperimentConfig) {
+    let engine = run_experiment(c).unwrap();
+    let cluster = run_cluster(c).unwrap();
+    assert_eq!(engine.comm.syncs, cluster.comm.syncs, "sync counts");
+    assert_eq!(engine.comm.up_bytes, cluster.comm.up_bytes, "up bytes");
+    assert_eq!(engine.comm.down_bytes, cluster.comm.down_bytes, "down bytes");
+    assert_eq!(engine.comm.up_msgs, cluster.comm.up_msgs, "up messages");
+    assert_eq!(engine.comm.down_msgs, cluster.comm.down_msgs, "down messages");
+    assert_eq!(
+        engine.comm.last_sync_round, cluster.comm.last_sync_round,
+        "last sync round"
+    );
+    assert_eq!(
+        engine.comm.peak_round_bytes, cluster.comm.peak_round_bytes,
+        "peak round bytes"
+    );
+    assert_eq!(cluster.partial_syncs, 0, "scheduled protocols never balance");
+}
+
+#[test]
+fn periodic_kernel_parity_is_exact() {
+    assert_exact_parity(&cfg(ProtocolConfig::Periodic { period: 10 }));
+}
+
+#[test]
+fn continuous_kernel_parity_is_exact() {
+    assert_exact_parity(&cfg(ProtocolConfig::Continuous));
+}
+
+#[test]
+fn periodic_linear_parity_is_exact() {
+    let mut c = cfg(ProtocolConfig::Periodic { period: 5 });
+    c.learner.kernel = KernelConfig::Linear;
+    c.learner.compression = kdol::config::CompressionConfig::None;
+    assert_exact_parity(&c);
+}
+
+#[test]
+fn dynamic_event_counts_agree_within_tolerance() {
+    for partial in [false, true] {
+        let mut c = cfg(ProtocolConfig::Dynamic {
+            delta: 0.5,
+            check_period: 1,
+        });
+        c.learners = 4;
+        c.partial_sync = partial;
+        let engine = run_experiment(&c).unwrap();
+        let cluster = run_cluster(&c).unwrap();
+        let engine_events = engine.comm.syncs + engine.partial_syncs;
+        let cluster_events = cluster.comm.syncs + cluster.partial_syncs;
+        // Stated tolerance for asynchrony: factor 3 + slack 3, and exact
+        // agreement on "no events at all".
+        assert_eq!(engine_events == 0, cluster_events == 0, "event existence");
+        assert!(
+            cluster_events <= 3 * engine_events + 3,
+            "partial={partial}: cluster {cluster_events} vs engine {engine_events}"
+        );
+        assert!(
+            engine_events <= 3 * cluster_events + 3,
+            "partial={partial}: engine {engine_events} vs cluster {cluster_events}"
+        );
+    }
+}
+
+#[test]
+fn cluster_partial_sync_resolves_a_violation_without_full_sync() {
+    // Acceptance: on a dynamic protocol with partial_sync enabled, the
+    // cluster resolves at least one violation by subset balancing. The
+    // threshold interacts with the data stream, so sweep a small range of
+    // deltas and require balancing to succeed somewhere in it.
+    let mut best: Option<(f64, u64)> = None;
+    for delta in [0.05, 0.1, 0.2, 0.35, 0.5, 1.0] {
+        let mut c = cfg(ProtocolConfig::Dynamic {
+            delta,
+            check_period: 1,
+        });
+        c.learners = 4;
+        c.rounds = 80;
+        c.partial_sync = true;
+        let out = run_cluster(&c).unwrap();
+        if out.partial_syncs > 0 {
+            best = Some((delta, out.partial_syncs));
+            break;
+        }
+    }
+    let (delta, partials) = best.expect(
+        "no delta in the sweep produced a partial synchronization — \
+         subset balancing never resolved a violation",
+    );
+    assert!(partials > 0, "delta {delta} reported zero partial syncs");
+}
+
+#[test]
+fn cluster_peak_round_bytes_below_total_in_multi_sync_run() {
+    // Regression (accounting fix 2): the leader used to close the
+    // accounting round exactly once at shutdown, so the "peak" equalled
+    // the total. With per-event rounds, a 6-sync run's peak must sit
+    // strictly below its total.
+    let out = run_cluster(&cfg(ProtocolConfig::Periodic { period: 10 })).unwrap();
+    assert_eq!(out.comm.syncs, 6);
+    assert!(out.comm.peak_round_bytes > 0);
+    assert!(
+        out.comm.peak_round_bytes < out.comm.total_bytes(),
+        "peak {} should be < total {}",
+        out.comm.peak_round_bytes,
+        out.comm.total_bytes()
+    );
+}
+
+#[test]
+fn cluster_quiescence_tracks_protocol_rounds() {
+    // Regression (accounting fix 1): the leader used to pass the sync
+    // *count* to record_sync, so last_sync_round/quiescent_rounds were
+    // garbage. With 65 rounds at period 10 the last sync is at round 60:
+    // the cluster is quiescent for exactly the 5 trailing rounds.
+    let mut c = cfg(ProtocolConfig::Periodic { period: 10 });
+    c.rounds = 65;
+    let out = run_cluster(&c).unwrap();
+    assert_eq!(out.comm.syncs, 6);
+    assert_eq!(out.comm.last_sync_round, Some(60));
+    assert_eq!(out.comm.quiescent_rounds(out.rounds), 5);
+}

@@ -164,6 +164,7 @@ fn prop_wire_roundtrip_arbitrary_messages() {
         };
         let msg = Message::ModelUpload {
             learner: gen::int(rng, 0, 31) as u32,
+            round: rng.next_u64() % 10_000,
             coeffs,
             new_svs: block,
         };
