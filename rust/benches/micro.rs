@@ -2,32 +2,69 @@
 //! condition tracking (incremental vs naive), wire encoding, and — when
 //! artifacts are present — the XLA predict path vs native.
 //!
+//! Naive pairwise-`Kernel::eval` twins of the dot-product sweeps are
+//! benched alongside, so one run shows the blocked-geometry speedup
+//! without needing a pre-change checkout.
+//!
 //! ```sh
 //! cargo bench --bench micro
+//! # machine-readable trajectory (appends a run to the history file):
+//! cargo bench --bench micro -- --json BENCH_2.json --label post-PR2
+//! # CI smoke: tiny budget, throwaway JSON
+//! cargo bench --bench micro -- --budget-ms 10 --json /tmp/b.json
 //! ```
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-use kdol::bench_util::{bench_for, black_box, report};
+use kdol::bench_util::{bench_for, black_box, report, BenchCli};
 use kdol::kernel::{Kernel, Model, SvModel};
 use kdol::network::{DeltaDecoder, DeltaEncoder, Message};
 use kdol::protocol::configuration_divergence;
 use kdol::runtime::{pad_expansion, XlaRuntime};
 use kdol::ser::to_bytes;
+use kdol::testing::naive;
 use kdol::util::{Pcg64, Rng};
 
-const BUDGET: Duration = Duration::from_millis(300);
+/// Globally unique ids across every generated model — the system invariant
+/// (ids are minted per learner via `make_sv_id`); reusing ids across
+/// models would make the id-merging average conflate distinct points and
+/// corrupt the divergence benches.
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
 fn random_model(rng: &mut Pcg64, n: usize, d: usize) -> SvModel {
     let mut m = SvModel::new(Kernel::Rbf { gamma: 0.25 }, d);
-    for i in 0..n {
+    for _ in 0..n {
         let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
-        m.push(i as u64 + 1, &x, rng.normal());
+        m.push(NEXT_ID.fetch_add(1, Ordering::Relaxed), &x, rng.normal());
     }
     m
 }
 
+/// Pre-dot-product divergence: Prop. 2 average + naive pairwise distances
+/// (the average's self-Gram re-evaluated per learner, as the old
+/// implementation did).
+fn naive_divergence(models: &[&SvModel]) -> f64 {
+    let avg = SvModel::average(models);
+    let mut delta = 0.0;
+    for m in models {
+        delta += naive::distance_sq(m, &avg);
+    }
+    delta / models.len() as f64
+}
+
+fn speedup_line(cli: &BenchCli, what: &str, fast: &str, naive: &str) {
+    if let (Some(f), Some(n)) = (cli.mean_of(fast), cli.mean_of(naive)) {
+        println!(
+            "    -> {what}: {:.2}x vs naive pairwise eval",
+            n.as_secs_f64() / f.as_secs_f64()
+        );
+    }
+}
+
 fn main() {
+    let mut cli = BenchCli::from_env("micro", Duration::from_millis(300));
+    let budget = cli.budget;
     let mut rng = Pcg64::seeded(1);
     let d = 18;
 
@@ -35,10 +72,39 @@ fn main() {
     for tau in [50, 200, 800] {
         let model = random_model(&mut rng, tau, d);
         let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
-        let r = bench_for(&format!("predict native tau={tau}"), BUDGET, || {
+        let r = bench_for(&format!("predict native tau={tau}"), budget, || {
             black_box(model.predict(black_box(&x)));
         });
         println!("{}", report(&r));
+        cli.record(&r);
+        let r = bench_for(&format!("predict naive tau={tau}"), budget, || {
+            black_box(naive::predict(&model, black_box(&x)));
+        });
+        println!("{}", report(&r));
+        cli.record(&r);
+        speedup_line(
+            &cli,
+            &format!("predict tau={tau}"),
+            &format!("predict native tau={tau}"),
+            &format!("predict naive tau={tau}"),
+        );
+    }
+
+    // --- batched prediction (the service's native path) ----------------------
+    {
+        let model = random_model(&mut rng, 800, d);
+        let queries: Vec<Vec<f64>> = (0..64)
+            .map(|_| (0..d).map(|_| rng.normal()).collect())
+            .collect();
+        let r = bench_for("predict_batch batch=64 tau=800", budget, || {
+            black_box(model.predict_batch(black_box(&queries)));
+        });
+        println!(
+            "{} ({:.2} us/query)",
+            report(&r),
+            r.mean.as_nanos() as f64 / 1000.0 / 64.0
+        );
+        cli.record(&r);
     }
 
     // --- divergence (sync-time cost) ----------------------------------------
@@ -47,10 +113,28 @@ fn main() {
             .map(|_| Model::Kernel(random_model(&mut rng, tau, d)))
             .collect();
         let refs: Vec<&Model> = models.iter().collect();
-        let r = bench_for(&format!("divergence m={m} tau={tau}"), BUDGET, || {
+        let r = bench_for(&format!("divergence m={m} tau={tau}"), budget, || {
             black_box(configuration_divergence(black_box(&refs)));
         });
         println!("{}", report(&r));
+        cli.record(&r);
+    }
+    {
+        // Naive twin at m=8 (m=32 naive is ~seconds per iteration; the
+        // m=8 ratio already demonstrates the union-Gram win).
+        let kernels: Vec<SvModel> = (0..8).map(|_| random_model(&mut rng, 50, d)).collect();
+        let krefs: Vec<&SvModel> = kernels.iter().collect();
+        let r = bench_for("divergence naive m=8 tau=50", budget, || {
+            black_box(naive_divergence(black_box(&krefs)));
+        });
+        println!("{}", report(&r));
+        cli.record(&r);
+        speedup_line(
+            &cli,
+            "divergence m=8 tau=50",
+            "divergence m=8 tau=50",
+            "divergence naive m=8 tau=50",
+        );
     }
 
     // --- averaging ------------------------------------------------------------
@@ -59,26 +143,37 @@ fn main() {
             .map(|_| Model::Kernel(random_model(&mut rng, 50, d)))
             .collect();
         let refs: Vec<&Model> = models.iter().collect();
-        let r = bench_for(&format!("average m={m} tau=50"), BUDGET, || {
+        let r = bench_for(&format!("average m={m} tau=50"), budget, || {
             black_box(Model::average(black_box(&refs)));
         });
         println!("{}", report(&r));
+        cli.record(&r);
     }
 
     // --- condition check: incremental vs naive -------------------------------
     {
         let f = random_model(&mut rng, 50, d);
         let refm = random_model(&mut rng, 50, d);
-        let r = bench_for("norm_diff naive tau=50 (per-round if naive)", BUDGET, || {
+        let r = bench_for("norm_diff naive tau=50 (per-round if naive)", budget, || {
             black_box(f.distance_sq(black_box(&refm)));
         });
         println!("{}", report(&r));
+        cli.record(&r);
+        // `distance_sq_with_norms` with both norms in hand: the cross
+        // inner product alone (what the trackers/leader now pay).
+        let (nf, nr) = (f.norm_sq(), refm.norm_sq());
+        let r = bench_for("norm_diff cached-norms tau=50", budget, || {
+            black_box(f.distance_sq_with_norms(black_box(&refm), nf, nr));
+        });
+        println!("{}", report(&r));
+        cli.record(&r);
         // Incremental path cost ~ one reference evaluation.
         let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
-        let r = bench_for("tracker incremental (one r(x) eval)", BUDGET, || {
+        let r = bench_for("tracker incremental (one r(x) eval)", budget, || {
             black_box(refm.predict(black_box(&x)));
         });
         println!("{}", report(&r));
+        cli.record(&r);
     }
 
     // --- wire encoding ----------------------------------------------------------
@@ -92,10 +187,11 @@ fn main() {
             coeffs,
             new_svs: block,
         };
-        let r = bench_for("encode ModelUpload tau=50", BUDGET, || {
+        let r = bench_for("encode ModelUpload tau=50", budget, || {
             black_box(to_bytes(black_box(&msg)));
         });
         println!("{} ({} bytes)", report(&r), msg.wire_bytes());
+        cli.record(&r);
 
         let mut dec = DeltaDecoder::new(1);
         let (coeffs, block) = match &msg {
@@ -105,13 +201,14 @@ fn main() {
             _ => unreachable!(),
         };
         let template = SvModel::new(Kernel::Rbf { gamma: 0.25 }, d);
-        let r = bench_for("ingest upload tau=50", BUDGET, || {
+        let r = bench_for("ingest upload tau=50", budget, || {
             black_box(
                 dec.ingest_upload(0, black_box(&coeffs), black_box(&block), &template)
                     .unwrap(),
             );
         });
         println!("{}", report(&r));
+        cli.record(&r);
     }
 
     // --- XLA vs native predict (needs artifacts) --------------------------------
@@ -126,7 +223,7 @@ fn main() {
             .collect();
         let r = bench_for(
             &format!("predict XLA batch={} tau={}", spec.batch, spec.tau),
-            BUDGET,
+            budget,
             || {
                 black_box(rt.predict(&svs, &alphas, black_box(&x), 0.25).unwrap());
             },
@@ -136,16 +233,15 @@ fn main() {
             report(&r),
             r.mean.as_micros() as f64 / spec.batch as f64
         );
+        cli.record(&r);
         let queries: Vec<Vec<f64>> = (0..spec.batch)
             .map(|_| (0..spec.d).map(|_| rng.normal()).collect())
             .collect();
         let r = bench_for(
             &format!("predict native batch={} tau={}", spec.batch, spec.tau),
-            BUDGET,
+            budget,
             || {
-                for q in &queries {
-                    black_box(model.predict(black_box(q)));
-                }
+                black_box(model.predict_batch(black_box(&queries)));
             },
         );
         println!(
@@ -153,7 +249,10 @@ fn main() {
             report(&r),
             r.mean.as_micros() as f64 / spec.batch as f64
         );
+        cli.record(&r);
     } else {
         println!("(skipping XLA benches — run `make artifacts`)");
     }
+
+    cli.finish().expect("writing bench JSON");
 }

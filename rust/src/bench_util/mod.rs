@@ -1,6 +1,8 @@
 //! Bench harness (offline replacement for `criterion`): warmup +
-//! measured iterations, reporting mean / p50 / p99 / throughput. Used by
-//! every target in `rust/benches/`.
+//! measured iterations, reporting mean / p50 / p99 / throughput, plus a
+//! machine-readable JSON trajectory writer ([`BenchCli`]) so successive
+//! PRs can append runs to a `BENCH_*.json` history. Used by every target
+//! in `rust/benches/`.
 
 use std::time::{Duration, Instant};
 
@@ -74,6 +76,166 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+// ---- bench CLI + JSON trajectory --------------------------------------------
+
+/// Minimal argument parser + JSON result sink shared by the bench targets:
+///
+/// ```sh
+/// cargo bench --bench micro -- --budget-ms 50 --json BENCH_2.json --label post-PR2
+/// ```
+///
+/// * `--budget-ms N` — per-bench wall budget for [`bench_for`].
+/// * `--json PATH`   — write this run's results to PATH. If PATH already
+///   holds a history written by this sink, the run is **appended** to its
+///   `runs` array (the BENCH_*.json trajectory committed to the repo).
+/// * `--label NAME`  — label for the run (default `"run"`).
+///
+/// Unknown flags are ignored (cargo passes `--bench` to harness-less
+/// targets).
+pub struct BenchCli {
+    bench: String,
+    pub budget: Duration,
+    json_path: Option<std::path::PathBuf>,
+    label: String,
+    results: Vec<BenchResult>,
+}
+
+impl BenchCli {
+    /// Parse `std::env::args()`; `bench` names the target in the JSON doc.
+    pub fn from_env(bench: &str, default_budget: Duration) -> BenchCli {
+        let mut cli = BenchCli {
+            bench: bench.to_string(),
+            budget: default_budget,
+            json_path: None,
+            label: "run".to_string(),
+            results: Vec::new(),
+        };
+        let mut args = std::env::args().skip(1);
+        while let Some(arg) = args.next() {
+            match arg.as_str() {
+                "--budget-ms" => {
+                    if let Some(v) = args.next().and_then(|v| v.parse::<u64>().ok()) {
+                        cli.budget = Duration::from_millis(v.max(1));
+                    }
+                }
+                "--json" => {
+                    if let Some(p) = args.next() {
+                        cli.json_path = Some(std::path::PathBuf::from(p));
+                    }
+                }
+                "--label" => {
+                    if let Some(l) = args.next() {
+                        cli.label = l;
+                    }
+                }
+                _ => {}
+            }
+        }
+        cli
+    }
+
+    /// Record one result for the JSON sink (call alongside printing it).
+    pub fn record(&mut self, r: &BenchResult) {
+        self.results.push(r.clone());
+    }
+
+    /// Most recent recorded mean for a bench name (for speedup lines).
+    pub fn mean_of(&self, name: &str) -> Option<Duration> {
+        self.results.iter().rev().find(|r| r.name == name).map(|r| r.mean)
+    }
+
+    /// Write (or append to) the JSON trajectory; no-op without `--json`.
+    /// Refuses to touch an existing file whose layout this sink did not
+    /// write (a reformatted trajectory, or a `--json CHANGES.md` typo) —
+    /// clobbering it would silently destroy history.
+    pub fn finish(&self) -> std::io::Result<()> {
+        let Some(path) = &self.json_path else {
+            return Ok(());
+        };
+        let run = self.run_json();
+        let doc = match std::fs::read_to_string(path) {
+            Ok(existing) => splice_run(&existing, &run).ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!(
+                        "{}: not a bench trajectory written by this sink; refusing to overwrite",
+                        path.display()
+                    ),
+                )
+            })?,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => self.fresh_doc(&run),
+            Err(e) => return Err(e),
+        };
+        std::fs::write(path, doc)
+    }
+
+    fn fresh_doc(&self, run: &str) -> String {
+        format!(
+            "{{\n  \"bench\": \"{}\",\n  \"runs\": [\n    {}\n  ]\n}}\n",
+            escape_json(&self.bench),
+            run
+        )
+    }
+
+    fn run_json(&self) -> String {
+        let unix_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis())
+            .unwrap_or(0);
+        let results: Vec<String> = self
+            .results
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \"min_ns\": {}}}",
+                    escape_json(&r.name),
+                    r.iters,
+                    r.mean.as_nanos(),
+                    r.p50.as_nanos(),
+                    r.p99.as_nanos(),
+                    r.min.as_nanos()
+                )
+            })
+            .collect();
+        format!(
+            "{{\"label\": \"{}\", \"unix_ms\": {}, \"results\": [\n      {}\n    ]}}",
+            escape_json(&self.label),
+            unix_ms,
+            results.join(",\n      ")
+        )
+    }
+}
+
+/// Append `run` to the `runs` array of a document this sink wrote earlier;
+/// None if the layout is not recognized.
+fn splice_run(existing: &str, run: &str) -> Option<String> {
+    let tail = "\n  ]\n}";
+    let pos = existing.rfind(tail)?;
+    let head = &existing[..pos];
+    let runs_open = head.rfind("\"runs\": [")? + "\"runs\": [".len();
+    let empty = head[runs_open..].trim().is_empty();
+    let sep = if empty { "" } else { "," };
+    Some(format!("{head}{sep}\n    {run}{tail}\n"))
+}
+
+/// JSON string escaping: backslash, quote, and control characters (a
+/// `--label` with a newline must not corrupt the trajectory file).
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,5 +267,69 @@ mod tests {
     fn report_formats() {
         let r = bench("x", 1, 5, || {});
         assert!(report(&r).contains("x"));
+    }
+
+    fn cli_with(results: &[(&str, u64)]) -> BenchCli {
+        let mut cli = BenchCli {
+            bench: "micro".into(),
+            budget: Duration::from_millis(1),
+            json_path: None,
+            label: "t".into(),
+            results: Vec::new(),
+        };
+        for (name, ns) in results {
+            cli.record(&BenchResult {
+                name: name.to_string(),
+                iters: 3,
+                mean: Duration::from_nanos(*ns),
+                p50: Duration::from_nanos(*ns),
+                p99: Duration::from_nanos(*ns),
+                min: Duration::from_nanos(*ns),
+            });
+        }
+        cli
+    }
+
+    #[test]
+    fn json_doc_roundtrips_and_appends() {
+        let cli = cli_with(&[("predict native tau=800", 1000), ("divergence m=32 tau=50", 2000)]);
+        let run = cli.run_json();
+        let doc = cli.fresh_doc(&run);
+        assert!(doc.contains("\"bench\": \"micro\""));
+        assert!(doc.contains("\"mean_ns\": 1000"));
+        // Appending a second run keeps both.
+        let doc2 = splice_run(&doc, &run).expect("recognized layout");
+        assert_eq!(doc2.matches("\"label\": \"t\"").count(), 2);
+        assert!(doc2.ends_with("\n  ]\n}\n"));
+        // And a third still works (append is idempotent in shape).
+        let doc3 = splice_run(&doc2, &run).unwrap();
+        assert_eq!(doc3.matches("\"label\": \"t\"").count(), 3);
+    }
+
+    #[test]
+    fn json_append_into_empty_history() {
+        // The committed BENCH_*.json skeleton has an empty runs array; the
+        // first real run must splice in without a leading comma.
+        let skeleton = "{\n  \"bench\": \"micro\",\n  \"runs\": [\n  ]\n}\n";
+        let cli = cli_with(&[("x", 5)]);
+        let doc = splice_run(skeleton, &cli.run_json()).expect("skeleton recognized");
+        assert!(!doc.contains("[,"));
+        assert!(doc.contains("\"name\": \"x\""));
+        assert_eq!(doc.matches("\"label\"").count(), 1);
+    }
+
+    #[test]
+    fn escape_json_handles_controls() {
+        assert_eq!(escape_json("plain"), "plain");
+        assert_eq!(escape_json("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(escape_json("a\nb\t\r"), "a\\nb\\t\\r");
+        assert_eq!(escape_json("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn mean_of_finds_latest() {
+        let cli = cli_with(&[("a", 10), ("a", 30)]);
+        assert_eq!(cli.mean_of("a"), Some(Duration::from_nanos(30)));
+        assert_eq!(cli.mean_of("b"), None);
     }
 }

@@ -59,14 +59,21 @@ pub fn project_out_batch(model: &mut SvModel, tau: usize) -> CompressionOutcome 
     }
     let survivors: Vec<usize> = (0..n).filter(|&i| !is_victim[i]).collect();
 
-    // Gram blocks against the original point set.
-    let k_ss = {
-        let mut pts = Vec::with_capacity(tau * model.dim);
-        for &i in &survivors {
+    // Gather survivor / victim points with their cached norms — the Gram
+    // blocks below run in the dot-product formulation and never recompute
+    // a point norm.
+    let gather = |idx: &[usize]| {
+        let mut pts = Vec::with_capacity(idx.len() * model.dim);
+        let mut norms = Vec::with_capacity(idx.len());
+        for &i in idx {
             pts.extend_from_slice(model.sv(i));
+            norms.push(model.sv_norms_sq()[i]);
         }
-        Gram::compute_symmetric(&kernel, &pts, model.dim)
+        (pts, norms)
     };
+    let (s_pts, s_norms) = gather(&survivors);
+    let (v_pts, v_norms) = gather(&victims);
+    let k_ss = Gram::compute_symmetric_with_norms(&kernel, &s_pts, &s_norms, model.dim);
     let Some(l) = cholesky_factor(&k_ss, RIDGE) else {
         // Degenerate survivor Gram: fall back to sequential projection.
         let mut out = CompressionOutcome::default();
@@ -81,24 +88,27 @@ pub fn project_out_batch(model: &mut SvModel, tau: usize) -> CompressionOutcome 
 
     // Aggregate projection: delta = K_SS^{-1} (K_SV alpha_V), residual
     // err^2 = q^T K_VV q - (K_SV q)^T delta  with q = alpha_V.
+    let alpha_v: Vec<f64> = victims.iter().map(|&v| model.alpha()[v]).collect();
+    let k_sv = Gram::compute_with_norms(&kernel, &s_pts, &s_norms, &v_pts, &v_norms, model.dim);
     let mut ksv_q = vec![0.0; tau]; // K_SV alpha_V
-    for (si, &s) in survivors.iter().enumerate() {
-        let xs = model.sv(s);
-        let mut acc = 0.0;
-        for &v in &victims {
-            acc += model.alpha()[v] * kernel.eval(xs, model.sv(v));
-        }
-        ksv_q[si] = acc;
+    for (si, out) in ksv_q.iter_mut().enumerate() {
+        let row = &k_sv.data[si * nv..(si + 1) * nv];
+        *out = crate::util::float::dot(row, &alpha_v);
     }
-    let mut qkq = 0.0; // alpha_V^T K_VV alpha_V
-    for (a, &v) in victims.iter().enumerate() {
-        let xv = model.sv(v);
-        let av = model.alpha()[v];
-        qkq += av * av * kernel.eval_self(xv);
-        for &w in &victims[a + 1..] {
-            qkq += 2.0 * av * model.alpha()[w] * kernel.eval(xv, model.sv(w));
+    // alpha_V^T K_VV alpha_V as a weighted self-sweep (Gram-backed norm of
+    // the victim sub-expansion).
+    let qkq = {
+        let mut victims_model = SvModel::with_capacity(kernel, model.dim, nv);
+        for (k, &v) in victims.iter().enumerate() {
+            victims_model.push_with_norm(
+                model.ids()[v],
+                model.sv(v),
+                alpha_v[k],
+                model.sv_norms_sq()[v],
+            );
         }
-    }
+        victims_model.norm_sq()
+    };
     let delta = cholesky_solve_with(&l, &ksv_q);
     let explained: f64 = ksv_q.iter().zip(&delta).map(|(k, d)| k * d).sum();
     let err = (qkq - explained).max(0.0).sqrt();
@@ -154,9 +164,14 @@ pub fn project_out(model: &mut SvModel) -> CompressionOutcome {
 
     let n = model.len();
     let k_self = kernel.eval_self(&xd);
-    // kappa_i = k(x_i, x_d).
-    let kappa: Vec<f64> = (0..n).map(|i| kernel.eval(model.sv(i), &xd)).collect();
-    let gram = Gram::compute_symmetric(&kernel, model.xs_flat(), model.dim);
+    // kappa_i = k(x_i, x_d) — one blocked Gram row.
+    let kappa: Vec<f64> = model.kernel_row(&xd);
+    let gram = Gram::compute_symmetric_with_norms(
+        &kernel,
+        model.xs_flat(),
+        model.sv_norms_sq(),
+        model.dim,
+    );
 
     let removed = RemovedSv {
         x: xd.clone(),

@@ -293,8 +293,23 @@ impl Leader<'_> {
     /// adopt it — the shared reference model r is untouched, so every
     /// local condition proof stays valid. Returns Ok(false) if B grew to
     /// the full cluster (caller escalates to a full sync).
+    ///
+    /// Like the engine twin, the whole event shares one
+    /// [`crate::kernel::UnionGram`] seeded with the reference: every
+    /// safe-zone check while B grows is a quadratic form on that matrix,
+    /// not a fresh kernel-evaluation pass over `avg_B` and `r` (the old
+    /// path re-evaluated `||r||^2` from scratch at every growth step).
     fn try_partial_sync(&mut self, violators: &[(usize, f64)], delta: f64) -> Result<bool> {
         let m = self.m;
+        // No pre-sizing here: unlike the engine, the leader cannot see the
+        // workers' model sizes before they upload, and the only available
+        // upper bound (the whole delta-decoder store) squares into far too
+        // much memory. Vec growth inside ensure_gram is amortized.
+        let mut ug = crate::kernel::UnionGram::new(self.template.kernel, self.template.dim);
+        let r_sparse: Option<(Vec<u32>, Vec<f64>)> = match &self.reference {
+            Some(Model::Kernel(r)) => Some((ug.add_model(r), r.alpha().to_vec())),
+            Some(Model::Linear(_)) | None => None,
+        };
         let mut in_b = vec![false; m];
         let mut b: Vec<usize> = Vec::new();
         let mut uploaded: Vec<Option<SvModel>> = vec![None; m];
@@ -405,23 +420,42 @@ impl Leader<'_> {
                     other => bail!("leader: unexpected message during balancing: {other:?}"),
                 }
             }
+            // Register the fresh uploads on the event's union Gram in
+            // deterministic B order (not network-arrival order, which is
+            // thread-schedule dependent): union row order fixes the
+            // quadratic forms' summation order, and the engine twin adds
+            // models in exactly this order.
+            for &i in &pending {
+                if let Some(k) = &uploaded[i] {
+                    ug.add_model(k);
+                }
+            }
             // B-average (Prop. 2 over the subset), budget-compressed, and
-            // the safe-zone check against the *global* reference.
+            // the safe-zone check against the *global* reference — a
+            // quadratic form of the coefficient difference on the shared
+            // union Gram (model-space distance kept as a defensive
+            // fallback; compression never invents new SV coordinates).
             let models: Vec<Model> = b
                 .iter()
                 .map(|&i| Model::Kernel(uploaded[i].clone().unwrap()))
                 .collect();
             let refs: Vec<&Model> = models.iter().collect();
             let (avg_b, _eps) = synchronize(&refs, self.compressor);
-            let dist = match &self.reference {
-                Some(r) => avg_b.distance_sq(r),
-                None => match &avg_b {
-                    Model::Kernel(k) => k.norm_sq(),
-                    Model::Linear(l) => l.norm_sq(),
+            let avg_k = avg_b.as_kernel().expect("kernel balancing set");
+            let dist = match ug.try_coeffs(avg_k) {
+                Some(avg_coeffs) => {
+                    let mut r_coeffs = vec![0.0; ug.len()];
+                    if let Some((rows, alphas)) = &r_sparse {
+                        ug.scatter(rows, alphas, &mut r_coeffs);
+                    }
+                    ug.distance_sq(&avg_coeffs, &r_coeffs)
+                }
+                None => match &self.reference {
+                    Some(r) => avg_b.distance_sq(r),
+                    None => avg_k.norm_sq(),
                 },
             };
             if dist <= delta {
-                let avg_k = avg_b.as_kernel().unwrap();
                 for &i in &b {
                     let (coeffs, new_svs) = self.decoder.encode_download(i, avg_k);
                     let msg = Message::ModelDownload {

@@ -123,12 +123,9 @@ impl PredictionService {
                 return Ok((y[..n].iter().map(|&v| v as f64).collect(), ScorePath::Xla));
             }
         }
-        // Native fallback.
+        // Native fallback: one blocked GEMM-shaped sweep over the batch.
         self.native_batches += 1;
-        Ok((
-            queries.iter().map(|q| self.model.predict(q)).collect(),
-            ScorePath::Native,
-        ))
+        Ok((self.model.predict_batch(queries), ScorePath::Native))
     }
 
     pub fn batch_size(&self) -> usize {

@@ -2,7 +2,7 @@
 //! Gaussian (RBF) kernel; linear and polynomial are provided for the
 //! baselines and tests.
 
-use crate::util::float::{dot, sq_dist};
+use crate::util::float::{dot, exp_slice, sq_dist};
 
 /// A positive-definite kernel function.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -23,6 +23,36 @@ impl Kernel {
             Kernel::Linear => dot(x, z),
             Kernel::Rbf { gamma } => (-gamma * sq_dist(x, z)).exp(),
             Kernel::Polynomial { degree, c } => (dot(x, z) + c).powi(degree as i32),
+        }
+    }
+
+    /// Finish a blocked dot-product sweep: on entry `vals[j] = <x, z_j>`
+    /// (raw dot products against one fixed `x`); on exit
+    /// `vals[j] = k(x, z_j)`, using the cached squared norms
+    /// `nx = ||x||^2` and `nzs[j] = ||z_j||^2`.
+    ///
+    /// This is the dot-product formulation of every kernel sweep in the
+    /// crate: for RBF, `||x - z||^2 = ||x||^2 + ||z||^2 - 2<x, z>`
+    /// (clamped at 0 against cancellation, exactly like `sq_dist` is
+    /// nonnegative by construction), so the whole block reduces to a GEMV
+    /// row plus one vectorized `exp_slice` — no per-pair `sq_dist`
+    /// recomputation and no scalar `exp` calls.
+    #[inline]
+    pub fn apply_dot_block(&self, vals: &mut [f64], nx: f64, nzs: &[f64]) {
+        debug_assert_eq!(vals.len(), nzs.len());
+        match *self {
+            Kernel::Linear => {}
+            Kernel::Rbf { gamma } => {
+                for (v, &nz) in vals.iter_mut().zip(nzs) {
+                    *v = -gamma * (nx + nz - 2.0 * *v).max(0.0);
+                }
+                exp_slice(vals);
+            }
+            Kernel::Polynomial { degree, c } => {
+                for v in vals.iter_mut() {
+                    *v = (*v + c).powi(degree as i32);
+                }
+            }
         }
     }
 
@@ -77,6 +107,47 @@ mod tests {
     fn polynomial() {
         let k = Kernel::Polynomial { degree: 2, c: 1.0 };
         assert_eq!(k.eval(&[1.0, 1.0], &[1.0, 1.0]), 9.0);
+    }
+
+    #[test]
+    fn dot_block_matches_pairwise_eval() {
+        // Same pair, two formulations: `eval` (sq_dist + libm exp) vs the
+        // dot-product block (norm identity + vectorized exp). The two
+        // reassociate the exponent differently, so agreement is to ~1e-12
+        // absolute, not bitwise.
+        use crate::util::float::{dot, sq_norm};
+        let xs: Vec<Vec<f64>> = vec![
+            vec![0.3, -1.2, 0.7],
+            vec![2.0, 0.1, -0.4],
+            vec![0.0, 0.0, 0.0],
+            vec![-3.5, 2.2, 1.9],
+        ];
+        let q = [0.9, -0.3, 1.4];
+        for k in [
+            Kernel::Linear,
+            Kernel::Rbf { gamma: 0.7 },
+            Kernel::Polynomial { degree: 3, c: 0.5 },
+        ] {
+            let mut vals: Vec<f64> = xs.iter().map(|x| dot(&q, x)).collect();
+            let norms: Vec<f64> = xs.iter().map(|x| sq_norm(x)).collect();
+            k.apply_dot_block(&mut vals, sq_norm(&q), &norms);
+            for (v, x) in vals.iter().zip(&xs) {
+                let want = k.eval(&q, x);
+                assert!((v - want).abs() < 1e-12, "{k:?}: {v} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_block_is_exact_at_coincident_points() {
+        // x == z: the norm identity cancels exactly (nx + nz - 2<x,z> is
+        // bitwise 0), so RBF gives exactly 1.
+        use crate::util::float::{dot, sq_norm};
+        let x = [1.5, -2.25, 0.5];
+        let k = Kernel::Rbf { gamma: 1.3 };
+        let mut vals = [dot(&x, &x)];
+        k.apply_dot_block(&mut vals, sq_norm(&x), &[sq_norm(&x)]);
+        assert_eq!(vals[0], 1.0);
     }
 
     #[test]

@@ -1,7 +1,16 @@
 //! Gram-matrix computation and small dense linear algebra (Cholesky solve)
-//! used by projection-based compression and the divergence service.
+//! used by projection-based compression and the divergence service, plus
+//! the deduplicated [`UnionGram`] the synchronization pipeline shares.
+//!
+//! All Gram blocks are computed in the dot-product formulation: raw GEMM
+//! rows of `<a_i, b_j>` first, then one [`Kernel::apply_dot_block`] per
+//! row with the cached point norms — never a per-pair `Kernel::eval` loop.
+
+use std::collections::HashMap;
 
 use crate::kernel::functions::Kernel;
+use crate::kernel::model::{SvId, SvModel};
+use crate::util::float::{dot, sq_norm};
 
 /// Dense row-major Gram matrix K[i * cols + j] = k(a_i, b_j).
 #[derive(Debug, Clone)]
@@ -11,36 +20,90 @@ pub struct Gram {
     pub data: Vec<f64>,
 }
 
+/// Row-wise squared norms of a flat `n x dim` point set.
+fn row_norms(a: &[f64], dim: usize) -> Vec<f64> {
+    a.chunks_exact(dim).map(sq_norm).collect()
+}
+
 impl Gram {
+    /// Capacity-aware constructor: an empty (0 x 0) matrix whose backing
+    /// storage is pre-allocated for `n x n` — the union-Gram pipeline and
+    /// other growing callers use it to avoid realloc churn while filling.
+    pub fn with_capacity(n: usize) -> Gram {
+        Gram {
+            rows: 0,
+            cols: 0,
+            data: Vec::with_capacity(n * n),
+        }
+    }
+
     /// Compute the Gram block between two flat point sets (`a` is
     /// `rows x dim`, `b` is `cols x dim`).
     pub fn compute(kernel: &Kernel, a: &[f64], b: &[f64], dim: usize) -> Gram {
+        let na = row_norms(a, dim);
+        let nb = row_norms(b, dim);
+        Self::compute_with_norms(kernel, a, &na, b, &nb, dim)
+    }
+
+    /// [`Gram::compute`] with caller-supplied squared norms (`na[i] =
+    /// ||a_i||^2`, `nb[j] = ||b_j||^2`), e.g. from
+    /// [`SvModel::sv_norms_sq`] — skips the norm pass entirely.
+    pub fn compute_with_norms(
+        kernel: &Kernel,
+        a: &[f64],
+        na: &[f64],
+        b: &[f64],
+        nb: &[f64],
+        dim: usize,
+    ) -> Gram {
         assert_eq!(a.len() % dim, 0);
         assert_eq!(b.len() % dim, 0);
         let rows = a.len() / dim;
         let cols = b.len() / dim;
+        debug_assert_eq!(na.len(), rows);
+        debug_assert_eq!(nb.len(), cols);
         let mut data = vec![0.0; rows * cols];
         for i in 0..rows {
             let ai = &a[i * dim..(i + 1) * dim];
             let row = &mut data[i * cols..(i + 1) * cols];
-            for (j, rj) in row.iter_mut().enumerate() {
-                *rj = kernel.eval(ai, &b[j * dim..(j + 1) * dim]);
+            for (rj, bj) in row.iter_mut().zip(b.chunks_exact(dim)) {
+                *rj = dot(ai, bj);
             }
+            kernel.apply_dot_block(row, na[i], nb);
         }
         Gram { rows, cols, data }
     }
 
     /// Symmetric self-Gram of one point set, exploiting symmetry.
     pub fn compute_symmetric(kernel: &Kernel, a: &[f64], dim: usize) -> Gram {
+        let na = row_norms(a, dim);
+        Self::compute_symmetric_with_norms(kernel, a, &na, dim)
+    }
+
+    /// [`Gram::compute_symmetric`] with caller-supplied squared norms.
+    pub fn compute_symmetric_with_norms(
+        kernel: &Kernel,
+        a: &[f64],
+        na: &[f64],
+        dim: usize,
+    ) -> Gram {
+        assert_eq!(a.len() % dim, 0);
         let n = a.len() / dim;
+        debug_assert_eq!(na.len(), n);
         let mut data = vec![0.0; n * n];
         for i in 0..n {
             let ai = &a[i * dim..(i + 1) * dim];
             data[i * n + i] = kernel.eval_self(ai);
+            let row = &mut data[i * n + i + 1..(i + 1) * n];
+            for (rj, aj) in row.iter_mut().zip(a[(i + 1) * dim..].chunks_exact(dim)) {
+                *rj = dot(ai, aj);
+            }
+            kernel.apply_dot_block(row, na[i], &na[i + 1..]);
+        }
+        // Mirror the strict upper triangle.
+        for i in 0..n {
             for j in (i + 1)..n {
-                let v = kernel.eval(ai, &a[j * dim..(j + 1) * dim]);
-                data[i * n + j] = v;
-                data[j * n + i] = v;
+                data[j * n + i] = data[i * n + j];
             }
         }
         Gram {
@@ -133,6 +196,205 @@ pub fn cholesky_solve(k: &Gram, b: &[f64], ridge: f64) -> Option<Vec<f64>> {
     Some(cholesky_solve_with(&l, b))
 }
 
+/// Deduplicated union of several support-vector expansions together with
+/// its (lazily extended) symmetric Gram matrix — the shared geometry of a
+/// synchronization event.
+///
+/// Every sync-time quantity — pairwise inner products, subset-average
+/// distances, the `||avg_B - r||^2 <= Delta` safe-zone check, the Eq. 1
+/// divergence — is a quadratic form over this one matrix, so the kernel
+/// evaluations are paid once per union pair per event instead of once per
+/// query.
+///
+/// Dedup key: [`SvId`] *plus* bitwise-equal coordinates. The same id can
+/// legitimately carry slightly different coordinates in different models
+/// (a learner keeps its own f64 originals while peers hold the
+/// f32-quantized wire copies), and collapsing those would change results;
+/// keeping one row per distinct (id, coords) variant makes every quadratic
+/// form exactly equal (up to summation order) to the naive pairwise
+/// computation.
+#[derive(Debug)]
+pub struct UnionGram {
+    kernel: Kernel,
+    dim: usize,
+    /// Flat union points (row-major `len x dim`).
+    xs: Vec<f64>,
+    /// Cached `||x_r||^2` per union row.
+    norms: Vec<f64>,
+    ids: Vec<SvId>,
+    /// id -> union rows holding that id's coordinate variants.
+    index: HashMap<SvId, Vec<u32>>,
+    gram: Gram,
+    /// Rows already covered by `gram` (rows beyond it are pending).
+    gram_n: usize,
+}
+
+impl UnionGram {
+    pub fn new(kernel: Kernel, dim: usize) -> Self {
+        UnionGram {
+            kernel,
+            dim,
+            xs: Vec::new(),
+            norms: Vec::new(),
+            ids: Vec::new(),
+            index: HashMap::new(),
+            gram: Gram {
+                rows: 0,
+                cols: 0,
+                data: Vec::new(),
+            },
+            gram_n: 0,
+        }
+    }
+
+    /// Pre-sized for `cap` union rows (shares [`Gram::with_capacity`]).
+    pub fn with_capacity(kernel: Kernel, dim: usize, cap: usize) -> Self {
+        UnionGram {
+            kernel,
+            dim,
+            xs: Vec::with_capacity(cap * dim),
+            norms: Vec::with_capacity(cap),
+            ids: Vec::with_capacity(cap),
+            index: HashMap::with_capacity(cap),
+            gram: Gram::with_capacity(cap),
+            gram_n: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Union row of one (id, coords) pair, if present.
+    fn find_row(&self, id: SvId, x: &[f64]) -> Option<u32> {
+        self.index.get(&id).and_then(|rows| {
+            rows.iter().copied().find(|&r| {
+                let r = r as usize;
+                self.xs[r * self.dim..(r + 1) * self.dim] == *x
+            })
+        })
+    }
+
+    /// Register a model's support vectors, returning the union row of each
+    /// SV in model order. New (id, coords) variants append rows; the Gram
+    /// extension is deferred until the next quadratic form.
+    pub fn add_model(&mut self, m: &SvModel) -> Vec<u32> {
+        debug_assert_eq!(m.dim, self.dim);
+        debug_assert_eq!(m.kernel, self.kernel);
+        let mut rows = Vec::with_capacity(m.len());
+        for i in 0..m.len() {
+            let id = m.ids()[i];
+            let x = m.sv(i);
+            let row = match self.find_row(id, x) {
+                Some(r) => r,
+                None => {
+                    let r = self.ids.len() as u32;
+                    self.ids.push(id);
+                    self.xs.extend_from_slice(x);
+                    self.norms.push(m.sv_norms_sq()[i]);
+                    self.index.entry(id).or_default().push(r);
+                    r
+                }
+            };
+            rows.push(row);
+        }
+        rows
+    }
+
+    /// Coefficient vector (length `len()`) of a model already covered by
+    /// this union; None if any of its SVs is absent (defensive — callers
+    /// fall back to the direct model-space computation).
+    pub fn try_coeffs(&self, m: &SvModel) -> Option<Vec<f64>> {
+        let mut out = vec![0.0; self.len()];
+        for i in 0..m.len() {
+            let r = self.find_row(m.ids()[i], m.sv(i))?;
+            out[r as usize] += m.alpha()[i];
+        }
+        Some(out)
+    }
+
+    /// Accumulate `alpha` onto the rows returned by [`UnionGram::add_model`].
+    pub fn scatter(&self, rows: &[u32], alpha: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(rows.len(), alpha.len());
+        debug_assert_eq!(out.len(), self.len());
+        for (&r, &a) in rows.iter().zip(alpha) {
+            out[r as usize] += a;
+        }
+    }
+
+    /// Extend the symmetric Gram to cover all rows (no-op when current).
+    /// Only the new blocks are evaluated; the existing block is re-strided
+    /// in place, so an event reuses one [`Gram::with_capacity`] allocation
+    /// across every extension.
+    fn ensure_gram(&mut self) {
+        let n = self.len();
+        let old = self.gram_n;
+        if old == n {
+            return;
+        }
+        let mut data = std::mem::take(&mut self.gram.data);
+        data.resize(n * n, 0.0);
+        // Re-stride the old n_old x n_old block to the new row length,
+        // descending so a row's destination never overwrites an unmoved
+        // source (row 0 is already in place; copy_within is memmove-safe).
+        for i in (1..old).rev() {
+            data.copy_within(i * old..(i + 1) * old, i * n);
+        }
+        for i in 0..n {
+            let ai = &self.xs[i * self.dim..(i + 1) * self.dim];
+            if i >= old {
+                data[i * n + i] = self.kernel.eval_self(ai);
+            }
+            // New cells of the upper triangle: columns [max(old, i+1), n).
+            let jstart = old.max(i + 1);
+            if jstart >= n {
+                continue;
+            }
+            let row = &mut data[i * n + jstart..(i + 1) * n];
+            for (rj, aj) in row
+                .iter_mut()
+                .zip(self.xs[jstart * self.dim..].chunks_exact(self.dim))
+            {
+                *rj = dot(ai, aj);
+            }
+            self.kernel
+                .apply_dot_block(row, self.norms[i], &self.norms[jstart..n]);
+        }
+        // Mirror the new upper-triangle cells.
+        for i in 0..n {
+            for j in old.max(i + 1)..n {
+                data[j * n + i] = data[i * n + j];
+            }
+        }
+        self.gram = Gram {
+            rows: n,
+            cols: n,
+            data,
+        };
+        self.gram_n = n;
+    }
+
+    /// Quadratic form v^T K w over the union Gram (extends it on demand).
+    pub fn quad_form(&mut self, v: &[f64], w: &[f64]) -> f64 {
+        self.ensure_gram();
+        self.gram.quad_form(v, w)
+    }
+
+    /// `||sum_r (a_r - b_r) k(x_r, .)||^2` — RKHS distance between two
+    /// coefficient vectors on this union, clamped at 0. Exactly 0 when
+    /// `a == b` bitwise (the difference vector is identically zero).
+    pub fn distance_sq(&mut self, a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), self.len());
+        debug_assert_eq!(b.len(), self.len());
+        let diff: Vec<f64> = a.iter().zip(b).map(|(&x, &y)| x - y).collect();
+        self.quad_form(&diff, &diff).max(0.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +402,9 @@ mod tests {
 
     #[test]
     fn gram_matches_pairwise_eval() {
+        // The Gram path uses the dot-product RBF identity; `eval` uses
+        // sq_dist + libm exp. The reassociated exponent shifts values by
+        // a few 1e-15, hence the (documented) 1e-12 tolerance.
         let k = Kernel::Rbf { gamma: 0.7 };
         let a = [0.0, 0.0, 1.0, 0.0, 0.0, 2.0]; // 3 points in R^2
         let b = [1.0, 1.0, -1.0, 0.5]; // 2 points
@@ -148,7 +413,7 @@ mod tests {
         for i in 0..3 {
             for j in 0..2 {
                 let want = k.eval(&a[i * 2..i * 2 + 2], &b[j * 2..j * 2 + 2]);
-                assert!((g.at(i, j) - want).abs() < 1e-15);
+                assert!((g.at(i, j) - want).abs() < 1e-12);
             }
         }
     }
@@ -174,7 +439,7 @@ mod tests {
                 want += alpha[i] * alpha[j] * k.eval(&a[i..i + 1], &a[j..j + 1]);
             }
         }
-        assert!((g.quad_form(&alpha, &alpha) - want).abs() < 1e-14);
+        assert!((g.quad_form(&alpha, &alpha) - want).abs() < 1e-12);
     }
 
     #[test]
@@ -208,5 +473,96 @@ mod tests {
             data: vec![1.0, 2.0, 2.0, 1.0], // eigenvalues 3, -1
         };
         assert!(cholesky_solve(&g, &[1.0, 1.0], 0.0).is_none());
+    }
+
+    fn toy_model(ids: &[(u64, f64)], base: f64) -> SvModel {
+        let mut m = SvModel::new(Kernel::Rbf { gamma: 0.8 }, 2);
+        for &(id, a) in ids {
+            m.push(id, &[base + id as f64 * 0.3, base - id as f64 * 0.1], a);
+        }
+        m
+    }
+
+    #[test]
+    fn union_dedups_shared_ids_with_equal_coords() {
+        let a = toy_model(&[(1, 0.5), (2, -0.25)], 0.0);
+        let mut b = toy_model(&[(3, 1.0)], 5.0);
+        // b also carries id 1 with *identical* coordinates (post-sync SV).
+        b.push(1, a.sv(0), 0.125);
+        let mut ug = UnionGram::new(a.kernel, a.dim);
+        let ra = ug.add_model(&a);
+        let rb = ug.add_model(&b);
+        assert_eq!(ug.len(), 3); // id 1 collapsed
+        assert_eq!(ra[0], rb[1]);
+        // Gram-backed inner product == model-space inner product.
+        let ca = ug.try_coeffs(&a).unwrap();
+        let cb = ug.try_coeffs(&b).unwrap();
+        let want = a.inner(&b);
+        let got = ug.quad_form(&ca, &cb);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn union_keeps_coordinate_variants_distinct() {
+        // The same id with f32-quantized coordinates must occupy its own
+        // row: collapsing it would silently change distances.
+        let a = toy_model(&[(7, 1.0)], 0.4);
+        let mut b = SvModel::new(a.kernel, a.dim);
+        let quantized: Vec<f64> = a.sv(0).iter().map(|&v| v as f32 as f64).collect();
+        b.push(7, &quantized, 1.0);
+        let mut ug = UnionGram::new(a.kernel, a.dim);
+        ug.add_model(&a);
+        ug.add_model(&b);
+        assert_eq!(ug.len(), 2);
+        let ca = ug.try_coeffs(&a).unwrap();
+        let cb = ug.try_coeffs(&b).unwrap();
+        let want = a.distance_sq(&b);
+        let got = ug.distance_sq(&ca, &cb);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn union_distance_is_exactly_zero_for_identical_coeffs() {
+        let a = toy_model(&[(1, 0.3), (2, 0.7), (9, -1.1)], 1.0);
+        let mut ug = UnionGram::new(a.kernel, a.dim);
+        ug.add_model(&a);
+        let c = ug.try_coeffs(&a).unwrap();
+        assert_eq!(ug.distance_sq(&c, &c), 0.0);
+    }
+
+    #[test]
+    fn union_gram_extends_incrementally() {
+        // Quadratic forms after an incremental extension match a union
+        // built in one shot.
+        let a = toy_model(&[(1, 0.4), (2, 0.6)], 0.0);
+        let b = toy_model(&[(3, -0.2), (4, 0.9)], 2.0);
+        let mut inc = UnionGram::new(a.kernel, a.dim);
+        inc.add_model(&a);
+        let ca0 = inc.try_coeffs(&a).unwrap();
+        let _ = inc.quad_form(&ca0, &ca0); // force the first gram build
+        inc.add_model(&b); // now extend
+        let ca = inc.try_coeffs(&a).unwrap();
+        let cb = inc.try_coeffs(&b).unwrap();
+
+        let mut oneshot = UnionGram::new(a.kernel, a.dim);
+        oneshot.add_model(&a);
+        oneshot.add_model(&b);
+        let ca2 = oneshot.try_coeffs(&a).unwrap();
+        let cb2 = oneshot.try_coeffs(&b).unwrap();
+
+        let d1 = inc.distance_sq(&ca, &cb);
+        let d2 = oneshot.distance_sq(&ca2, &cb2);
+        assert!((d1 - d2).abs() < 1e-15, "{d1} vs {d2}");
+        let want = a.distance_sq(&b);
+        assert!((d1 - want).abs() < 1e-12, "{d1} vs model-space {want}");
+    }
+
+    #[test]
+    fn union_try_coeffs_rejects_foreign_svs() {
+        let a = toy_model(&[(1, 1.0)], 0.0);
+        let b = toy_model(&[(2, 1.0)], 3.0);
+        let mut ug = UnionGram::new(a.kernel, a.dim);
+        ug.add_model(&a);
+        assert!(ug.try_coeffs(&b).is_none());
     }
 }

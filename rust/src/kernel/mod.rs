@@ -2,6 +2,39 @@
 //! (the paper's dual representation), Gram matrices and model averaging
 //! (Prop. 2). This is both the native compute backend and the oracle the
 //! PJRT path is tested against.
+//!
+//! # Dot-product geometry
+//!
+//! Every hot loop is a *blocked dot-product sweep*, not a per-pair
+//! `Kernel::eval` loop. The RBF kernel is evaluated through the norm
+//! identity
+//!
+//! ```text
+//! k(x, z) = exp(-gamma ||x - z||^2)
+//!         = exp(-gamma (||x||^2 + ||z||^2 - 2 <x, z>))
+//! ```
+//!
+//! so a sweep over n support vectors is one GEMV row of raw dot products
+//! `<x, z_j>` plus a single vectorized exponential over the block
+//! (`util::float::exp_slice`), instead of n `sq_dist` passes and n libm
+//! calls. The squared-distance term is clamped at 0 before the exp: the
+//! identity can go negative by cancellation where `sq_dist` cannot.
+//!
+//! # Norm-cache invariants
+//!
+//! [`SvModel`] maintains `sv_norms_sq()[i] == sq_norm(sv(i))` **bitwise**,
+//! across `push`/`push_with_norm`/`swap_remove`/`remove_ordered`/`prune`/
+//! `replace_with`/`average`. Bitwise (not just approximate) equality
+//! matters: it makes `k(x, x)` evaluate to exactly 1 under the identity
+//! above (the exponent cancels exactly), keeps `distance_sq(f, f) == 0`,
+//! and lets [`UnionGram`] reuse model norms without re-deriving them.
+//! `alpha_mut` only exposes coefficients, so no public mutation can break
+//! the invariant.
+//!
+//! [`UnionGram`] is the sync-time form of the same idea: the deduplicated
+//! union of several expansions with one shared Gram matrix, on which every
+//! pairwise inner product, subset-average distance and divergence is an
+//! O(n^2) quadratic form.
 
 pub mod functions;
 pub mod gram;
@@ -9,6 +42,6 @@ pub mod linear;
 pub mod model;
 
 pub use functions::Kernel;
-pub use gram::Gram;
+pub use gram::{Gram, UnionGram};
 pub use linear::LinearModel;
 pub use model::{Model, SvModel};

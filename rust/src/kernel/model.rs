@@ -1,10 +1,20 @@
 //! Support-vector-expansion models — the paper's dual representation
 //! `f(.) = sum_{x in S} alpha_x k(x, .)` — plus the unified [`Model`] type
 //! (linear or kernelized) the learners and protocols operate on.
+//!
+//! All RKHS quantities (`predict`, `inner`, `norm_sq`, `distance_sq`) run
+//! as blocked dot-product sweeps over the flat SV storage: raw GEMV-style
+//! dot products first, then one [`Kernel::apply_dot_block`] per block.
+//! Each SV's squared Euclidean norm is cached at insertion
+//! ([`SvModel::sv_norms_sq`]) so the RBF distance identity never
+//! recomputes `||x_i||^2`.
 
 use crate::kernel::functions::Kernel;
 use crate::kernel::linear::LinearModel;
-use crate::util::float::axpy;
+use crate::util::float::{axpy, dot, sq_norm};
+
+/// Block width of the dot-product sweeps (stack buffer; 1 KiB).
+const BLOCK: usize = 128;
 
 /// Globally unique support-vector identity.
 ///
@@ -24,7 +34,10 @@ pub fn make_sv_id(learner: usize, counter: u64) -> SvId {
 /// A kernel model in its support-vector expansion.
 ///
 /// Storage is flat (`xs[i * dim .. (i+1) * dim]` is SV `i`) so prediction
-/// walks memory linearly; `ids[i]` and `alpha[i]` are parallel arrays.
+/// walks memory linearly; `ids[i]`, `alpha[i]` and `norm_x_sq[i]` are
+/// parallel arrays. `norm_x_sq[i]` caches `||x_i||^2` (bitwise equal to
+/// `sq_norm(sv(i))`, maintained across push/remove/replace/average) so
+/// the dot-product kernel sweeps never recompute point norms.
 /// The RKHS norm ||f||^2 is maintained incrementally where cheap and
 /// recomputed exactly where not — see [`SvModel::norm_sq`].
 #[derive(Debug, Clone)]
@@ -34,6 +47,7 @@ pub struct SvModel {
     xs: Vec<f64>,
     alpha: Vec<f64>,
     ids: Vec<SvId>,
+    norm_x_sq: Vec<f64>,
 }
 
 impl SvModel {
@@ -44,6 +58,20 @@ impl SvModel {
             xs: Vec::new(),
             alpha: Vec::new(),
             ids: Vec::new(),
+            norm_x_sq: Vec::new(),
+        }
+    }
+
+    /// Pre-sized constructor: room for `cap_svs` support vectors with no
+    /// realloc (used by [`SvModel::average`] for the m*tau union).
+    pub fn with_capacity(kernel: Kernel, dim: usize, cap_svs: usize) -> Self {
+        SvModel {
+            kernel,
+            dim,
+            xs: Vec::with_capacity(cap_svs * dim),
+            alpha: Vec::with_capacity(cap_svs),
+            ids: Vec::with_capacity(cap_svs),
+            norm_x_sq: Vec::with_capacity(cap_svs),
         }
     }
 
@@ -78,12 +106,31 @@ impl SvModel {
         &self.xs
     }
 
-    /// Append a support vector.
+    /// Cached squared Euclidean norms `||x_i||^2`, parallel to the SVs.
+    /// Invariant: `sv_norms_sq()[i]` is bitwise equal to
+    /// `sq_norm(self.sv(i))` at all times.
+    pub fn sv_norms_sq(&self) -> &[f64] {
+        &self.norm_x_sq
+    }
+
+    /// Append a support vector (caches its squared norm).
     pub fn push(&mut self, id: SvId, x: &[f64], alpha: f64) {
         debug_assert_eq!(x.len(), self.dim);
         self.xs.extend_from_slice(x);
         self.alpha.push(alpha);
         self.ids.push(id);
+        self.norm_x_sq.push(sq_norm(x));
+    }
+
+    /// Append a support vector whose squared norm the caller already
+    /// holds (e.g. copying between expansions) — skips the O(d) recompute.
+    pub fn push_with_norm(&mut self, id: SvId, x: &[f64], alpha: f64, norm_x_sq: f64) {
+        debug_assert_eq!(x.len(), self.dim);
+        debug_assert_eq!(norm_x_sq.to_bits(), sq_norm(x).to_bits());
+        self.xs.extend_from_slice(x);
+        self.alpha.push(alpha);
+        self.ids.push(id);
+        self.norm_x_sq.push(norm_x_sq);
     }
 
     /// Remove support vector `i` (swap-remove; order is not semantic).
@@ -98,6 +145,7 @@ impl SvModel {
         self.xs.truncate(last * self.dim);
         self.alpha.swap_remove(i);
         self.ids.swap_remove(i);
+        self.norm_x_sq.swap_remove(i);
     }
 
     /// Remove support vector `i` preserving insertion order (needed by
@@ -108,6 +156,7 @@ impl SvModel {
         self.xs.drain(i * self.dim..(i + 1) * self.dim);
         self.alpha.remove(i);
         self.ids.remove(i);
+        self.norm_x_sq.remove(i);
     }
 
     /// Multiply every coefficient by `c` (the (1 - eta lambda) decay).
@@ -118,48 +167,126 @@ impl SvModel {
     }
 
     /// Drop SVs with |alpha| below `tol` (keeps the expansion tidy after
-    /// decay; exact up to the discarded mass).
+    /// decay; exact up to the discarded mass). Preserves insertion order —
+    /// truncation relies on position 0 being the *oldest* SV, which a
+    /// swap-removing prune used to silently break.
     pub fn prune(&mut self, tol: f64) {
-        let mut i = 0;
-        while i < self.len() {
+        let mut keep = 0usize;
+        for i in 0..self.len() {
             if self.alpha[i].abs() < tol {
-                self.swap_remove(i);
-            } else {
-                i += 1;
+                continue;
             }
+            if keep != i {
+                self.xs.copy_within(i * self.dim..(i + 1) * self.dim, keep * self.dim);
+                self.alpha[keep] = self.alpha[i];
+                self.ids[keep] = self.ids[i];
+                self.norm_x_sq[keep] = self.norm_x_sq[i];
+            }
+            keep += 1;
         }
+        self.xs.truncate(keep * self.dim);
+        self.alpha.truncate(keep);
+        self.ids.truncate(keep);
+        self.norm_x_sq.truncate(keep);
     }
 
-    /// f(x) = sum_i alpha_i k(sv_i, x). The system's hot path.
-    pub fn predict(&self, x: &[f64]) -> f64 {
+    /// Shared inner step of every blocked sweep: fill
+    /// `out[r] = k(sv(start + r), x)` for one block — raw dot products
+    /// (GEMV row) first, then one [`Kernel::apply_dot_block`] with the
+    /// cached norms. Everything vectorizable, nothing allocated.
+    #[inline]
+    fn kernel_block(&self, start: usize, x: &[f64], nx: f64, out: &mut [f64]) {
+        let len = out.len();
+        debug_assert!(start + len <= self.len());
+        for (r, slot) in out.iter_mut().enumerate() {
+            *slot = dot(self.sv(start + r), x);
+        }
+        self.kernel
+            .apply_dot_block(out, nx, &self.norm_x_sq[start..start + len]);
+    }
+
+    /// Core blocked sweep: `sum_i w[i] k(x_i, x)` for a query `x` with
+    /// precomputed `nx = ||x||^2`.
+    fn weighted_kernel_sum(&self, x: &[f64], nx: f64, w: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.dim);
+        debug_assert_eq!(w.len(), self.len());
         let mut acc = 0.0;
-        for i in 0..self.len() {
-            acc += self.alpha[i] * self.kernel.eval(self.sv(i), x);
+        let mut buf = [0.0f64; BLOCK];
+        let n = self.len();
+        let mut start = 0;
+        while start < n {
+            let len = BLOCK.min(n - start);
+            self.kernel_block(start, x, nx, &mut buf[..len]);
+            acc += dot(&buf[..len], &w[start..start + len]);
+            start += len;
         }
         acc
     }
 
-    /// <f, g> in the RKHS: sum_ij alpha_i beta_j k(x_i, z_j).
+    /// f(x) = sum_i alpha_i k(sv_i, x). The system's hot path — a blocked
+    /// dot-product (GEMV-shaped) sweep over the flat SV storage.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        self.weighted_kernel_sum(x, sq_norm(x), &self.alpha)
+    }
+
+    /// Score a batch of queries in one call (the GEMM-shaped variant:
+    /// each SV block is streamed once per query while hot in cache). Used
+    /// by the prediction service's native path and the benches. Result
+    /// `out[i]` is bitwise identical to `predict(&queries[i])`.
+    pub fn predict_batch(&self, queries: &[Vec<f64>]) -> Vec<f64> {
+        let mut out = vec![0.0; queries.len()];
+        let qnorms: Vec<f64> = queries.iter().map(|q| sq_norm(q)).collect();
+        let n = self.len();
+        let mut buf = [0.0f64; BLOCK];
+        let mut start = 0;
+        while start < n {
+            let len = BLOCK.min(n - start);
+            for (qi, q) in queries.iter().enumerate() {
+                self.kernel_block(start, q, qnorms[qi], &mut buf[..len]);
+                out[qi] += dot(&buf[..len], &self.alpha[start..start + len]);
+            }
+            start += len;
+        }
+        out
+    }
+
+    /// k(x_i, x) for every SV (one Gram row against an external point),
+    /// as a blocked sweep. Used by projection compression.
+    pub fn kernel_row(&self, x: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(x.len(), self.dim);
+        let nx = sq_norm(x);
+        let n = self.len();
+        let mut out = vec![0.0; n];
+        let mut start = 0;
+        while start < n {
+            let len = BLOCK.min(n - start);
+            self.kernel_block(start, x, nx, &mut out[start..start + len]);
+            start += len;
+        }
+        out
+    }
+
+    /// <f, g> in the RKHS: sum_ij alpha_i beta_j k(x_i, z_j), computed as
+    /// one Gram-block row sweep per SV of `self` (never a nested
+    /// per-pair `Kernel::eval` loop).
     pub fn inner(&self, other: &SvModel) -> f64 {
+        debug_assert_eq!(self.dim, other.dim);
         let mut acc = 0.0;
         for i in 0..self.len() {
-            let xi = self.sv(i);
             let ai = self.alpha[i];
             if ai == 0.0 {
                 continue;
             }
-            for j in 0..other.len() {
-                let bj = other.alpha[j];
-                if bj == 0.0 {
-                    continue;
-                }
-                acc += ai * bj * self.kernel.eval(xi, other.sv(j));
-            }
+            acc += ai * other.weighted_kernel_sum(self.sv(i), self.norm_x_sq[i], &other.alpha);
         }
         acc
     }
 
     /// ||f||^2 = <f, f>.
+    ///
+    /// Deliberately `inner(self)` (not a symmetry-halved loop): the same
+    /// accumulation order as `inner` makes `distance_sq(f, f)` cancel to
+    /// exactly 0.
     pub fn norm_sq(&self) -> f64 {
         self.inner(self)
     }
@@ -167,7 +294,20 @@ impl SvModel {
     /// ||f - g||^2 = ||f||^2 + ||g||^2 - 2 <f, g>, clamped at 0 against
     /// floating-point cancellation.
     pub fn distance_sq(&self, other: &SvModel) -> f64 {
-        (self.norm_sq() + other.norm_sq() - 2.0 * self.inner(other)).max(0.0)
+        self.distance_sq_with_norms(other, self.norm_sq(), other.norm_sq())
+    }
+
+    /// [`SvModel::distance_sq`] for callers that already hold one or both
+    /// RKHS norms (the learner, the condition trackers, the leader cache
+    /// theirs) — skips the O(n^2 d)-equivalent norm recomputation and
+    /// pays only the cross inner product.
+    pub fn distance_sq_with_norms(
+        &self,
+        other: &SvModel,
+        self_norm_sq: f64,
+        other_norm_sq: f64,
+    ) -> f64 {
+        (self_norm_sq + other_norm_sq - 2.0 * self.inner(other)).max(0.0)
     }
 
     /// Replace the whole expansion (used when adopting a synchronized
@@ -179,16 +319,22 @@ impl SvModel {
         self.alpha.extend_from_slice(&other.alpha);
         self.ids.clear();
         self.ids.extend_from_slice(&other.ids);
+        self.norm_x_sq.clear();
+        self.norm_x_sq.extend_from_slice(&other.norm_x_sq);
     }
 
     /// Prop. 2: average of a model configuration. Support set is the
     /// *union* (by id) of all local support sets; each union coefficient is
     /// `1/m` times the sum of the local coefficients carried by that id.
+    /// The id-index map and the flat buffers are pre-sized for the full
+    /// m*tau union so the per-sync build never rehashes or reallocates.
     pub fn average(models: &[&SvModel]) -> SvModel {
         assert!(!models.is_empty());
         let m = models.len() as f64;
-        let mut avg = SvModel::new(models[0].kernel, models[0].dim);
-        let mut index: std::collections::HashMap<SvId, usize> = std::collections::HashMap::new();
+        let total: usize = models.iter().map(|f| f.len()).sum();
+        let mut avg = SvModel::with_capacity(models[0].kernel, models[0].dim, total);
+        let mut index: std::collections::HashMap<SvId, usize> =
+            std::collections::HashMap::with_capacity(total);
         for f in models {
             for i in 0..f.len() {
                 let id = f.ids[i];
@@ -196,7 +342,7 @@ impl SvModel {
                     Some(&j) => avg.alpha[j] += f.alpha[i] / m,
                     None => {
                         index.insert(id, avg.len());
-                        avg.push(id, f.sv(i), f.alpha[i] / m);
+                        avg.push_with_norm(id, f.sv(i), f.alpha[i] / m, f.norm_x_sq[i]);
                     }
                 }
             }
@@ -392,6 +538,116 @@ mod tests {
         f.prune(1e-8);
         assert_eq!(f.len(), 1);
         assert_eq!(f.ids(), &[1]);
+    }
+
+    #[test]
+    fn prune_preserves_insertion_order() {
+        // Regression: prune used to swap_remove, breaking the oldest-first
+        // ordering truncation depends on.
+        let mut f = SvModel::new(rbf(), 1);
+        for i in 0..6u64 {
+            let a = if i % 2 == 0 { 1e-12 } else { 0.5 + i as f64 };
+            f.push(i, &[i as f64], a);
+        }
+        f.prune(1e-8);
+        assert_eq!(f.ids(), &[1, 3, 5]);
+        assert_eq!(f.sv(0), &[1.0]);
+        assert_eq!(f.sv(1), &[3.0]);
+        assert_eq!(f.sv(2), &[5.0]);
+        assert_eq!(f.alpha(), &[1.5, 3.5, 5.5]);
+        // Norm cache compacted in lockstep.
+        for i in 0..f.len() {
+            assert_eq!(f.sv_norms_sq()[i], crate::util::float::sq_norm(f.sv(i)));
+        }
+    }
+
+    #[test]
+    fn norm_cache_tracks_all_mutations() {
+        let check = |f: &SvModel| {
+            assert_eq!(f.sv_norms_sq().len(), f.len());
+            for i in 0..f.len() {
+                assert_eq!(
+                    f.sv_norms_sq()[i].to_bits(),
+                    crate::util::float::sq_norm(f.sv(i)).to_bits(),
+                    "norm cache stale at sv {i}"
+                );
+            }
+        };
+        let mut f = SvModel::new(rbf(), 2);
+        for i in 0..5u64 {
+            f.push(i, &[i as f64, -(i as f64) * 0.5], 0.1 * i as f64 + 0.05);
+        }
+        check(&f);
+        f.swap_remove(1);
+        check(&f);
+        f.remove_ordered(0);
+        check(&f);
+        let mut g = SvModel::new(rbf(), 2);
+        g.replace_with(&f);
+        check(&g);
+        let avg = SvModel::average(&[&f, &g]);
+        check(&avg);
+    }
+
+    #[test]
+    fn predict_batch_is_bitwise_predict() {
+        let mut f = SvModel::new(rbf(), 3);
+        for i in 0..300u64 {
+            let v = i as f64 * 0.01;
+            f.push(i, &[v, -v, v * v * 0.1], if i % 2 == 0 { 0.3 } else { -0.2 });
+        }
+        let queries: Vec<Vec<f64>> = (0..7)
+            .map(|q| vec![q as f64 * 0.3, 1.0 - q as f64 * 0.1, 0.5])
+            .collect();
+        let batch = f.predict_batch(&queries);
+        for (q, got) in queries.iter().zip(&batch) {
+            assert_eq!(got.to_bits(), f.predict(q).to_bits());
+        }
+    }
+
+    #[test]
+    fn distance_with_norms_matches_plain() {
+        let mut f = SvModel::new(rbf(), 2);
+        f.push(1, &[0.2, 0.4], 0.9);
+        f.push(2, &[-1.0, 0.1], -0.4);
+        let mut g = SvModel::new(rbf(), 2);
+        g.push(3, &[0.5, -0.5], 0.7);
+        let d1 = f.distance_sq(&g);
+        let d2 = f.distance_sq_with_norms(&g, f.norm_sq(), g.norm_sq());
+        assert_eq!(d1.to_bits(), d2.to_bits());
+    }
+
+    #[test]
+    fn kernel_row_matches_eval() {
+        let mut f = SvModel::new(rbf(), 2);
+        for i in 0..150u64 {
+            f.push(i, &[i as f64 * 0.1, 1.0 - i as f64 * 0.05], 1.0);
+        }
+        let x = [0.33, -0.7];
+        let row = f.kernel_row(&x);
+        for i in 0..f.len() {
+            let want = f.kernel.eval(f.sv(i), &x);
+            assert!((row[i] - want).abs() < 1e-12, "row {i}: {} vs {want}", row[i]);
+        }
+    }
+
+    #[test]
+    fn blocked_predict_crosses_block_boundary() {
+        // Exercise n > BLOCK so the sweep takes multiple blocks; compare
+        // against the naive pairwise evaluation.
+        let mut f = SvModel::new(rbf(), 1);
+        for i in 0..260u64 {
+            f.push(i, &[(i as f64) * 0.02 - 2.0], if i % 3 == 0 { -0.1 } else { 0.2 });
+        }
+        let x = [0.123];
+        let naive: f64 = (0..f.len())
+            .map(|i| f.alpha()[i] * f.kernel.eval(f.sv(i), &x))
+            .sum();
+        let got = f.predict(&x);
+        assert!(
+            (got - naive).abs() <= 1e-9 * naive.abs().max(1.0),
+            "{got} vs {naive}"
+        );
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! `delta(f) = 1/m sum_i ||f^i - fbar||^2`, computed exactly in the dual
 //! representation (Sec. 2's extension to kernel Hilbert spaces).
 
-use crate::kernel::{Model, SvModel};
+use crate::kernel::{Model, SvModel, UnionGram};
 
 /// Divergence of a configuration plus the per-learner distances.
 #[derive(Debug, Clone)]
@@ -13,24 +13,63 @@ pub struct Divergence {
 
 /// Compute `delta(f)` and `||f^i - fbar||^2` for each learner.
 ///
-/// For kernel models the average is the Prop. 2 union expansion; the
-/// distances are quadratic forms over the union Gram matrix. Cost is
-/// O((sum_i |S^i|)^2 d) — it runs at synchronization points only, and has
-/// an XLA twin (`divergence_*.hlo.txt`) used by the PJRT backend.
+/// For kernel models the average is the Prop. 2 union expansion and every
+/// distance is a quadratic form over **one** deduplicated union Gram
+/// matrix ([`UnionGram`]): the kernel is evaluated once per union pair —
+/// O((sum_i |S^i|)^2 d) total — instead of once per (learner, pair),
+/// which redundantly re-evaluated the average's self-Gram m times. It
+/// runs at synchronization points only, and has an XLA twin
+/// (`divergence_*.hlo.txt`) used by the PJRT backend.
 pub fn configuration_divergence(models: &[&Model]) -> Divergence {
     assert!(!models.is_empty());
+    if let Model::Kernel(_) = models[0] {
+        let fs: Vec<&SvModel> = models
+            .iter()
+            .map(|m| m.as_kernel().expect("mixed configuration"))
+            .collect();
+        return kernel_divergence(&fs);
+    }
     let avg = Model::average(models);
     let per_learner: Vec<f64> = models.iter().map(|m| m.distance_sq(&avg)).collect();
     let delta = per_learner.iter().sum::<f64>() / models.len() as f64;
     Divergence { delta, per_learner }
 }
 
-/// Divergence for kernel expansions given directly (used by the runtime
-/// integration tests to compare against the XLA artifact).
+/// Union-Gram divergence for kernel expansions given directly.
+///
+/// The per-learner distance is the quadratic form of the *dense
+/// difference* `avg - c_i` on the union Gram (not the reassociated
+/// `q - 2b + A` expansion): when a learner's coefficients equal the
+/// average's bitwise, the difference vector is identically zero and the
+/// distance is exactly 0, matching the model-space computation.
 pub fn kernel_divergence(models: &[&SvModel]) -> Divergence {
-    let wrapped: Vec<Model> = models.iter().map(|m| Model::Kernel((*m).clone())).collect();
-    let refs: Vec<&Model> = wrapped.iter().collect();
-    configuration_divergence(&refs)
+    assert!(!models.is_empty());
+    let m = models.len() as f64;
+    let total: usize = models.iter().map(|f| f.len()).sum();
+    let mut ug = UnionGram::with_capacity(models[0].kernel, models[0].dim, total);
+    let rows: Vec<Vec<u32>> = models.iter().map(|f| ug.add_model(f)).collect();
+    let n = ug.len();
+
+    // Average coefficients on the union (accumulated per occurrence in
+    // model order, mirroring `SvModel::average`).
+    let mut avg = vec![0.0; n];
+    for (f, frows) in models.iter().zip(&rows) {
+        for (&r, &a) in frows.iter().zip(f.alpha()) {
+            avg[r as usize] += a / m;
+        }
+    }
+
+    let mut per_learner = Vec::with_capacity(models.len());
+    let mut diff = vec![0.0; n];
+    for (f, frows) in models.iter().zip(&rows) {
+        diff.copy_from_slice(&avg);
+        for (&r, &a) in frows.iter().zip(f.alpha()) {
+            diff[r as usize] -= a;
+        }
+        per_learner.push(ug.quad_form(&diff, &diff).max(0.0));
+    }
+    let delta = per_learner.iter().sum::<f64>() / m;
+    Divergence { delta, per_learner }
 }
 
 #[cfg(test)]

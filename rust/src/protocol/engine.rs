@@ -183,6 +183,12 @@ impl ProtocolEngine {
     /// is untouched, so every local condition proof stays valid. Returns
     /// false if B grew to the full cluster (caller escalates to full sync).
     ///
+    /// The whole event shares one [`crate::kernel::UnionGram`]: the
+    /// reference and every member upload register their SVs once, and each
+    /// candidate safe-zone check is an O(n^2) quadratic form on that
+    /// matrix instead of a fresh `||avg_B||^2 + ||r||^2 - 2<avg_B, r>`
+    /// kernel-evaluation pass per growth step.
+    ///
     /// Only kernel engines support this (linear balancing is possible but
     /// the messages are already tiny); falls back to full sync otherwise.
     fn try_partial_sync(&mut self, violators: &[usize], delta: f64) -> bool {
@@ -193,6 +199,20 @@ impl ProtocolEngine {
         // The reference model is common; take it from any tracker (all
         // reset to the same model at the last full sync; None = zero fn).
         let reference = self.trackers[0].reference().cloned();
+        // Event-wide union Gram, seeded with the reference expansion and
+        // pre-sized for the worst-case union (reference + every learner;
+        // is_kernel rules out the Rff panic in from_config).
+        let kernel = crate::kernel::Kernel::from_config(self.cfg.learner.kernel);
+        let mut cap: usize = self.learners.iter().map(|l| l.sv_count()).sum();
+        if let Some(Model::Kernel(r)) = &reference {
+            cap += r.len();
+        }
+        let mut ug = crate::kernel::UnionGram::with_capacity(kernel, self.cfg.data.dim(), cap);
+        let r_sparse: Option<(Vec<u32>, Vec<f64>)> = match &reference {
+            Some(Model::Kernel(r)) => Some((ug.add_model(r), r.alpha().to_vec())),
+            Some(Model::Linear(_)) => unreachable!("kernel engine with linear reference"),
+            None => None,
+        };
         let mut in_b = vec![false; m];
         let mut b: Vec<usize> = Vec::new();
         let mut uploaded: Vec<Option<SvModel>> = vec![None; m];
@@ -234,11 +254,13 @@ impl ProtocolEngine {
                         } => (coeffs, new_svs),
                         _ => unreachable!(),
                     };
-                    uploaded[i] = Some(
-                        self.decoder
-                            .ingest_upload(i, &coeffs, &block, exp)
-                            .expect("upload consistent"),
-                    );
+                    let rebuilt = self
+                        .decoder
+                        .ingest_upload(i, &coeffs, &block, exp)
+                        .expect("upload consistent");
+                    // Register the member's SVs on the event's union Gram.
+                    ug.add_model(&rebuilt);
+                    uploaded[i] = Some(rebuilt);
                 }
             }
             // B-average (Prop. 2 over the subset), budget-compressed.
@@ -248,19 +270,29 @@ impl ProtocolEngine {
                 .collect();
             let refs: Vec<&Model> = models.iter().collect();
             let (avg_b, eps) = synchronize(&refs, self.avg_compressor);
-            // Safe-zone check against the *global* reference.
-            let dist = match &reference {
-                Some(r) => avg_b.distance_sq(r),
-                None => match &avg_b {
-                    Model::Kernel(k) => k.norm_sq(),
-                    Model::Linear(l) => l.norm_sq(),
+            // Safe-zone check against the *global* reference: a quadratic
+            // form of the coefficient difference on the shared union Gram.
+            // (Compression only drops/adjusts coefficients of SVs already
+            // registered, so the compressed average stays representable;
+            // the model-space distance remains as a defensive fallback.)
+            let avg_k = avg_b.as_kernel().expect("kernel average");
+            let dist = match ug.try_coeffs(avg_k) {
+                Some(avg_coeffs) => {
+                    let mut r_coeffs = vec![0.0; ug.len()];
+                    if let Some((rows, alphas)) = &r_sparse {
+                        ug.scatter(rows, alphas, &mut r_coeffs);
+                    }
+                    ug.distance_sq(&avg_coeffs, &r_coeffs)
+                }
+                None => match &reference {
+                    Some(r) => avg_b.distance_sq(r),
+                    None => avg_k.norm_sq(),
                 },
             };
             if dist <= delta {
                 if eps > 0.0 {
                     self.metrics.record_update(0.0, 0.0, 0.0, eps);
                 }
-                let avg_k = avg_b.as_kernel().unwrap();
                 for &i in &b {
                     let (coeffs, block) = self.decoder.encode_download(i, avg_k);
                     let msg = Message::ModelDownload {

@@ -102,11 +102,16 @@ impl ConditionTracker {
     }
 
     /// Exact recomputation against the true model — used on sync and by
-    /// the property tests to pin the incremental path.
+    /// the property tests to pin the incremental path. Reuses the cached
+    /// `||r||^2` (the reference is immutable between resets), so only
+    /// `||f||^2` and `<f, r>` are evaluated.
     pub fn exact_distance_sq(&self, f: &Model) -> f64 {
         match (&self.reference, f) {
             (None, Model::Kernel(k)) => k.norm_sq(),
             (None, Model::Linear(l)) => l.norm_sq(),
+            (Some(Model::Kernel(r)), Model::Kernel(k)) => {
+                k.distance_sq_with_norms(r, k.norm_sq(), self.norm_r_sq)
+            }
             (Some(r), f) => f.distance_sq(r),
         }
     }

@@ -25,6 +25,40 @@ pub fn check<F: FnMut(&mut Pcg64)>(name: &str, cases: usize, mut prop: F) {
     }
 }
 
+/// Naive pairwise-`Kernel::eval` oracles of the blocked dot-product
+/// sweeps — the pre-optimization reference implementations, kept in one
+/// place so the property tests and the naive-twin benches share them.
+pub mod naive {
+    use crate::kernel::SvModel;
+
+    /// f(x) via the nested per-SV `Kernel::eval` loop.
+    pub fn predict(m: &SvModel, x: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..m.len() {
+            acc += m.alpha()[i] * m.kernel.eval(m.sv(i), x);
+        }
+        acc
+    }
+
+    /// <f, g> via the nested pairwise `Kernel::eval` loop.
+    pub fn inner(a: &SvModel, b: &SvModel) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..a.len() {
+            let xi = a.sv(i);
+            let ai = a.alpha()[i];
+            for j in 0..b.len() {
+                acc += ai * b.alpha()[j] * a.kernel.eval(xi, b.sv(j));
+            }
+        }
+        acc
+    }
+
+    /// ||f - g||^2 from the three naive inner products, clamped at 0.
+    pub fn distance_sq(a: &SvModel, b: &SvModel) -> f64 {
+        (inner(a, a) + inner(b, b) - 2.0 * inner(a, b)).max(0.0)
+    }
+}
+
 /// Generators for common test inputs.
 pub mod gen {
     use super::*;

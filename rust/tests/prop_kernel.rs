@@ -133,6 +133,138 @@ fn prop_learner_drift_bounds() {
     });
 }
 
+// ---- naive pairwise oracles live in kdol::testing::naive --------------------
+
+use kdol::testing::naive::{distance_sq as naive_distance_sq, inner as naive_inner};
+
+fn kernels_under_test() -> [Kernel; 3] {
+    [
+        Kernel::Linear,
+        Kernel::Rbf { gamma: 0.6 },
+        Kernel::Polynomial { degree: 3, c: 0.7 },
+    ]
+}
+
+/// |got - want| <= 1e-9 * max(1, |want|, scale) — the acceptance bound for
+/// the Gram-backed paths against the naive pairwise implementation.
+/// `scale` is the natural magnitude of the computation's inputs (e.g. the
+/// norms behind a cancellation-prone distance), so "relative" stays
+/// meaningful when the result itself is near zero.
+fn assert_rel(got: f64, want: f64, scale: f64, what: &str) {
+    let tol = 1e-9 * want.abs().max(scale.abs()).max(1.0);
+    assert!(
+        (got - want).abs() <= tol,
+        "{what}: got {got}, naive {want} (|diff| {} > {tol})",
+        (got - want).abs()
+    );
+}
+
+#[test]
+fn prop_gram_backed_inner_and_distance_match_naive() {
+    // The blocked dot-product sweeps (predict / inner / norm / distance,
+    // incl. distance_sq_with_norms) against the naive nested-eval loops,
+    // for all three kernels, to <= 1e-9 relative error.
+    check("dot-product-vs-naive", default_cases(), |rng| {
+        for kernel in kernels_under_test() {
+            let dim = gen::int(rng, 1, 5);
+            let n = gen::int(rng, 0, 40);
+            let m = gen::int(rng, 0, 40);
+            let a = gen::sv_model(rng, kernel, n, dim, 1);
+            let b = gen::sv_model(rng, kernel, m, dim, 1000);
+            let naa = naive_inner(&a, &a);
+            let nbb = naive_inner(&b, &b);
+            let dist_scale = naa + nbb; // the terms the distance cancels
+            assert_rel(a.inner(&b), naive_inner(&a, &b), dist_scale, "inner");
+            assert_rel(a.norm_sq(), naa, naa, "norm_sq");
+            assert_rel(
+                a.distance_sq(&b),
+                naive_distance_sq(&a, &b),
+                dist_scale,
+                "distance_sq",
+            );
+            assert_rel(
+                a.distance_sq_with_norms(&b, a.norm_sq(), b.norm_sq()),
+                naive_distance_sq(&a, &b),
+                dist_scale,
+                "distance_sq_with_norms",
+            );
+            let q = gen::vector(rng, dim, 1.0);
+            let naive_pred: f64 = (0..a.len())
+                .map(|i| a.alpha()[i] * kernel.eval(a.sv(i), &q))
+                .sum();
+            assert_rel(a.predict(&q), naive_pred, naa.max(0.0).sqrt(), "predict");
+        }
+    });
+}
+
+#[test]
+fn prop_union_gram_divergence_matches_naive() {
+    // The union-Gram divergence (one deduplicated Gram, quadratic forms)
+    // against the naive implementation (Prop. 2 average + naive pairwise
+    // distances), with id-sharing across models — both bitwise-identical
+    // shared SVs (post-sync) and f32-quantized coordinate variants of the
+    // same id (wire copies) — for all three kernels.
+    use kdol::kernel::SvModel;
+    use kdol::protocol::divergence::kernel_divergence;
+    check("union-divergence-vs-naive", default_cases() / 2, |rng| {
+        for kernel in kernels_under_test() {
+            let dim = gen::int(rng, 1, 4);
+            let m = gen::int(rng, 2, 4);
+            // Shared pool (as if distributed by an earlier sync).
+            let shared = gen::sv_model(rng, kernel, gen::int(rng, 0, 6), dim, 500);
+            let models: Vec<SvModel> = (0..m)
+                .map(|li| {
+                    let mut f =
+                        gen::sv_model(rng, kernel, gen::int(rng, 0, 10), dim, 1 + 100 * li as u64);
+                    for s in 0..shared.len() {
+                        if rng.chance(0.7) {
+                            if rng.chance(0.5) {
+                                // Exact copy: dedups onto one union row.
+                                f.push(shared.ids()[s], shared.sv(s), rng.normal());
+                            } else {
+                                // f32-quantized wire copy: same id, its own
+                                // coordinate-variant row.
+                                let qx: Vec<f64> =
+                                    shared.sv(s).iter().map(|&v| v as f32 as f64).collect();
+                                f.push(shared.ids()[s], &qx, rng.normal());
+                            }
+                        }
+                    }
+                    f
+                })
+                .collect();
+            let refs: Vec<&SvModel> = models.iter().collect();
+
+            // Naive oracle: the true mean function (1/m) sum_i f_i held as
+            // a flat concatenation (duplicates allowed — evaluation is
+            // bilinear, so repeated SVs just sum), then naive pairwise
+            // distances. Note this is NOT `SvModel::average`, which
+            // conflates same-id coordinate variants by design.
+            let mut avg = SvModel::new(kernel, dim);
+            for f in &refs {
+                for i in 0..f.len() {
+                    avg.push(f.ids()[i], f.sv(i), f.alpha()[i] / m as f64);
+                }
+            }
+            let avg_norm = naive_inner(&avg, &avg);
+            let mut naive_per = Vec::with_capacity(m);
+            let mut scales = Vec::with_capacity(m);
+            for f in &refs {
+                naive_per.push(naive_distance_sq(f, &avg));
+                scales.push(naive_inner(f, f) + avg_norm);
+            }
+            let naive_delta = naive_per.iter().sum::<f64>() / m as f64;
+            let delta_scale = scales.iter().cloned().fold(0.0f64, f64::max);
+
+            let got = kernel_divergence(&refs);
+            assert_rel(got.delta, naive_delta, delta_scale, "divergence delta");
+            for ((g, w), s) in got.per_learner.iter().zip(&naive_per).zip(&scales) {
+                assert_rel(*g, *w, *s, "per-learner distance");
+            }
+        }
+    });
+}
+
 #[test]
 fn prop_padding_preserves_predictions() {
     // The XLA padding convention (alpha = 0 slots) is exact, natively.

@@ -1,0 +1,90 @@
+//! ROADMAP stress config: a large threaded-cluster run (m >= 32,
+//! T >= 10k, dynamic protocol with the mini-batched check and partial
+//! sync enabled) exercising leader queue depth, stale-violation
+//! suppression (violations stamped before an adoption race the sync they
+//! triggered) and escalation from subset balancing to full syncs under
+//! contention.
+//!
+//! `#[ignore]`d by default — it spawns 32 OS threads and runs ~10^4
+//! protocol rounds per worker. Run with:
+//!
+//! ```sh
+//! cargo test --release --test stress_cluster -- --ignored --nocapture
+//! ```
+
+use kdol::config::{
+    CompressionConfig, DataConfig, ExperimentConfig, KernelConfig, LossKind, ProtocolConfig,
+};
+use kdol::coordinator::run_cluster;
+
+fn stress_config() -> ExperimentConfig {
+    let mut c = ExperimentConfig::quickstart();
+    c.name = "stress-m32-t10k".into();
+    c.seed = 20260729;
+    c.learners = 32;
+    c.rounds = 10_000;
+    c.data = DataConfig::Susy { noise: 0.08 };
+    c.learner.eta = 0.35;
+    c.learner.lambda = 1e-3;
+    c.learner.loss = LossKind::Hinge;
+    c.learner.kernel = KernelConfig::Rbf { gamma: 0.25 };
+    // Bounded models keep every message O(tau) — the premise that makes a
+    // 32-worker dynamic run tractable (and keeps the leader's union
+    // bounded at m * tau).
+    c.learner.compression = CompressionConfig::Truncation { tau: 16 };
+    // Mini-batched condition checks (§4): violations can queue at the
+    // leader between check rounds, exercising the stale-round filter.
+    c.protocol = ProtocolConfig::Dynamic {
+        delta: 0.5,
+        check_period: 4,
+    };
+    c.partial_sync = true;
+    c.record_every = 500;
+    c
+}
+
+#[test]
+#[ignore = "stress: 32 worker threads x 10k rounds; run with --ignored"]
+fn stress_dynamic_cluster_m32_t10k() {
+    let cfg = stress_config();
+    cfg.validate().unwrap();
+    let out = run_cluster(&cfg).expect("cluster run completes without deadlock");
+
+    println!(
+        "stress outcome: loss {:.1}, violations {}, syncs {}, partial {}, \
+         bytes {} (peak round {}), last sync round {:?}",
+        out.cum_loss,
+        out.comm.violations,
+        out.comm.syncs,
+        out.partial_syncs,
+        out.comm.total_bytes(),
+        out.comm.peak_round_bytes,
+        out.comm.last_sync_round
+    );
+
+    assert_eq!(out.rounds, 10_000);
+    assert!(out.cum_loss.is_finite() && out.cum_loss > 0.0);
+
+    // The dynamic protocol must actually have fired under this geometry.
+    assert!(out.comm.violations > 0, "no violations at delta=0.5");
+    let events = out.comm.syncs + out.partial_syncs;
+    assert!(events > 0, "violations never resolved into sync events");
+    // Every resolution event is triggered by at least one fresh violation
+    // (stale ones are suppressed, they never start an event).
+    assert!(
+        out.comm.violations >= events,
+        "violations {} < events {events}",
+        out.comm.violations
+    );
+
+    // Accounting invariants under contention: per-event rounds close, so
+    // the peak exchange sits below the total in any multi-event run.
+    assert!(out.comm.peak_round_bytes > 0);
+    if events > 1 {
+        assert!(out.comm.peak_round_bytes < out.comm.total_bytes());
+    }
+    // Sync stamps refer to protocol rounds, not event counts.
+    if let Some(last) = out.comm.last_sync_round {
+        assert!(last <= out.rounds, "sync stamped past the horizon: {last}");
+    }
+}
