@@ -4,12 +4,17 @@
 //!
 //! Naive pairwise-`Kernel::eval` twins of the dot-product sweeps are
 //! benched alongside, so one run shows the blocked-geometry speedup
-//! without needing a pre-change checkout.
+//! without needing a pre-change checkout. Likewise the cache-cold twin of
+//! the cross-event sync cache (`divergence cache-cold` vs `cache-warm`)
+//! and the serial twins of the scoped-thread backend (`threads=1` vs
+//! `threads=N` — bitwise-identical results, only throughput differs).
 //!
 //! ```sh
 //! cargo bench --bench micro
-//! # machine-readable trajectory (appends a run to the history file):
-//! cargo bench --bench micro -- --json BENCH_2.json --label post-PR2
+//! # machine-readable trajectory (appends a run to the history file;
+//! # cargo runs the bench with cwd = rust/, so give an absolute path to
+//! # hit the committed repo-root skeleton):
+//! cargo bench --bench micro -- --json "$PWD/BENCH_3.json" --label post-PR3
 //! # CI smoke: tiny budget, throwaway JSON
 //! cargo bench --bench micro -- --budget-ms 10 --json /tmp/b.json
 //! ```
@@ -53,10 +58,10 @@ fn naive_divergence(models: &[&SvModel]) -> f64 {
     delta / models.len() as f64
 }
 
-fn speedup_line(cli: &BenchCli, what: &str, fast: &str, naive: &str) {
-    if let (Some(f), Some(n)) = (cli.mean_of(fast), cli.mean_of(naive)) {
+fn speedup_line(cli: &BenchCli, what: &str, fast: &str, baseline: &str) {
+    if let (Some(f), Some(n)) = (cli.mean_of(fast), cli.mean_of(baseline)) {
         println!(
-            "    -> {what}: {:.2}x vs naive pairwise eval",
+            "    -> {what}: {:.2}x vs `{baseline}`",
             n.as_secs_f64() / f.as_secs_f64()
         );
     }
@@ -134,6 +139,98 @@ fn main() {
             "divergence m=8 tau=50",
             "divergence m=8 tau=50",
             "divergence naive m=8 tau=50",
+        );
+    }
+
+    // --- cross-event sync cache: cold vs warm divergence ----------------------
+    {
+        // Cold: every event rebuilds the union Gram from nothing (the
+        // pre-cache behavior, still what standalone kernel_divergence
+        // does). Warm: the persistent SyncGramCache keeps the rows and
+        // their Gram block across events, so each event pays only the
+        // event-view bookkeeping + quadratic forms — O(new SVs * union)
+        // kernel entries instead of O(union^2), and here new SVs = 0.
+        let kernels: Vec<SvModel> = (0..8).map(|_| random_model(&mut rng, 50, d)).collect();
+        let krefs: Vec<&SvModel> = kernels.iter().collect();
+        let r = bench_for("divergence cache-cold m=8 tau=50", budget, || {
+            black_box(kdol::protocol::divergence::kernel_divergence(black_box(
+                &krefs,
+            )));
+        });
+        println!("{}", report(&r));
+        cli.record(&r);
+        let mut cache = kdol::kernel::SyncGramCache::new(Kernel::Rbf { gamma: 0.25 }, d);
+        let r = bench_for("divergence cache-warm m=8 tau=50", budget, || {
+            black_box(kdol::protocol::divergence::kernel_divergence_cached(
+                &mut cache,
+                black_box(&krefs),
+            ));
+        });
+        println!("{}", report(&r));
+        cli.record(&r);
+        let stats = cache.stats();
+        println!(
+            "    -> cache after run: {} hits / {} misses (warm events \
+             re-evaluate 0 kernel entries)",
+            stats.hits, stats.misses
+        );
+        speedup_line(
+            &cli,
+            "warm-cache divergence m=8 tau=50",
+            "divergence cache-warm m=8 tau=50",
+            "divergence cache-cold m=8 tau=50",
+        );
+    }
+
+    // --- deterministic parallel backend: threaded vs serial sweeps ------------
+    {
+        use kdol::kernel::Gram;
+        use kdol::util::par;
+        let n = 512;
+        let pts: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let k = Kernel::Rbf { gamma: 0.25 };
+        par::set_threads(1);
+        let r = bench_for("gram symmetric n=512 threads=1", budget, || {
+            black_box(Gram::compute_symmetric(&k, black_box(&pts), d));
+        });
+        println!("{}", report(&r));
+        cli.record(&r);
+        par::set_threads(0); // auto
+        let threaded_label = format!("gram symmetric n=512 threads={}", par::threads());
+        let r = bench_for(&threaded_label, budget, || {
+            black_box(Gram::compute_symmetric(&k, black_box(&pts), d));
+        });
+        println!("{}", report(&r));
+        cli.record(&r);
+        speedup_line(
+            &cli,
+            "threaded gram n=512",
+            &threaded_label,
+            "gram symmetric n=512 threads=1",
+        );
+
+        let model = random_model(&mut rng, 800, d);
+        let queries: Vec<Vec<f64>> = (0..64)
+            .map(|_| (0..d).map(|_| rng.normal()).collect())
+            .collect();
+        par::set_threads(1);
+        let r = bench_for("predict_batch batch=64 tau=800 threads=1", budget, || {
+            black_box(model.predict_batch(black_box(&queries)));
+        });
+        println!("{}", report(&r));
+        cli.record(&r);
+        par::set_threads(0);
+        let threaded_label = format!("predict_batch batch=64 tau=800 threads={}", par::threads());
+        let r = bench_for(&threaded_label, budget, || {
+            black_box(model.predict_batch(black_box(&queries)));
+        });
+        println!("{}", report(&r));
+        cli.record(&r);
+        speedup_line(
+            &cli,
+            "threaded predict_batch",
+            &threaded_label,
+            "predict_batch batch=64 tau=800 threads=1",
         );
     }
 

@@ -60,6 +60,9 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     if args.has("partial") {
         cfg.partial_sync = true;
     }
+    if let Some(n) = args.get_usize("threads")? {
+        cfg.threads = n;
+    }
     cfg.validate()
 }
 
@@ -89,11 +92,18 @@ fn maybe_csv(args: &Args, outcomes: &[&Outcome]) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "config", "preset", "protocol", "delta", "period", "check-period", "learners", "rounds",
-        "seed", "csv", "divergence", "partial",
+        "seed", "csv", "divergence", "partial", "threads",
     ])?;
     let cfg = load_config(args)?;
     let outcome = runner::run_experiment(&cfg)?;
     println!("{}", comparison_table(&cfg.name, &[&outcome]));
+    let cache = outcome.sync_cache;
+    if cache.hits + cache.misses > 0 {
+        println!(
+            "  sync-Gram cache: {} hits / {} misses / {} evicted rows",
+            cache.hits, cache.misses, cache.evicted_rows
+        );
+    }
     if let ProtocolConfig::Dynamic { delta, .. } = cfg.protocol {
         let rep = EfficiencyReport::evaluate(
             &outcome,
@@ -185,7 +195,7 @@ fn cmd_bounds(scale: f64) -> Result<()> {
 fn cmd_cluster(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "config", "preset", "protocol", "delta", "period", "check-period", "learners", "rounds",
-        "seed", "partial",
+        "seed", "partial", "threads",
     ])?;
     let cfg = load_config(args)?;
     let out = crate::coordinator::run_cluster(&cfg)?;
@@ -198,6 +208,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     println!("syncs            : {}", out.comm.syncs);
     println!("partial syncs    : {}", out.partial_syncs);
     println!("violations       : {}", out.comm.violations);
+    println!("compression eps  : {:.4}", out.cum_compression_err);
+    println!(
+        "sync-Gram cache  : {} hits / {} misses / {} evicted rows",
+        out.sync_cache.hits, out.sync_cache.misses, out.sync_cache.evicted_rows
+    );
     println!(
         "quiescent for    : {} rounds",
         out.comm.quiescent_rounds(out.rounds)

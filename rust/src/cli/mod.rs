@@ -32,6 +32,7 @@ RUN FLAGS:
     --csv <file>           write the over-time series as CSV
     --divergence           record true divergence at syncs
     --partial              enable partial-sync (subset balancing) refinement
+    --threads <n>          parallel kernel-algebra threads (0 = auto) [0]
 
 CLUSTER FLAGS:
     same as RUN (minus --csv/--divergence); --partial enables subset

@@ -183,6 +183,11 @@ pub struct ExperimentConfig {
     /// of the cluster neither hears about it nor transmits anything. Only
     /// when no subset resolves does it escalate to a full sync.
     pub partial_sync: bool,
+    /// Thread count of the deterministic parallel kernel-algebra backend
+    /// (`util::par`); 0 = auto (available parallelism). Results are
+    /// bitwise identical at any setting — this is purely a throughput
+    /// knob.
+    pub threads: usize,
 }
 
 impl ExperimentConfig {
@@ -208,6 +213,7 @@ impl ExperimentConfig {
             backend: RuntimeBackend::Native,
             record_every: 10,
             partial_sync: false,
+            threads: 0,
         }
     }
 
@@ -263,6 +269,7 @@ impl ExperimentConfig {
             backend: RuntimeBackend::Native,
             record_every: 20,
             partial_sync: false,
+            threads: 0,
         }
     }
 
@@ -310,6 +317,12 @@ impl ExperimentConfig {
         }
         if self.record_every == 0 {
             bail!("record_every must be >= 1");
+        }
+        if self.threads > crate::util::par::MAX_THREADS {
+            bail!(
+                "threads must be <= {} (0 = auto)",
+                crate::util::par::MAX_THREADS
+            );
         }
         if !(self.learner.eta > 0.0) {
             bail!("eta must be > 0");
@@ -425,6 +438,12 @@ impl ExperimentConfig {
         }
         if let Some(r) = t.get("runtime").and_then(Value::as_table) {
             cfg.backend = parse_backend(r)?;
+            if let Some(n) = get_int(r, "threads") {
+                if n < 0 {
+                    bail!("runtime.threads must be >= 0 (0 = auto)");
+                }
+                cfg.threads = n as usize;
+            }
         }
         cfg.validate()?;
         Ok(cfg)
@@ -580,10 +599,15 @@ tau = 16
 kind = "dynamic"
 delta = 0.33
 check_period = 4
+
+[runtime]
+backend = "native"
+threads = 3
 "#,
         )
         .unwrap();
         assert_eq!(cfg.name, "custom");
+        assert_eq!(cfg.threads, 3);
         assert_eq!(cfg.learners, 8);
         assert_eq!(cfg.rounds, 50);
         assert_eq!(cfg.learner.eta, 0.2);
@@ -627,6 +651,15 @@ check_period = 4
         let mut c = ExperimentConfig::fig1_linear(ProtocolConfig::Continuous);
         c.learner.compression = CompressionConfig::Truncation { tau: 8 };
         assert!(c.validate().is_err());
+
+        // Absurd thread counts rejected (0 = auto stays valid).
+        let mut c = ExperimentConfig::quickstart();
+        c.threads = crate::util::par::MAX_THREADS + 1;
+        assert!(c.validate().is_err());
+
+        // Negative TOML threads rejected at parse time (would wrap to
+        // usize::MAX through the `as` cast otherwise).
+        assert!(ExperimentConfig::from_toml("[runtime]\nthreads = -1\n").is_err());
     }
 
     #[test]

@@ -18,15 +18,16 @@
 //! triggered the event (carried in violation/upload messages), so
 //! quiescence statistics refer to protocol rounds, not event counts.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::compression::Compressor;
 use crate::config::{ExperimentConfig, ProtocolConfig};
 use crate::data::build_streams;
-use crate::kernel::{Model, SvModel};
+use crate::kernel::{Model, SvModel, SyncCacheStats, SyncGramCache};
 use crate::learner::build_learner;
+use crate::metrics::MetricsRecorder;
 use crate::network::{Bus, CommStats, DeltaDecoder, Message};
 use crate::protocol::sync::synchronize;
 use crate::protocol::SyncPolicy;
@@ -41,6 +42,12 @@ pub struct ClusterOutcome {
     pub comm: CommStats,
     /// Violations resolved by subset balancing without a full sync.
     pub partial_syncs: u64,
+    /// Compression perturbation of every coordinator-side average (the
+    /// leader's `eps` from balancing-set / full-sync compression — the
+    /// engine folds the same quantity into its metrics recorder).
+    pub cum_compression_err: f64,
+    /// Reuse counters of the leader's persistent sync-Gram cache.
+    pub sync_cache: SyncCacheStats,
     /// Final globally synchronized model, if any full sync happened.
     pub final_model: Option<Model>,
 }
@@ -51,6 +58,10 @@ pub fn run_cluster(cfg: &ExperimentConfig) -> Result<ClusterOutcome> {
         cfg.protocol != ProtocolConfig::Serial,
         "serial runs have no cluster"
     );
+    // Apply the config's parallel-backend knob here (where the config is
+    // consumed) so library callers get it, not just the CLI. Throughput
+    // only: results are bitwise identical at any setting.
+    crate::util::par::set_threads(cfg.threads);
     let m = cfg.learners;
     let (bus, endpoints) = Bus::new(m);
     let streams = build_streams(&cfg.data, m, cfg.seed);
@@ -101,8 +112,34 @@ struct Leader<'a> {
     /// with an older round were sent before the worker adopted the new
     /// model and are dropped as stale.
     adopted_round: Vec<u64>,
+    /// Last-known `||f_i - r||^2` per worker, from prior violation notices
+    /// and distance probes. Deliberately *stale* between observations (the
+    /// worker keeps learning locally) — it only drives the heuristic
+    /// farthest-first extension *order*, never a safe-zone decision (those
+    /// always use fresh uploads), so reusing it is safe and skips the
+    /// `DistanceRequest` round-trips the engine gets for free from its
+    /// trackers. Dropped when the worker adopts a download or the shared
+    /// reference is replaced (the value would not even be about the same
+    /// `r` any more).
+    known_distance: Vec<Option<f64>>,
+    /// Persistent cross-event union Gram (kernel runs only), coherent with
+    /// `decoder`'s store — see the `kernel` module docs.
+    sync_cache: Option<SyncGramCache>,
+    /// Coordinator-side metrics recorder (compression `eps` of every
+    /// averaged model; the cluster twin of the engine's recorder).
+    metrics: MetricsRecorder,
     timeout: Duration,
 }
+
+/// Hard cap on how long the leader waits for co-violations after the
+/// first violation of an event before seeding the balancing set. The wait
+/// means "one worker round": it ends as soon as a violation from a *later*
+/// protocol round arrives (proof that the trigger round has finished
+/// somewhere, so its co-violations have been sent), falling back to this
+/// cap when no such evidence shows up. This brings the seed set close to
+/// the engine's same-round violator set without letting fast runs collapse
+/// many would-be events into one.
+const CO_VIOLATION_WAIT: Duration = Duration::from_millis(2);
 
 fn leader_loop(cfg: &ExperimentConfig, bus: &Bus) -> Result<ClusterOutcome> {
     let m = cfg.learners;
@@ -126,6 +163,7 @@ fn leader_loop(cfg: &ExperimentConfig, bus: &Bus) -> Result<ClusterOutcome> {
         Some(tau) => Compressor::Projection { tau },
         None => Compressor::None,
     };
+    let sync_cache = is_kernel.then(|| SyncGramCache::new(template.kernel, template.dim));
     let mut leader = Leader {
         bus,
         m,
@@ -143,6 +181,9 @@ fn leader_loop(cfg: &ExperimentConfig, bus: &Bus) -> Result<ClusterOutcome> {
         final_model: None,
         partial_syncs: 0,
         adopted_round: vec![0; m],
+        known_distance: vec![None; m],
+        sync_cache,
+        metrics: MetricsRecorder::new(cfg.record_every as u64),
         timeout: Duration::from_secs(60),
     };
     leader.run()?;
@@ -152,6 +193,12 @@ fn leader_loop(cfg: &ExperimentConfig, bus: &Bus) -> Result<ClusterOutcome> {
         rounds: cfg.rounds as u64,
         comm: leader.comm,
         partial_syncs: leader.partial_syncs,
+        cum_compression_err: leader.metrics.cum_compression_err,
+        sync_cache: leader
+            .sync_cache
+            .as_ref()
+            .map(|c| c.stats())
+            .unwrap_or_default(),
         final_model: leader.final_model,
     })
 }
@@ -178,6 +225,7 @@ impl Leader<'_> {
                     self.comm.record_up(n);
                     self.comm.record_violation();
                     if round > self.adopted_round[learner as usize] {
+                        self.known_distance[learner as usize] = Some(distance_sq);
                         self.handle_violation(learner as usize, round, distance_sq)?;
                     }
                 }
@@ -229,12 +277,37 @@ impl Leader<'_> {
     /// enabled), escalating to a full synchronization when the balancing
     /// set would grow to the whole cluster.
     fn handle_violation(&mut self, learner: usize, round: u64, distance_sq: f64) -> Result<()> {
-        // Gather co-violators already queued — the engine sees all of a
-        // round's violations at once; the cluster drains what has arrived.
+        // Gather co-violators — the engine sees all of a round's
+        // violations at once; the cluster waits one bounded worker round
+        // ([`CO_VIOLATION_WAIT`]) so same-round co-violations in flight
+        // can land, then drains whatever arrived.
         let mut in_set = vec![false; self.m];
         in_set[learner] = true;
         let mut violators: Vec<(usize, f64)> = vec![(learner, distance_sq)];
-        while let Ok((_, msg, n)) = self.bus.recv(Duration::from_millis(0)) {
+        let wait_start = Instant::now();
+        // The bounded wait only buys a better balancing *seed set* — when
+        // subset balancing can't run (disabled, or linear models) the
+        // event escalates to a full sync that collects everyone anyway, so
+        // keep the old non-blocking drain there instead of idling the
+        // leader for the cap on every violation.
+        let cap = if self.partial_sync && self.is_kernel {
+            CO_VIOLATION_WAIT
+        } else {
+            Duration::ZERO
+        };
+        // Once a violation from a later round (or a Done) arrives, the
+        // trigger round is over somewhere and its co-violations are
+        // already behind it in the queue — stop blocking and just drain.
+        let mut round_passed = false;
+        loop {
+            let remaining = if round_passed {
+                Duration::ZERO
+            } else {
+                cap.saturating_sub(wait_start.elapsed())
+            };
+            let Ok((_, msg, n)) = self.bus.recv(remaining) else {
+                break;
+            };
             match msg {
                 Message::Violation {
                     learner,
@@ -244,16 +317,25 @@ impl Leader<'_> {
                     self.comm.record_up(n);
                     self.comm.record_violation();
                     let i = learner as usize;
-                    if !in_set[i] && r > self.adopted_round[i] {
-                        in_set[i] = true;
-                        violators.push((i, distance_sq));
+                    if r > self.adopted_round[i] {
+                        self.known_distance[i] = Some(distance_sq);
+                        if !in_set[i] {
+                            in_set[i] = true;
+                            violators.push((i, distance_sq));
+                        }
+                    }
+                    if r > round {
+                        round_passed = true;
                     }
                 }
                 Message::Done {
                     learner,
                     cum_loss,
                     cum_error,
-                } => self.note_done(learner, cum_loss, cum_error),
+                } => {
+                    self.note_done(learner, cum_loss, cum_error);
+                    round_passed = true;
+                }
                 other => bail!("leader: unexpected message before sync: {other:?}"),
             }
         }
@@ -294,18 +376,33 @@ impl Leader<'_> {
     /// local condition proof stays valid. Returns Ok(false) if B grew to
     /// the full cluster (caller escalates to a full sync).
     ///
-    /// Like the engine twin, the whole event shares one
-    /// [`crate::kernel::UnionGram`] seeded with the reference: every
-    /// safe-zone check while B grows is a quadratic form on that matrix,
-    /// not a fresh kernel-evaluation pass over `avg_B` and `r` (the old
-    /// path re-evaluated `||r||^2` from scratch at every growth step).
+    /// Like the engine twin, the whole event runs on the leader's
+    /// persistent [`SyncGramCache`] seeded with the reference: every
+    /// safe-zone check while B grows is a quadratic form on the cached
+    /// matrix, not a fresh kernel-evaluation pass over `avg_B` and `r`,
+    /// and rows persist across events so a warm event only evaluates the
+    /// genuinely new SVs.
     fn try_partial_sync(&mut self, violators: &[(usize, f64)], delta: f64) -> Result<bool> {
+        // Take the cache out of `self` for the event so the borrow checker
+        // lets the event body use the leader's other fields freely.
+        let Some(mut cache) = self.sync_cache.take() else {
+            return Ok(false);
+        };
+        let resolved = self.partial_sync_event(&mut cache, violators, delta);
+        self.sync_cache = Some(cache);
+        resolved
+    }
+
+    /// Body of one partial-synchronization event over the (borrowed-out)
+    /// sync cache; see [`Leader::try_partial_sync`].
+    fn partial_sync_event(
+        &mut self,
+        ug: &mut SyncGramCache,
+        violators: &[(usize, f64)],
+        delta: f64,
+    ) -> Result<bool> {
         let m = self.m;
-        // No pre-sizing here: unlike the engine, the leader cannot see the
-        // workers' model sizes before they upload, and the only available
-        // upper bound (the whole delta-decoder store) squares into far too
-        // much memory. Vec growth inside ensure_gram is amortized.
-        let mut ug = crate::kernel::UnionGram::new(self.template.kernel, self.template.dim);
+        ug.begin_event();
         let r_sparse: Option<(Vec<u32>, Vec<f64>)> = match &self.reference {
             Some(Model::Kernel(r)) => Some((ug.add_model(r), r.alpha().to_vec())),
             Some(Model::Linear(_)) | None => None,
@@ -321,15 +418,22 @@ impl Leader<'_> {
             distances[i] = Some(d);
         }
 
-        // Probe the remaining workers' distances to the reference. The
-        // engine reads its trackers directly; the cluster pays a small
-        // (counted) wire cost for the same information.
+        // Distances of the remaining workers to the reference. The engine
+        // reads its trackers directly; the cluster reuses last-known
+        // (possibly stale — they only steer the extension *order*, see
+        // `known_distance`) distances from prior violations/probes and
+        // probes only the workers it knows nothing about — shrinking the
+        // dynamic-protocol byte gap vs. the engine.
         let mut expected = 0usize;
         for i in 0..m {
             if !in_b[i] {
-                self.comm
-                    .record_down(self.bus.send_to(i, &Message::DistanceRequest)?);
-                expected += 1;
+                if let Some(d) = self.known_distance[i] {
+                    distances[i] = Some(d);
+                } else {
+                    self.comm
+                        .record_down(self.bus.send_to(i, &Message::DistanceRequest)?);
+                    expected += 1;
+                }
             }
         }
         let mut got = 0usize;
@@ -343,6 +447,7 @@ impl Leader<'_> {
                 } => {
                     self.comm.record_up(n);
                     let i = learner as usize;
+                    self.known_distance[i] = Some(distance_sq);
                     if !in_b[i] && distances[i].replace(distance_sq).is_none() {
                         got += 1;
                     }
@@ -350,9 +455,17 @@ impl Leader<'_> {
                 // Violations racing the probe are counted; their senders
                 // stay outside the seed set (they will re-report if the
                 // balancing leaves them violated).
-                Message::Violation { .. } => {
+                Message::Violation {
+                    learner,
+                    round,
+                    distance_sq,
+                } => {
                     self.comm.record_up(n);
                     self.comm.record_violation();
+                    let i = learner as usize;
+                    if round > self.adopted_round[i] {
+                        self.known_distance[i] = Some(distance_sq);
+                    }
                 }
                 Message::Done {
                     learner,
@@ -440,11 +553,11 @@ impl Leader<'_> {
                 .map(|&i| Model::Kernel(uploaded[i].clone().unwrap()))
                 .collect();
             let refs: Vec<&Model> = models.iter().collect();
-            let (avg_b, _eps) = synchronize(&refs, self.compressor);
+            let (avg_b, eps) = synchronize(&refs, self.compressor);
             let avg_k = avg_b.as_kernel().expect("kernel balancing set");
             let dist = match ug.try_coeffs(avg_k) {
                 Some(avg_coeffs) => {
-                    let mut r_coeffs = vec![0.0; ug.len()];
+                    let mut r_coeffs = vec![0.0; ug.event_len()];
                     if let Some((rows, alphas)) = &r_sparse {
                         ug.scatter(rows, alphas, &mut r_coeffs);
                     }
@@ -456,6 +569,12 @@ impl Leader<'_> {
                 },
             };
             if dist <= delta {
+                if eps > 0.0 {
+                    // The adopted average's compression perturbs the
+                    // balanced members' models once (engine twin records
+                    // the same quantity on success only).
+                    self.metrics.record_update(0.0, 0.0, 0.0, eps);
+                }
                 for &i in &b {
                     let (coeffs, new_svs) = self.decoder.encode_download(i, avg_k);
                     let msg = Message::ModelDownload {
@@ -465,10 +584,16 @@ impl Leader<'_> {
                     };
                     self.comm.record_down(self.bus.send_to(i, &msg)?);
                     self.adopted_round[i] = self.adopted_round[i].max(up_round[i]);
+                    // The member's model changed: its cached distance to
+                    // the reference is stale.
+                    self.known_distance[i] = None;
                 }
                 // A partial sync is a complete communication event but not
                 // a global synchronization: no record_sync, reference and
-                // final_model unchanged.
+                // final_model unchanged. Close the cache's event: drop
+                // decoder-store ids no learner references any more, and
+                // their cache rows with them.
+                ug.evict_ids(&self.decoder.evict_unreferenced());
                 self.comm.end_round();
                 return Ok(true);
             }
@@ -544,7 +669,12 @@ impl Leader<'_> {
                 .map(|k| Model::Kernel(k.unwrap()))
                 .collect();
             let refs: Vec<&Model> = models.iter().collect();
-            let (avg, _eps) = synchronize(&refs, self.compressor);
+            let (avg, eps) = synchronize(&refs, self.compressor);
+            if eps > 0.0 {
+                // Compression of the average perturbs every learner's
+                // adopted model once (engine twin: sync_kernel).
+                self.metrics.record_update(0.0, 0.0, 0.0, eps);
+            }
             let avg_k = avg.as_kernel().unwrap();
             for i in 0..self.m {
                 let (coeffs, new_svs) = self.decoder.encode_download(i, avg_k);
@@ -592,6 +722,13 @@ impl Leader<'_> {
         self.comm.end_round();
         self.reference = Some(avg.clone());
         self.final_model = Some(avg);
+        // Every model and the reference just changed: cached per-worker
+        // distances are all stale, and the event boundary evicts dead
+        // decoder-store ids together with their cache rows.
+        self.known_distance.fill(None);
+        if let Some(cache) = self.sync_cache.as_mut() {
+            cache.evict_ids(&self.decoder.evict_unreferenced());
+        }
         Ok(())
     }
 }

@@ -27,26 +27,41 @@
 //! ```
 //!
 //! With `partial_sync` on, the leader first tries to balance a subset B
-//! around the violators (the local-balancing refinement):
+//! around the violators (the local-balancing refinement). After the first
+//! violation of an event it waits one bounded worker round for in-flight
+//! co-violations — until a message from a later round proves the trigger
+//! round is over, capped at `CO_VIOLATION_WAIT` — so the seed set matches
+//! the engine's same-round violator set more closely:
 //!
 //! ```text
 //! worker v --- Violation{round, distance_sq} ----------------> leader
-//! worker j <-- DistanceRequest ------------------------------- leader   (all j not in B)
-//! worker j --- DistanceReport{distance_sq} ------------------> leader   (all j not in B)
+//!          (leader waits <= one worker round for co-violators, then:)
+//! worker j <-- DistanceRequest ------------------------------- leader   (j not in B, distance unknown)
+//! worker j --- DistanceReport{distance_sq} ------------------> leader
+//!          (workers whose model hasn't changed since their last
+//!           violation/report are NOT probed — the leader reuses its
+//!           cached last-known distance, like the engine reads its
+//!           trackers for free)
 //!          (extension order: farthest from the reference first)
 //! worker b <-- PartialSyncRequest ---------------------------- leader   (new members of B)
 //! worker b --- ModelUpload{round} ---------------------------> leader
-//!          (leader checks ||avg_B - r||^2 <= Delta; on failure B grows
-//!           and the three steps above repeat for the new member)
+//!          (leader checks ||avg_B - r||^2 <= Delta on the persistent
+//!           SyncGramCache; on failure B grows and the steps above repeat
+//!           for the new member)
 //! worker b <-- ModelDownload{partial: true} ------------------ leader   (all b in B)
-//!          (worker adopts; tracker.recalibrate keeps the reference r)
+//!          (worker adopts; tracker.recalibrate keeps the reference r;
+//!           the leader drops b's cached distance — its model changed)
 //! ```
 //!
 //! If B would grow to the whole cluster the leader escalates: it
 //! broadcasts `SyncRequest` (workers blocked mid-partial answer with a
-//! fresh upload) and finishes as a full synchronization. `Done` and
+//! fresh upload) and finishes as a full synchronization, after which every
+//! cached distance is invalid (the reference changed). `Done` and
 //! `Shutdown` are runtime control and are never counted as protocol
-//! communication.
+//! communication. Every completed event also closes the coordinator's
+//! cache bookkeeping: decoder-store ids no learner references any more are
+//! evicted together with their `SyncGramCache` rows (the coherence
+//! invariant in the `kernel` module docs).
 //!
 //! Also hosts the real-time [`service`]: the batched prediction service
 //! whose hot path executes the AOT XLA artifacts (Python never runs at

@@ -14,6 +14,11 @@ use crate::util::Stopwatch;
 
 /// Run one experiment to its horizon.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Outcome> {
+    // Configure the deterministic parallel backend where the config is
+    // consumed (not in the CLI layer), so library callers get the
+    // `threads` knob too. Purely a throughput knob: results are bitwise
+    // identical at any setting.
+    crate::util::par::set_threads(cfg.threads);
     if cfg.protocol == ProtocolConfig::Serial {
         return Ok(run_serial(cfg));
     }
@@ -51,6 +56,7 @@ pub fn run_serial(cfg: &ExperimentConfig) -> Outcome {
         mean_svs: learner.sv_count() as f64,
         comm,
         partial_syncs: 0,
+        sync_cache: Default::default(),
         series: metrics.series,
         wall_secs: watch.elapsed_secs(),
     }

@@ -1,16 +1,22 @@
 //! Gram-matrix computation and small dense linear algebra (Cholesky solve)
 //! used by projection-based compression and the divergence service, plus
-//! the deduplicated [`UnionGram`] the synchronization pipeline shares.
+//! the deduplicated [`UnionGram`] one synchronization event shares and the
+//! persistent cross-event [`SyncGramCache`] the coordinator keeps.
 //!
 //! All Gram blocks are computed in the dot-product formulation: raw GEMM
 //! rows of `<a_i, b_j>` first, then one [`Kernel::apply_dot_block`] per
 //! row with the cached point norms — never a per-pair `Kernel::eval` loop.
+//! Large blocks are partitioned by disjoint output rows over the
+//! deterministic scoped-thread backend ([`crate::util::par`]); every entry
+//! is computed by the identical serial arithmetic, so results are bitwise
+//! equal at any thread count.
 
 use std::collections::HashMap;
 
 use crate::kernel::functions::Kernel;
 use crate::kernel::model::{SvId, SvModel};
 use crate::util::float::{dot, sq_norm};
+use crate::util::par;
 
 /// Dense row-major Gram matrix K[i * cols + j] = k(a_i, b_j).
 #[derive(Debug, Clone)]
@@ -63,13 +69,25 @@ impl Gram {
         debug_assert_eq!(na.len(), rows);
         debug_assert_eq!(nb.len(), cols);
         let mut data = vec![0.0; rows * cols];
-        for i in 0..rows {
-            let ai = &a[i * dim..(i + 1) * dim];
-            let row = &mut data[i * cols..(i + 1) * cols];
-            for (rj, bj) in row.iter_mut().zip(b.chunks_exact(dim)) {
-                *rj = dot(ai, bj);
+        if rows == 0 || cols == 0 {
+            return Gram { rows, cols, data };
+        }
+        // Per-row arithmetic is independent, so the parallel partition by
+        // output rows is bitwise identical to the serial sweep.
+        let fill = |first: usize, chunk: &mut [f64]| {
+            for (ci, row) in chunk.chunks_exact_mut(cols).enumerate() {
+                let i = first + ci;
+                let ai = &a[i * dim..(i + 1) * dim];
+                for (rj, bj) in row.iter_mut().zip(b.chunks_exact(dim)) {
+                    *rj = dot(ai, bj);
+                }
+                kernel.apply_dot_block(row, na[i], nb);
             }
-            kernel.apply_dot_block(row, na[i], nb);
+        };
+        if rows > 1 && rows * cols >= par::PAR_MIN_ELEMS && par::threads() > 1 {
+            par::par_rows(&mut data, cols, fill);
+        } else {
+            fill(0, &mut data);
         }
         Gram { rows, cols, data }
     }
@@ -91,16 +109,36 @@ impl Gram {
         let n = a.len() / dim;
         debug_assert_eq!(na.len(), n);
         let mut data = vec![0.0; n * n];
-        for i in 0..n {
-            let ai = &a[i * dim..(i + 1) * dim];
-            data[i * n + i] = kernel.eval_self(ai);
-            let row = &mut data[i * n + i + 1..(i + 1) * n];
-            for (rj, aj) in row.iter_mut().zip(a[(i + 1) * dim..].chunks_exact(dim)) {
-                *rj = dot(ai, aj);
-            }
-            kernel.apply_dot_block(row, na[i], &na[i + 1..]);
+        if n == 0 {
+            return Gram {
+                rows: n,
+                cols: n,
+                data,
+            };
         }
-        // Mirror the strict upper triangle.
+        // Diagonal + strict upper triangle, partitioned by whole rows (a
+        // row's writes stay inside its own `n`-wide stripe).
+        let fill = |first: usize, chunk: &mut [f64]| {
+            for (ci, row_full) in chunk.chunks_exact_mut(n).enumerate() {
+                let i = first + ci;
+                let ai = &a[i * dim..(i + 1) * dim];
+                row_full[i] = kernel.eval_self(ai);
+                let row = &mut row_full[i + 1..];
+                for (rj, aj) in row.iter_mut().zip(a[(i + 1) * dim..].chunks_exact(dim)) {
+                    *rj = dot(ai, aj);
+                }
+                kernel.apply_dot_block(row, na[i], &na[i + 1..]);
+            }
+        };
+        if n > 1 && n * n >= par::PAR_MIN_ELEMS && par::threads() > 1 {
+            // Row i computes n - i entries: balance chunks by that cost,
+            // not by row count (boundaries don't change any value).
+            par::par_rows_by_cost(&mut data, n, |i| n - i, fill);
+        } else {
+            fill(0, &mut data);
+        }
+        // Mirror the strict upper triangle (pure copies — no FP ops, so
+        // nothing here is order-sensitive).
         for i in 0..n {
             for j in (i + 1)..n {
                 data[j * n + i] = data[i * n + j];
@@ -336,40 +374,8 @@ impl UnionGram {
         if old == n {
             return;
         }
-        let mut data = std::mem::take(&mut self.gram.data);
-        data.resize(n * n, 0.0);
-        // Re-stride the old n_old x n_old block to the new row length,
-        // descending so a row's destination never overwrites an unmoved
-        // source (row 0 is already in place; copy_within is memmove-safe).
-        for i in (1..old).rev() {
-            data.copy_within(i * old..(i + 1) * old, i * n);
-        }
-        for i in 0..n {
-            let ai = &self.xs[i * self.dim..(i + 1) * self.dim];
-            if i >= old {
-                data[i * n + i] = self.kernel.eval_self(ai);
-            }
-            // New cells of the upper triangle: columns [max(old, i+1), n).
-            let jstart = old.max(i + 1);
-            if jstart >= n {
-                continue;
-            }
-            let row = &mut data[i * n + jstart..(i + 1) * n];
-            for (rj, aj) in row
-                .iter_mut()
-                .zip(self.xs[jstart * self.dim..].chunks_exact(self.dim))
-            {
-                *rj = dot(ai, aj);
-            }
-            self.kernel
-                .apply_dot_block(row, self.norms[i], &self.norms[jstart..n]);
-        }
-        // Mirror the new upper-triangle cells.
-        for i in 0..n {
-            for j in old.max(i + 1)..n {
-                data[j * n + i] = data[i * n + j];
-            }
-        }
+        let data = std::mem::take(&mut self.gram.data);
+        let data = extend_symmetric_gram(&self.kernel, self.dim, &self.xs, &self.norms, data, old);
         self.gram = Gram {
             rows: n,
             cols: n,
@@ -392,6 +398,374 @@ impl UnionGram {
         debug_assert_eq!(b.len(), self.len());
         let diff: Vec<f64> = a.iter().zip(b).map(|(&x, &y)| x - y).collect();
         self.quad_form(&diff, &diff).max(0.0)
+    }
+}
+
+/// Grow a symmetric Gram over `xs` (flat `n x dim`, cached `norms`) from
+/// an `old x old` covered block (held row-major in `data`) to the full
+/// `n x n`: re-stride the old block in place, evaluate only the new cells,
+/// mirror. The new-cell fill is partitioned by output rows over the
+/// deterministic thread backend; every entry value is a pure symmetric
+/// function of its two points, so the grown matrix is bitwise identical to
+/// one computed from scratch in any order. Shared by [`UnionGram`] (one
+/// event) and [`SyncGramCache`] (across events).
+fn extend_symmetric_gram(
+    kernel: &Kernel,
+    dim: usize,
+    xs: &[f64],
+    norms: &[f64],
+    mut data: Vec<f64>,
+    old: usize,
+) -> Vec<f64> {
+    let n = norms.len();
+    debug_assert_eq!(xs.len(), n * dim);
+    debug_assert!(old <= n);
+    data.resize(n * n, 0.0);
+    if n == 0 {
+        return data;
+    }
+    // Re-stride the old n_old x n_old block to the new row length,
+    // descending so a row's destination never overwrites an unmoved
+    // source (row 0 is already in place; copy_within is memmove-safe).
+    for i in (1..old).rev() {
+        data.copy_within(i * old..(i + 1) * old, i * n);
+    }
+    let fill = |first: usize, chunk: &mut [f64]| {
+        for (ci, row_full) in chunk.chunks_exact_mut(n).enumerate() {
+            let i = first + ci;
+            let ai = &xs[i * dim..(i + 1) * dim];
+            if i >= old {
+                row_full[i] = kernel.eval_self(ai);
+            }
+            // New cells of the upper triangle: columns [max(old, i+1), n).
+            let jstart = old.max(i + 1);
+            if jstart >= n {
+                continue;
+            }
+            let row = &mut row_full[jstart..];
+            for (rj, aj) in row.iter_mut().zip(xs[jstart * dim..].chunks_exact(dim)) {
+                *rj = dot(ai, aj);
+            }
+            kernel.apply_dot_block(row, norms[i], &norms[jstart..n]);
+        }
+    };
+    let new_elems = n * n - old * old;
+    if n > 1 && new_elems >= par::PAR_MIN_ELEMS && par::threads() > 1 {
+        // Row i evaluates the new cells in columns [max(old, i+1), n):
+        // balance chunks by that per-row cost, not by row count.
+        par::par_rows_by_cost(&mut data, n, |i| n - old.max(i), fill);
+    } else {
+        fill(0, &mut data);
+    }
+    // Mirror the new upper-triangle cells (pure copies, order-insensitive).
+    for i in 0..n {
+        for j in old.max(i + 1)..n {
+            data[j * n + i] = data[i * n + j];
+        }
+    }
+    data
+}
+
+/// Cumulative reuse counters of a [`SyncGramCache`], surfaced in
+/// `Outcome` / `ClusterOutcome` so runs can prove (or disprove) that warm
+/// sync events reuse cached kernel rows instead of rebuilding the union
+/// Gram from nothing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SyncCacheStats {
+    /// SV registrations that found their (id, coords) row already cached.
+    pub hits: u64,
+    /// SV registrations that appended a genuinely new row (its kernel
+    /// entries against the resident rows are evaluated lazily at the next
+    /// quadratic form).
+    pub misses: u64,
+    /// Rows dropped because their id was evicted from the coordinator's
+    /// delta-decoder store.
+    pub evicted_rows: u64,
+}
+
+/// Persistent cross-event union Gram: the coordinator-side cache that
+/// survives synchronization events.
+///
+/// [`UnionGram`] dedups one event's support-vector union and pays the
+/// full O(union²) Gram build per event even though consecutive events
+/// share most of their support set. `SyncGramCache` keeps those rows (and
+/// their Gram block) across events, so a warm event appends only the
+/// genuinely new SVs and evaluates only O(new · resident) kernel entries.
+///
+/// # Coherence with the delta-decoder store
+///
+/// Rows are keyed like [`UnionGram`] — [`SvId`] *plus* bitwise coordinates
+/// (the same id legitimately carries both a learner's f64 originals and
+/// the f32-quantized wire copy; collapsing them would change results).
+/// Every cached id is live in the [`crate::network::DeltaDecoder`] store;
+/// when the decoder evicts ids no learner references any more
+/// (`evict_unreferenced`), the caller forwards them to [`Self::evict_ids`]
+/// so cache memory stays bounded by the live union, in lockstep with the
+/// store.
+///
+/// # Bitwise equality with a fresh per-event union
+///
+/// Each event opens with [`Self::begin_event`], which starts an *event
+/// view*: the cache rows touched this event, in registration order — the
+/// exact row order a fresh [`UnionGram`] fed the same `add_model` sequence
+/// would have. Coefficient vectors are indexed by event position and
+/// [`Self::quad_form`] sums in event order, reading entries from the
+/// persistent matrix. Entry values are position-independent (each is a
+/// pure function of its two points) and the summation order matches, so
+/// every quadratic form, distance and divergence equals the fresh-union
+/// computation **bitwise** — which is what keeps the engine ↔ cluster
+/// parity suite exact with the cache enabled on both sides.
+#[derive(Debug)]
+pub struct SyncGramCache {
+    kernel: Kernel,
+    dim: usize,
+    /// Flat resident points (row-major `len x dim`).
+    xs: Vec<f64>,
+    /// Cached `||x_r||^2` per resident row.
+    norms: Vec<f64>,
+    ids: Vec<SvId>,
+    /// id -> resident rows holding that id's coordinate variants.
+    index: HashMap<SvId, Vec<u32>>,
+    gram: Gram,
+    /// Resident rows already covered by `gram` (rows beyond are pending).
+    gram_n: usize,
+    /// Cache rows of the current event, in registration order.
+    event_rows: Vec<u32>,
+    /// Cache row -> event position (inverse of `event_rows`).
+    event_pos: HashMap<u32, u32>,
+    stats: SyncCacheStats,
+}
+
+impl SyncGramCache {
+    pub fn new(kernel: Kernel, dim: usize) -> Self {
+        SyncGramCache {
+            kernel,
+            dim,
+            xs: Vec::new(),
+            norms: Vec::new(),
+            ids: Vec::new(),
+            index: HashMap::new(),
+            gram: Gram {
+                rows: 0,
+                cols: 0,
+                data: Vec::new(),
+            },
+            gram_n: 0,
+            event_rows: Vec::new(),
+            event_pos: HashMap::new(),
+            stats: SyncCacheStats::default(),
+        }
+    }
+
+    /// Resident (cached) row count.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Rows registered in the current event (the dimension of the event's
+    /// coefficient vectors).
+    pub fn event_len(&self) -> usize {
+        self.event_rows.len()
+    }
+
+    pub fn stats(&self) -> SyncCacheStats {
+        self.stats
+    }
+
+    /// Open a new synchronization event: clears the event view (resident
+    /// rows and their Gram block survive untouched).
+    pub fn begin_event(&mut self) {
+        self.event_rows.clear();
+        self.event_pos.clear();
+    }
+
+    /// Resident row of one (id, coords) pair, if cached.
+    fn find_row(&self, id: SvId, x: &[f64]) -> Option<u32> {
+        self.index.get(&id).and_then(|rows| {
+            rows.iter().copied().find(|&r| {
+                let r = r as usize;
+                self.xs[r * self.dim..(r + 1) * self.dim] == *x
+            })
+        })
+    }
+
+    /// Register a model's support vectors with the current event,
+    /// returning each SV's *event position* in model order. Cached
+    /// (id, coords) variants are hits; new ones append resident rows
+    /// (misses) whose Gram extension is deferred to the next quadratic
+    /// form.
+    pub fn add_model(&mut self, m: &SvModel) -> Vec<u32> {
+        debug_assert_eq!(m.dim, self.dim);
+        debug_assert_eq!(m.kernel, self.kernel);
+        let mut out = Vec::with_capacity(m.len());
+        for i in 0..m.len() {
+            let id = m.ids()[i];
+            let x = m.sv(i);
+            let row = match self.find_row(id, x) {
+                Some(r) => {
+                    self.stats.hits += 1;
+                    r
+                }
+                None => {
+                    let r = self.ids.len() as u32;
+                    self.ids.push(id);
+                    self.xs.extend_from_slice(x);
+                    self.norms.push(m.sv_norms_sq()[i]);
+                    self.index.entry(id).or_default().push(r);
+                    self.stats.misses += 1;
+                    r
+                }
+            };
+            let pos = match self.event_pos.get(&row) {
+                Some(&p) => p,
+                None => {
+                    let p = self.event_rows.len() as u32;
+                    self.event_rows.push(row);
+                    self.event_pos.insert(row, p);
+                    p
+                }
+            };
+            out.push(pos);
+        }
+        out
+    }
+
+    /// Event-indexed coefficient vector (length [`Self::event_len`]) of a
+    /// model whose SVs were all registered this event; None otherwise
+    /// (callers fall back to the direct model-space computation, exactly
+    /// like [`UnionGram::try_coeffs`]).
+    pub fn try_coeffs(&self, m: &SvModel) -> Option<Vec<f64>> {
+        let mut out = vec![0.0; self.event_len()];
+        for i in 0..m.len() {
+            let r = self.find_row(m.ids()[i], m.sv(i))?;
+            let p = *self.event_pos.get(&r)?;
+            out[p as usize] += m.alpha()[i];
+        }
+        Some(out)
+    }
+
+    /// Accumulate `alpha` onto the event positions returned by
+    /// [`Self::add_model`].
+    pub fn scatter(&self, rows: &[u32], alpha: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(rows.len(), alpha.len());
+        debug_assert_eq!(out.len(), self.event_len());
+        for (&r, &a) in rows.iter().zip(alpha) {
+            out[r as usize] += a;
+        }
+    }
+
+    /// Extend the resident Gram to cover all resident rows (no-op when
+    /// current); only the new blocks are evaluated.
+    fn ensure_gram(&mut self) {
+        let n = self.len();
+        let old = self.gram_n;
+        if old == n {
+            return;
+        }
+        let data = std::mem::take(&mut self.gram.data);
+        let data = extend_symmetric_gram(&self.kernel, self.dim, &self.xs, &self.norms, data, old);
+        self.gram = Gram {
+            rows: n,
+            cols: n,
+            data,
+        };
+        self.gram_n = n;
+    }
+
+    /// Quadratic form v^T K w over the current event view (v, w indexed by
+    /// event position). Sums in event-registration order, so the result is
+    /// bitwise equal to [`UnionGram::quad_form`] on a fresh union built by
+    /// the same `add_model` sequence.
+    pub fn quad_form(&mut self, v: &[f64], w: &[f64]) -> f64 {
+        self.ensure_gram();
+        debug_assert_eq!(v.len(), self.event_len());
+        debug_assert_eq!(w.len(), self.event_len());
+        let cols = self.gram.cols;
+        let mut acc = 0.0;
+        for (ei, &ri) in self.event_rows.iter().enumerate() {
+            if v[ei] == 0.0 {
+                continue;
+            }
+            let row = &self.gram.data[ri as usize * cols..(ri as usize + 1) * cols];
+            let mut ri_acc = 0.0;
+            for (&rj, &wj) in self.event_rows.iter().zip(w) {
+                ri_acc += row[rj as usize] * wj;
+            }
+            acc += v[ei] * ri_acc;
+        }
+        acc
+    }
+
+    /// `||sum_r (a_r - b_r) k(x_r, .)||^2` over the event view, clamped at
+    /// 0; exactly 0 when `a == b` bitwise.
+    pub fn distance_sq(&mut self, a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), self.event_len());
+        debug_assert_eq!(b.len(), self.event_len());
+        let diff: Vec<f64> = a.iter().zip(b).map(|(&x, &y)| x - y).collect();
+        self.quad_form(&diff, &diff).max(0.0)
+    }
+
+    /// Drop every coordinate-variant row of the given ids (the ids the
+    /// delta-decoder store just evicted) and compact the resident Gram.
+    /// Must be called **between** events (the event view is cleared).
+    /// Entry values are position-independent, so compaction preserves the
+    /// bitwise value of every surviving entry.
+    pub fn evict_ids(&mut self, evicted: &[SvId]) {
+        self.event_rows.clear();
+        self.event_pos.clear();
+        if evicted.is_empty() {
+            return;
+        }
+        let dead: std::collections::HashSet<SvId> = evicted.iter().copied().collect();
+        let keep: Vec<usize> = (0..self.len())
+            .filter(|&r| !dead.contains(&self.ids[r]))
+            .collect();
+        if keep.len() == self.len() {
+            return;
+        }
+        self.stats.evicted_rows += (self.len() - keep.len()) as u64;
+        let dim = self.dim;
+        let mut xs = Vec::with_capacity(keep.len() * dim);
+        let mut norms = Vec::with_capacity(keep.len());
+        let mut ids = Vec::with_capacity(keep.len());
+        for &r in &keep {
+            xs.extend_from_slice(&self.xs[r * dim..(r + 1) * dim]);
+            norms.push(self.norms[r]);
+            ids.push(self.ids[r]);
+        }
+        // Gather the covered block in place: surviving covered rows keep
+        // their relative order, and every read position (old indices) is
+        // >= its write position (new indices), so a forward gather never
+        // reads an already-overwritten cell.
+        let old_n = self.gram_n;
+        let covered: Vec<usize> = keep.iter().copied().filter(|&r| r < old_n).collect();
+        let new_n = covered.len();
+        let mut data = std::mem::take(&mut self.gram.data);
+        let mut w = 0usize;
+        for &ri in &covered {
+            for &rj in &covered {
+                data[w] = data[ri * old_n + rj];
+                w += 1;
+            }
+        }
+        data.truncate(new_n * new_n);
+        self.xs = xs;
+        self.norms = norms;
+        self.ids = ids;
+        self.index.clear();
+        for (r, &id) in self.ids.iter().enumerate() {
+            self.index.entry(id).or_default().push(r as u32);
+        }
+        self.gram = Gram {
+            rows: new_n,
+            cols: new_n,
+            data,
+        };
+        self.gram_n = new_n;
     }
 }
 
@@ -564,5 +938,108 @@ mod tests {
         let mut ug = UnionGram::new(a.kernel, a.dim);
         ug.add_model(&a);
         assert!(ug.try_coeffs(&b).is_none());
+    }
+
+    #[test]
+    fn cache_warm_event_is_all_hits_and_matches_fresh_union_bitwise() {
+        let a = toy_model(&[(1, 0.4), (2, -0.7)], 0.0);
+        let b = toy_model(&[(3, 1.1), (4, 0.2)], 2.0);
+        let mut cache = SyncGramCache::new(a.kernel, a.dim);
+
+        // Event 1: everything is a miss.
+        cache.begin_event();
+        cache.add_model(&a);
+        cache.add_model(&b);
+        let ca = cache.try_coeffs(&a).unwrap();
+        let cb = cache.try_coeffs(&b).unwrap();
+        let d1 = cache.distance_sq(&ca, &cb);
+        assert_eq!(cache.stats().misses, 4);
+        assert_eq!(cache.stats().hits, 0);
+
+        // Event 2: same support set — pure hits, same result bitwise.
+        cache.begin_event();
+        cache.add_model(&a);
+        cache.add_model(&b);
+        let ca = cache.try_coeffs(&a).unwrap();
+        let cb = cache.try_coeffs(&b).unwrap();
+        let d2 = cache.distance_sq(&ca, &cb);
+        assert_eq!(cache.stats().hits, 4);
+        assert_eq!(cache.stats().misses, 4);
+        assert_eq!(d1.to_bits(), d2.to_bits());
+
+        // And bitwise equal to a fresh per-event union Gram.
+        let mut ug = UnionGram::new(a.kernel, a.dim);
+        ug.add_model(&a);
+        ug.add_model(&b);
+        let ua = ug.try_coeffs(&a).unwrap();
+        let ub = ug.try_coeffs(&b).unwrap();
+        assert_eq!(ug.distance_sq(&ua, &ub).to_bits(), d1.to_bits());
+    }
+
+    #[test]
+    fn cache_eviction_compacts_and_preserves_surviving_geometry() {
+        let a = toy_model(&[(1, 0.4), (2, -0.7)], 0.0);
+        let b = toy_model(&[(3, 1.1), (4, 0.2)], 2.0);
+        let mut cache = SyncGramCache::new(a.kernel, a.dim);
+        cache.begin_event();
+        cache.add_model(&a);
+        cache.add_model(&b);
+        let ca = cache.try_coeffs(&a).unwrap();
+        let before = cache.quad_form(&ca, &ca); // force the gram build
+        assert_eq!(cache.len(), 4);
+
+        // Evict b's ids; a's geometry must survive bitwise (compaction
+        // moves entries but never recomputes them).
+        cache.evict_ids(&[3, 4]);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evicted_rows, 2);
+        cache.begin_event();
+        let rows = cache.add_model(&a);
+        assert_eq!(cache.stats().hits, 2, "a's rows survived eviction");
+        let mut ca2 = vec![0.0; cache.event_len()];
+        cache.scatter(&rows, a.alpha(), &mut ca2);
+        assert_eq!(cache.quad_form(&ca2, &ca2).to_bits(), before.to_bits());
+
+        // b comes back as fresh misses and the distance still matches a
+        // fresh union.
+        cache.add_model(&b);
+        let ca = cache.try_coeffs(&a).unwrap();
+        let cb = cache.try_coeffs(&b).unwrap();
+        let got = cache.distance_sq(&ca, &cb);
+        let mut ug = UnionGram::new(a.kernel, a.dim);
+        ug.add_model(&a);
+        ug.add_model(&b);
+        let ua = ug.try_coeffs(&a).unwrap();
+        let ub = ug.try_coeffs(&b).unwrap();
+        assert_eq!(ug.distance_sq(&ua, &ub).to_bits(), got.to_bits());
+    }
+
+    #[test]
+    fn cache_eviction_with_pending_rows_keeps_coverage_prefix() {
+        // Rows appended after the last gram build are "pending"; evicting
+        // a covered row must leave the covered/pending split consistent.
+        let a = toy_model(&[(1, 0.4), (2, -0.7)], 0.0);
+        let b = toy_model(&[(3, 1.1)], 2.0);
+        let c = toy_model(&[(5, 0.9), (6, -0.3)], -1.0);
+        let mut cache = SyncGramCache::new(a.kernel, a.dim);
+        cache.begin_event();
+        cache.add_model(&a);
+        cache.add_model(&b);
+        let ca = cache.try_coeffs(&a).unwrap();
+        let _ = cache.quad_form(&ca, &ca); // gram covers rows of a and b
+        cache.add_model(&c); // pending rows
+        cache.evict_ids(&[2]); // drop a covered row while c is pending
+        cache.begin_event();
+        cache.add_model(&b);
+        cache.add_model(&c);
+        let cb = cache.try_coeffs(&b).unwrap();
+        let cc = cache.try_coeffs(&c).unwrap();
+        let got = cache.distance_sq(&cb, &cc);
+        let mut ug = UnionGram::new(a.kernel, a.dim);
+        ug.add_model(&b);
+        ug.add_model(&c);
+        let ub = ug.try_coeffs(&b).unwrap();
+        let uc = ug.try_coeffs(&c).unwrap();
+        assert_eq!(ug.distance_sq(&ub, &uc).to_bits(), got.to_bits());
     }
 }

@@ -34,7 +34,32 @@
 //! [`UnionGram`] is the sync-time form of the same idea: the deduplicated
 //! union of several expansions with one shared Gram matrix, on which every
 //! pairwise inner product, subset-average distance and divergence is an
-//! O(n^2) quadratic form.
+//! O(n^2) quadratic form. [`SyncGramCache`] extends it *across* events:
+//! the coordinator keeps the union rows and their Gram block alive between
+//! synchronizations, so a warm event evaluates only O(new SVs · resident)
+//! kernel entries instead of rebuilding O(union²) from nothing.
+//!
+//! # Cache-coherence invariant (SyncGramCache ↔ DeltaDecoder store)
+//!
+//! The cache is keyed by the coordinator's delta-decoder store (Sec. 3's
+//! persistent id → coordinates memory): every cached row's id is live in
+//! the store, and when [`crate::network::DeltaDecoder::evict_unreferenced`]
+//! drops ids no learner references any more, the caller forwards exactly
+//! those ids to [`SyncGramCache::evict_ids`] in the same event boundary.
+//! Ids are minted monotonically and downloads only carry live ids, so an
+//! evicted id can never reappear in any future message — eviction is safe
+//! and bounds cache memory by the live support union. Rows are keyed by
+//! (id, bitwise coords) so a learner's f64 originals and the f32 wire
+//! copies stay distinct, which is what makes every cache-backed quadratic
+//! form bitwise equal to a fresh per-event [`UnionGram`].
+//!
+//! # Parallel backend
+//!
+//! The GEMM-shaped sweeps (`Gram::compute{,_symmetric}`, the union/cache
+//! row extension, `SvModel::predict_batch`, large `exp_slice` calls) run
+//! over the deterministic scoped-thread backend in [`crate::util::par`]:
+//! disjoint output rows per thread, identical serial arithmetic per entry,
+//! bitwise-equal results at any `--threads` setting.
 
 pub mod functions;
 pub mod gram;
@@ -42,6 +67,6 @@ pub mod linear;
 pub mod model;
 
 pub use functions::Kernel;
-pub use gram::{Gram, UnionGram};
+pub use gram::{Gram, SyncCacheStats, SyncGramCache, UnionGram};
 pub use linear::LinearModel;
 pub use model::{Model, SvModel};

@@ -233,19 +233,35 @@ impl SvModel {
     /// each SV block is streamed once per query while hot in cache). Used
     /// by the prediction service's native path and the benches. Result
     /// `out[i]` is bitwise identical to `predict(&queries[i])`.
+    ///
+    /// Large batches partition the queries over the deterministic
+    /// scoped-thread backend: each query's block contributions accumulate
+    /// in the same (ascending-block) order on every path, so the output is
+    /// bitwise identical at any thread count.
     pub fn predict_batch(&self, queries: &[Vec<f64>]) -> Vec<f64> {
         let mut out = vec![0.0; queries.len()];
         let qnorms: Vec<f64> = queries.iter().map(|q| sq_norm(q)).collect();
         let n = self.len();
-        let mut buf = [0.0f64; BLOCK];
-        let mut start = 0;
-        while start < n {
-            let len = BLOCK.min(n - start);
-            for (qi, q) in queries.iter().enumerate() {
-                self.kernel_block(start, q, qnorms[qi], &mut buf[..len]);
-                out[qi] += dot(&buf[..len], &self.alpha[start..start + len]);
+        let sweep = |first: usize, out_chunk: &mut [f64]| {
+            let mut buf = [0.0f64; BLOCK];
+            let mut start = 0;
+            while start < n {
+                let len = BLOCK.min(n - start);
+                for (ci, o) in out_chunk.iter_mut().enumerate() {
+                    let qi = first + ci;
+                    self.kernel_block(start, &queries[qi], qnorms[qi], &mut buf[..len]);
+                    *o += dot(&buf[..len], &self.alpha[start..start + len]);
+                }
+                start += len;
             }
-            start += len;
+        };
+        if queries.len() > 1
+            && queries.len() * n >= crate::util::par::PAR_MIN_ELEMS
+            && crate::util::par::threads() > 1
+        {
+            crate::util::par::par_rows(&mut out, 1, sweep);
+        } else {
+            sweep(0, &mut out);
         }
         out
     }

@@ -132,6 +132,7 @@ mod tests {
             cum_compression_err: 0.0,
             comm,
             partial_syncs: 0,
+            sync_cache: Default::default(),
             series: vec![],
             mean_svs: 10.0,
             wall_secs: 0.0,

@@ -1,5 +1,6 @@
 //! Cumulative metrics recording and the per-run [`Outcome`].
 
+use crate::kernel::SyncCacheStats;
 use crate::network::CommStats;
 
 /// One point of the over-time series (sampled every `record_every` rounds).
@@ -75,6 +76,9 @@ pub struct Outcome {
     /// Violations resolved by subset balancing without a global sync
     /// (the partial-synchronization refinement; 0 when disabled).
     pub partial_syncs: u64,
+    /// Reuse counters of the coordinator's persistent sync-Gram cache
+    /// (all zero for linear engines and cacheless runs).
+    pub sync_cache: SyncCacheStats,
     pub series: Vec<Sample>,
     /// Final mean SV count (model size proxy).
     pub mean_svs: f64,

@@ -81,6 +81,7 @@ mod tests {
             cum_compression_err: 0.0,
             comm: CommStats::new(),
             partial_syncs: 0,
+            sync_cache: Default::default(),
             series: vec![Sample {
                 round: 10,
                 cum_loss: 5.0,

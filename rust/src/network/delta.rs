@@ -11,6 +11,18 @@
 //! coordinator knows; [`DeltaDecoder`] lives at the coordinator and keeps
 //! the id -> coordinates store (the "higher memory usage at the
 //! coordinator side" the paper trades for bandwidth).
+//!
+//! # Store eviction and the sync-Gram cache
+//!
+//! The store would otherwise grow with every id ever uploaded.
+//! [`DeltaDecoder::evict_unreferenced`] drops entries referenced by no
+//! learner's current holdings — safe because ids are minted monotonically
+//! (a pruned id is never re-pushed) and downloads only carry ids of live
+//! models, so an unreferenced id can never appear in a future message.
+//! The evicted ids are returned so the coordinator's persistent
+//! [`crate::kernel::SyncGramCache`] can drop its matching rows in the
+//! same event boundary — the cache-coherence invariant: every cached row's
+//! id is live in this store (see `kernel/mod.rs`).
 
 use std::collections::{HashMap, HashSet};
 
@@ -185,6 +197,31 @@ impl DeltaDecoder {
     pub fn store_size(&self) -> usize {
         self.store.len()
     }
+
+    /// Drop store entries no learner references any more (ids absent from
+    /// every `learner_has` set) and return them, so caches keyed on this
+    /// store evict the same ids in lockstep. Call between synchronization
+    /// events.
+    ///
+    /// Safety argument: a learner's future upload only references ids of
+    /// its *current* model; since the last ingest that model can only have
+    /// gained freshly minted ids (whose coordinates travel in the upload's
+    /// SV block) or lost ids — never regained an old one — and downloads
+    /// only carry ids of live models, which stay referenced. So an
+    /// unreferenced id is unreachable forever and evicting it can never
+    /// produce an "unknown sv id" decode failure.
+    pub fn evict_unreferenced(&mut self) -> Vec<u64> {
+        let mut evicted = Vec::new();
+        let learner_has = &self.learner_has;
+        self.store.retain(|id, _| {
+            let live = learner_has.iter().any(|h| h.contains(id));
+            if !live {
+                evicted.push(*id);
+            }
+            live
+        });
+        evicted
+    }
 }
 
 #[cfg(test)]
@@ -279,6 +316,46 @@ mod tests {
         let t = model(&[], 2);
         let res = dec.ingest_upload(0, &[(99, 1.0)], &SvBlock::default(), &t);
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn evict_unreferenced_drops_only_dead_ids() {
+        let mut enc = DeltaEncoder::new();
+        let mut dec = DeltaDecoder::new(2);
+        let t = model(&[], 2);
+        // Learner 0 uploads {1, 2}; learner 1 uploads {3}.
+        let m0 = model(&[(1, 1.0), (2, 1.0)], 2);
+        let (c, b) = enc.encode_upload(&m0);
+        dec.ingest_upload(0, &c, &b, &t).unwrap();
+        let mut enc1 = DeltaEncoder::new();
+        let m1 = model(&[(3, 1.0)], 2);
+        let (c, b) = enc1.encode_upload(&m1);
+        dec.ingest_upload(1, &c, &b, &t).unwrap();
+        assert!(dec.evict_unreferenced().is_empty(), "all ids are live");
+
+        // Learner 0 re-uploads having pruned id 2: it becomes dead.
+        let m0b = model(&[(1, 0.5)], 2);
+        let (c, b) = enc.encode_upload(&m0b);
+        dec.ingest_upload(0, &c, &b, &t).unwrap();
+        let evicted = dec.evict_unreferenced();
+        assert_eq!(evicted, vec![2]);
+        assert_eq!(dec.store_size(), 2);
+
+        // Surviving ids still serve uploads referencing them.
+        let (c, b) = enc.encode_upload(&m0b);
+        assert!(b.is_empty(), "id 1 was already known");
+        dec.ingest_upload(0, &c, &b, &t).unwrap();
+    }
+
+    #[test]
+    fn evict_spares_ids_shipped_via_download() {
+        let mut dec = DeltaDecoder::new(1);
+        let avg = model(&[(7, 0.5)], 2);
+        // Shipping the average marks id 7 in learner_has even though the
+        // learner never uploaded it.
+        let _ = dec.encode_download(0, &avg);
+        assert!(dec.evict_unreferenced().is_empty());
+        assert_eq!(dec.store_size(), 1);
     }
 
     #[test]

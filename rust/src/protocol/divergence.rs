@@ -2,7 +2,7 @@
 //! `delta(f) = 1/m sum_i ||f^i - fbar||^2`, computed exactly in the dual
 //! representation (Sec. 2's extension to kernel Hilbert spaces).
 
-use crate::kernel::{Model, SvModel, UnionGram};
+use crate::kernel::{Model, SvModel, SyncGramCache, UnionGram};
 
 /// Divergence of a configuration plus the per-learner distances.
 #[derive(Debug, Clone)]
@@ -72,6 +72,38 @@ pub fn kernel_divergence(models: &[&SvModel]) -> Divergence {
     Divergence { delta, per_learner }
 }
 
+/// [`kernel_divergence`] driven through the coordinator's persistent
+/// [`SyncGramCache`] instead of a fresh per-event [`UnionGram`]: opens a
+/// new event view, registers the models in the same order, and computes
+/// the identical (bitwise — see the cache docs) quadratic forms, but a
+/// warm cache evaluates only the kernel entries of genuinely new SVs.
+pub fn kernel_divergence_cached(cache: &mut SyncGramCache, models: &[&SvModel]) -> Divergence {
+    assert!(!models.is_empty());
+    let m = models.len() as f64;
+    cache.begin_event();
+    let rows: Vec<Vec<u32>> = models.iter().map(|f| cache.add_model(f)).collect();
+    let n = cache.event_len();
+
+    let mut avg = vec![0.0; n];
+    for (f, frows) in models.iter().zip(&rows) {
+        for (&r, &a) in frows.iter().zip(f.alpha()) {
+            avg[r as usize] += a / m;
+        }
+    }
+
+    let mut per_learner = Vec::with_capacity(models.len());
+    let mut diff = vec![0.0; n];
+    for (f, frows) in models.iter().zip(&rows) {
+        diff.copy_from_slice(&avg);
+        for (&r, &a) in frows.iter().zip(f.alpha()) {
+            diff[r as usize] -= a;
+        }
+        per_learner.push(cache.quad_form(&diff, &diff).max(0.0));
+    }
+    let delta = per_learner.iter().sum::<f64>() / m;
+    Divergence { delta, per_learner }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +142,30 @@ mod tests {
         // avg = [1, 0]; both distances 1; delta = 1.
         let d = configuration_divergence(&[&a, &b]);
         assert!((d.delta - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_divergence_is_bitwise_fresh_divergence() {
+        let mut f1 = SvModel::new(k(), 2);
+        f1.push(1, &[0.0, 1.0], 0.7);
+        f1.push(2, &[1.0, 0.0], -0.2);
+        let mut f2 = SvModel::new(k(), 2);
+        f2.push(3, &[0.5, 0.5], 1.1);
+        f2.push(1, &[0.0, 1.0], 0.3); // shared id, identical coords
+        let mut cache = SyncGramCache::new(k(), 2);
+        for round in 0..3 {
+            let fresh = kernel_divergence(&[&f1, &f2]);
+            let cached = kernel_divergence_cached(&mut cache, &[&f1, &f2]);
+            assert_eq!(fresh.delta.to_bits(), cached.delta.to_bits(), "round {round}");
+            for (a, b) in fresh.per_learner.iter().zip(&cached.per_learner) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            // Models drift between events; most rows stay cached.
+            f1.push(10 + round, &[round as f64, -0.5], 0.1);
+        }
+        let stats = cache.stats();
+        assert!(stats.hits > 0, "warm events must reuse cached rows");
+        assert!(stats.misses > 0);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 use crate::compression::Compressor;
 use crate::config::{ExperimentConfig, ProtocolConfig};
 use crate::data::{build_streams, DataStream};
-use crate::kernel::{Model, SvModel};
+use crate::kernel::{Model, SvModel, SyncGramCache};
 use crate::learner::{build_learner, OnlineLearner};
 use crate::metrics::{MetricsRecorder, Outcome};
 use crate::network::{CommStats, DeltaDecoder, DeltaEncoder, Message};
@@ -43,6 +43,9 @@ pub struct ProtocolEngine {
     pub record_divergence: bool,
     /// Violations resolved by subset balancing (partial-sync refinement).
     pub partial_syncs: u64,
+    /// Persistent cross-event union Gram (kernel engines only), coherent
+    /// with `decoder`'s store — see the `kernel` module docs.
+    sync_cache: Option<SyncGramCache>,
     watch: Stopwatch,
 }
 
@@ -70,6 +73,11 @@ impl ProtocolEngine {
             Some(tau) => Compressor::Projection { tau },
             None => Compressor::None,
         };
+        // The cross-event sync cache (kernel engines only; is_kernel
+        // rules out the Rff panic in Kernel::from_config).
+        let sync_cache = is_kernel.then(|| {
+            SyncGramCache::new(crate::kernel::Kernel::from_config(cfg.learner.kernel), dim)
+        });
         Ok(ProtocolEngine {
             policy: SyncPolicy::new(cfg.protocol),
             avg_compressor,
@@ -83,6 +91,7 @@ impl ProtocolEngine {
             sync_divergences: Vec::new(),
             record_divergence: false,
             partial_syncs: 0,
+            sync_cache,
             watch: Stopwatch::new(),
             learners,
             streams,
@@ -158,6 +167,7 @@ impl ProtocolEngine {
                 // Resolved locally — no global synchronization event.
                 synced = false;
                 self.partial_syncs += 1;
+                self.evict_sync_cache();
             } else {
                 self.run_sync(true);
             }
@@ -183,11 +193,12 @@ impl ProtocolEngine {
     /// is untouched, so every local condition proof stays valid. Returns
     /// false if B grew to the full cluster (caller escalates to full sync).
     ///
-    /// The whole event shares one [`crate::kernel::UnionGram`]: the
-    /// reference and every member upload register their SVs once, and each
-    /// candidate safe-zone check is an O(n^2) quadratic form on that
-    /// matrix instead of a fresh `||avg_B||^2 + ||r||^2 - 2<avg_B, r>`
-    /// kernel-evaluation pass per growth step.
+    /// The whole event runs on the persistent [`SyncGramCache`] (seeded
+    /// once per event with the reference expansion): each candidate
+    /// safe-zone check is an O(n^2) quadratic form on the cached matrix
+    /// instead of a fresh `||avg_B||^2 + ||r||^2 - 2<avg_B, r>`
+    /// kernel-evaluation pass per growth step, and rows persist across
+    /// events so a warm event only evaluates the genuinely new SVs.
     ///
     /// Only kernel engines support this (linear balancing is possible but
     /// the messages are already tiny); falls back to full sync otherwise.
@@ -195,19 +206,30 @@ impl ProtocolEngine {
         if !self.is_kernel || violators.is_empty() {
             return false;
         }
+        // Take the cache out of `self` for the duration of the event so
+        // the borrow checker lets the event body use the engine's other
+        // fields freely.
+        let Some(mut cache) = self.sync_cache.take() else {
+            return false;
+        };
+        let resolved = self.partial_sync_event(&mut cache, violators, delta);
+        self.sync_cache = Some(cache);
+        resolved
+    }
+
+    /// Body of one partial-synchronization event over the (borrowed-out)
+    /// sync cache; see [`ProtocolEngine::try_partial_sync`].
+    fn partial_sync_event(
+        &mut self,
+        ug: &mut SyncGramCache,
+        violators: &[usize],
+        delta: f64,
+    ) -> bool {
         let m = self.learners.len();
         // The reference model is common; take it from any tracker (all
         // reset to the same model at the last full sync; None = zero fn).
         let reference = self.trackers[0].reference().cloned();
-        // Event-wide union Gram, seeded with the reference expansion and
-        // pre-sized for the worst-case union (reference + every learner;
-        // is_kernel rules out the Rff panic in from_config).
-        let kernel = crate::kernel::Kernel::from_config(self.cfg.learner.kernel);
-        let mut cap: usize = self.learners.iter().map(|l| l.sv_count()).sum();
-        if let Some(Model::Kernel(r)) = &reference {
-            cap += r.len();
-        }
-        let mut ug = crate::kernel::UnionGram::with_capacity(kernel, self.cfg.data.dim(), cap);
+        ug.begin_event();
         let r_sparse: Option<(Vec<u32>, Vec<f64>)> = match &reference {
             Some(Model::Kernel(r)) => Some((ug.add_model(r), r.alpha().to_vec())),
             Some(Model::Linear(_)) => unreachable!("kernel engine with linear reference"),
@@ -278,7 +300,7 @@ impl ProtocolEngine {
             let avg_k = avg_b.as_kernel().expect("kernel average");
             let dist = match ug.try_coeffs(avg_k) {
                 Some(avg_coeffs) => {
-                    let mut r_coeffs = vec![0.0; ug.len()];
+                    let mut r_coeffs = vec![0.0; ug.event_len()];
                     if let Some((rows, alphas)) = &r_sparse {
                         ug.scatter(rows, alphas, &mut r_coeffs);
                     }
@@ -350,6 +372,16 @@ impl ProtocolEngine {
             self.sync_linear();
         }
         self.comm.record_sync(self.round);
+        self.evict_sync_cache();
+    }
+
+    /// Close a synchronization event for the cache: drop decoder-store ids
+    /// no learner references any more, and the matching cache rows with
+    /// them (the coherence invariant documented in the `kernel` module).
+    fn evict_sync_cache(&mut self) {
+        if let Some(cache) = self.sync_cache.as_mut() {
+            cache.evict_ids(&self.decoder.evict_unreferenced());
+        }
     }
 
     fn sync_kernel(&mut self) {
@@ -382,9 +414,14 @@ impl ProtocolEngine {
         }
 
         if self.record_divergence {
-            let models: Vec<Model> = uploaded.iter().cloned().map(Model::Kernel).collect();
-            let refs: Vec<&Model> = models.iter().collect();
-            let d = crate::protocol::divergence::configuration_divergence(&refs);
+            // Divergence runs on the persistent sync cache: a warm event
+            // evaluates only the kernel entries of genuinely new SVs.
+            let krefs: Vec<&SvModel> = uploaded.iter().collect();
+            let d = if let Some(cache) = self.sync_cache.as_mut() {
+                crate::protocol::divergence::kernel_divergence_cached(cache, &krefs)
+            } else {
+                crate::protocol::divergence::kernel_divergence(&krefs)
+            };
             self.sync_divergences.push((self.round, d.delta));
         }
 
@@ -492,6 +529,11 @@ impl ProtocolEngine {
             },
             comm: self.comm,
             partial_syncs: self.partial_syncs,
+            sync_cache: self
+                .sync_cache
+                .as_ref()
+                .map(|c| c.stats())
+                .unwrap_or_default(),
             series: self.metrics.series,
             wall_secs: self.watch.elapsed_secs(),
         }
@@ -656,6 +698,15 @@ mod tests {
         }
         let partial = e.partial_syncs;
         let partial_outcome = e.into_outcome();
+        if partial > 0 {
+            // Balancing events run on the sync cache, so its counters must
+            // reflect the registered rows.
+            let stats = partial_outcome.sync_cache;
+            assert!(
+                stats.misses > 0,
+                "balancing events registered no cache rows: {stats:?}"
+            );
+        }
 
         let full_outcome = ProtocolEngine::new(full_cfg).unwrap().run();
         // Partial balancing should resolve at least some violations

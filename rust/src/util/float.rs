@@ -169,9 +169,19 @@ pub fn fast_exp(x0: f64) -> f64 {
 }
 
 /// `v = e^v` elementwise — the vectorized form the blocked kernel sweeps
-/// call on a whole block of RBF exponents at once.
+/// call on a whole block of RBF exponents at once. Very large slices are
+/// chunked over the scoped-thread backend (`util::par`); each element is
+/// independent, so the result is bitwise identical at any thread count.
 #[inline]
 pub fn exp_slice(vals: &mut [f64]) {
+    if vals.len() >= crate::util::par::PAR_MIN_ELEMS && crate::util::par::threads() > 1 {
+        crate::util::par::par_rows(vals, 1, |_, chunk| {
+            for v in chunk.iter_mut() {
+                *v = fast_exp(*v);
+            }
+        });
+        return;
+    }
     for v in vals.iter_mut() {
         *v = fast_exp(*v);
     }

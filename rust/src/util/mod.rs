@@ -3,6 +3,7 @@
 
 pub mod float;
 pub mod logging;
+pub mod par;
 pub mod rng;
 pub mod timer;
 

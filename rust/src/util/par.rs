@@ -1,0 +1,203 @@
+//! Deterministic scoped-thread parallel backend for the GEMM-shaped
+//! sweeps (Gram blocks, union-Gram extension, batched prediction, large
+//! elementwise exponentials).
+//!
+//! # Determinism contract
+//!
+//! Work is partitioned by **disjoint output rows**: every output element
+//! is computed by exactly one thread running the *identical* serial
+//! arithmetic on the same inputs, so results are **bitwise equal** to the
+//! single-threaded computation at any thread count. No reductions cross a
+//! thread boundary — anything order-sensitive (mirroring a triangle,
+//! accumulating a quadratic form) stays serial at the call site. This is
+//! what lets the engine ↔ cluster parity suite stay exact while the
+//! coordinator runs multithreaded, and why callers may consult
+//! [`threads`] freely: the thread count is a throughput knob, never a
+//! semantics knob.
+//!
+//! Built on `std::thread::scope` only — the build environment is offline,
+//! so no rayon/crossbeam.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Minimum number of output elements before a sweep is worth spawning
+/// threads for (a scoped spawn costs ~tens of microseconds; below this the
+/// serial path wins). Callers compare their output size against this.
+pub const PAR_MIN_ELEMS: usize = 16 * 1024;
+
+/// Hard ceiling on the configured thread count (config validation rejects
+/// larger values; [`threads`] clamps as defense in depth) — far above any
+/// real machine, low enough that a garbage setting can't ask `par_rows`
+/// to spawn one thread per output row.
+pub const MAX_THREADS: usize = 1024;
+
+/// Configured thread count; 0 = auto (resolve to available parallelism).
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the backend's thread count (the `--threads` config). 0 restores
+/// the default: `std::thread::available_parallelism()`.
+pub fn set_threads(n: usize) {
+    THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Resolved thread count the next parallel sweep will use.
+pub fn threads() -> usize {
+    match THREADS.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        n => n.min(MAX_THREADS),
+    }
+}
+
+/// Split `data` (a row-major `rows x row_width` buffer) into contiguous
+/// whole-row chunks, one per thread, and run `f(first_row, chunk)` on each
+/// inside a `std::thread::scope`. With one thread (or one row) this is a
+/// plain inline call — the parallel path computes the exact same values
+/// because `f` must derive every output element only from `first_row` +
+/// offset and shared immutable inputs.
+pub fn par_rows<T, F>(data: &mut [T], row_width: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(row_width > 0);
+    debug_assert_eq!(data.len() % row_width, 0);
+    let rows = data.len() / row_width;
+    if rows == 0 {
+        return;
+    }
+    let t = threads().min(rows);
+    if t <= 1 {
+        f(0, data);
+        return;
+    }
+    let per = rows.div_ceil(t);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut row0 = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rows - row0);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * row_width);
+            rest = tail;
+            let first = row0;
+            row0 += take;
+            let fr = &f;
+            s.spawn(move || fr(first, head));
+        }
+    });
+}
+
+/// [`par_rows`] with contiguous chunks of approximately equal *cost*
+/// instead of equal row count, for sweeps whose per-row work varies —
+/// the triangular Gram fills do `n - i` entries in row `i`, so equal-size
+/// chunks would give the first thread ~2x the average work and cap the
+/// speedup near half the thread count. Only the chunk boundaries differ
+/// from [`par_rows`]; every output element is still computed by exactly
+/// one thread running the identical serial arithmetic, so results stay
+/// bitwise equal to serial.
+pub fn par_rows_by_cost<T, F, C>(data: &mut [T], row_width: usize, cost: C, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+    C: Fn(usize) -> usize,
+{
+    assert!(row_width > 0);
+    debug_assert_eq!(data.len() % row_width, 0);
+    let rows = data.len() / row_width;
+    if rows == 0 {
+        return;
+    }
+    let t = threads().min(rows);
+    if t <= 1 {
+        f(0, data);
+        return;
+    }
+    let total: usize = (0..rows).map(&cost).sum();
+    let target = total.div_ceil(t).max(1);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut row0 = 0usize;
+        while row0 < rows {
+            // Grow the chunk until it carries ~1/t of the total cost
+            // (always at least one row).
+            let mut take = 0usize;
+            let mut acc = 0usize;
+            while row0 + take < rows && (take == 0 || acc < target) {
+                acc += cost(row0 + take);
+                take += 1;
+            }
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * row_width);
+            rest = tail;
+            let first = row0;
+            row0 += take;
+            let fr = &f;
+            s.spawn(move || fr(first, head));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One test (not three) because `set_threads` is process-global state:
+    /// concurrent #[test] fns mutating it would race. Everything that
+    /// *consumes* `threads()` elsewhere is thread-count-independent by the
+    /// determinism contract, so only assertions on the knob itself need to
+    /// be serialized.
+    #[test]
+    fn thread_knob_and_row_partition() {
+        // Knob resolution.
+        set_threads(0);
+        assert!(threads() >= 1);
+        set_threads(3);
+        assert_eq!(threads(), 3);
+
+        // 103 rows of width 7, row i filled with i — any partition must
+        // produce the same buffer.
+        let rows = 103;
+        let width = 7;
+        for t in [1usize, 2, 5, 8] {
+            set_threads(t);
+            let mut data = vec![0usize; rows * width];
+            par_rows(&mut data, width, |first, chunk| {
+                for (ci, row) in chunk.chunks_exact_mut(width).enumerate() {
+                    row.fill(first + ci);
+                }
+            });
+            for (i, row) in data.chunks_exact(width).enumerate() {
+                assert!(row.iter().all(|&v| v == i), "row {i} under t={t}");
+            }
+        }
+
+        // Cost-balanced variant: same total coverage, only boundaries
+        // differ (triangular cost like the symmetric Gram fill).
+        for t in [1usize, 3, 8] {
+            set_threads(t);
+            let mut data = vec![0usize; rows * width];
+            par_rows_by_cost(&mut data, width, |i| rows - i, |first, chunk| {
+                for (ci, row) in chunk.chunks_exact_mut(width).enumerate() {
+                    row.fill(first + ci);
+                }
+            });
+            for (i, row) in data.chunks_exact(width).enumerate() {
+                assert!(row.iter().all(|&v| v == i), "cost row {i} under t={t}");
+            }
+        }
+
+        // Degenerate shapes: empty input visits nothing; a single row runs
+        // inline.
+        set_threads(4);
+        let mut empty: Vec<u8> = Vec::new();
+        par_rows(&mut empty, 3, |_, _| panic!("no rows to visit"));
+        par_rows_by_cost(&mut empty, 3, |_| 1, |_, _| panic!("no rows to visit"));
+        let mut one = vec![0u8; 5];
+        par_rows(&mut one, 5, |first, chunk| {
+            assert_eq!(first, 0);
+            chunk.fill(9);
+        });
+        assert_eq!(one, vec![9; 5]);
+        set_threads(0);
+    }
+}

@@ -1,0 +1,269 @@
+//! Property suites for PR 3's two performance layers:
+//!
+//! 1. The persistent cross-event [`SyncGramCache`] must be **bitwise**
+//!    indistinguishable from a fresh per-event [`UnionGram`] across a
+//!    randomized multi-event sequence with shared ids, f32 wire
+//!    round-trips, model drift, and store-driven evictions — for pairwise
+//!    distances, safe-zone-style average-vs-reference distances, and the
+//!    Eq. 1 divergence.
+//! 2. The deterministic scoped-thread parallel backend must produce
+//!    **bitwise** identical Gram matrices, batched predictions and
+//!    exponentials at every thread count 1..8 (it partitions by disjoint
+//!    output rows and never reassociates a sum across threads).
+
+use std::collections::HashSet;
+
+use kdol::kernel::{Gram, Kernel, SvModel, SyncGramCache, UnionGram};
+use kdol::protocol::divergence::{kernel_divergence, kernel_divergence_cached};
+use kdol::util::{par, Pcg64, Rng};
+
+fn random_point(rng: &mut Pcg64, dim: usize) -> Vec<f64> {
+    (0..dim).map(|_| rng.normal()).collect()
+}
+
+/// One randomized multi-event protocol-shaped workload: models drift
+/// between events (new SVs, prunes, shared-id adoptions with f32 wire
+/// round-trips), each event computes every sync-time quantity on both the
+/// persistent cache and a fresh union, and ids dead in all models are
+/// evicted between events like the delta-decoder store would.
+#[test]
+fn cache_matches_fresh_union_bitwise_across_random_events() {
+    let kernel = Kernel::Rbf { gamma: 0.6 };
+    let dim = 3;
+    let mut rng = Pcg64::seeded(20260729);
+    let mut cache = SyncGramCache::new(kernel, dim);
+    let m = 4;
+    let mut models: Vec<SvModel> = (0..m).map(|_| SvModel::new(kernel, dim)).collect();
+    // A slowly-changing shared reference model (the safe-zone check's r).
+    let mut reference = SvModel::new(kernel, dim);
+    let mut next_id = 1u64;
+    let mut all_ids: Vec<u64> = Vec::new();
+    let mut saw_eviction = false;
+
+    for event in 0..40 {
+        // --- drift between events ----------------------------------------
+        for mi in 0..m {
+            for _ in 0..rng.below(3) {
+                let x = random_point(&mut rng, dim);
+                models[mi].push(next_id, &x, rng.normal());
+                all_ids.push(next_id);
+                next_id += 1;
+            }
+            // Adopt a peer's SV under the same id: sometimes the exact f64
+            // coordinates (post-sync copy), sometimes the f32-quantized
+            // wire variant (must occupy its own cache row).
+            let peer = (mi + 1) % m;
+            if rng.chance(0.6) && !models[peer].is_empty() {
+                let j = rng.below(models[peer].len() as u64) as usize;
+                let id = models[peer].ids()[j];
+                if !models[mi].ids().contains(&id) {
+                    let x: Vec<f64> = if rng.chance(0.5) {
+                        models[peer].sv(j).to_vec()
+                    } else {
+                        models[peer].sv(j).iter().map(|&v| v as f32 as f64).collect()
+                    };
+                    models[mi].push(id, &x, rng.normal());
+                }
+            }
+            // Prune the oldest SV now and then (kills its id eventually).
+            if models[mi].len() > 5 {
+                models[mi].remove_ordered(0);
+            }
+        }
+        if event % 7 == 3 && !models[0].is_empty() {
+            // Refresh the reference from model 0 (bitwise copies).
+            reference = models[0].clone();
+        }
+
+        // --- the event: cache vs fresh union, same registration order ----
+        let mut fresh = UnionGram::new(kernel, dim);
+        cache.begin_event();
+        let fresh_ref_rows = fresh.add_model(&reference);
+        let cache_ref_rows = cache.add_model(&reference);
+        for f in &models {
+            fresh.add_model(f);
+            cache.add_model(f);
+        }
+
+        // Pairwise distances between all model pairs.
+        for a in 0..m {
+            for b in 0..m {
+                let fa = fresh.try_coeffs(&models[a]).expect("registered");
+                let fb = fresh.try_coeffs(&models[b]).expect("registered");
+                let ca = cache.try_coeffs(&models[a]).expect("registered");
+                let cb = cache.try_coeffs(&models[b]).expect("registered");
+                let want = fresh.distance_sq(&fa, &fb);
+                let got = cache.distance_sq(&ca, &cb);
+                assert_eq!(
+                    want.to_bits(),
+                    got.to_bits(),
+                    "event {event}: distance({a},{b}) {want} vs {got}"
+                );
+            }
+        }
+
+        // Safe-zone shape: ||avg_B - r||^2 with r scattered sparsely (the
+        // engines scatter the reference coefficients onto its rows).
+        let sel: Vec<usize> = (0..m).filter(|&i| i % 2 == event % 2 || i == 0).collect();
+        let subset: Vec<&SvModel> = sel.iter().map(|&i| &models[i]).collect();
+        let avg = SvModel::average(&subset);
+        if let (Some(fa), Some(ca)) = (fresh.try_coeffs(&avg), cache.try_coeffs(&avg)) {
+            let mut fr = vec![0.0; fresh.len()];
+            fresh.scatter(&fresh_ref_rows, reference.alpha(), &mut fr);
+            let mut cr = vec![0.0; cache.event_len()];
+            cache.scatter(&cache_ref_rows, reference.alpha(), &mut cr);
+            let want = fresh.distance_sq(&fa, &fr);
+            let got = cache.distance_sq(&ca, &cr);
+            assert_eq!(
+                want.to_bits(),
+                got.to_bits(),
+                "event {event}: safe-zone {want} vs {got}"
+            );
+        }
+
+        // Divergence (Eq. 1) through the cache == fresh, bitwise.
+        let refs: Vec<&SvModel> = models.iter().collect();
+        let want = kernel_divergence(&refs);
+        let got = kernel_divergence_cached(&mut cache, &refs);
+        assert_eq!(want.delta.to_bits(), got.delta.to_bits(), "event {event}");
+        for (w, g) in want.per_learner.iter().zip(&got.per_learner) {
+            assert_eq!(w.to_bits(), g.to_bits(), "event {event}");
+        }
+
+        // --- event boundary: evict ids dead in every model + reference ---
+        let live: HashSet<u64> = models
+            .iter()
+            .flat_map(|f| f.ids().iter().copied())
+            .chain(reference.ids().iter().copied())
+            .collect();
+        let dead: Vec<u64> = all_ids.iter().copied().filter(|id| !live.contains(id)).collect();
+        if !dead.is_empty() {
+            let before = cache.stats().evicted_rows;
+            cache.evict_ids(&dead);
+            saw_eviction |= cache.stats().evicted_rows > before;
+        }
+        all_ids.retain(|id| live.contains(id));
+    }
+
+    let stats = cache.stats();
+    assert!(stats.hits > 0, "no cross-event reuse observed: {stats:?}");
+    assert!(stats.misses > 0, "{stats:?}");
+    assert!(saw_eviction, "the sequence never exercised eviction");
+    assert!(
+        stats.hits > stats.misses,
+        "consecutive events share most of their support set, so hits should \
+         dominate: {stats:?}"
+    );
+}
+
+/// Every parallel sweep must equal its serial twin bitwise at any thread
+/// count — the backend partitions by disjoint output rows and each entry
+/// runs the identical serial arithmetic.
+#[test]
+fn parallel_backend_is_bitwise_serial_at_any_thread_count() {
+    let mut rng = Pcg64::seeded(42);
+    let dim = 6;
+    // Large enough that the parallel paths actually engage
+    // (rows * cols >= PAR_MIN_ELEMS).
+    let rows = 160;
+    let cols = 130;
+    let a: Vec<f64> = (0..rows * dim).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..cols * dim).map(|_| rng.normal()).collect();
+    let sym_n = 200;
+    let s: Vec<f64> = (0..sym_n * dim).map(|_| rng.normal()).collect();
+
+    let mut model = SvModel::new(Kernel::Rbf { gamma: 0.3 }, dim);
+    for i in 0..600u64 {
+        let x = random_point(&mut rng, dim);
+        model.push(i, &x, rng.normal());
+    }
+    let queries: Vec<Vec<f64>> = (0..48).map(|_| random_point(&mut rng, dim)).collect();
+
+    let exps: Vec<f64> = (0..40_000).map(|_| -rng.f64() * 30.0).collect();
+
+    for kernel in [
+        Kernel::Rbf { gamma: 0.4 },
+        Kernel::Linear,
+        Kernel::Polynomial { degree: 2, c: 0.5 },
+    ] {
+        par::set_threads(1);
+        let base = Gram::compute(&kernel, &a, &b, dim);
+        let base_sym = Gram::compute_symmetric(&kernel, &s, dim);
+        for t in 2..=8 {
+            par::set_threads(t);
+            let g = Gram::compute(&kernel, &a, &b, dim);
+            assert_eq!(g.data.len(), base.data.len());
+            for (i, (x, y)) in base.data.iter().zip(&g.data).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{kernel:?} t={t} entry {i}");
+            }
+            let g = Gram::compute_symmetric(&kernel, &s, dim);
+            for (i, (x, y)) in base_sym.data.iter().zip(&g.data).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{kernel:?} sym t={t} entry {i}");
+            }
+        }
+    }
+
+    // predict_batch: block-contribution order per query is fixed, so the
+    // query partition cannot change a single bit.
+    par::set_threads(1);
+    let base = model.predict_batch(&queries);
+    for t in 2..=8 {
+        par::set_threads(t);
+        let got = model.predict_batch(&queries);
+        for (i, (x, y)) in base.iter().zip(&got).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "predict_batch t={t} query {i}");
+        }
+    }
+
+    // exp_slice over a large buffer (elementwise — trivially partitionable,
+    // but pin it anyway).
+    par::set_threads(1);
+    let mut serial = exps.clone();
+    kdol::util::float::exp_slice(&mut serial);
+    for t in 2..=8 {
+        par::set_threads(t);
+        let mut v = exps.clone();
+        kdol::util::float::exp_slice(&mut v);
+        assert!(serial.iter().zip(&v).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    // Union/cache incremental extension under threads: grow a cache in two
+    // steps at each thread count and compare against one-shot serial.
+    par::set_threads(1);
+    let big_a = {
+        let mut f = SvModel::new(Kernel::Rbf { gamma: 0.3 }, dim);
+        for i in 0..120u64 {
+            let x = random_point(&mut rng, dim);
+            f.push(1_000 + i, &x, rng.normal());
+        }
+        f
+    };
+    let big_b = {
+        let mut f = SvModel::new(Kernel::Rbf { gamma: 0.3 }, dim);
+        for i in 0..120u64 {
+            let x = random_point(&mut rng, dim);
+            f.push(2_000 + i, &x, rng.normal());
+        }
+        f
+    };
+    let mut serial_union = UnionGram::new(big_a.kernel, dim);
+    serial_union.add_model(&big_a);
+    serial_union.add_model(&big_b);
+    let ua = serial_union.try_coeffs(&big_a).unwrap();
+    let ub = serial_union.try_coeffs(&big_b).unwrap();
+    let want = serial_union.distance_sq(&ua, &ub);
+    for t in 2..=8 {
+        par::set_threads(t);
+        let mut cache = SyncGramCache::new(big_a.kernel, dim);
+        cache.begin_event();
+        cache.add_model(&big_a);
+        let ca = cache.try_coeffs(&big_a).unwrap();
+        let _ = cache.quad_form(&ca, &ca); // force a first (partial) build
+        cache.add_model(&big_b); // then a threaded incremental extension
+        let ca = cache.try_coeffs(&big_a).unwrap();
+        let cb = cache.try_coeffs(&big_b).unwrap();
+        let got = cache.distance_sq(&ca, &cb);
+        assert_eq!(want.to_bits(), got.to_bits(), "incremental extension t={t}");
+    }
+    par::set_threads(0);
+}

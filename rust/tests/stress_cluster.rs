@@ -61,6 +61,13 @@ fn stress_dynamic_cluster_m32_t10k() {
         out.comm.peak_round_bytes,
         out.comm.last_sync_round
     );
+    println!(
+        "sync-Gram cache: {} hits / {} misses / {} evicted rows; compression eps {:.4}",
+        out.sync_cache.hits,
+        out.sync_cache.misses,
+        out.sync_cache.evicted_rows,
+        out.cum_compression_err
+    );
 
     assert_eq!(out.rounds, 10_000);
     assert!(out.cum_loss.is_finite() && out.cum_loss > 0.0);
@@ -86,5 +93,24 @@ fn stress_dynamic_cluster_m32_t10k() {
     // Sync stamps refer to protocol rounds, not event counts.
     if let Some(last) = out.comm.last_sync_round {
         assert!(last <= out.rounds, "sync stamped past the horizon: {last}");
+    }
+
+    // Warm-event reuse: consecutive balancing events share most of their
+    // support set, so once more than one balancing event has run the
+    // leader's persistent sync-Gram cache must report row hits — the
+    // counters are exactly what proves warm events evaluate only
+    // O(new SVs * union) kernel entries instead of O(union^2).
+    if out.partial_syncs > 1 {
+        assert!(
+            out.sync_cache.misses > 0,
+            "balancing events registered no cache rows: {:?}",
+            out.sync_cache
+        );
+        assert!(
+            out.sync_cache.hits > 0,
+            "no cross-event cache reuse in {} balancing events: {:?}",
+            out.partial_syncs,
+            out.sync_cache
+        );
     }
 }
