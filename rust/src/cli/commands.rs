@@ -5,13 +5,15 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use crate::cli::Args;
-use crate::config::{ExperimentConfig, ProtocolConfig};
+use crate::config::{
+    CompressionConfig, DataConfig, ExperimentConfig, KernelConfig, LossKind, ProtocolConfig,
+};
 use crate::experiments::{fig1, fig2, headline, runner, sweeps};
 use crate::metrics::report::{comparison_table, series_csv, write_report};
 use crate::metrics::{EfficiencyReport, Outcome};
 
 pub fn dispatch(argv: Vec<String>) -> Result<()> {
-    let args = Args::parse(&argv, &["divergence", "help", "partial"])?;
+    let args = Args::parse(&argv, &["divergence", "help", "partial", "lockstep"])?;
     match args.positionals.first().map(String::as_str) {
         Some("run") => cmd_run(&args),
         Some("bench") => cmd_bench(&args),
@@ -48,6 +50,74 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
         };
         cfg.name = format!("{}-{}", cfg.name, cfg.protocol.label());
     }
+    // Reject combinations that would otherwise be silently ignored (the
+    // flags are whitelisted unconditionally, so a dropped dependency flag
+    // would not be caught by reject_unknown).
+    let kernel_kind = args.get("kernel");
+    if args.get("gamma").is_some() && !matches!(kernel_kind, Some("rbf") | Some("rff")) {
+        bail!("--gamma requires --kernel rbf or --kernel rff");
+    }
+    if args.get("rff-dim").is_some() && kernel_kind != Some("rff") {
+        bail!("--rff-dim requires --kernel rff");
+    }
+    let data_kind = args.get("data");
+    if args.get("dim").is_some()
+        && !matches!(data_kind, Some("stock") | Some("hyperplane") | Some("mixture"))
+    {
+        bail!("--dim requires --data stock, hyperplane, or mixture");
+    }
+    if args.get("drift").is_some() && data_kind != Some("hyperplane") {
+        bail!("--drift requires --data hyperplane");
+    }
+    if let Some(k) = args.get("kernel") {
+        cfg.learner.kernel = match k {
+            "linear" => KernelConfig::Linear,
+            "rbf" => KernelConfig::Rbf {
+                gamma: args.get_f64("gamma")?.unwrap_or(0.25),
+            },
+            "rff" => KernelConfig::Rff {
+                gamma: args.get_f64("gamma")?.unwrap_or(0.25),
+                dim: args.get_usize("rff-dim")?.unwrap_or(256),
+            },
+            other => bail!("unknown kernel `{other}` (linear | rbf | rff)"),
+        };
+        if !matches!(cfg.learner.kernel, KernelConfig::Rbf { .. }) {
+            // SV-budget compression only applies to support-vector models;
+            // fixed-size models are already constant-size.
+            cfg.learner.compression = CompressionConfig::None;
+        }
+        cfg.name = format!("{}-{k}", cfg.name);
+    }
+    if let Some(d) = args.get("data") {
+        let dim = args.get_usize("dim")?;
+        cfg.data = match d {
+            "susy" => DataConfig::Susy { noise: 0.08 },
+            "stock" => DataConfig::Stock {
+                stocks: dim.unwrap_or(32),
+                noise: 0.02,
+            },
+            "hyperplane" => DataConfig::Hyperplane {
+                dim: dim.unwrap_or(10),
+                drift: args.get_f64("drift")?.unwrap_or(0.02),
+            },
+            "mixture" => DataConfig::Mixture {
+                dim: dim.unwrap_or(2),
+                separation: 2.0,
+            },
+            other => bail!("unknown data kind `{other}` (susy | stock | hyperplane | mixture)"),
+        };
+        // Keep the loss compatible with the stream's target type.
+        match (cfg.data.is_classification(), cfg.learner.loss) {
+            (true, LossKind::Squared) | (true, LossKind::EpsInsensitive(_)) => {
+                cfg.learner.loss = LossKind::Hinge;
+            }
+            (false, LossKind::Hinge) | (false, LossKind::Logistic) => {
+                cfg.learner.loss = LossKind::Squared;
+            }
+            _ => {}
+        }
+        cfg.name = format!("{}-{d}", cfg.name);
+    }
     if let Some(n) = args.get_usize("learners")? {
         cfg.learners = n;
     }
@@ -59,6 +129,9 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     }
     if args.has("partial") {
         cfg.partial_sync = true;
+    }
+    if args.has("lockstep") {
+        cfg.lockstep = true;
     }
     if let Some(n) = args.get_usize("threads")? {
         cfg.threads = n;
@@ -92,11 +165,18 @@ fn maybe_csv(args: &Args, outcomes: &[&Outcome]) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "config", "preset", "protocol", "delta", "period", "check-period", "learners", "rounds",
-        "seed", "csv", "divergence", "partial", "threads",
+        "seed", "csv", "divergence", "partial", "threads", "kernel", "gamma", "rff-dim", "data",
+        "dim", "drift",
     ])?;
     let cfg = load_config(args)?;
     let outcome = runner::run_experiment(&cfg)?;
     println!("{}", comparison_table(&cfg.name, &[&outcome]));
+    if cfg.partial_sync {
+        println!(
+            "  partial syncs: {} (violations resolved by subset balancing)",
+            outcome.partial_syncs
+        );
+    }
     let cache = outcome.sync_cache;
     if cache.hits + cache.misses > 0 {
         println!(
@@ -105,14 +185,17 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
     }
     if let ProtocolConfig::Dynamic { delta, .. } = cfg.protocol {
-        let rep = EfficiencyReport::evaluate(
-            &outcome,
-            cfg.learner.eta,
-            delta,
-            outcome.mean_svs as usize * cfg.learners,
-            cfg.data.dim(),
-            None,
-        );
+        // Kernel models bound messages by the union support size; fixed-
+        // size models (linear / RFF) by their model dimension (sbar = 0
+        // selects that bound, so keep the kernel estimate >= 1 even on
+        // short runs where mean_svs truncates to 0 — like cmd_bounds).
+        let sbar_kernel = (outcome.mean_svs as usize + 1) * cfg.learners;
+        let (sbar, dim) = match cfg.learner.kernel {
+            KernelConfig::Rbf { .. } => (sbar_kernel, cfg.data.dim()),
+            KernelConfig::Linear => (0, cfg.data.dim()),
+            KernelConfig::Rff { dim, .. } => (0, dim),
+        };
+        let rep = EfficiencyReport::evaluate(&outcome, cfg.learner.eta, delta, sbar, dim, None);
         for c in &rep.checks {
             println!(
                 "  {:<38} measured {:>14.1}  bound {:>14.1}  [{}]",
@@ -195,7 +278,8 @@ fn cmd_bounds(scale: f64) -> Result<()> {
 fn cmd_cluster(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "config", "preset", "protocol", "delta", "period", "check-period", "learners", "rounds",
-        "seed", "partial", "threads",
+        "seed", "partial", "threads", "kernel", "gamma", "rff-dim", "data", "dim", "drift",
+        "lockstep",
     ])?;
     let cfg = load_config(args)?;
     let out = crate::coordinator::run_cluster(&cfg)?;

@@ -26,6 +26,12 @@ RUN FLAGS:
     --protocol <kind>      nosync|continuous|periodic|dynamic|serial
     --delta <f>            divergence threshold (dynamic)
     --period <n>           sync period (periodic)
+    --kernel <kind>        linear | rbf | rff (model family override)
+    --gamma <f>            RBF bandwidth (rbf / rff)           [0.25]
+    --rff-dim <n>          random-Fourier feature count (rff)  [256]
+    --data <kind>          susy | stock | hyperplane | mixture
+    --dim <n>              stream dimensionality (data kinds with one)
+    --drift <f>            hyperplane drift rate               [0.02]
     --learners <n>         number of local learners
     --rounds <n>           rounds per learner
     --seed <n>             RNG seed
@@ -36,7 +42,9 @@ RUN FLAGS:
 
 CLUSTER FLAGS:
     same as RUN (minus --csv/--divergence); --partial enables subset
-    balancing in the threaded leader/worker runtime
+    balancing in the threaded leader/worker runtime (all model
+    families); --lockstep paces workers one protocol round at a time
+    (deterministic conformance mode — engine-exact trajectories)
 
 BENCH FLAGS:
     bench <target>         fig1 | fig2 | headline | sweep-delta |
@@ -51,6 +59,10 @@ SERVE FLAGS:
 
 EXAMPLES:
     kdol run --preset fig1 --protocol dynamic --delta 0.2
+    kdol run --kernel rff --rff-dim 128 --data hyperplane --drift 0.05 \\
+             --protocol dynamic --delta 0.3 --partial
+    kdol cluster --kernel linear --data hyperplane --protocol dynamic \\
+                 --delta 0.3 --partial --lockstep
     kdol bench fig2 --scale 0.25 --csv fig2.csv
     kdol serve --requests 4096
 ";

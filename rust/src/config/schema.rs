@@ -188,6 +188,14 @@ pub struct ExperimentConfig {
     /// bitwise identical at any setting — this is purely a throughput
     /// knob.
     pub threads: usize,
+    /// Lockstep conformance mode of the threaded cluster runtime: workers
+    /// pace protocol rounds with the leader over *uncounted* control
+    /// messages (`RoundDone`/`Proceed`), so the cluster's trajectory —
+    /// violation sets, balancing events, every protocol byte — is
+    /// deterministic and must equal the engine's exactly. Costs one
+    /// barrier per round; off (free-running workers) is the deployable
+    /// default.
+    pub lockstep: bool,
 }
 
 impl ExperimentConfig {
@@ -214,6 +222,7 @@ impl ExperimentConfig {
             record_every: 10,
             partial_sync: false,
             threads: 0,
+            lockstep: false,
         }
     }
 
@@ -270,6 +279,7 @@ impl ExperimentConfig {
             record_every: 20,
             partial_sync: false,
             threads: 0,
+            lockstep: false,
         }
     }
 
@@ -426,6 +436,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = t.get("partial_sync").and_then(Value::as_bool) {
             cfg.partial_sync = v;
+        }
+        if let Some(v) = t.get("lockstep").and_then(Value::as_bool) {
+            cfg.lockstep = v;
         }
         if let Some(d) = t.get("data").and_then(Value::as_table) {
             cfg.data = parse_data(d)?;

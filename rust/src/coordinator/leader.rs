@@ -5,9 +5,13 @@
 //!
 //! The leader is the cluster twin of [`crate::protocol::engine`]: for
 //! scheduled protocols the two must agree byte-for-byte (asserted by the
-//! `parity_engine_cluster` test module); for dynamic protocols worker
-//! asynchrony shifts sync timing, so agreement is qualitative (bounded
-//! tolerance on event counts).
+//! `parity_engine_cluster` test module); for dynamic protocols under
+//! free-running workers asynchrony shifts sync timing, so agreement is
+//! qualitative (bounded tolerance on event counts) — unless the run uses
+//! lockstep conformance mode (`cfg.lockstep`), where workers pace rounds
+//! with the leader over uncounted control messages and the trajectory is
+//! deterministic (exact parity for fixed-size models, asserted by the
+//! conformance suite).
 //!
 //! Communication accounting counts protocol messages only — `Done` /
 //! `Shutdown` are runtime control and cross the wire uncounted, exactly
@@ -25,12 +29,13 @@ use anyhow::{bail, Result};
 use crate::compression::Compressor;
 use crate::config::{ExperimentConfig, ProtocolConfig};
 use crate::data::build_streams;
-use crate::kernel::{Model, SvModel, SyncCacheStats, SyncGramCache};
+use crate::kernel::{LinearModel, Model, SvModel, SyncCacheStats, SyncGramCache};
 use crate::learner::build_learner;
 use crate::metrics::MetricsRecorder;
 use crate::network::{Bus, CommStats, DeltaDecoder, Message};
+use crate::protocol::balancing::{BalanceGeometry, BalancingSet, FixedGeometry, KernelGeometry};
 use crate::protocol::sync::synchronize;
-use crate::protocol::SyncPolicy;
+use crate::protocol::{SyncDecision, SyncPolicy};
 
 /// Aggregate result of a threaded cluster run.
 #[derive(Debug)]
@@ -186,7 +191,11 @@ fn leader_loop(cfg: &ExperimentConfig, bus: &Bus) -> Result<ClusterOutcome> {
         metrics: MetricsRecorder::new(cfg.record_every as u64),
         timeout: Duration::from_secs(60),
     };
-    leader.run()?;
+    if cfg.lockstep {
+        leader.run_lockstep(cfg.rounds as u64)?;
+    } else {
+        leader.run()?;
+    }
     Ok(ClusterOutcome {
         cum_loss: leader.cum_loss,
         cum_error: leader.cum_error,
@@ -266,6 +275,116 @@ impl Leader<'_> {
         Ok(())
     }
 
+    /// Lockstep conformance loop: drive the cluster one protocol round at
+    /// a time. Workers park at the end of every round (`RoundDone`, wait
+    /// for `Proceed` — uncounted runtime control) and their violations
+    /// precede their barrier message on the same FIFO channel, so the
+    /// leader observes exactly the engine's same-round violator set and
+    /// every upload/probe happens at the round the engine would use. The
+    /// resulting trajectory — violation sets, balancing events, every
+    /// protocol byte — is deterministic; for fixed-size models it equals
+    /// the engine's byte-for-byte (the conformance suite asserts this).
+    fn run_lockstep(&mut self, rounds: u64) -> Result<()> {
+        for round in 1..=rounds {
+            // Scheduled protocols: every worker enters its synchronization
+            // exchange before reporting the round done, so collect the
+            // uploads first (no RoundDone can arrive while a worker still
+            // blocks for its download).
+            if self.policy.decide(round, false) == SyncDecision::Sync {
+                self.collect_and_finish(
+                    vec![None; self.m],
+                    vec![None; self.m],
+                    0,
+                    vec![0u64; self.m],
+                    round,
+                )?;
+            }
+            // Round barrier: collect every worker's RoundDone, accumulating
+            // the round's violations (they precede their sender's barrier
+            // message).
+            let mut done = 0usize;
+            let mut in_set = vec![false; self.m];
+            let mut violators: Vec<(usize, f64)> = Vec::new();
+            while done < self.m {
+                let (_, msg, n) = self.bus.recv(self.timeout)?;
+                match msg {
+                    Message::RoundDone { round: r, .. } => {
+                        anyhow::ensure!(
+                            r == round,
+                            "lockstep barrier out of order: worker at round {r}, leader at {round}"
+                        );
+                        done += 1;
+                    }
+                    Message::Violation {
+                        learner,
+                        round: r,
+                        distance_sq,
+                    } => {
+                        self.comm.record_up(n);
+                        self.comm.record_violation();
+                        let i = learner as usize;
+                        if r > self.adopted_round[i] {
+                            self.known_distance[i] = Some(distance_sq);
+                            if !in_set[i] {
+                                in_set[i] = true;
+                                violators.push((i, distance_sq));
+                            }
+                        }
+                    }
+                    other => bail!("leader(lockstep): unexpected message at barrier: {other:?}"),
+                }
+            }
+            // Resolve the round's event exactly like the engine: subset
+            // balancing first (when enabled and the violators don't cover
+            // the cluster), escalating to a full synchronization.
+            if !violators.is_empty() {
+                violators.sort_by_key(|&(i, _)| i);
+                let delta = self
+                    .policy
+                    .delta(round)
+                    .expect("violations only occur under dynamic protocols");
+                let resolved = self.partial_sync
+                    && violators.len() < self.m
+                    && self.try_partial_sync(&violators, delta)?;
+                if resolved {
+                    self.partial_syncs += 1;
+                } else {
+                    for i in 0..self.m {
+                        self.comm
+                            .record_down(self.bus.send_to(i, &Message::SyncRequest)?);
+                    }
+                    self.collect_and_finish(
+                        vec![None; self.m],
+                        vec![None; self.m],
+                        0,
+                        vec![0u64; self.m],
+                        round,
+                    )?;
+                }
+            }
+            // Mirror the engine: every protocol round closes an accounting
+            // round (the event paths above already closed theirs; a
+            // zero-byte close never moves the peak).
+            self.comm.end_round();
+            // Release the cluster into the next round (uncounted control).
+            self.bus.broadcast(&Message::Proceed)?;
+        }
+        // Workers send their final metrics after the last release.
+        while self.done.iter().any(|d| !d) {
+            let (_, msg, _) = self.bus.recv(self.timeout)?;
+            match msg {
+                Message::Done {
+                    learner,
+                    cum_loss,
+                    cum_error,
+                } => self.note_done(learner, cum_loss, cum_error),
+                other => bail!("leader(lockstep): unexpected message after horizon: {other:?}"),
+            }
+        }
+        self.comm.end_round();
+        Ok(())
+    }
+
     fn note_done(&mut self, learner: u32, cum_loss: f64, cum_error: f64) {
         // Runtime control: not recorded as protocol communication.
         self.done[learner as usize] = true;
@@ -285,12 +404,14 @@ impl Leader<'_> {
         in_set[learner] = true;
         let mut violators: Vec<(usize, f64)> = vec![(learner, distance_sq)];
         let wait_start = Instant::now();
-        // The bounded wait only buys a better balancing *seed set* — when
-        // subset balancing can't run (disabled, or linear models) the
-        // event escalates to a full sync that collects everyone anyway, so
-        // keep the old non-blocking drain there instead of idling the
-        // leader for the cap on every violation.
-        let cap = if self.partial_sync && self.is_kernel {
+        // The bounded wait only buys a better balancing *seed set* — with
+        // subset balancing disabled the event escalates to a full sync
+        // that collects everyone anyway, so keep the old non-blocking
+        // drain there instead of idling the leader for the cap on every
+        // violation. (Every model family balances: kernel expansions on
+        // the Gram-backed geometry, fixed-size models — linear and RFF —
+        // on the Euclidean one.)
+        let cap = if self.partial_sync {
             CO_VIOLATION_WAIT
         } else {
             Duration::ZERO
@@ -342,7 +463,7 @@ impl Leader<'_> {
         // The engine seeds the balancing set in ascending learner order.
         violators.sort_by_key(|&(i, _)| i);
 
-        if self.partial_sync && self.is_kernel && violators.len() < self.m {
+        if self.partial_sync && violators.len() < self.m {
             let delta = self
                 .policy
                 .delta(round)
@@ -376,13 +497,19 @@ impl Leader<'_> {
     /// local condition proof stays valid. Returns Ok(false) if B grew to
     /// the full cluster (caller escalates to a full sync).
     ///
-    /// Like the engine twin, the whole event runs on the leader's
+    /// Like the engine twin, a kernel event runs on the leader's
     /// persistent [`SyncGramCache`] seeded with the reference: every
     /// safe-zone check while B grows is a quadratic form on the cached
     /// matrix, not a fresh kernel-evaluation pass over `avg_B` and `r`,
     /// and rows persist across events so a warm event only evaluates the
-    /// genuinely new SVs.
+    /// genuinely new SVs. Fixed-size events run the same algorithm on the
+    /// Euclidean geometry ([`FixedGeometry`]) instead.
     fn try_partial_sync(&mut self, violators: &[(usize, f64)], delta: f64) -> Result<bool> {
+        if !self.is_kernel {
+            // Fixed-size models (plain linear / RFF) balance on the
+            // Euclidean geometry — no Gram cache involved.
+            return self.partial_sync_event_fixed(violators, delta);
+        }
         // Take the cache out of `self` for the event so the borrow checker
         // lets the event body use the leader's other fields freely.
         let Some(mut cache) = self.sync_cache.take() else {
@@ -393,39 +520,17 @@ impl Leader<'_> {
         resolved
     }
 
-    /// Body of one partial-synchronization event over the (borrowed-out)
-    /// sync cache; see [`Leader::try_partial_sync`].
-    fn partial_sync_event(
-        &mut self,
-        ug: &mut SyncGramCache,
-        violators: &[(usize, f64)],
-        delta: f64,
-    ) -> Result<bool> {
-        let m = self.m;
-        ug.begin_event();
-        let r_sparse: Option<(Vec<u32>, Vec<f64>)> = match &self.reference {
-            Some(Model::Kernel(r)) => Some((ug.add_model(r), r.alpha().to_vec())),
-            Some(Model::Linear(_)) | None => None,
-        };
-        let mut in_b = vec![false; m];
-        let mut b: Vec<usize> = Vec::new();
-        let mut uploaded: Vec<Option<SvModel>> = vec![None; m];
-        let mut up_round = vec![0u64; m];
-        let mut distances: Vec<Option<f64>> = vec![None; m];
-        for &(i, d) in violators {
-            in_b[i] = true;
-            b.push(i);
-            distances[i] = Some(d);
-        }
-
-        // Distances of the remaining workers to the reference. The engine
-        // reads its trackers directly; the cluster reuses last-known
-        // (possibly stale — they only steer the extension *order*, see
-        // `known_distance`) distances from prior violations/probes and
-        // probes only the workers it knows nothing about — shrinking the
-        // dynamic-protocol byte gap vs. the engine.
+    /// Distances of the workers outside the seed set to the reference.
+    /// The engine reads its trackers directly; the cluster reuses
+    /// last-known (possibly stale — they only steer the extension
+    /// *order*, see `known_distance`) distances from prior
+    /// violations/probes and probes only the workers it knows nothing
+    /// about — shrinking the dynamic-protocol byte gap vs. the engine
+    /// (and matching the fixed-size engine path, which mirrors these
+    /// probe messages, byte for byte).
+    fn gather_distances(&mut self, in_b: &[bool], distances: &mut [Option<f64>]) -> Result<()> {
         let mut expected = 0usize;
-        for i in 0..m {
+        for i in 0..self.m {
             if !in_b[i] {
                 if let Some(d) = self.known_distance[i] {
                     distances[i] = Some(d);
@@ -475,23 +580,52 @@ impl Leader<'_> {
                 other => bail!("leader: unexpected message during distance probe: {other:?}"),
             }
         }
+        Ok(())
+    }
 
-        // Deterministic extension order mirroring the engine: ascending
-        // distance, consumed from the back — learners farthest from the
-        // reference join first (they carry the most balancing mass).
-        let mut extension: Vec<usize> = (0..m).filter(|&i| !in_b[i]).collect();
-        extension.sort_by(|&x, &y| {
-            distances[x]
-                .unwrap()
-                .total_cmp(&distances[y].unwrap())
-        });
+    /// Body of one partial-synchronization event over the (borrowed-out)
+    /// sync cache; see [`Leader::try_partial_sync`]. The growth order,
+    /// safe-zone decision and escalation live in
+    /// [`crate::protocol::balancing`]; this method owns the bus traffic.
+    fn partial_sync_event(
+        &mut self,
+        ug: &mut SyncGramCache,
+        violators: &[(usize, f64)],
+        delta: f64,
+    ) -> Result<bool> {
+        let m = self.m;
+        let mut in_b = vec![false; m];
+        let mut distances: Vec<Option<f64>> = vec![None; m];
+        let mut seed: Vec<usize> = Vec::with_capacity(violators.len());
+        for &(i, d) in violators {
+            in_b[i] = true;
+            distances[i] = Some(d);
+            seed.push(i);
+        }
+        self.gather_distances(&in_b, &mut distances)?;
+        let dists: Vec<f64> = distances.iter().map(|d| d.unwrap_or(0.0)).collect();
 
-        loop {
-            if b.len() == m {
-                return Ok(false); // escalate: full sync with a fresh reference
+        // Move the reference out for the event instead of cloning the
+        // whole expansion (the geometry needs a borrow the borrow checker
+        // cannot see through `&mut self`); restored right after the
+        // growth loop. Nothing in the event body reads `self.reference`.
+        let reference = self.reference.take();
+        let mut geom = KernelGeometry::begin_event(ug, reference.as_ref());
+        let mut set = BalancingSet::new(m, &seed, &dists);
+        let mut uploaded: Vec<Option<Model>> = vec![None; m];
+        let mut up_round = vec![0u64; m];
+
+        // Grow B until its average re-enters the safe zone or the set
+        // would cover the cluster; break out with the adopted average so
+        // the geometry's borrow of the cache ends before the cache event
+        // is closed below.
+        let outcome: Option<(Model, f64)> = loop {
+            if set.is_full() {
+                break None; // escalate: full sync with a fresh reference
             }
             // Request uploads from the new members of B.
-            let pending: Vec<usize> = b
+            let pending: Vec<usize> = set
+                .members()
                 .iter()
                 .copied()
                 .filter(|&i| uploaded[i].is_none())
@@ -515,7 +649,7 @@ impl Leader<'_> {
                         let k = self
                             .decoder
                             .ingest_upload(i, &coeffs, &new_svs, &self.template)?;
-                        if uploaded[i].replace(k).is_none() {
+                        if uploaded[i].replace(Model::Kernel(k)).is_none() {
                             waiting -= 1;
                         }
                         up_round[i] = round;
@@ -539,72 +673,177 @@ impl Leader<'_> {
             // quadratic forms' summation order, and the engine twin adds
             // models in exactly this order.
             for &i in &pending {
-                if let Some(k) = &uploaded[i] {
-                    ug.add_model(k);
+                if let Some(model) = &uploaded[i] {
+                    geom.note_upload(model);
                 }
             }
             // B-average (Prop. 2 over the subset), budget-compressed, and
-            // the safe-zone check against the *global* reference — a
-            // quadratic form of the coefficient difference on the shared
-            // union Gram (model-space distance kept as a defensive
-            // fallback; compression never invents new SV coordinates).
-            let models: Vec<Model> = b
+            // the safe-zone check against the *global* reference on the
+            // kernel geometry (quadratic form on the shared union Gram;
+            // model-space distance kept as a defensive fallback —
+            // compression never invents new SV coordinates).
+            let refs: Vec<&Model> = set
+                .members()
                 .iter()
-                .map(|&i| Model::Kernel(uploaded[i].clone().unwrap()))
+                .map(|&i| uploaded[i].as_ref().unwrap())
                 .collect();
-            let refs: Vec<&Model> = models.iter().collect();
             let (avg_b, eps) = synchronize(&refs, self.compressor);
-            let avg_k = avg_b.as_kernel().expect("kernel balancing set");
-            let dist = match ug.try_coeffs(avg_k) {
-                Some(avg_coeffs) => {
-                    let mut r_coeffs = vec![0.0; ug.event_len()];
-                    if let Some((rows, alphas)) = &r_sparse {
-                        ug.scatter(rows, alphas, &mut r_coeffs);
-                    }
-                    ug.distance_sq(&avg_coeffs, &r_coeffs)
-                }
-                None => match &self.reference {
-                    Some(r) => avg_b.distance_sq(r),
-                    None => avg_k.norm_sq(),
-                },
-            };
+            let dist = geom.dist_to_reference(&avg_b);
             if dist <= delta {
-                if eps > 0.0 {
-                    // The adopted average's compression perturbs the
-                    // balanced members' models once (engine twin records
-                    // the same quantity on success only).
-                    self.metrics.record_update(0.0, 0.0, 0.0, eps);
-                }
-                for &i in &b {
-                    let (coeffs, new_svs) = self.decoder.encode_download(i, avg_k);
-                    let msg = Message::ModelDownload {
-                        coeffs,
-                        new_svs,
-                        partial: true,
-                    };
-                    self.comm.record_down(self.bus.send_to(i, &msg)?);
-                    self.adopted_round[i] = self.adopted_round[i].max(up_round[i]);
-                    // The member's model changed: its cached distance to
-                    // the reference is stale.
-                    self.known_distance[i] = None;
-                }
-                // A partial sync is a complete communication event but not
-                // a global synchronization: no record_sync, reference and
-                // final_model unchanged. Close the cache's event: drop
-                // decoder-store ids no learner references any more, and
-                // their cache rows with them.
-                ug.evict_ids(&self.decoder.evict_unreferenced());
-                self.comm.end_round();
-                return Ok(true);
+                break Some((avg_b, eps));
             }
-            match extension.pop() {
-                Some(next) => {
-                    in_b[next] = true;
-                    b.push(next);
-                }
-                None => return Ok(false),
+            if set.extend().is_none() {
+                break None;
             }
+        };
+        drop(geom);
+        self.reference = reference;
+        let Some((avg_b, eps)) = outcome else {
+            return Ok(false);
+        };
+
+        if eps > 0.0 {
+            // The adopted average's compression perturbs the balanced
+            // members' models once (engine twin records the same quantity
+            // on success only).
+            self.metrics.record_update(0.0, 0.0, 0.0, eps);
         }
+        let avg_k = avg_b.as_kernel().expect("kernel balancing set");
+        for &i in set.members() {
+            let (coeffs, new_svs) = self.decoder.encode_download(i, avg_k);
+            let msg = Message::ModelDownload {
+                coeffs,
+                new_svs,
+                partial: true,
+            };
+            self.comm.record_down(self.bus.send_to(i, &msg)?);
+            self.adopted_round[i] = self.adopted_round[i].max(up_round[i]);
+            // The member's model changed: its cached distance to the
+            // reference is stale.
+            self.known_distance[i] = None;
+        }
+        // A partial sync is a complete communication event but not a
+        // global synchronization: no record_sync, reference and
+        // final_model unchanged. Close the cache's event: drop
+        // decoder-store ids no learner references any more, and their
+        // cache rows with them.
+        ug.evict_ids(&self.decoder.evict_unreferenced());
+        self.comm.end_round();
+        Ok(true)
+    }
+
+    /// Fixed-size twin of [`Leader::partial_sync_event`]: the identical
+    /// balancing algorithm on the Euclidean geometry of dense weight
+    /// vectors (plain linear models, and RFF learners whose phi-space
+    /// model is a fixed-size vector). Same probe/cache discipline, same
+    /// message flow — `PartialSyncRequest` up-requests, `LinearUpload`
+    /// collection, `LinearDownload { partial: true }` adoption — so under
+    /// lockstep the event matches the engine's byte-for-byte.
+    fn partial_sync_event_fixed(&mut self, violators: &[(usize, f64)], delta: f64) -> Result<bool> {
+        let m = self.m;
+        let mut in_b = vec![false; m];
+        let mut distances: Vec<Option<f64>> = vec![None; m];
+        let mut seed: Vec<usize> = Vec::with_capacity(violators.len());
+        for &(i, d) in violators {
+            in_b[i] = true;
+            distances[i] = Some(d);
+            seed.push(i);
+        }
+        self.gather_distances(&in_b, &mut distances)?;
+        let dists: Vec<f64> = distances.iter().map(|d| d.unwrap_or(0.0)).collect();
+
+        let reference: Option<LinearModel> = match &self.reference {
+            Some(Model::Linear(l)) => Some(l.clone()),
+            Some(Model::Kernel(_)) => bail!("fixed-size balancing with a kernel reference"),
+            None => None,
+        };
+        let mut geom = FixedGeometry::new(reference.as_ref());
+        let mut set = BalancingSet::new(m, &seed, &dists);
+        let mut uploaded: Vec<Option<Model>> = vec![None; m];
+        let mut up_round = vec![0u64; m];
+
+        let outcome: Option<Model> = loop {
+            if set.is_full() {
+                break None; // escalate: full sync with a fresh reference
+            }
+            let pending: Vec<usize> = set
+                .members()
+                .iter()
+                .copied()
+                .filter(|&i| uploaded[i].is_none())
+                .collect();
+            for &i in &pending {
+                self.comm
+                    .record_down(self.bus.send_to(i, &Message::PartialSyncRequest)?);
+            }
+            let mut waiting = pending.len();
+            while waiting > 0 {
+                let (_, msg, n) = self.bus.recv(self.timeout)?;
+                match msg {
+                    Message::LinearUpload { learner, round, w } => {
+                        self.comm.record_up(n);
+                        let i = learner as usize;
+                        let model = Model::Linear(LinearModel::from_wire(&w));
+                        if uploaded[i].replace(model).is_none() {
+                            waiting -= 1;
+                        }
+                        up_round[i] = round;
+                    }
+                    Message::Violation { .. } => {
+                        self.comm.record_up(n);
+                        self.comm.record_violation();
+                    }
+                    Message::DistanceReport { .. } => self.comm.record_up(n),
+                    Message::Done {
+                        learner,
+                        cum_loss,
+                        cum_error,
+                    } => self.note_done(learner, cum_loss, cum_error),
+                    other => bail!("leader: unexpected message during fixed balancing: {other:?}"),
+                }
+            }
+            for &i in &pending {
+                if let Some(model) = &uploaded[i] {
+                    geom.note_upload(model);
+                }
+            }
+            // B-average (elementwise; nothing to compress) and the
+            // Euclidean safe-zone check against the *global* reference.
+            let refs: Vec<&Model> = set
+                .members()
+                .iter()
+                .map(|&i| uploaded[i].as_ref().unwrap())
+                .collect();
+            let (avg_b, _eps) = synchronize(&refs, Compressor::None);
+            let dist = geom.dist_to_reference(&avg_b);
+            if dist <= delta {
+                break Some(avg_b);
+            }
+            if set.extend().is_none() {
+                break None;
+            }
+        };
+        let Some(avg_b) = outcome else {
+            return Ok(false);
+        };
+
+        let w32 = avg_b.as_linear().expect("fixed balancing set").to_wire();
+        for &i in set.members() {
+            let msg = Message::LinearDownload {
+                w: w32.clone(),
+                partial: true,
+            };
+            self.comm.record_down(self.bus.send_to(i, &msg)?);
+            self.adopted_round[i] = self.adopted_round[i].max(up_round[i]);
+            // The member's model changed: its cached distance to the
+            // reference is stale.
+            self.known_distance[i] = None;
+        }
+        // A partial sync is a complete communication event but not a
+        // global synchronization: no record_sync, reference and
+        // final_model unchanged (no Gram cache exists to close).
+        self.comm.end_round();
+        Ok(true)
     }
 
     /// Collect uploads until every learner has contributed, then average,
@@ -689,26 +928,23 @@ impl Leader<'_> {
         } else if linears.iter().all(Option::is_some) {
             let models: Vec<Model> = linears
                 .into_iter()
-                .map(|w| {
-                    Model::Linear(crate::kernel::LinearModel::from_w(
-                        w.unwrap().iter().map(|&v| v as f64).collect(),
-                    ))
-                })
+                .map(|w| Model::Linear(LinearModel::from_wire(&w.unwrap())))
                 .collect();
             let refs: Vec<&Model> = models.iter().collect();
             let (avg, _) = synchronize(&refs, Compressor::None);
-            let w32: Vec<f32> = avg
-                .as_linear()
-                .unwrap()
-                .w
-                .iter()
-                .map(|&v| v as f32)
-                .collect();
+            let w32 = avg.as_linear().unwrap().to_wire();
             for i in 0..self.m {
-                self.comm
-                    .record_down(self.bus.send_to(i, &Message::LinearDownload { w: w32.clone() })?);
+                self.comm.record_down(self.bus.send_to(
+                    i,
+                    &Message::LinearDownload {
+                        w: w32.clone(),
+                        partial: false,
+                    },
+                )?);
             }
-            avg
+            // The shared reference is what the workers actually adopted —
+            // the f32-quantized wire average (the engine stores the same).
+            Model::Linear(LinearModel::from_wire(&w32))
         } else {
             bail!("mixed kernel/linear uploads in one sync")
         };

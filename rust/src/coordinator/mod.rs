@@ -27,11 +27,14 @@
 //! ```
 //!
 //! With `partial_sync` on, the leader first tries to balance a subset B
-//! around the violators (the local-balancing refinement). After the first
-//! violation of an event it waits one bounded worker round for in-flight
-//! co-violations — until a message from a later round proves the trigger
-//! round is over, capped at `CO_VIOLATION_WAIT` — so the seed set matches
-//! the engine's same-round violator set more closely:
+//! around the violators (the local-balancing refinement — every model
+//! family: kernel expansions on the Gram-backed geometry, fixed-size
+//! models on the Euclidean one; see [`crate::protocol::balancing`]).
+//! After the first violation of an event it waits one bounded worker
+//! round for in-flight co-violations — until a message from a later round
+//! proves the trigger round is over, capped at `CO_VIOLATION_WAIT` — so
+//! the seed set matches the engine's same-round violator set more
+//! closely:
 //!
 //! ```text
 //! worker v --- Violation{round, distance_sq} ----------------> leader
@@ -41,14 +44,18 @@
 //!          (workers whose model hasn't changed since their last
 //!           violation/report are NOT probed — the leader reuses its
 //!           cached last-known distance, like the engine reads its
-//!           trackers for free)
+//!           trackers for free; the engine's *fixed-size* path mirrors
+//!           the probe messages and their bytes instead)
 //!          (extension order: farthest from the reference first)
 //! worker b <-- PartialSyncRequest ---------------------------- leader   (new members of B)
-//! worker b --- ModelUpload{round} ---------------------------> leader
-//!          (leader checks ||avg_B - r||^2 <= Delta on the persistent
-//!           SyncGramCache; on failure B grows and the steps above repeat
-//!           for the new member)
-//! worker b <-- ModelDownload{partial: true} ------------------ leader   (all b in B)
+//! worker b --- ModelUpload{round} ---------------------------> leader   (kernel)
+//! worker b --- LinearUpload{round} --------------------------> leader   (linear / RFF)
+//!          (leader checks ||avg_B - r||^2 <= Delta — kernel: a quadratic
+//!           form on the persistent SyncGramCache; fixed-size: a dense
+//!           Euclidean distance on the weight vectors; on failure B grows
+//!           and the steps above repeat for the new member)
+//! worker b <-- ModelDownload{partial: true} ------------------ leader   (kernel, all b in B)
+//! worker b <-- LinearDownload{partial: true} ----------------- leader   (linear / RFF, all b in B)
 //!          (worker adopts; tracker.recalibrate keeps the reference r;
 //!           the leader drops b's cached distance — its model changed)
 //! ```
@@ -62,6 +69,21 @@
 //! cache bookkeeping: decoder-store ids no learner references any more are
 //! evicted together with their `SyncGramCache` rows (the coherence
 //! invariant in the `kernel` module docs).
+//!
+//! # Lockstep conformance mode
+//!
+//! With `cfg.lockstep` on, two more runtime-control messages (uncounted,
+//! like `Done`/`Shutdown`) pace the cluster one protocol round at a time:
+//! each worker ends round t with `RoundDone{round: t}` — its round-t
+//! violation, if any, precedes the barrier message on the same FIFO
+//! channel — and parks serving requests until the leader's `Proceed`.
+//! The leader collects all m barriers (so it holds exactly the engine's
+//! same-round violator set), resolves the round's event while every
+//! worker is frozen at round t, then releases the cluster. The trajectory
+//! is deterministic; for fixed-size models it agrees with the engine
+//! byte-for-byte (asserted by the conformance suite in
+//! `parity_engine_cluster`). Free-running mode remains the deployable
+//! default.
 //!
 //! Also hosts the real-time [`service`]: the batched prediction service
 //! whose hot path executes the AOT XLA artifacts (Python never runs at

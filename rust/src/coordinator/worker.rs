@@ -14,6 +14,12 @@
 //! * [`Message::DistanceRequest`] — report `||f - r||^2` so the leader
 //!   can grow the balancing set farthest-first like the engine.
 //! * [`Message::Shutdown`] — exit.
+//!
+//! In lockstep conformance mode (`cfg.lockstep`) the worker additionally
+//! parks at the end of every round (`RoundDone` up, wait for `Proceed`
+//! down — uncounted runtime control), serving the requests above while
+//! parked, so every exchange happens at exactly the protocol round the
+//! deterministic engine would use.
 
 use std::time::Duration;
 
@@ -91,7 +97,36 @@ pub fn run_worker(
         let scheduled = policy.decide(round, false) == SyncDecision::Sync;
         if scheduled {
             w.sync_exchange(&endpoint, round)?;
-        } else {
+        }
+        if cfg.lockstep {
+            // Lockstep conformance mode: park at the end of the round
+            // until the leader has resolved the round's event (if any)
+            // and releases the cluster. This round's violation (if any)
+            // is already on the FIFO channel ahead of the RoundDone, so
+            // the leader observes exactly the engine's same-round
+            // violator set; requests arriving while parked (probes,
+            // partial/full sync exchanges) are served at this round.
+            // RoundDone/Proceed are runtime control — never counted.
+            endpoint.send(&Message::RoundDone {
+                learner: id as u32,
+                round,
+            })?;
+            // Parked deadline must outlast the leader's own per-event
+            // recv timeout (60s): while one slow worker stalls a round,
+            // every other worker idles here and must not be the first to
+            // give up.
+            loop {
+                let (msg, _) = endpoint.recv(Duration::from_secs(120))?;
+                match msg {
+                    Message::Proceed => break,
+                    other => {
+                        if w.serve_one(&endpoint, other, round)? == Served::Shutdown {
+                            return Ok(());
+                        }
+                    }
+                }
+            }
+        } else if !scheduled {
             // Service any pending leader requests without blocking.
             while let Ok((msg, _)) = endpoint.recv(Duration::from_millis(0)) {
                 if w.serve_one(&endpoint, msg, round)? == Served::Shutdown {
@@ -156,17 +191,10 @@ impl Worker {
                 new_svs,
             })?;
         } else {
-            let w32: Vec<f32> = snap
-                .as_linear()
-                .unwrap()
-                .w
-                .iter()
-                .map(|&v| v as f32)
-                .collect();
             endpoint.send(&Message::LinearUpload {
                 learner: self.id as u32,
                 round,
-                w: w32,
+                w: snap.as_linear().unwrap().to_wire(),
             })?;
         }
         Ok(())
@@ -199,11 +227,16 @@ impl Worker {
                     }
                     return Ok(());
                 }
-                Message::LinearDownload { w } => {
-                    let w64: Vec<f64> = w.iter().map(|&v| v as f64).collect();
-                    let model = Model::Linear(crate::kernel::LinearModel::from_w(w64));
+                Message::LinearDownload { w, partial } => {
+                    let model = Model::Linear(crate::kernel::LinearModel::from_wire(&w));
                     self.learner.set_model(model.clone());
-                    self.tracker.reset(model);
+                    if partial {
+                        // Balancing-set average: the shared reference
+                        // survives, re-pin ||f - r||^2 exactly.
+                        self.tracker.recalibrate(&model);
+                    } else {
+                        self.tracker.reset(model);
+                    }
                     return Ok(());
                 }
                 // The leader escalated a partial synchronization to a full

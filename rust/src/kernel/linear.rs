@@ -18,6 +18,21 @@ impl LinearModel {
         LinearModel { w }
     }
 
+    /// Widen an f32 wire payload (the fixed-size upload/download format)
+    /// back into a model — the only way any runtime adopts wire weights,
+    /// so engine and cluster quantize identically.
+    pub fn from_wire(w: &[f32]) -> Self {
+        LinearModel {
+            w: w.iter().map(|&v| v as f64).collect(),
+        }
+    }
+
+    /// Narrow to the f32 wire payload (inverse of [`LinearModel::from_wire`]
+    /// up to quantization).
+    pub fn to_wire(&self) -> Vec<f32> {
+        self.w.iter().map(|&v| v as f32).collect()
+    }
+
     pub fn dim(&self) -> usize {
         self.w.len()
     }
@@ -93,5 +108,19 @@ mod tests {
         let mut m = LinearModel::from_w(vec![2.0, -4.0]);
         m.scale(0.5);
         assert_eq!(m.w, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn wire_roundtrip_is_f32_quantization() {
+        let m = LinearModel::from_w(vec![0.1, -2.5, 1e-9]);
+        let w32 = m.to_wire();
+        let back = LinearModel::from_wire(&w32);
+        assert_eq!(back.dim(), 3);
+        for (a, b) in m.w.iter().zip(&back.w) {
+            assert_eq!(*a as f32, *b as f32);
+            assert!((a - b).abs() <= 1e-7 * a.abs());
+        }
+        // Idempotent once quantized.
+        assert_eq!(back.to_wire(), w32);
     }
 }

@@ -47,8 +47,11 @@ impl EfficiencyReport {
     /// * `eta` — the learner's update-magnitude constant
     ///   (||f - phi(f)|| <= eta * loss).
     /// * `delta` — the divergence threshold.
-    /// * `sbar` — |union of final support sets| (0 for linear models).
-    /// * `dim` — input dimensionality.
+    /// * `sbar` — |union of final support sets|; 0 selects the
+    ///   fixed-size (linear / RFF) communication bound instead of Thm. 7.
+    /// * `dim` — message dimensionality: the input dimension for kernel
+    ///   models (SV coordinates), the *model* dimension for fixed-size
+    ///   models (d for plain linear, the RFF feature count D).
     /// * `serial_loss` — cumulative loss of the serial oracle on mT
     ///   examples, if available.
     pub fn evaluate(
@@ -63,35 +66,65 @@ impl EfficiencyReport {
         let mut checks = Vec::new();
 
         if delta > 0.0 {
-            // Prop. 6: V_D(T) <= (eta / sqrt(Delta)) L_D(T, m).
-            // We use the tighter drift form: V <= (sum drifts) / sqrt(Delta),
-            // and also report the loss form the paper states.
+            // Prop. 6: V_D(T) <= (eta / sqrt(Delta)) L_D(T, m). Every
+            // violation round resolves into exactly one event — a full
+            // sync or a subset balancing — so the measured count is
+            // syncs + partial_syncs. We report the tighter drift form
+            // (V <= sum-of-drifts / sqrt(Delta)) alongside the loss form
+            // the paper states. Caveat: the theorem's per-event
+            // sqrt(Delta) argument assumes each event resets its
+            // violators to the reference; a *balancing* event restarts
+            // its members anywhere inside the safe zone, so for runs
+            // with partial_sync on these checks are empirical
+            // indicators, not guarantees (the e2e suite asserts them on
+            // the pure protocol only).
+            let events = (outcome.comm.syncs + outcome.partial_syncs) as f64;
             checks.push(BoundCheck {
-                name: "Prop6 syncs <= drift/sqrt(Delta)",
-                measured: outcome.comm.syncs as f64,
+                name: "Prop6 events <= drift/sqrt(Delta)",
+                measured: events,
                 bound: outcome.cum_drift / delta.sqrt(),
             });
+            // The loss-proportional form — communication events cost loss.
+            let v_loss = eta * outcome.cumulative_loss / delta.sqrt();
             checks.push(BoundCheck {
-                name: "Prop6 syncs <= eta*L/sqrt(Delta)",
-                measured: outcome.comm.syncs as f64,
-                bound: eta * outcome.cumulative_loss / delta.sqrt(),
+                name: "Prop6 events <= eta*L/sqrt(Delta)",
+                measured: events,
+                bound: v_loss,
             });
 
-            // Thm. 7: C_D <= V * 2m|Sbar|B_alpha + m|Sbar|B_x
-            // with B_alpha = 8 (f64 coeff + its id costs 16 on our wire;
-            // use the wire's true per-coeff cost) and B_x = 4d + 8.
-            let b_alpha = 16.0; // id (8) + f64 coefficient (8)
-            let b_x = 4.0 * dim as f64 + 8.0;
-            let v = outcome.cum_drift / delta.sqrt();
-            let sbar_f = sbar as f64;
-            // Framing overhead per message (tag + learner + counts) is
-            // <= 21 bytes; V syncs move <= 2m messages each.
-            let framing = v * 2.0 * m * 24.0;
-            checks.push(BoundCheck {
-                name: "Thm7 comm bound",
-                measured: outcome.comm.total_bytes() as f64,
-                bound: v * 2.0 * m * sbar_f * b_alpha + 2.0 * m * sbar_f * b_x + framing,
-            });
+            if sbar > 0 {
+                // Thm. 7 (kernel models): C_D <= V * 2m|Sbar|B_alpha +
+                // m|Sbar|B_x with B_alpha = 8 (f64 coeff + its id costs 16
+                // on our wire; use the wire's true per-coeff cost) and
+                // B_x = 4d + 8, with V the paper's loss-form bound.
+                let b_alpha = 16.0; // id (8) + f64 coefficient (8)
+                let b_x = 4.0 * dim as f64 + 8.0;
+                let sbar_f = sbar as f64;
+                // Framing overhead per message (tag + learner + counts) is
+                // <= 21 bytes; V events move <= 2m messages each.
+                let framing = v_loss * 2.0 * m * 24.0;
+                checks.push(BoundCheck {
+                    name: "Thm7 comm bound",
+                    measured: outcome.comm.total_bytes() as f64,
+                    bound: v_loss * 2.0 * m * sbar_f * b_alpha + 2.0 * m * sbar_f * b_x + framing,
+                });
+            } else {
+                // Fixed-size models (Cor. 8 regime): every message is
+                // O(dim) with `dim` the *model* dimension (d for plain
+                // linear, the feature count D for RFF). One event costs at
+                // most m * (violations 21 + probe pair 22 + requests 2 +
+                // two uploads [balancing attempt + escalation re-upload] +
+                // one download) bytes, so communication stays proportional
+                // to the loss: C <= V * per_event with V = eta*L/sqrt(Δ).
+                let b_up = 17.0 + 4.0 * dim as f64;
+                let b_down = 6.0 + 4.0 * dim as f64;
+                let per_event = m * (45.0 + 2.0 * b_up + b_down);
+                checks.push(BoundCheck {
+                    name: "comm bound (fixed-size)",
+                    measured: outcome.comm.total_bytes() as f64,
+                    bound: v_loss * per_event,
+                });
+            }
         }
 
         let consistency_ratio = serial_loss.map(|s| {

@@ -125,14 +125,18 @@ pub enum Message {
         new_svs: SvBlock,
         partial: bool,
     },
-    /// Linear-model upload (fixed size — the 2014 regime).
+    /// Fixed-size model upload (plain linear weight vector, or an RFF
+    /// learner's phi-space weights — the 2014 regime's message shape).
     LinearUpload {
         learner: u32,
         round: u64,
         w: Vec<f32>,
     },
-    /// Linear-model download.
-    LinearDownload { w: Vec<f32> },
+    /// Fixed-size model download. Exactly like [`Message::ModelDownload`],
+    /// `partial = true` marks a balancing-set average (the learner adopts
+    /// but the shared reference survives — tracker recalibration) and
+    /// `partial = false` a full synchronization (tracker reset).
+    LinearDownload { w: Vec<f32>, partial: bool },
     /// Worker -> coordinator: finished its stream; carries final local
     /// metrics for aggregation. Runtime control — not counted as protocol
     /// communication.
@@ -143,6 +147,16 @@ pub enum Message {
     },
     /// Graceful shutdown of a worker (runtime control).
     Shutdown,
+    /// Worker -> coordinator, lockstep conformance mode only: the worker
+    /// finished protocol round `round` (its violation for that round, if
+    /// any, precedes this on the same FIFO channel) and is parked serving
+    /// requests until [`Message::Proceed`]. Runtime control — not counted
+    /// as protocol communication.
+    RoundDone { learner: u32, round: u64 },
+    /// Coordinator -> worker, lockstep conformance mode only: the round's
+    /// synchronization work (if any) is complete; start the next round.
+    /// Runtime control — not counted as protocol communication.
+    Proceed,
 }
 
 const TAG_VIOLATION: u8 = 1;
@@ -156,6 +170,8 @@ const TAG_DONE: u8 = 8;
 const TAG_PARTIAL_SYNC_REQUEST: u8 = 9;
 const TAG_DISTANCE_REQUEST: u8 = 10;
 const TAG_DISTANCE_REPORT: u8 = 11;
+const TAG_ROUND_DONE: u8 = 12;
+const TAG_PROCEED: u8 = 13;
 
 fn encode_coeffs(w: &mut Writer, coeffs: &[(u64, f64)]) {
     w.u32(coeffs.len() as u32);
@@ -236,8 +252,9 @@ impl Encode for Message {
                 w.u32(wv.len() as u32);
                 w.f32_slice(wv);
             }
-            Message::LinearDownload { w: wv } => {
+            Message::LinearDownload { w: wv, partial } => {
                 w.u8(TAG_LINEAR_DOWNLOAD);
+                w.u8(u8::from(*partial));
                 w.u32(wv.len() as u32);
                 w.f32_slice(wv);
             }
@@ -252,6 +269,12 @@ impl Encode for Message {
                 w.f64(*cum_error);
             }
             Message::Shutdown => w.u8(TAG_SHUTDOWN),
+            Message::RoundDone { learner, round } => {
+                w.u8(TAG_ROUND_DONE);
+                w.u32(*learner);
+                w.u64(*round);
+            }
+            Message::Proceed => w.u8(TAG_PROCEED),
         }
     }
 }
@@ -294,8 +317,12 @@ impl Decode for Message {
                 })
             }
             TAG_LINEAR_DOWNLOAD => {
+                let partial = r.u8()? != 0;
                 let n = r.u32()? as usize;
-                Ok(Message::LinearDownload { w: r.f32_vec(n)? })
+                Ok(Message::LinearDownload {
+                    w: r.f32_vec(n)?,
+                    partial,
+                })
             }
             TAG_DONE => Ok(Message::Done {
                 learner: r.u32()?,
@@ -303,6 +330,11 @@ impl Decode for Message {
                 cum_error: r.f64()?,
             }),
             TAG_SHUTDOWN => Ok(Message::Shutdown),
+            TAG_ROUND_DONE => Ok(Message::RoundDone {
+                learner: r.u32()?,
+                round: r.u64()?,
+            }),
+            TAG_PROCEED => Ok(Message::Proceed),
             t => Err(DecodeError::BadTag(t)),
         }
     }
@@ -365,13 +397,25 @@ mod tests {
                 round: 9,
                 w: vec![1.0, -2.0],
             },
-            Message::LinearDownload { w: vec![0.5] },
+            Message::LinearDownload {
+                w: vec![0.5],
+                partial: false,
+            },
+            Message::LinearDownload {
+                w: vec![0.5, -1.25],
+                partial: true,
+            },
             Message::Done {
                 learner: 7,
                 cum_loss: 1.5,
                 cum_error: 3.0,
             },
             Message::Shutdown,
+            Message::RoundDone {
+                learner: 5,
+                round: 33,
+            },
+            Message::Proceed,
         ];
         for m in msgs {
             let bytes = to_bytes(&m);

@@ -1,0 +1,314 @@
+//! Subset balancing — the local-balancing refinement of a violation,
+//! shared by every model family and both runtimes.
+//!
+//! On a local-condition violation the coordinator does not have to
+//! resynchronize the whole cluster: it grows a *balancing set* B around
+//! the violators and checks whether the B-average lands back inside the
+//! safe zone `||avg_B - r||^2 <= Delta` around the shared reference r.
+//! If it does, only B's members exchange models — the reference (and with
+//! it every other learner's local-condition proof) survives untouched.
+//! If B would grow to the whole cluster, the event escalates to a full
+//! synchronization.
+//!
+//! The algorithm is *one* piece of control flow — seed with the
+//! violators, extend farthest-from-reference-first, test the safe zone,
+//! escalate — parameterized over a **model geometry**:
+//!
+//! * [`KernelGeometry`] — RKHS expansions. Distances are quadratic forms
+//!   of coefficient differences on the coordinator's persistent
+//!   [`SyncGramCache`] (evaluated kernel entries are reused across growth
+//!   steps and events), with the model-space distance as a defensive
+//!   fallback when the candidate average left the registered span.
+//! * [`FixedGeometry`] — fixed-size weight vectors (plain linear models
+//!   and RFF learners, whose phi-space models are linear; Bouboulis et
+//!   al., arXiv:1703.08131). Distances are plain squared Euclidean
+//!   distances on the dense weight vectors — no Gram matrix exists or is
+//!   needed — computed by [`fixed_dist_sq`], the one choke point all
+//!   fixed-size safe-zone checks go through (see its docs for why it
+//!   stays a fused serial sweep).
+//!
+//! Both geometries compute the *same* `||avg_B - r||^2` their model class
+//! defines; the growth order, the safe-zone decision and the escalation
+//! condition live here exactly once ([`BalancingSet`]), so the serial
+//! engine and the threaded leader — four call sites in total — cannot
+//! drift apart. The subset-balancing scheme for fixed-size weight vectors
+//! follows Kamp et al., *Adaptive Communication Bounds for Distributed
+//! Online Learning* (arXiv:1911.12896).
+
+use crate::kernel::{LinearModel, Model, SyncGramCache};
+use crate::util::float::{sq_dist, sq_norm};
+
+/// The model-family-specific part of a balancing event: how uploaded
+/// member models are registered and how the candidate average's distance
+/// to the shared reference is measured.
+pub trait BalanceGeometry {
+    /// Register one balancing-set member's uploaded model. Called in
+    /// deterministic B order (never network-arrival order) — for the
+    /// kernel geometry the registration order fixes the union-Gram row
+    /// order and with it the summation order of every quadratic form.
+    fn note_upload(&mut self, model: &Model);
+
+    /// `||avg_B - r||^2` of a candidate balancing-set average against the
+    /// event's shared reference (`r = 0`, the common initial model, when
+    /// no synchronization has happened yet).
+    fn dist_to_reference(&mut self, avg: &Model) -> f64;
+}
+
+/// RKHS geometry over the coordinator's persistent sync-Gram cache.
+pub struct KernelGeometry<'a> {
+    ug: &'a mut SyncGramCache,
+    /// The reference expansion scattered as (event rows, coefficients).
+    r_sparse: Option<(Vec<u32>, Vec<f64>)>,
+    reference: Option<&'a Model>,
+}
+
+impl<'a> KernelGeometry<'a> {
+    /// Open a new event view on the cache and register the reference
+    /// expansion (its rows are shared with member uploads, so the cache
+    /// dedups them).
+    pub fn begin_event(ug: &'a mut SyncGramCache, reference: Option<&'a Model>) -> Self {
+        ug.begin_event();
+        let r_sparse = match reference {
+            Some(Model::Kernel(r)) => Some((ug.add_model(r), r.alpha().to_vec())),
+            Some(Model::Linear(_)) => unreachable!("kernel geometry with linear reference"),
+            None => None,
+        };
+        KernelGeometry {
+            ug,
+            r_sparse,
+            reference,
+        }
+    }
+}
+
+impl BalanceGeometry for KernelGeometry<'_> {
+    fn note_upload(&mut self, model: &Model) {
+        let k = model.as_kernel().expect("kernel geometry");
+        self.ug.add_model(k);
+    }
+
+    fn dist_to_reference(&mut self, avg: &Model) -> f64 {
+        let avg_k = avg.as_kernel().expect("kernel geometry");
+        // Quadratic form of the coefficient difference on the shared
+        // union Gram. (Compression only drops/adjusts coefficients of SVs
+        // already registered, so the compressed average stays
+        // representable; the model-space distance remains as a defensive
+        // fallback.)
+        match self.ug.try_coeffs(avg_k) {
+            Some(avg_coeffs) => {
+                let mut r_coeffs = vec![0.0; self.ug.event_len()];
+                if let Some((rows, alphas)) = &self.r_sparse {
+                    self.ug.scatter(rows, alphas, &mut r_coeffs);
+                }
+                self.ug.distance_sq(&avg_coeffs, &r_coeffs)
+            }
+            None => match self.reference {
+                Some(r) => avg.distance_sq(r),
+                None => avg_k.norm_sq(),
+            },
+        }
+    }
+}
+
+/// Fixed-size geometry: dense Euclidean distance on weight vectors.
+pub struct FixedGeometry<'a> {
+    reference: Option<&'a LinearModel>,
+}
+
+impl<'a> FixedGeometry<'a> {
+    pub fn new(reference: Option<&'a LinearModel>) -> Self {
+        FixedGeometry { reference }
+    }
+}
+
+impl BalanceGeometry for FixedGeometry<'_> {
+    fn note_upload(&mut self, _model: &Model) {
+        // Nothing to register: a fixed-size model is its own coordinates.
+    }
+
+    fn dist_to_reference(&mut self, avg: &Model) -> f64 {
+        let w = &avg.as_linear().expect("fixed geometry").w;
+        match self.reference {
+            Some(r) => fixed_dist_sq(w, &r.w),
+            None => sq_norm(w),
+        }
+    }
+}
+
+/// `||a - b||^2` for dense weight vectors — the fixed geometry's single
+/// distance choke point.
+///
+/// Deliberately the fused serial sweep, not the [`crate::util::par`]
+/// backend: the backend's determinism contract forbids cross-thread
+/// reductions, and the deterministic alternative (parallel elementwise
+/// squared differences into a temporary, then a serial index-order sum)
+/// trades one fused read pass for an allocation plus two full memory
+/// sweeps — strictly slower at any size where the distance is
+/// memory-bound. Every caller goes through here, so a profitable
+/// vectorization can later land in exactly one place.
+#[inline]
+pub fn fixed_dist_sq(a: &[f64], b: &[f64]) -> f64 {
+    sq_dist(a, b)
+}
+
+/// The balancing set B and its deterministic growth order.
+///
+/// Seeded with the violators (callers pass them in ascending learner
+/// order — the order the engine discovers same-round violations in).
+/// Extension is farthest-from-reference-first over the remaining
+/// learners: the non-members are sorted by ascending `||f_i - r||^2`
+/// (`total_cmp`; ties extend the higher learner index first) and consumed
+/// from the back — the farthest learners carry the most balancing mass
+/// against the violators' drift.
+#[derive(Debug)]
+pub struct BalancingSet {
+    m: usize,
+    in_b: Vec<bool>,
+    b: Vec<usize>,
+    /// Non-members, ascending by distance, consumed from the back.
+    extension: Vec<usize>,
+}
+
+impl BalancingSet {
+    /// `distance_sq[i]` is each learner's (last-known) `||f_i - r||^2`;
+    /// only non-violators' entries are read (they order the extension).
+    pub fn new(m: usize, violators: &[usize], distance_sq: &[f64]) -> Self {
+        assert_eq!(distance_sq.len(), m);
+        let mut in_b = vec![false; m];
+        let mut b = Vec::with_capacity(m);
+        for &v in violators {
+            assert!(v < m, "violator {v} out of range (m = {m})");
+            if !in_b[v] {
+                in_b[v] = true;
+                b.push(v);
+            }
+        }
+        let mut extension: Vec<usize> = (0..m).filter(|&i| !in_b[i]).collect();
+        extension.sort_by(|&x, &y| distance_sq[x].total_cmp(&distance_sq[y]));
+        BalancingSet {
+            m,
+            in_b,
+            b,
+            extension,
+        }
+    }
+
+    /// Current members, in deterministic join order (violators first).
+    pub fn members(&self) -> &[usize] {
+        &self.b
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        self.in_b[i]
+    }
+
+    /// B covers the whole cluster: balancing cannot help any more and the
+    /// event must escalate to a full synchronization.
+    pub fn is_full(&self) -> bool {
+        self.b.len() == self.m
+    }
+
+    /// Add the farthest remaining learner; `None` when nobody is left
+    /// (the caller escalates).
+    pub fn extend(&mut self) -> Option<usize> {
+        let next = self.extension.pop()?;
+        self.in_b[next] = true;
+        self.b.push(next);
+        Some(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{Kernel, SvModel};
+
+    #[test]
+    fn seeds_with_violators_and_extends_farthest_first() {
+        let d = [0.9, 0.1, 0.5, 0.7, 0.3];
+        let mut set = BalancingSet::new(5, &[1], &d);
+        assert_eq!(set.members(), &[1]);
+        assert!(set.contains(1));
+        assert!(!set.contains(0));
+        assert_eq!(set.extend(), Some(0)); // 0.9
+        assert_eq!(set.extend(), Some(3)); // 0.7
+        assert_eq!(set.extend(), Some(2)); // 0.5
+        assert_eq!(set.extend(), Some(4)); // 0.3
+        assert!(set.is_full());
+        assert_eq!(set.extend(), None);
+        assert_eq!(set.members(), &[1, 0, 3, 2, 4]);
+    }
+
+    #[test]
+    fn ties_extend_higher_index_first() {
+        let d = [0.5, 0.5, 0.5, 0.0];
+        let mut set = BalancingSet::new(4, &[3], &d);
+        assert_eq!(set.extend(), Some(2));
+        assert_eq!(set.extend(), Some(1));
+        assert_eq!(set.extend(), Some(0));
+    }
+
+    #[test]
+    fn full_seed_is_immediately_full() {
+        let set = BalancingSet::new(3, &[0, 1, 2], &[0.0; 3]);
+        assert!(set.is_full());
+    }
+
+    #[test]
+    fn duplicate_violators_are_deduped() {
+        let set = BalancingSet::new(3, &[1, 1], &[0.0; 3]);
+        assert_eq!(set.members(), &[1]);
+    }
+
+    #[test]
+    fn fixed_dist_matches_sq_dist_and_zero_reference_is_norm() {
+        let a = vec![1.0, -2.0, 0.5];
+        let b = vec![0.0, 1.0, 0.5];
+        assert_eq!(fixed_dist_sq(&a, &b), sq_dist(&a, &b));
+        let mut g = FixedGeometry::new(None);
+        let m = Model::Linear(LinearModel::from_w(a.clone()));
+        assert_eq!(g.dist_to_reference(&m), sq_norm(&a));
+        let r = LinearModel::from_w(b.clone());
+        let mut g = FixedGeometry::new(Some(&r));
+        assert_eq!(g.dist_to_reference(&m), sq_dist(&a, &b));
+    }
+
+    #[test]
+    fn fixed_dist_is_bitwise_index_order_accumulation_at_scale() {
+        // The choke point must stay bitwise-identical to an independently
+        // written index-order accumulation regardless of input size (and
+        // of the process-global parallel thread knob, which it
+        // deliberately ignores) — this is the oracle any future
+        // vectorization of the sweep must keep matching.
+        let n = 40_000;
+        let a: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.11).cos()).collect();
+        let mut want = 0.0f64;
+        for i in 0..n {
+            let d = a[i] - b[i];
+            want += d * d;
+        }
+        assert_eq!(fixed_dist_sq(&a, &b).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn kernel_geometry_matches_model_space_distance() {
+        let k = Kernel::Rbf { gamma: 0.5 };
+        let mut r = SvModel::new(k, 2);
+        r.push(1, &[0.1, 0.2], 0.4);
+        let mut f = SvModel::new(k, 2);
+        f.push(1, &[0.1, 0.2], 0.9);
+        f.push(2, &[1.0, -1.0], -0.3);
+        let rm = Model::Kernel(r.clone());
+        let fm = Model::Kernel(f.clone());
+        let mut cache = SyncGramCache::new(k, 2);
+        let mut g = KernelGeometry::begin_event(&mut cache, Some(&rm));
+        g.note_upload(&fm);
+        let got = g.dist_to_reference(&fm);
+        let want = fm.distance_sq(&rm);
+        assert!(
+            (got - want).abs() <= 1e-12 * want.max(1.0),
+            "gram {got} vs model-space {want}"
+        );
+    }
+}

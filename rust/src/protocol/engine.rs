@@ -7,10 +7,11 @@
 use crate::compression::Compressor;
 use crate::config::{ExperimentConfig, ProtocolConfig};
 use crate::data::{build_streams, DataStream};
-use crate::kernel::{Model, SvModel, SyncGramCache};
+use crate::kernel::{LinearModel, Model, SvModel, SyncGramCache};
 use crate::learner::{build_learner, OnlineLearner};
 use crate::metrics::{MetricsRecorder, Outcome};
 use crate::network::{CommStats, DeltaDecoder, DeltaEncoder, Message};
+use crate::protocol::balancing::{BalanceGeometry, BalancingSet, FixedGeometry, KernelGeometry};
 use crate::protocol::local_condition::ConditionTracker;
 use crate::protocol::sync::{synchronize, SyncDecision, SyncPolicy};
 use crate::util::Stopwatch;
@@ -46,6 +47,14 @@ pub struct ProtocolEngine {
     /// Persistent cross-event union Gram (kernel engines only), coherent
     /// with `decoder`'s store — see the `kernel` module docs.
     sync_cache: Option<SyncGramCache>,
+    /// Last-known `||f_i - r||^2` per learner, mirroring the cluster
+    /// leader's cache *and its information constraints*: set from
+    /// violations and probe replies, dropped when the learner adopts a
+    /// download or the reference changes. The fixed-size balancing path
+    /// consults it (and sends real probe messages for unknowns) so the
+    /// engine's communication equals the lockstep cluster's
+    /// byte-for-byte; the kernel path keeps reading its trackers fresh.
+    known_distance: Vec<Option<f64>>,
     watch: Stopwatch,
 }
 
@@ -92,6 +101,7 @@ impl ProtocolEngine {
             record_divergence: false,
             partial_syncs: 0,
             sync_cache,
+            known_distance: vec![None; m],
             watch: Stopwatch::new(),
             learners,
             streams,
@@ -146,13 +156,17 @@ impl ProtocolEngine {
                         violations += 1;
                         violators.push(i);
                         // The violation notice really crosses the network.
+                        let d = self.trackers[i].distance_sq();
                         let msg = Message::Violation {
                             learner: i as u32,
                             round,
-                            distance_sq: self.trackers[i].distance_sq(),
+                            distance_sq: d,
                         };
                         self.comm.record_up(msg.wire_bytes());
                         self.comm.record_violation();
+                        // The notice carries the distance: the coordinator
+                        // now knows it (leader twin: `known_distance`).
+                        self.known_distance[i] = Some(d);
                     }
                 }
             }
@@ -200,11 +214,15 @@ impl ProtocolEngine {
     /// kernel-evaluation pass per growth step, and rows persist across
     /// events so a warm event only evaluates the genuinely new SVs.
     ///
-    /// Only kernel engines support this (linear balancing is possible but
-    /// the messages are already tiny); falls back to full sync otherwise.
+    /// Fixed-size models (plain linear and RFF learners) balance through
+    /// the same algorithm on the Euclidean geometry
+    /// ([`crate::protocol::balancing::FixedGeometry`]) — no Gram needed.
     fn try_partial_sync(&mut self, violators: &[usize], delta: f64) -> bool {
-        if !self.is_kernel || violators.is_empty() {
+        if violators.is_empty() {
             return false;
+        }
+        if !self.is_kernel {
+            return self.partial_sync_event_fixed(violators, delta);
         }
         // Take the cache out of `self` for the duration of the event so
         // the borrow checker lets the event body use the engine's other
@@ -229,93 +247,64 @@ impl ProtocolEngine {
         // The reference model is common; take it from any tracker (all
         // reset to the same model at the last full sync; None = zero fn).
         let reference = self.trackers[0].reference().cloned();
-        ug.begin_event();
-        let r_sparse: Option<(Vec<u32>, Vec<f64>)> = match &reference {
-            Some(Model::Kernel(r)) => Some((ug.add_model(r), r.alpha().to_vec())),
-            Some(Model::Linear(_)) => unreachable!("kernel engine with linear reference"),
-            None => None,
-        };
-        let mut in_b = vec![false; m];
-        let mut b: Vec<usize> = Vec::new();
-        let mut uploaded: Vec<Option<SvModel>> = vec![None; m];
-        for &v in violators {
-            in_b[v] = true;
-            b.push(v);
-        }
-        // Deterministic extension order (ascending, consumed from the
-        // back): learners farthest from the reference join first — they
-        // carry the most balancing mass against the violators' drift.
-        let mut extension: Vec<usize> = (0..m).filter(|i| !in_b[*i]).collect();
-        extension.sort_by(|&x, &y| {
-            self.trackers[x]
-                .distance_sq()
-                .partial_cmp(&self.trackers[y].distance_sq())
-                .unwrap()
-        });
+        let mut geom = KernelGeometry::begin_event(ug, reference.as_ref());
+        // Extension order: the engine's trackers maintain every learner's
+        // exact `||f_i - r||^2` for free.
+        let dists: Vec<f64> = (0..m).map(|i| self.trackers[i].distance_sq()).collect();
+        let mut set = BalancingSet::new(m, violators, &dists);
+        let mut uploaded: Vec<Option<Model>> = vec![None; m];
 
         loop {
-            if b.len() == m {
+            if set.is_full() {
                 return false; // escalate: full sync with a fresh reference
             }
-            // Upload any new members of B (delta-encoded, byte-counted).
-            for &i in &b {
-                if uploaded[i].is_none() {
-                    let snap = self.learners[i].snapshot();
-                    let exp = snap.as_kernel().unwrap();
-                    let (coeffs, block) = self.encoders[i].encode_upload(exp);
-                    let msg = Message::ModelUpload {
-                        learner: i as u32,
-                        round: self.round,
-                        coeffs,
-                        new_svs: block,
-                    };
-                    self.comm.record_up(msg.wire_bytes());
-                    let (coeffs, block) = match msg {
-                        Message::ModelUpload {
-                            coeffs, new_svs, ..
-                        } => (coeffs, new_svs),
-                        _ => unreachable!(),
-                    };
-                    let rebuilt = self
-                        .decoder
-                        .ingest_upload(i, &coeffs, &block, exp)
-                        .expect("upload consistent");
-                    // Register the member's SVs on the event's union Gram.
-                    ug.add_model(&rebuilt);
-                    uploaded[i] = Some(rebuilt);
+            // Upload any new members of B (delta-encoded, byte-counted),
+            // registering their SVs on the event's union Gram in
+            // deterministic B order.
+            for &i in set.members() {
+                if uploaded[i].is_some() {
+                    continue;
                 }
+                let snap = self.learners[i].snapshot();
+                let exp = snap.as_kernel().unwrap();
+                let (coeffs, block) = self.encoders[i].encode_upload(exp);
+                let msg = Message::ModelUpload {
+                    learner: i as u32,
+                    round: self.round,
+                    coeffs,
+                    new_svs: block,
+                };
+                self.comm.record_up(msg.wire_bytes());
+                let (coeffs, block) = match msg {
+                    Message::ModelUpload {
+                        coeffs, new_svs, ..
+                    } => (coeffs, new_svs),
+                    _ => unreachable!(),
+                };
+                let rebuilt = self
+                    .decoder
+                    .ingest_upload(i, &coeffs, &block, exp)
+                    .expect("upload consistent");
+                let model = Model::Kernel(rebuilt);
+                geom.note_upload(&model);
+                uploaded[i] = Some(model);
             }
-            // B-average (Prop. 2 over the subset), budget-compressed.
-            let models: Vec<Model> = b
+            // B-average (Prop. 2 over the subset), budget-compressed, and
+            // the safe-zone check against the *global* reference on the
+            // kernel geometry (a quadratic form on the shared union Gram).
+            let refs: Vec<&Model> = set
+                .members()
                 .iter()
-                .map(|&i| Model::Kernel(uploaded[i].clone().unwrap()))
+                .map(|&i| uploaded[i].as_ref().unwrap())
                 .collect();
-            let refs: Vec<&Model> = models.iter().collect();
             let (avg_b, eps) = synchronize(&refs, self.avg_compressor);
-            // Safe-zone check against the *global* reference: a quadratic
-            // form of the coefficient difference on the shared union Gram.
-            // (Compression only drops/adjusts coefficients of SVs already
-            // registered, so the compressed average stays representable;
-            // the model-space distance remains as a defensive fallback.)
-            let avg_k = avg_b.as_kernel().expect("kernel average");
-            let dist = match ug.try_coeffs(avg_k) {
-                Some(avg_coeffs) => {
-                    let mut r_coeffs = vec![0.0; ug.event_len()];
-                    if let Some((rows, alphas)) = &r_sparse {
-                        ug.scatter(rows, alphas, &mut r_coeffs);
-                    }
-                    ug.distance_sq(&avg_coeffs, &r_coeffs)
-                }
-                None => match &reference {
-                    Some(r) => avg_b.distance_sq(r),
-                    None => avg_k.norm_sq(),
-                },
-            };
+            let dist = geom.dist_to_reference(&avg_b);
             if dist <= delta {
                 if eps > 0.0 {
                     self.metrics.record_update(0.0, 0.0, 0.0, eps);
                 }
-                for &i in &b {
+                let avg_k = avg_b.as_kernel().expect("kernel average");
+                for &i in set.members() {
                     let (coeffs, block) = self.decoder.encode_download(i, avg_k);
                     let msg = Message::ModelDownload {
                         coeffs,
@@ -338,16 +327,128 @@ impl ProtocolEngine {
                     self.learners[i].set_model(adopted_model.clone());
                     // Reference unchanged: recalibrate ||f - r||^2 exactly.
                     self.trackers[i].recalibrate(&adopted_model);
+                    self.known_distance[i] = None;
                 }
                 return true;
             }
-            // Extend B with the next candidate.
-            match extension.pop() {
-                Some(next) => {
-                    in_b[next] = true;
-                    b.push(next);
+            // Extend B with the farthest remaining learner.
+            if set.extend().is_none() {
+                return false;
+            }
+        }
+    }
+
+    /// Fixed-size twin of [`ProtocolEngine::partial_sync_event`]: the same
+    /// balancing algorithm on the Euclidean geometry of dense weight
+    /// vectors (plain linear models, and RFF learners whose phi-space
+    /// model is a fixed-size vector).
+    ///
+    /// Unlike the kernel path, this one mirrors the cluster leader's
+    /// *information constraints* — and their bytes — exactly: the
+    /// extension order uses last-known distances (from violation notices
+    /// and prior probes, invalidated on adoption / reference change), and
+    /// unknown ones cost a real `DistanceRequest`/`DistanceReport`
+    /// round-trip; each new member costs a `PartialSyncRequest`. A
+    /// lockstep cluster run therefore agrees with the engine
+    /// byte-for-byte on dynamic fixed-size workloads (asserted by the
+    /// parity suite).
+    fn partial_sync_event_fixed(&mut self, violators: &[usize], delta: f64) -> bool {
+        let m = self.learners.len();
+        let reference: Option<LinearModel> = match self.trackers[0].reference() {
+            Some(Model::Linear(l)) => Some(l.clone()),
+            Some(Model::Kernel(_)) => unreachable!("fixed engine with kernel reference"),
+            None => None,
+        };
+        // Seed distances come from this round's violation notices; the
+        // rest from the last-known cache, probing only true unknowns.
+        let mut in_seed = vec![false; m];
+        let mut dists = vec![0.0f64; m];
+        for &v in violators {
+            in_seed[v] = true;
+            dists[v] = self.trackers[v].distance_sq();
+        }
+        for i in 0..m {
+            if in_seed[i] {
+                continue;
+            }
+            dists[i] = match self.known_distance[i] {
+                Some(d) => d,
+                None => {
+                    self.comm
+                        .record_down(Message::DistanceRequest.wire_bytes());
+                    let d = self.trackers[i].distance_sq();
+                    let report = Message::DistanceReport {
+                        learner: i as u32,
+                        round: self.round,
+                        distance_sq: d,
+                    };
+                    self.comm.record_up(report.wire_bytes());
+                    self.known_distance[i] = Some(d);
+                    d
                 }
-                None => return false,
+            };
+        }
+        let mut geom = FixedGeometry::new(reference.as_ref());
+        let mut set = BalancingSet::new(m, violators, &dists);
+        let mut uploaded: Vec<Option<Model>> = vec![None; m];
+
+        loop {
+            if set.is_full() {
+                return false; // escalate: full sync with a fresh reference
+            }
+            for &i in set.members() {
+                if uploaded[i].is_some() {
+                    continue;
+                }
+                // Each new member is asked for its model (the cluster's
+                // PartialSyncRequest) and uploads it f32-quantized; the
+                // coordinator averages what it decodes from the wire.
+                self.comm
+                    .record_down(Message::PartialSyncRequest.wire_bytes());
+                let snap = self.learners[i].snapshot();
+                let msg = Message::LinearUpload {
+                    learner: i as u32,
+                    round: self.round,
+                    w: snap.as_linear().expect("fixed engine").to_wire(),
+                };
+                self.comm.record_up(msg.wire_bytes());
+                let w = match msg {
+                    Message::LinearUpload { w, .. } => w,
+                    _ => unreachable!(),
+                };
+                let model = Model::Linear(LinearModel::from_wire(&w));
+                geom.note_upload(&model);
+                uploaded[i] = Some(model);
+            }
+            // B-average (fixed-size models average elementwise; nothing
+            // to compress) and the Euclidean safe-zone check.
+            let refs: Vec<&Model> = set
+                .members()
+                .iter()
+                .map(|&i| uploaded[i].as_ref().unwrap())
+                .collect();
+            let (avg_b, _eps) = synchronize(&refs, Compressor::None);
+            let dist = geom.dist_to_reference(&avg_b);
+            if dist <= delta {
+                let w32 = avg_b.as_linear().unwrap().to_wire();
+                let adopted = Model::Linear(LinearModel::from_wire(&w32));
+                for &i in set.members() {
+                    let msg = Message::LinearDownload {
+                        w: w32.clone(),
+                        partial: true,
+                    };
+                    self.comm.record_down(msg.wire_bytes());
+                    self.learners[i].set_model(adopted.clone());
+                    // Reference unchanged: recalibrate ||f - r||^2 exactly.
+                    self.trackers[i].recalibrate(&adopted);
+                    // The member's model changed: its cached distance to
+                    // the reference is stale.
+                    self.known_distance[i] = None;
+                }
+                return true;
+            }
+            if set.extend().is_none() {
+                return false;
             }
         }
     }
@@ -372,6 +473,9 @@ impl ProtocolEngine {
             self.sync_linear();
         }
         self.comm.record_sync(self.round);
+        // Every model and the reference just changed: all cached
+        // per-learner distances are stale (leader twin does the same).
+        self.known_distance.fill(None);
         self.evict_sync_cache();
     }
 
@@ -464,43 +568,45 @@ impl ProtocolEngine {
 
     fn sync_linear(&mut self) {
         let m = self.learners.len();
-        let mut snaps: Vec<Model> = Vec::with_capacity(m);
+        // The coordinator averages what it decodes from the wire (f32
+        // quantized) and every learner adopts the quantized average it
+        // downloads — exactly what the cluster workers do. Averaging /
+        // adopting the f64 snapshots instead would let the engine's model
+        // trajectory drift from its deployable twin across syncs.
+        let mut uploaded: Vec<Model> = Vec::with_capacity(m);
         for i in 0..m {
             let snap = self.learners[i].snapshot();
-            let w32: Vec<f32> = snap
-                .as_linear()
-                .expect("linear engine")
-                .w
-                .iter()
-                .map(|&v| v as f32)
-                .collect();
             let msg = Message::LinearUpload {
                 learner: i as u32,
                 round: self.round,
-                w: w32,
+                w: snap.as_linear().expect("linear engine").to_wire(),
             };
             self.comm.record_up(msg.wire_bytes());
-            snaps.push(snap);
+            let w = match msg {
+                Message::LinearUpload { w, .. } => w,
+                _ => unreachable!(),
+            };
+            uploaded.push(Model::Linear(LinearModel::from_wire(&w)));
         }
         if self.record_divergence {
-            let refs: Vec<&Model> = snaps.iter().collect();
+            // Divergence of the configuration the coordinator can see
+            // (the wire-quantized uploads).
+            let refs: Vec<&Model> = uploaded.iter().collect();
             let d = crate::protocol::divergence::configuration_divergence(&refs);
             self.sync_divergences.push((self.round, d.delta));
         }
-        let refs: Vec<&Model> = snaps.iter().collect();
+        let refs: Vec<&Model> = uploaded.iter().collect();
         let (avg, _) = synchronize(&refs, Compressor::None);
-        let w32: Vec<f32> = avg
-            .as_linear()
-            .unwrap()
-            .w
-            .iter()
-            .map(|&v| v as f32)
-            .collect();
+        let w32 = avg.as_linear().unwrap().to_wire();
+        let adopted = Model::Linear(LinearModel::from_wire(&w32));
         for i in 0..m {
-            let msg = Message::LinearDownload { w: w32.clone() };
+            let msg = Message::LinearDownload {
+                w: w32.clone(),
+                partial: false,
+            };
             self.comm.record_down(msg.wire_bytes());
-            self.learners[i].set_model(avg.clone());
-            self.trackers[i].reset(avg.clone());
+            self.learners[i].set_model(adopted.clone());
+            self.trackers[i].reset(adopted.clone());
         }
     }
 
@@ -663,8 +769,9 @@ mod tests {
         assert_eq!(o.comm.syncs, 60);
         // Fixed-size messages: per sync, m uploads + m downloads of
         // 18-dim f32 vectors (SUSY geometry). Upload: 1 tag + 4 learner +
-        // 8 round + 4 count + 72 = 89; download: 1 + 4 + 72 = 77.
-        assert_eq!(o.comm.total_bytes(), 60 * 3 * (89 + 77));
+        // 8 round + 4 count + 72 = 89; download: 1 + 1 partial-flag + 4 +
+        // 72 = 78.
+        assert_eq!(o.comm.total_bytes(), 60 * 3 * (89 + 78));
     }
 
     #[test]
@@ -713,6 +820,41 @@ mod tests {
         // without a full sync, reducing global sync count.
         if partial > 0 {
             assert!(partial_outcome.comm.syncs <= full_outcome.comm.syncs);
+        }
+    }
+
+    #[test]
+    fn fixed_partial_sync_keeps_divergence_guarantee() {
+        // Linear engine, dynamic protocol, subset balancing on: whether a
+        // violation resolves by balancing or escalates, on every round
+        // without a global sync the divergence must stay within Delta
+        // (safe-zone argument; the balancing set adopts an average inside
+        // the safe zone, everyone else never left it). The f32 wire
+        // quantization of the adopted average is covered by the slack.
+        let delta = 0.5;
+        let mut cfg = small(ProtocolConfig::Dynamic {
+            delta,
+            check_period: 1,
+        });
+        cfg.learner.kernel = crate::config::KernelConfig::Linear;
+        cfg.learner.compression = CompressionConfig::None;
+        cfg.learner.eta = 0.05;
+        cfg.partial_sync = true;
+        cfg.learners = 4;
+        let mut e = ProtocolEngine::new(cfg).unwrap();
+        for _ in 0..60 {
+            let rep = e.step();
+            if !rep.synced {
+                let snaps: Vec<Model> = (0..4).map(|i| e.learner(i).snapshot()).collect();
+                let refs: Vec<&Model> = snaps.iter().collect();
+                let d = crate::protocol::divergence::configuration_divergence(&refs);
+                assert!(
+                    d.delta <= delta + 1e-6,
+                    "round {}: divergence {} > Delta {delta}",
+                    rep.round,
+                    d.delta
+                );
+            }
         }
     }
 

@@ -7,16 +7,42 @@
 //! * [`sync`] — the synchronization operators: continuous `sigma_1`,
 //!   periodic `sigma_b`, dynamic `sigma_Delta` (with the §4 mini-batched
 //!   check), plus nosync and the serial oracle.
+//! * [`balancing`] — the partial-synchronization refinement: one
+//!   subset-balancing algorithm (farthest-first growth, safe-zone check,
+//!   escalation) parameterized over a model geometry.
 //! * [`engine`] — the deterministic round-based protocol engine driving
 //!   m learners, used by experiments, benches and tests. The threaded
 //!   leader/worker runtime in [`crate::coordinator`] speaks the same
 //!   messages over real channels.
+//!
+//! # Fixed-size balancing geometry
+//!
+//! Every protocol statement in the paper is about distances in the
+//! hypothesis space H. For RKHS expansions those distances are quadratic
+//! forms on a Gram matrix; for fixed-size models (plain linear weight
+//! vectors, and RFF learners — whose phi-space model *is* a linear
+//! weight vector, so the kernel-quality hypothesis communicates as a
+//! constant-size message) the very same distances are plain squared
+//! Euclidean norms: `||f - g||_H^2 = ||w_f - w_g||_2^2`, because the
+//! feature map is shared and fixed. The subset-balancing refinement is
+//! therefore *one* algorithm over an abstract geometry
+//! ([`balancing::BalanceGeometry`]): grow B farthest-first, test
+//! `||avg_B - r||^2 <= Delta`, escalate when B reaches the cluster. The
+//! kernel instance backs the distance with the persistent sync-Gram
+//! cache; the fixed-size instance with dense dot products (a single
+//! fused-sweep choke point, [`balancing::fixed_dist_sq`]). Both leave
+//! the shared reference
+//! — and with it every local-condition proof — untouched on success,
+//! which is exactly why the safe-zone argument of Sec. 2 keeps holding
+//! for the whole configuration after a partial synchronization.
 
+pub mod balancing;
 pub mod divergence;
 pub mod engine;
 pub mod local_condition;
 pub mod sync;
 
+pub use balancing::{BalanceGeometry, BalancingSet, FixedGeometry, KernelGeometry};
 pub use divergence::configuration_divergence;
 pub use engine::{ProtocolEngine, RoundReport};
 pub use local_condition::ConditionTracker;

@@ -1,0 +1,167 @@
+//! The paper's novel efficiency criterion, machine-checked end-to-end for
+//! every model family: on a drifting stream, a dynamic protocol's
+//! cumulative communication must stay within the loss-proportional
+//! [`EfficiencyReport`] bound — events `<= eta_c * L / sqrt(Delta)`
+//! (Prop. 6, loss form) and bytes `<= events_bound * per_event_cost`
+//! (Thm. 7 for kernel expansions, the Cor. 8 fixed-size regime for
+//! linear and RFF learners).
+//!
+//! The learners run passive-aggressive updates, whose step is genuinely
+//! loss-proportional: the PA step size is `min(loss / ||phi(x)||^2, C)`,
+//! so the model moves by at most `loss / ||phi(x)||`. With standardized
+//! streams (||x|| >~ 1 away from a negligible tail; RFF features have
+//! ||phi|| ~ 1) the proportionality constant is safely below the
+//! `ETA_C = 2` we evaluate the bound with.
+//!
+//! The bound runs are the *pure* dynamic protocol (`partial_sync` off):
+//! Prop. 6's per-event `sqrt(Delta)` drift argument needs every event to
+//! reset its violators to distance 0 from the reference, which a full
+//! synchronization does and subset balancing deliberately does not (a
+//! balanced member restarts anywhere inside the safe zone, so balancing
+//! events are not individually loss-bounded). The refinement's byte
+//! saving over the full-sync-only protocol, and its exact
+//! engine/cluster agreement, are asserted by the parity conformance
+//! suite on a tuned drift scenario.
+
+use kdol::config::{
+    CompressionConfig, DataConfig, ExperimentConfig, KernelConfig, ProtocolConfig,
+};
+use kdol::experiments::run_experiment;
+use kdol::metrics::EfficiencyReport;
+
+/// Update-magnitude constant `||f - phi(f)|| <= ETA_C * loss` for the PA
+/// learners below (see module docs).
+const ETA_C: f64 = 2.0;
+
+fn drift_cfg(label: &str, kernel: KernelConfig, delta: f64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::quickstart();
+    c.name = format!("loss-prop-{label}");
+    c.seed = 13;
+    c.learners = 4;
+    c.rounds = 200;
+    c.data = DataConfig::Hyperplane {
+        dim: 8,
+        drift: 0.05,
+    };
+    c.learner.kernel = kernel;
+    c.learner.eta = 0.3; // PA cap C
+    c.learner.passive_aggressive = true;
+    c.learner.compression = match kernel {
+        // Budget-bound expansions keep the Thm. 7 message size premise.
+        KernelConfig::Rbf { .. } => CompressionConfig::Truncation { tau: 16 },
+        _ => CompressionConfig::None,
+    };
+    c.protocol = ProtocolConfig::Dynamic {
+        delta,
+        check_period: 1,
+    };
+    // Pure dynamic protocol — see the module docs for why the bound is
+    // asserted without the balancing refinement.
+    c.partial_sync = false;
+    c
+}
+
+#[test]
+fn communication_stays_loss_proportional_for_all_model_families() {
+    let delta = 0.2;
+    let families = [
+        ("linear", KernelConfig::Linear),
+        (
+            "rff",
+            KernelConfig::Rff {
+                gamma: 0.5,
+                dim: 64,
+            },
+        ),
+        ("kernel", KernelConfig::Rbf { gamma: 0.5 }),
+    ];
+    for (label, kernel) in families {
+        let cfg = drift_cfg(label, kernel, delta);
+        let outcome = run_experiment(&cfg).unwrap();
+        // The drift stream must actually exercise the protocol: no
+        // communication at all would make the bound vacuous.
+        assert!(
+            outcome.comm.syncs + outcome.partial_syncs > 0,
+            "{label}: the drift workload never triggered a synchronization"
+        );
+        assert!(outcome.comm.total_bytes() > 0, "{label}: zero bytes");
+
+        // Message-size parameters: kernel expansions are bounded by the
+        // union support size, fixed-size models by their model dimension.
+        let (sbar, msg_dim) = match kernel {
+            KernelConfig::Rbf { .. } => (
+                (outcome.mean_svs as usize + 1) * cfg.learners,
+                cfg.data.dim(),
+            ),
+            KernelConfig::Linear => (0, cfg.data.dim()),
+            KernelConfig::Rff { dim, .. } => (0, dim),
+        };
+        let rep = EfficiencyReport::evaluate(&outcome, ETA_C, delta, sbar, msg_dim, None);
+
+        // The paper's loss-proportionality criterion: the event count is
+        // bounded by eta_c * L / sqrt(Delta), and with it the bytes.
+        let loss_form = rep
+            .checks
+            .iter()
+            .find(|c| c.name.contains("eta*L"))
+            .expect("loss-form Prop6 check missing");
+        assert!(
+            loss_form.holds(),
+            "{label}: events {} exceed the loss-proportional bound {} \
+             (loss {})",
+            loss_form.measured,
+            loss_form.bound,
+            outcome.cumulative_loss
+        );
+        let comm = rep
+            .checks
+            .iter()
+            .find(|c| c.name.contains("comm bound"))
+            .expect("communication bound check missing");
+        assert!(
+            comm.holds(),
+            "{label}: bytes {} exceed the loss-proportional communication \
+             bound {}",
+            comm.measured,
+            comm.bound
+        );
+    }
+}
+
+#[test]
+fn static_stream_communicates_no_more_than_drifting_one() {
+    // The flip side of loss proportionality: on a static (lower-loss)
+    // stream the dynamic protocol may not spend *more* communication than
+    // on the same stream with concept drift — the budget follows the
+    // loss, not a schedule.
+    let mut static_cfg = drift_cfg("linear-static", KernelConfig::Linear, 0.5);
+    static_cfg.data = DataConfig::Hyperplane {
+        dim: 8,
+        drift: 0.0,
+    };
+    let mut drifting_cfg = drift_cfg("linear-drifting", KernelConfig::Linear, 0.5);
+    drifting_cfg.data = DataConfig::Hyperplane {
+        dim: 8,
+        drift: 0.1,
+    };
+    let s = run_experiment(&static_cfg).unwrap();
+    let d = run_experiment(&drifting_cfg).unwrap();
+    assert!(
+        s.cumulative_loss <= d.cumulative_loss,
+        "static loss {} > drifting loss {}",
+        s.cumulative_loss,
+        d.cumulative_loss
+    );
+    assert!(
+        s.comm.total_bytes() <= d.comm.total_bytes(),
+        "static stream communicated more ({} bytes) than the drifting one ({} bytes)",
+        s.comm.total_bytes(),
+        d.comm.total_bytes()
+    );
+    // Quiescence is reported against the horizon: the static run's tail
+    // must be at least as quiet as the drifting run's.
+    assert!(
+        s.comm.quiescent_rounds(s.rounds) >= d.comm.quiescent_rounds(d.rounds),
+        "static run less quiescent than the drifting one"
+    );
+}

@@ -6,21 +6,31 @@
 //!   lockstep in both runtimes: sync counts, bytes in each direction,
 //!   the recorded sync round, and even the peak-round bytes must match
 //!   **exactly**.
-//! * Dynamic protocols are violation-driven; worker asynchrony shifts
-//!   which round a violation is observed in, so only bounded agreement
-//!   of resolution-event counts (syncs + partial syncs) is required.
-//!   The stated tolerance: within a factor of 3 plus an absolute slack
-//!   of 3 events, and "no events at all" must agree exactly (identical
-//!   trajectories until a first violation exists at all).
+//! * Dynamic protocols under free-running workers are violation-driven
+//!   and asynchrony shifts which round a violation is observed in, so
+//!   only bounded agreement of resolution-event counts (syncs + partial
+//!   syncs) is required. The stated tolerance: within a factor of 3 plus
+//!   an absolute slack of 3 events, and "no events at all" must agree
+//!   exactly (identical trajectories until a first violation exists at
+//!   all).
+//! * In **lockstep conformance mode** the workers pace protocol rounds
+//!   with the leader, so dynamic trajectories are deterministic too: for
+//!   fixed-size models (linear and RFF — the engine mirrors the leader's
+//!   probe/request accounting for them) the scenario matrix below
+//!   asserts **exact** agreement on partial-sync counts, per-direction
+//!   bytes/messages, violations, and the last sync round.
 //!
 //! Also hosts the regression tests for the two cluster accounting fixes:
 //! per-event `end_round` (peak bytes < total bytes in any multi-sync
 //! run) and round-stamped `record_sync` (quiescence consistent with the
 //! protocol horizon).
 
-use kdol::config::{ExperimentConfig, KernelConfig, ProtocolConfig};
-use kdol::coordinator::run_cluster;
+use kdol::config::{
+    CompressionConfig, DataConfig, ExperimentConfig, KernelConfig, ProtocolConfig,
+};
+use kdol::coordinator::{run_cluster, ClusterOutcome};
 use kdol::experiments::run_experiment;
+use kdol::metrics::Outcome;
 
 fn cfg(protocol: ProtocolConfig) -> ExperimentConfig {
     let mut c = ExperimentConfig::quickstart();
@@ -66,7 +76,29 @@ fn continuous_kernel_parity_is_exact() {
 fn periodic_linear_parity_is_exact() {
     let mut c = cfg(ProtocolConfig::Periodic { period: 5 });
     c.learner.kernel = KernelConfig::Linear;
-    c.learner.compression = kdol::config::CompressionConfig::None;
+    c.learner.compression = CompressionConfig::None;
+    assert_exact_parity(&c);
+}
+
+#[test]
+fn periodic_rff_parity_is_exact() {
+    // RFF learners ride the fixed-size sync path: their phi-space weight
+    // vector goes over the wire like a linear model.
+    let mut c = cfg(ProtocolConfig::Periodic { period: 5 });
+    c.learner.kernel = KernelConfig::Rff {
+        gamma: 0.5,
+        dim: 32,
+    };
+    c.learner.compression = CompressionConfig::None;
+    assert_exact_parity(&c);
+}
+
+#[test]
+fn lockstep_periodic_kernel_parity_stays_exact() {
+    // The lockstep barrier is uncounted runtime control: scheduled
+    // protocols must keep their exact parity with it enabled.
+    let mut c = cfg(ProtocolConfig::Periodic { period: 10 });
+    c.lockstep = true;
     assert_exact_parity(&c);
 }
 
@@ -140,6 +172,177 @@ fn cluster_peak_round_bytes_below_total_in_multi_sync_run() {
         out.comm.peak_round_bytes,
         out.comm.total_bytes()
     );
+}
+
+// ---------------------------------------------------------------------------
+// Lockstep conformance matrix: dynamic protocols on fixed-size models.
+// ---------------------------------------------------------------------------
+
+/// Dynamic drift scenario for a fixed-size model family, lockstep mode.
+fn fixed_drift_cfg(label: &str, kernel: KernelConfig, drift: f64, delta: f64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::quickstart();
+    c.name = format!("conformance-{label}-drift{drift}-delta{delta}");
+    c.seed = 7;
+    c.learners = 4;
+    c.rounds = 100;
+    c.data = DataConfig::Hyperplane { dim: 8, drift };
+    c.learner.kernel = kernel;
+    c.learner.compression = CompressionConfig::None;
+    c.learner.eta = 0.1;
+    c.protocol = ProtocolConfig::Dynamic {
+        delta,
+        check_period: 1,
+    };
+    c.partial_sync = true;
+    c.lockstep = true;
+    c
+}
+
+/// Exact engine ↔ cluster agreement for one (deterministic) dynamic run.
+fn assert_lockstep_exact(c: &ExperimentConfig) -> (Outcome, ClusterOutcome) {
+    let engine = run_experiment(c).unwrap();
+    let cluster = run_cluster(c).unwrap();
+    assert_eq!(engine.comm.syncs, cluster.comm.syncs, "{}: syncs", c.name);
+    assert_eq!(
+        engine.partial_syncs, cluster.partial_syncs,
+        "{}: partial syncs",
+        c.name
+    );
+    assert_eq!(
+        engine.comm.violations, cluster.comm.violations,
+        "{}: violations",
+        c.name
+    );
+    assert_eq!(
+        engine.comm.up_bytes, cluster.comm.up_bytes,
+        "{}: up bytes",
+        c.name
+    );
+    assert_eq!(
+        engine.comm.down_bytes, cluster.comm.down_bytes,
+        "{}: down bytes",
+        c.name
+    );
+    assert_eq!(
+        engine.comm.up_msgs, cluster.comm.up_msgs,
+        "{}: up messages",
+        c.name
+    );
+    assert_eq!(
+        engine.comm.down_msgs, cluster.comm.down_msgs,
+        "{}: down messages",
+        c.name
+    );
+    assert_eq!(
+        engine.comm.last_sync_round, cluster.comm.last_sync_round,
+        "{}: last sync round",
+        c.name
+    );
+    assert_eq!(
+        engine.comm.peak_round_bytes, cluster.comm.peak_round_bytes,
+        "{}: peak round bytes",
+        c.name
+    );
+    // Same models, same rounds: the aggregated losses differ only by
+    // floating-point summation order.
+    let rel = (engine.cumulative_loss - cluster.cum_loss).abs()
+        / engine.cumulative_loss.abs().max(1e-9);
+    assert!(
+        rel < 1e-9,
+        "{}: engine loss {} vs cluster {}",
+        c.name,
+        engine.cumulative_loss,
+        cluster.cum_loss
+    );
+    (engine, cluster)
+}
+
+/// The acceptance scenario, per fixed-size family: some (drift, delta) in
+/// the sweep must (a) resolve violations by subset balancing
+/// (`partial_syncs > 0`), (b) spend strictly fewer bytes than the
+/// full-sync-only protocol on the same seed, and (c) agree with the
+/// threaded cluster **exactly** under lockstep.
+fn conformance_fixed_family(label: &str, kernel: KernelConfig) {
+    let mut chosen: Option<(ExperimentConfig, u64, u64, u64)> = None;
+    'search: for &drift in &[0.02, 0.0, 0.05] {
+        for &delta in &[0.02, 0.05, 0.1, 0.2, 0.4, 0.8] {
+            let c = fixed_drift_cfg(label, kernel, drift, delta);
+            let engine = run_experiment(&c).unwrap();
+            if engine.partial_syncs == 0 {
+                continue;
+            }
+            // Pre-change baseline: the same scenario with every violation
+            // escalating to a full m-worker synchronization.
+            let mut full = c.clone();
+            full.partial_sync = false;
+            full.name = format!("{}-fullsync", full.name);
+            let full_engine = run_experiment(&full).unwrap();
+            if engine.comm.total_bytes() < full_engine.comm.total_bytes() {
+                chosen = Some((
+                    c,
+                    engine.partial_syncs,
+                    engine.comm.total_bytes(),
+                    full_engine.comm.total_bytes(),
+                ));
+                break 'search;
+            }
+        }
+    }
+    let (c, partials, partial_bytes, full_bytes) = chosen.unwrap_or_else(|| {
+        panic!(
+            "{label}: no (drift, delta) in the sweep produced a byte-saving \
+             partial synchronization — fixed-size subset balancing never paid off"
+        )
+    });
+    assert!(partials > 0);
+    assert!(
+        partial_bytes < full_bytes,
+        "{label}: partial {partial_bytes} >= full-sync baseline {full_bytes}"
+    );
+    let (_, cluster) = assert_lockstep_exact(&c);
+    assert_eq!(
+        cluster.partial_syncs, partials,
+        "{label}: cluster must balance exactly as often as the engine"
+    );
+}
+
+#[test]
+fn lockstep_dynamic_linear_parity_is_exact_and_saves_bytes() {
+    conformance_fixed_family("linear", KernelConfig::Linear);
+}
+
+#[test]
+fn lockstep_dynamic_rff_parity_is_exact_and_saves_bytes() {
+    conformance_fixed_family(
+        "rff",
+        KernelConfig::Rff {
+            gamma: 0.5,
+            dim: 32,
+        },
+    );
+}
+
+#[test]
+fn lockstep_dynamic_fixed_escalation_matrix_is_exact() {
+    // Even where balancing never succeeds (or never triggers), the
+    // lockstep trajectories must agree exactly — escalations, violations
+    // and all. Cover both fixed-size families at thresholds bracketing
+    // the balancing sweet spot.
+    for (label, kernel) in [
+        ("linear", KernelConfig::Linear),
+        (
+            "rff",
+            KernelConfig::Rff {
+                gamma: 0.5,
+                dim: 32,
+            },
+        ),
+    ] {
+        for &delta in &[0.01, 0.5] {
+            let c = fixed_drift_cfg(label, kernel, 0.05, delta);
+            assert_lockstep_exact(&c);
+        }
+    }
 }
 
 #[test]

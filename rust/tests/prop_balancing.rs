@@ -1,0 +1,274 @@
+//! Property tests pinning fixed-size subset balancing against naive
+//! oracles: the farthest-first growth order, the `||avg_B - r||^2 <=
+//! Delta` safe-zone decision, the full grow-until-safe loop, and mean
+//! preservation over the balancing set after the download — across
+//! randomized weight vectors and thresholds. Run with
+//! `KDOL_PROP_CASES=256` (the scheduled deep CI job does) for the wide
+//! matrix.
+
+use kdol::kernel::{LinearModel, Model};
+use kdol::protocol::balancing::{fixed_dist_sq, BalanceGeometry, BalancingSet, FixedGeometry};
+use kdol::testing::{check, default_cases, gen};
+use kdol::util::float::sq_dist;
+use kdol::util::{par, Pcg64, Rng};
+
+/// Random distance vector with deliberate exact ties.
+fn distances(rng: &mut Pcg64, m: usize) -> Vec<f64> {
+    let mut d: Vec<f64> = (0..m).map(|_| rng.uniform(0.0, 1.0)).collect();
+    // Duplicate a value with some probability to exercise tie-breaking.
+    if m >= 2 && rng.f64() < 0.5 {
+        let a = gen::int(rng, 0, m - 1);
+        let b = gen::int(rng, 0, m - 1);
+        d[a] = d[b];
+    }
+    d
+}
+
+/// Random non-empty strict subset of 0..m (ascending — the order the
+/// engine discovers same-round violators in).
+fn violator_set(rng: &mut Pcg64, m: usize) -> Vec<usize> {
+    loop {
+        let v: Vec<usize> = (0..m).filter(|_| rng.f64() < 0.4).collect();
+        if !v.is_empty() && v.len() < m {
+            return v;
+        }
+    }
+}
+
+/// Oracle: repeatedly pick the farthest non-member, ties to the higher
+/// learner index (independent re-derivation of the documented order).
+fn oracle_extension(m: usize, violators: &[usize], d: &[f64]) -> Vec<usize> {
+    let mut picked = vec![false; m];
+    for &v in violators {
+        picked[v] = true;
+    }
+    let mut order = Vec::new();
+    loop {
+        let mut best: Option<usize> = None;
+        for i in 0..m {
+            if picked[i] {
+                continue;
+            }
+            best = match best {
+                None => Some(i),
+                Some(j) if d[i] >= d[j] => Some(i),
+                keep => keep,
+            };
+        }
+        match best {
+            Some(i) => {
+                picked[i] = true;
+                order.push(i);
+            }
+            None => return order,
+        }
+    }
+}
+
+#[test]
+fn prop_farthest_first_order_matches_oracle() {
+    check("balancing-order", default_cases(), |rng| {
+        let m = gen::int(rng, 2, 10);
+        let violators = violator_set(rng, m);
+        let d = distances(rng, m);
+        let mut set = BalancingSet::new(m, &violators, &d);
+        assert_eq!(set.members(), &violators[..], "seed must be the violators");
+        let mut got = Vec::new();
+        while let Some(next) = set.extend() {
+            got.push(next);
+        }
+        assert!(set.is_full());
+        assert_eq!(
+            got,
+            oracle_extension(m, &violators, &d),
+            "extension order diverged (m={m}, violators={violators:?}, d={d:?})"
+        );
+    });
+}
+
+/// Naive elementwise mean of the members' weight vectors.
+fn naive_mean(ws: &[&[f64]]) -> Vec<f64> {
+    let dim = ws[0].len();
+    let mut out = vec![0.0; dim];
+    for w in ws {
+        for (o, &v) in out.iter_mut().zip(w.iter()) {
+            *o += v;
+        }
+    }
+    for o in &mut out {
+        *o /= ws.len() as f64;
+    }
+    out
+}
+
+#[test]
+fn prop_safe_zone_decision_matches_naive_oracle() {
+    check("balancing-safe-zone", default_cases(), |rng| {
+        let dim = gen::int(rng, 1, 20);
+        let n = gen::int(rng, 1, 6);
+        let models: Vec<Model> = (0..n)
+            .map(|_| Model::Linear(LinearModel::from_w(gen::vector(rng, dim, 1.0))))
+            .collect();
+        let has_ref = rng.f64() < 0.8;
+        let reference = has_ref.then(|| LinearModel::from_w(gen::vector(rng, dim, 1.0)));
+        let mut geom = FixedGeometry::new(reference.as_ref());
+
+        let refs: Vec<&Model> = models.iter().collect();
+        let avg = Model::average(&refs);
+        let module_dist = geom.dist_to_reference(&avg);
+
+        let ws: Vec<&[f64]> = models
+            .iter()
+            .map(|m| m.as_linear().unwrap().w.as_slice())
+            .collect();
+        let mean = naive_mean(&ws);
+        let zero = vec![0.0; dim];
+        let r = reference.as_ref().map(|r| r.w.as_slice()).unwrap_or(&zero);
+        let naive: f64 = mean
+            .iter()
+            .zip(r)
+            .map(|(&a, &b)| (a - b) * (a - b))
+            .sum();
+
+        assert!(
+            (module_dist - naive).abs() <= 1e-12 * naive.max(1.0),
+            "module {module_dist} vs naive {naive}"
+        );
+        // The decision agrees for every threshold away from the
+        // floating-point boundary.
+        for _ in 0..4 {
+            let delta = rng.uniform(0.0, 2.0 * naive.max(0.1));
+            if (naive - delta).abs() <= 1e-9 * naive.max(1.0) {
+                continue;
+            }
+            assert_eq!(module_dist <= delta, naive <= delta, "delta {delta}");
+        }
+    });
+}
+
+#[test]
+fn prop_grow_until_safe_matches_oracle() {
+    // The composite behavior: grow B farthest-first until the B-average
+    // re-enters the safe zone, escalate when B would cover the cluster.
+    check("balancing-loop", default_cases(), |rng| {
+        let m = gen::int(rng, 2, 7);
+        let dim = gen::int(rng, 1, 10);
+        let ws: Vec<Vec<f64>> = (0..m).map(|_| gen::vector(rng, dim, 1.0)).collect();
+        let reference = LinearModel::from_w(gen::vector(rng, dim, 0.3));
+        let violators = violator_set(rng, m);
+        let d: Vec<f64> = ws.iter().map(|w| sq_dist(w, &reference.w)).collect();
+        let delta = rng.uniform(0.05, 1.5);
+
+        // Oracle: smallest k such that the mean over (violators + the k
+        // farthest others, by the oracle order) is within delta of r;
+        // escalation when only the full cluster (or nothing) would do.
+        let ext = oracle_extension(m, &violators, &d);
+        let mut oracle_members: Option<Vec<usize>> = None;
+        let mut near_boundary = false;
+        for k in 0..ext.len() {
+            // B never grows to the whole cluster: the algorithm escalates
+            // instead of testing a full B.
+            let mut members = violators.clone();
+            members.extend_from_slice(&ext[..k]);
+            let sel: Vec<&[f64]> = members.iter().map(|&i| ws[i].as_slice()).collect();
+            let mean = naive_mean(&sel);
+            let dist = sq_dist(&mean, &reference.w);
+            if (dist - delta).abs() <= 1e-9 * delta.max(1.0) {
+                near_boundary = true;
+                break;
+            }
+            if dist <= delta {
+                oracle_members = Some(members);
+                break;
+            }
+        }
+        if near_boundary {
+            return; // ambiguous at f64 resolution — skip the case
+        }
+
+        // Module: the loop exactly as the engine/leader run it.
+        let mut geom = FixedGeometry::new(Some(&reference));
+        let mut set = BalancingSet::new(m, &violators, &d);
+        let module_members: Option<Vec<usize>> = loop {
+            if set.is_full() {
+                break None;
+            }
+            let models: Vec<Model> = set
+                .members()
+                .iter()
+                .map(|&i| Model::Linear(LinearModel::from_w(ws[i].clone())))
+                .collect();
+            let refs: Vec<&Model> = models.iter().collect();
+            let avg = Model::average(&refs);
+            if geom.dist_to_reference(&avg) <= delta {
+                break Some(set.members().to_vec());
+            }
+            if set.extend().is_none() {
+                break None;
+            }
+        };
+
+        assert_eq!(
+            module_members, oracle_members,
+            "m={m}, violators={violators:?}, delta={delta}"
+        );
+    });
+}
+
+#[test]
+fn prop_download_preserves_balancing_set_mean() {
+    check("balancing-mean-preserved", default_cases(), |rng| {
+        let dim = gen::int(rng, 1, 16);
+        let n = gen::int(rng, 1, 6);
+        let before: Vec<Vec<f64>> = (0..n).map(|_| gen::vector(rng, dim, 1.0)).collect();
+        let models: Vec<Model> = before
+            .iter()
+            .map(|w| Model::Linear(LinearModel::from_w(w.clone())))
+            .collect();
+        let refs: Vec<&Model> = models.iter().collect();
+        let avg = Model::average(&refs);
+        let avg_w = &avg.as_linear().unwrap().w;
+
+        // Every member adopts avg_B; the mean over the balancing set is
+        // unchanged (that is exactly why the rest of the cluster's
+        // safe-zone proofs survive a partial synchronization).
+        let after: Vec<Vec<f64>> = (0..n).map(|_| avg_w.clone()).collect();
+        let mean_before = naive_mean(&before.iter().map(|w| w.as_slice()).collect::<Vec<_>>());
+        let mean_after = naive_mean(&after.iter().map(|w| w.as_slice()).collect::<Vec<_>>());
+        for (a, b) in mean_before.iter().zip(&mean_after) {
+            assert!(
+                (a - b).abs() <= 1e-12 * a.abs().max(1.0),
+                "mean moved: {a} vs {b}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_fixed_geometry_ignores_the_parallel_thread_knob() {
+    // The fixed geometry is a fused serial sweep by design (see
+    // `balancing::fixed_dist_sq` for why the parallel backend is
+    // deliberately not engaged): sweeping the process-global thread knob
+    // — which this test binary owns — must never change a bit of any
+    // distance, even for huge RFF-scale vectors. The expectation is an
+    // *independent* index-order accumulation, not sq_dist itself, so the
+    // pin stays meaningful if the sweep is ever rewritten.
+    let n = 50_000;
+    let mut rng = Pcg64::seeded(11);
+    let a = gen::vector(&mut rng, n, 1.0);
+    let b = gen::vector(&mut rng, n, 1.0);
+    let mut want = 0.0f64;
+    for i in 0..n {
+        let d = a[i] - b[i];
+        want += d * d;
+    }
+    for t in [1usize, 2, 3, 8] {
+        par::set_threads(t);
+        assert_eq!(
+            fixed_dist_sq(&a, &b).to_bits(),
+            want.to_bits(),
+            "threads={t}"
+        );
+    }
+    par::set_threads(0);
+}
