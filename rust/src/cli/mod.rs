@@ -115,7 +115,7 @@ pub fn serve_demo(dir: &std::path::Path, variant: &str, requests: usize) -> anyh
     let outcome_model = {
         let mut engine = crate::protocol::ProtocolEngine::new(cfg.clone())?;
         for _ in 0..cfg.rounds {
-            engine.step();
+            engine.step()?;
         }
         engine
             .learner(0)

@@ -46,12 +46,7 @@ pub fn project_out_batch(model: &mut SvModel, tau: usize) -> CompressionOutcome 
 
     // Victims: indices of the nv smallest |alpha|.
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| {
-        model.alpha()[a]
-            .abs()
-            .partial_cmp(&model.alpha()[b].abs())
-            .unwrap()
-    });
+    order.sort_by(|&a, &b| model.alpha()[a].abs().total_cmp(&model.alpha()[b].abs()));
     let victims: Vec<usize> = order[..nv].to_vec();
     let mut is_victim = vec![false; n];
     for &v in &victims {

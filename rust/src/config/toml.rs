@@ -105,9 +105,12 @@ fn resolve_target<'a>(root: &'a mut Table, path: &[String], is_array: bool) -> &
     if path.is_empty() {
         return root;
     }
+    // kdol-lint: allow(no-unwrap-in-runtime) — parser invariant: the header pass created this table
     match root.get_mut(&path[0]).expect("table created on header") {
         Value::Table(t) => t,
+        // kdol-lint: allow(no-unwrap-in-runtime) — parser invariant: a table-array header pushed an element
         Value::TableArray(ts) if is_array => ts.last_mut().expect("pushed on header"),
+        // kdol-lint: allow(no-unwrap-in-runtime) — parser invariant: header type checked at creation
         _ => unreachable!("header type checked at creation"),
     }
 }

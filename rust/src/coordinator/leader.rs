@@ -24,7 +24,7 @@
 
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::compression::Compressor;
 use crate::config::{ExperimentConfig, ProtocolConfig};
@@ -83,6 +83,7 @@ pub fn run_cluster(cfg: &ExperimentConfig) -> Result<ClusterOutcome> {
     let outcome = leader_loop(cfg, &bus);
 
     // Always attempt shutdown, then join.
+    // kdol-lint: allow(uncounted-control) — Shutdown is runtime control, never a protocol byte
     let _ = bus.broadcast(&Message::Shutdown);
     for h in handles {
         match h.join() {
@@ -342,7 +343,7 @@ impl Leader<'_> {
                 let delta = self
                     .policy
                     .delta(round)
-                    .expect("violations only occur under dynamic protocols");
+                    .context("violations only occur under dynamic protocols")?;
                 let resolved = self.partial_sync
                     && violators.len() < self.m
                     && self.try_partial_sync(&violators, delta)?;
@@ -367,6 +368,7 @@ impl Leader<'_> {
             // zero-byte close never moves the peak).
             self.comm.end_round();
             // Release the cluster into the next round (uncounted control).
+            // kdol-lint: allow(uncounted-control) — Proceed is the lockstep round-release control message
             self.bus.broadcast(&Message::Proceed)?;
         }
         // Workers send their final metrics after the last release.
@@ -467,7 +469,7 @@ impl Leader<'_> {
             let delta = self
                 .policy
                 .delta(round)
-                .expect("violations only occur under dynamic protocols");
+                .context("violations only occur under dynamic protocols")?;
             if self.try_partial_sync(&violators, delta)? {
                 self.partial_syncs += 1;
                 return Ok(());
@@ -685,8 +687,12 @@ impl Leader<'_> {
             let refs: Vec<&Model> = set
                 .members()
                 .iter()
-                .map(|&i| uploaded[i].as_ref().unwrap())
+                .filter_map(|&i| uploaded[i].as_ref())
                 .collect();
+            anyhow::ensure!(
+                refs.len() == set.members().len(),
+                "balancing member missing its upload"
+            );
             let (avg_b, eps) = synchronize(&refs, self.compressor);
             let dist = geom.dist_to_reference(&avg_b);
             if dist <= delta {
@@ -708,7 +714,7 @@ impl Leader<'_> {
             // on success only).
             self.metrics.record_update(0.0, 0.0, 0.0, eps);
         }
-        let avg_k = avg_b.as_kernel().expect("kernel balancing set");
+        let avg_k = avg_b.as_kernel().context("kernel balancing set")?;
         for &i in set.members() {
             let (coeffs, new_svs) = self.decoder.encode_download(i, avg_k);
             let msg = Message::ModelDownload {
@@ -728,6 +734,8 @@ impl Leader<'_> {
         // decoder-store ids no learner references any more, and their
         // cache rows with them.
         ug.evict_ids(&self.decoder.evict_unreferenced());
+        // Event boundary: machine-checked cache ↔ store coherence.
+        self.decoder.debug_assert_cache_coherent(ug);
         self.comm.end_round();
         Ok(true)
     }
@@ -812,8 +820,12 @@ impl Leader<'_> {
             let refs: Vec<&Model> = set
                 .members()
                 .iter()
-                .map(|&i| uploaded[i].as_ref().unwrap())
+                .filter_map(|&i| uploaded[i].as_ref())
                 .collect();
+            anyhow::ensure!(
+                refs.len() == set.members().len(),
+                "balancing member missing its upload"
+            );
             let (avg_b, _eps) = synchronize(&refs, Compressor::None);
             let dist = geom.dist_to_reference(&avg_b);
             if dist <= delta {
@@ -827,7 +839,7 @@ impl Leader<'_> {
             return Ok(false);
         };
 
-        let w32 = avg_b.as_linear().expect("fixed balancing set").to_wire();
+        let w32 = avg_b.as_linear().context("fixed balancing set")?.to_wire();
         for &i in set.members() {
             let msg = Message::LinearDownload {
                 w: w32.clone(),
@@ -903,10 +915,7 @@ impl Leader<'_> {
         }
 
         let avg = if kernels.iter().all(Option::is_some) {
-            let models: Vec<Model> = kernels
-                .into_iter()
-                .map(|k| Model::Kernel(k.unwrap()))
-                .collect();
+            let models: Vec<Model> = kernels.into_iter().flatten().map(Model::Kernel).collect();
             let refs: Vec<&Model> = models.iter().collect();
             let (avg, eps) = synchronize(&refs, self.compressor);
             if eps > 0.0 {
@@ -914,7 +923,7 @@ impl Leader<'_> {
                 // adopted model once (engine twin: sync_kernel).
                 self.metrics.record_update(0.0, 0.0, 0.0, eps);
             }
-            let avg_k = avg.as_kernel().unwrap();
+            let avg_k = avg.as_kernel().context("kernel average")?;
             for i in 0..self.m {
                 let (coeffs, new_svs) = self.decoder.encode_download(i, avg_k);
                 let msg = Message::ModelDownload {
@@ -928,11 +937,12 @@ impl Leader<'_> {
         } else if linears.iter().all(Option::is_some) {
             let models: Vec<Model> = linears
                 .into_iter()
-                .map(|w| Model::Linear(LinearModel::from_wire(&w.unwrap())))
+                .flatten()
+                .map(|w| Model::Linear(LinearModel::from_wire(&w)))
                 .collect();
             let refs: Vec<&Model> = models.iter().collect();
             let (avg, _) = synchronize(&refs, Compressor::None);
-            let w32 = avg.as_linear().unwrap().to_wire();
+            let w32 = avg.as_linear().context("linear average")?.to_wire();
             for i in 0..self.m {
                 self.comm.record_down(self.bus.send_to(
                     i,
@@ -964,6 +974,8 @@ impl Leader<'_> {
         self.known_distance.fill(None);
         if let Some(cache) = self.sync_cache.as_mut() {
             cache.evict_ids(&self.decoder.evict_unreferenced());
+            // Event boundary: machine-checked cache ↔ store coherence.
+            self.decoder.debug_assert_cache_coherent(cache);
         }
         Ok(())
     }

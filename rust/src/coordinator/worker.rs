@@ -23,7 +23,7 @@
 
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::ExperimentConfig;
 use crate::data::DataStream;
@@ -182,7 +182,7 @@ impl Worker {
     fn upload(&mut self, endpoint: &Endpoint, round: u64) -> Result<()> {
         let snap = self.learner.snapshot();
         if self.is_kernel {
-            let exp = snap.as_kernel().unwrap();
+            let exp = snap.as_kernel().context("kernel worker snapshot")?;
             let (coeffs, new_svs) = self.encoder.encode_upload(exp);
             endpoint.send(&Message::ModelUpload {
                 learner: self.id as u32,
@@ -194,7 +194,7 @@ impl Worker {
             endpoint.send(&Message::LinearUpload {
                 learner: self.id as u32,
                 round,
-                w: snap.as_linear().unwrap().to_wire(),
+                w: snap.as_linear().context("linear worker snapshot")?.to_wire(),
             })?;
         }
         Ok(())
@@ -215,7 +215,7 @@ impl Worker {
                     partial,
                 } => {
                     let snap = self.learner.snapshot();
-                    let local = snap.as_kernel().unwrap();
+                    let local = snap.as_kernel().context("kernel worker snapshot")?;
                     let adopted = DeltaDecoder::apply_download(local, &coeffs, &new_svs)?;
                     self.encoder.note_download(adopted.ids().iter().copied());
                     let model = Model::Kernel(adopted);

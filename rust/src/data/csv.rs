@@ -73,6 +73,7 @@ impl DataStream for CsvStream {
             if self.cycle {
                 self.pos = 0;
             } else {
+                // kdol-lint: allow(no-unwrap-in-runtime) — exhausting a non-cycling stream is a config error surfaced loudly
                 panic!("csv stream exhausted after {} rows", self.rows.len());
             }
         }

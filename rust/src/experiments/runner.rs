@@ -22,7 +22,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Outcome> {
     if cfg.protocol == ProtocolConfig::Serial {
         return Ok(run_serial(cfg));
     }
-    Ok(ProtocolEngine::new(cfg.clone())?.run())
+    ProtocolEngine::new(cfg.clone())?.run()
 }
 
 /// Serial oracle: a single learner sees the m streams interleaved

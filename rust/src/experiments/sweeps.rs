@@ -81,6 +81,7 @@ pub fn sweep_rff(tau: usize, delta: f64, scale: f64) -> Result<Vec<Outcome>> {
 
     let gamma = match trunc.learner.kernel {
         crate::config::KernelConfig::Rbf { gamma } => gamma,
+        // kdol-lint: allow(no-unwrap-in-runtime) — fig1_dynamic_kernel_compressed always builds an RBF config
         _ => unreachable!(),
     };
     // Byte-equivalent feature count.

@@ -72,6 +72,7 @@ impl Kernel {
             crate::config::KernelConfig::Linear => Kernel::Linear,
             crate::config::KernelConfig::Rbf { gamma } => Kernel::Rbf { gamma },
             crate::config::KernelConfig::Rff { .. } => {
+                // kdol-lint: allow(no-unwrap-in-runtime) — API misuse: RFF configs route through the linear path
                 panic!("RFF models are linear in phi-space; no SV kernel")
             }
         }

@@ -576,6 +576,13 @@ impl SyncGramCache {
         self.stats
     }
 
+    /// Ids of the resident rows (one entry per cached coordinate variant,
+    /// in row order) — what the decoder-coherence debug assertion walks
+    /// (see `network/delta.rs`).
+    pub fn resident_ids(&self) -> &[SvId] {
+        &self.ids
+    }
+
     /// Open a new synchronization event: clears the event view (resident
     /// rows and their Gram block survive untouched).
     pub fn begin_event(&mut self) {
@@ -766,6 +773,10 @@ impl SyncGramCache {
             data,
         };
         self.gram_n = new_n;
+        debug_assert!(
+            self.ids.iter().all(|id| !dead.contains(id)),
+            "evicted id survived sync-cache compaction"
+        );
     }
 }
 

@@ -388,6 +388,7 @@ impl Model {
         match (self, other) {
             (Model::Linear(a), Model::Linear(b)) => a.distance_sq(b),
             (Model::Kernel(a), Model::Kernel(b)) => a.distance_sq(b),
+            // kdol-lint: allow(no-unwrap-in-runtime) — caller contract: distances compare one model family
             _ => panic!("cannot mix linear and kernel models"),
         }
     }
@@ -401,6 +402,7 @@ impl Model {
                     .iter()
                     .map(|m| match m {
                         Model::Linear(l) => l,
+                        // kdol-lint: allow(no-unwrap-in-runtime) — caller contract: a configuration is one model family
                         _ => panic!("mixed configuration"),
                     })
                     .collect();
@@ -411,6 +413,7 @@ impl Model {
                     .iter()
                     .map(|m| match m {
                         Model::Kernel(k) => k,
+                        // kdol-lint: allow(no-unwrap-in-runtime) — caller contract: a configuration is one model family
                         _ => panic!("mixed configuration"),
                     })
                     .collect();

@@ -176,6 +176,7 @@ impl OnlineLearner for KernelLearner {
                 self.model = k;
                 self.norm_sq = self.model.norm_sq();
             }
+            // kdol-lint: allow(no-unwrap-in-runtime) — sync invariant: coordinator never mixes model families
             Model::Linear(_) => panic!("kernel learner cannot adopt a linear model"),
         }
     }

@@ -92,6 +92,7 @@ impl OnlineLearner for LinearLearner {
                 debug_assert_eq!(w.dim(), self.model.dim());
                 self.model = w;
             }
+            // kdol-lint: allow(no-unwrap-in-runtime) — sync invariant: coordinator never mixes model families
             Model::Kernel(_) => panic!("linear learner cannot adopt a kernel model"),
         }
     }

@@ -133,6 +133,7 @@ impl OnlineLearner for RffLearner {
                 assert_eq!(w.dim(), self.d_feat, "phi-space dimensionality");
                 self.model = w;
             }
+            // kdol-lint: allow(no-unwrap-in-runtime) — sync invariant: coordinator never mixes model families
             Model::Kernel(_) => panic!("RFF learner holds a linear phi-space model"),
         }
     }

@@ -22,9 +22,14 @@
 //! The evicted ids are returned so the coordinator's persistent
 //! [`crate::kernel::SyncGramCache`] can drop its matching rows in the
 //! same event boundary — the cache-coherence invariant: every cached row's
-//! id is live in this store (see `kernel/mod.rs`).
+//! id is live in this store (see `kernel/mod.rs`). The invariant is
+//! machine-checked in debug builds via
+//! [`DeltaDecoder::debug_assert_cache_coherent`], called by both sync
+//! pipelines at every event boundary, and the store is a `BTreeMap` so
+//! the eviction order (ascending id) is deterministic — it feeds the
+//! cache's row compaction, which must not depend on hash iteration order.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 
 use crate::kernel::SvModel;
 use crate::network::message::SvBlock;
@@ -85,8 +90,10 @@ impl DeltaEncoder {
 /// per-learner knowledge of the current support set.
 #[derive(Debug, Default)]
 pub struct DeltaDecoder {
-    /// Every support vector ever uploaded or distributed, by id.
-    store: HashMap<u64, Vec<f64>>,
+    /// Every support vector ever uploaded or distributed, by id. Ordered
+    /// so that eviction (a `retain` sweep) yields ids ascending — the
+    /// deterministic order the sync-Gram cache compaction consumes.
+    store: BTreeMap<u64, Vec<f64>>,
     /// Ids each learner currently holds (from its latest upload) plus ids
     /// we have already shipped to it.
     learner_has: Vec<HashSet<u64>>,
@@ -95,7 +102,7 @@ pub struct DeltaDecoder {
 impl DeltaDecoder {
     pub fn new(learners: usize) -> Self {
         DeltaDecoder {
-            store: HashMap::new(),
+            store: BTreeMap::new(),
             learner_has: vec![HashSet::new(); learners],
         }
     }
@@ -199,8 +206,10 @@ impl DeltaDecoder {
     }
 
     /// Drop store entries no learner references any more (ids absent from
-    /// every `learner_has` set) and return them, so caches keyed on this
-    /// store evict the same ids in lockstep. Call between synchronization
+    /// every `learner_has` set) and return them **in ascending id order**
+    /// (the store is a `BTreeMap`, so `retain` visits keys sorted), so
+    /// caches keyed on this store evict the same ids in lockstep and
+    /// compact their rows deterministically. Call between synchronization
     /// events.
     ///
     /// Safety argument: a learner's future upload only references ids of
@@ -221,6 +230,29 @@ impl DeltaDecoder {
             live
         });
         evicted
+    }
+
+    /// True if `id` has coordinates in the store.
+    pub fn store_contains(&self, id: u64) -> bool {
+        self.store.contains_key(&id)
+    }
+
+    /// Debug-assert the decoder ↔ [`crate::kernel::SyncGramCache`]
+    /// coherence invariant at an event boundary: every resident cache
+    /// row's id is live in this store. (The cache may *lag* the store —
+    /// an uploaded id need not have reached a cached Gram row yet — but
+    /// must never lead it: a cached row whose id the store dropped would
+    /// feed quadratic forms with coordinates no learner can reference.)
+    /// Compiles to nothing in release builds.
+    pub fn debug_assert_cache_coherent(&self, cache: &crate::kernel::SyncGramCache) {
+        if cfg!(debug_assertions) {
+            for &id in cache.resident_ids() {
+                debug_assert!(
+                    self.store_contains(id),
+                    "sync-cache row id {id} is not live in the decoder store"
+                );
+            }
+        }
     }
 }
 
@@ -345,6 +377,37 @@ mod tests {
         let (c, b) = enc.encode_upload(&m0b);
         assert!(b.is_empty(), "id 1 was already known");
         dec.ingest_upload(0, &c, &b, &t).unwrap();
+    }
+
+    #[test]
+    fn eviction_order_is_deterministic_ascending() {
+        let mut enc = DeltaEncoder::new();
+        let mut dec = DeltaDecoder::new(1);
+        let t = model(&[], 2);
+        let m = model(&[(2, 1.0), (9, 1.0), (5, 1.0)], 2);
+        let (c, b) = enc.encode_upload(&m);
+        dec.ingest_upload(0, &c, &b, &t).unwrap();
+        // Re-upload holding only id 5: ids 2 and 9 die in one event and
+        // must come back ascending (BTreeMap retain order), every run.
+        let m2 = model(&[(5, 0.5)], 2);
+        let (c, b) = enc.encode_upload(&m2);
+        dec.ingest_upload(0, &c, &b, &t).unwrap();
+        assert_eq!(dec.evict_unreferenced(), vec![2, 9]);
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "debug_assert-based invariant")]
+    #[should_panic(expected = "not live in the decoder store")]
+    fn coherence_violation_fires_debug_assert() {
+        use crate::kernel::SyncGramCache;
+        // A cache holding a row whose id the store never saw (or already
+        // evicted) violates the PR 3 coherence invariant — the assertion
+        // promoted from prose must fire.
+        let mut cache = SyncGramCache::new(Kernel::Rbf { gamma: 1.0 }, 2);
+        cache.begin_event();
+        cache.add_model(&model(&[(42, 1.0)], 2));
+        let dec = DeltaDecoder::new(1);
+        dec.debug_assert_cache_coherent(&cache);
     }
 
     #[test]

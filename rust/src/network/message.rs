@@ -345,6 +345,26 @@ impl Message {
     pub fn wire_bytes(&self) -> usize {
         self.encoded_len()
     }
+
+    /// Coefficients + SV block of a kernel-model message, `None` for any
+    /// other variant — lets the sync pipelines turn an out-of-protocol
+    /// reply into an error instead of an `unreachable!`.
+    pub fn into_model_parts(self) -> Option<(Vec<(u64, f64)>, SvBlock)> {
+        match self {
+            Message::ModelUpload { coeffs, new_svs, .. }
+            | Message::ModelDownload { coeffs, new_svs, .. } => Some((coeffs, new_svs)),
+            _ => None,
+        }
+    }
+
+    /// Weight vector of a fixed-size-model message, `None` for any other
+    /// variant.
+    pub fn into_linear_w(self) -> Option<Vec<f32>> {
+        match self {
+            Message::LinearUpload { w, .. } | Message::LinearDownload { w, .. } => Some(w),
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -70,6 +70,7 @@ impl<'a> KernelGeometry<'a> {
         ug.begin_event();
         let r_sparse = match reference {
             Some(Model::Kernel(r)) => Some((ug.add_model(r), r.alpha().to_vec())),
+            // kdol-lint: allow(no-unwrap-in-runtime) — construction invariant: kernel engines build kernel geometries
             Some(Model::Linear(_)) => unreachable!("kernel geometry with linear reference"),
             None => None,
         };
@@ -83,11 +84,13 @@ impl<'a> KernelGeometry<'a> {
 
 impl BalanceGeometry for KernelGeometry<'_> {
     fn note_upload(&mut self, model: &Model) {
+        // kdol-lint: allow(no-unwrap-in-runtime) — construction invariant: kernel geometries see kernel models
         let k = model.as_kernel().expect("kernel geometry");
         self.ug.add_model(k);
     }
 
     fn dist_to_reference(&mut self, avg: &Model) -> f64 {
+        // kdol-lint: allow(no-unwrap-in-runtime) — construction invariant: kernel geometries see kernel models
         let avg_k = avg.as_kernel().expect("kernel geometry");
         // Quadratic form of the coefficient difference on the shared
         // union Gram. (Compression only drops/adjusts coefficients of SVs
@@ -127,6 +130,7 @@ impl BalanceGeometry for FixedGeometry<'_> {
     }
 
     fn dist_to_reference(&mut self, avg: &Model) -> f64 {
+        // kdol-lint: allow(no-unwrap-in-runtime) — construction invariant: fixed geometries see linear models
         let w = &avg.as_linear().expect("fixed geometry").w;
         match self.reference {
             Some(r) => fixed_dist_sq(w, &r.w),

@@ -25,6 +25,7 @@ pub fn configuration_divergence(models: &[&Model]) -> Divergence {
     if let Model::Kernel(_) = models[0] {
         let fs: Vec<&SvModel> = models
             .iter()
+            // kdol-lint: allow(no-unwrap-in-runtime) — caller contract: a configuration is one model family
             .map(|m| m.as_kernel().expect("mixed configuration"))
             .collect();
         return kernel_divergence(&fs);

@@ -4,6 +4,8 @@
 //! reference implementation the threaded leader/worker runtime
 //! ([`crate::coordinator`]) must agree with byte-for-byte.
 
+use anyhow::Context;
+
 use crate::compression::Compressor;
 use crate::config::{ExperimentConfig, ProtocolConfig};
 use crate::data::{build_streams, DataStream};
@@ -128,8 +130,9 @@ impl ProtocolEngine {
     }
 
     /// Execute one round: local updates, condition checks, possibly a
-    /// synchronization.
-    pub fn step(&mut self) -> RoundReport {
+    /// synchronization. Errors surface wire or accounting inconsistencies
+    /// that previously aborted the process.
+    pub fn step(&mut self) -> anyhow::Result<RoundReport> {
         self.watch.start();
         self.round += 1;
         let round = self.round;
@@ -176,28 +179,31 @@ impl ProtocolEngine {
         let decision = self.policy.decide(round, violations > 0);
         let mut synced = decision == SyncDecision::Sync;
         if synced && self.cfg.partial_sync && violations > 0 {
-            let delta = self.policy.delta(round).expect("dynamic");
-            if self.try_partial_sync(&violators, delta) {
+            let delta = self
+                .policy
+                .delta(round)
+                .context("partial sync requires a dynamic delta")?;
+            if self.try_partial_sync(&violators, delta)? {
                 // Resolved locally — no global synchronization event.
                 synced = false;
                 self.partial_syncs += 1;
                 self.evict_sync_cache();
             } else {
-                self.run_sync(true);
+                self.run_sync(true)?;
             }
         } else if synced {
-            self.run_sync(violations > 0);
+            self.run_sync(violations > 0)?;
         }
 
         self.comm.end_round();
         self.metrics.end_round(round, &self.comm, self.mean_svs());
         self.watch.stop();
-        RoundReport {
+        Ok(RoundReport {
             round,
             synced,
             violations,
             round_loss,
-        }
+        })
     }
 
     /// Partial synchronization (the [10] local-balancing refinement):
@@ -217,18 +223,18 @@ impl ProtocolEngine {
     /// Fixed-size models (plain linear and RFF learners) balance through
     /// the same algorithm on the Euclidean geometry
     /// ([`crate::protocol::balancing::FixedGeometry`]) — no Gram needed.
-    fn try_partial_sync(&mut self, violators: &[usize], delta: f64) -> bool {
+    fn try_partial_sync(&mut self, violators: &[usize], delta: f64) -> anyhow::Result<bool> {
         if violators.is_empty() {
-            return false;
+            return Ok(false);
         }
         if !self.is_kernel {
             return self.partial_sync_event_fixed(violators, delta);
         }
         // Take the cache out of `self` for the duration of the event so
         // the borrow checker lets the event body use the engine's other
-        // fields freely.
+        // fields freely (restored even when the event errors).
         let Some(mut cache) = self.sync_cache.take() else {
-            return false;
+            return Ok(false);
         };
         let resolved = self.partial_sync_event(&mut cache, violators, delta);
         self.sync_cache = Some(cache);
@@ -242,7 +248,7 @@ impl ProtocolEngine {
         ug: &mut SyncGramCache,
         violators: &[usize],
         delta: f64,
-    ) -> bool {
+    ) -> anyhow::Result<bool> {
         let m = self.learners.len();
         // The reference model is common; take it from any tracker (all
         // reset to the same model at the last full sync; None = zero fn).
@@ -256,7 +262,7 @@ impl ProtocolEngine {
 
         loop {
             if set.is_full() {
-                return false; // escalate: full sync with a fresh reference
+                return Ok(false); // escalate: full sync with a fresh reference
             }
             // Upload any new members of B (delta-encoded, byte-counted),
             // registering their SVs on the event's union Gram in
@@ -266,7 +272,7 @@ impl ProtocolEngine {
                     continue;
                 }
                 let snap = self.learners[i].snapshot();
-                let exp = snap.as_kernel().unwrap();
+                let exp = snap.as_kernel().context("kernel engine snapshot")?;
                 let (coeffs, block) = self.encoders[i].encode_upload(exp);
                 let msg = Message::ModelUpload {
                     learner: i as u32,
@@ -275,16 +281,13 @@ impl ProtocolEngine {
                     new_svs: block,
                 };
                 self.comm.record_up(msg.wire_bytes());
-                let (coeffs, block) = match msg {
-                    Message::ModelUpload {
-                        coeffs, new_svs, ..
-                    } => (coeffs, new_svs),
-                    _ => unreachable!(),
-                };
+                let (coeffs, block) = msg
+                    .into_model_parts()
+                    .context("ModelUpload carries model parts")?;
                 let rebuilt = self
                     .decoder
                     .ingest_upload(i, &coeffs, &block, exp)
-                    .expect("upload consistent");
+                    .context("ingest balancing upload")?;
                 let model = Model::Kernel(rebuilt);
                 geom.note_upload(&model);
                 uploaded[i] = Some(model);
@@ -295,15 +298,19 @@ impl ProtocolEngine {
             let refs: Vec<&Model> = set
                 .members()
                 .iter()
-                .map(|&i| uploaded[i].as_ref().unwrap())
+                .filter_map(|&i| uploaded[i].as_ref())
                 .collect();
+            anyhow::ensure!(
+                refs.len() == set.members().len(),
+                "balancing member missing its upload"
+            );
             let (avg_b, eps) = synchronize(&refs, self.avg_compressor);
             let dist = geom.dist_to_reference(&avg_b);
             if dist <= delta {
                 if eps > 0.0 {
                     self.metrics.record_update(0.0, 0.0, 0.0, eps);
                 }
-                let avg_k = avg_b.as_kernel().expect("kernel average");
+                let avg_k = avg_b.as_kernel().context("kernel average")?;
                 for &i in set.members() {
                     let (coeffs, block) = self.decoder.encode_download(i, avg_k);
                     let msg = Message::ModelDownload {
@@ -312,16 +319,13 @@ impl ProtocolEngine {
                         partial: true,
                     };
                     self.comm.record_down(msg.wire_bytes());
-                    let (coeffs, block) = match msg {
-                        Message::ModelDownload {
-                            coeffs, new_svs, ..
-                        } => (coeffs, new_svs),
-                        _ => unreachable!(),
-                    };
+                    let (coeffs, block) = msg
+                        .into_model_parts()
+                        .context("ModelDownload carries model parts")?;
                     let local_snap = self.learners[i].snapshot();
-                    let local = local_snap.as_kernel().unwrap();
+                    let local = local_snap.as_kernel().context("kernel engine snapshot")?;
                     let adopted = DeltaDecoder::apply_download(local, &coeffs, &block)
-                        .expect("download consistent");
+                        .context("apply balancing download")?;
                     self.encoders[i].note_download(adopted.ids().iter().copied());
                     let adopted_model = Model::Kernel(adopted);
                     self.learners[i].set_model(adopted_model.clone());
@@ -329,11 +333,11 @@ impl ProtocolEngine {
                     self.trackers[i].recalibrate(&adopted_model);
                     self.known_distance[i] = None;
                 }
-                return true;
+                return Ok(true);
             }
             // Extend B with the farthest remaining learner.
             if set.extend().is_none() {
-                return false;
+                return Ok(false);
             }
         }
     }
@@ -352,11 +356,15 @@ impl ProtocolEngine {
     /// lockstep cluster run therefore agrees with the engine
     /// byte-for-byte on dynamic fixed-size workloads (asserted by the
     /// parity suite).
-    fn partial_sync_event_fixed(&mut self, violators: &[usize], delta: f64) -> bool {
+    fn partial_sync_event_fixed(
+        &mut self,
+        violators: &[usize],
+        delta: f64,
+    ) -> anyhow::Result<bool> {
         let m = self.learners.len();
         let reference: Option<LinearModel> = match self.trackers[0].reference() {
             Some(Model::Linear(l)) => Some(l.clone()),
-            Some(Model::Kernel(_)) => unreachable!("fixed engine with kernel reference"),
+            Some(Model::Kernel(_)) => anyhow::bail!("fixed engine with kernel reference"),
             None => None,
         };
         // Seed distances come from this round's violation notices; the
@@ -394,7 +402,7 @@ impl ProtocolEngine {
 
         loop {
             if set.is_full() {
-                return false; // escalate: full sync with a fresh reference
+                return Ok(false); // escalate: full sync with a fresh reference
             }
             for &i in set.members() {
                 if uploaded[i].is_some() {
@@ -409,13 +417,10 @@ impl ProtocolEngine {
                 let msg = Message::LinearUpload {
                     learner: i as u32,
                     round: self.round,
-                    w: snap.as_linear().expect("fixed engine").to_wire(),
+                    w: snap.as_linear().context("fixed engine snapshot")?.to_wire(),
                 };
                 self.comm.record_up(msg.wire_bytes());
-                let w = match msg {
-                    Message::LinearUpload { w, .. } => w,
-                    _ => unreachable!(),
-                };
+                let w = msg.into_linear_w().context("LinearUpload carries w")?;
                 let model = Model::Linear(LinearModel::from_wire(&w));
                 geom.note_upload(&model);
                 uploaded[i] = Some(model);
@@ -425,12 +430,16 @@ impl ProtocolEngine {
             let refs: Vec<&Model> = set
                 .members()
                 .iter()
-                .map(|&i| uploaded[i].as_ref().unwrap())
+                .filter_map(|&i| uploaded[i].as_ref())
                 .collect();
+            anyhow::ensure!(
+                refs.len() == set.members().len(),
+                "balancing member missing its upload"
+            );
             let (avg_b, _eps) = synchronize(&refs, Compressor::None);
             let dist = geom.dist_to_reference(&avg_b);
             if dist <= delta {
-                let w32 = avg_b.as_linear().unwrap().to_wire();
+                let w32 = avg_b.as_linear().context("linear average")?.to_wire();
                 let adopted = Model::Linear(LinearModel::from_wire(&w32));
                 for &i in set.members() {
                     let msg = Message::LinearDownload {
@@ -445,17 +454,17 @@ impl ProtocolEngine {
                     // the reference is stale.
                     self.known_distance[i] = None;
                 }
-                return true;
+                return Ok(true);
             }
             if set.extend().is_none() {
-                return false;
+                return Ok(false);
             }
         }
     }
 
     /// One full synchronization: upload all models, average (Prop. 2),
     /// compress the average if a budget is configured, download.
-    fn run_sync(&mut self, triggered_by_violation: bool) {
+    fn run_sync(&mut self, triggered_by_violation: bool) -> anyhow::Result<()> {
         let m = self.learners.len();
         // Dynamic syncs are coordinator-initiated on violation: the
         // coordinator asks every learner for its model. Scheduled
@@ -468,15 +477,16 @@ impl ProtocolEngine {
         }
 
         if self.is_kernel {
-            self.sync_kernel();
+            self.sync_kernel()?;
         } else {
-            self.sync_linear();
+            self.sync_linear()?;
         }
         self.comm.record_sync(self.round);
         // Every model and the reference just changed: all cached
         // per-learner distances are stale (leader twin does the same).
         self.known_distance.fill(None);
         self.evict_sync_cache();
+        Ok(())
     }
 
     /// Close a synchronization event for the cache: drop decoder-store ids
@@ -485,16 +495,19 @@ impl ProtocolEngine {
     fn evict_sync_cache(&mut self) {
         if let Some(cache) = self.sync_cache.as_mut() {
             cache.evict_ids(&self.decoder.evict_unreferenced());
+            // Event boundary: the machine-checked form of the coherence
+            // invariant (every resident cache row id is live in the store).
+            self.decoder.debug_assert_cache_coherent(cache);
         }
     }
 
-    fn sync_kernel(&mut self) {
+    fn sync_kernel(&mut self) -> anyhow::Result<()> {
         let m = self.learners.len();
         // --- uploads: full coefficients + new SVs only ---------------------
         let mut uploaded: Vec<SvModel> = Vec::with_capacity(m);
         for i in 0..m {
             let snap = self.learners[i].snapshot();
-            let exp = snap.as_kernel().expect("kernel engine");
+            let exp = snap.as_kernel().context("kernel engine snapshot")?;
             let (coeffs, block) = self.encoders[i].encode_upload(exp);
             let msg = Message::ModelUpload {
                 learner: i as u32,
@@ -504,16 +517,13 @@ impl ProtocolEngine {
             };
             self.comm.record_up(msg.wire_bytes());
             // Coordinator ingests (decode path mirrors the wire contents).
-            let (coeffs, block) = match msg {
-                Message::ModelUpload {
-                    coeffs, new_svs, ..
-                } => (coeffs, new_svs),
-                _ => unreachable!(),
-            };
+            let (coeffs, block) = msg
+                .into_model_parts()
+                .context("ModelUpload carries model parts")?;
             let rebuilt = self
                 .decoder
                 .ingest_upload(i, &coeffs, &block, exp)
-                .expect("upload consistent by construction");
+                .context("ingest sync upload")?;
             uploaded.push(rebuilt);
         }
 
@@ -538,7 +548,7 @@ impl ProtocolEngine {
             // model once.
             self.metrics.record_update(0.0, 0.0, 0.0, eps);
         }
-        let avg_k = avg.as_kernel().expect("kernel average");
+        let avg_k = avg.as_kernel().context("kernel average")?;
 
         // --- downloads: full coefficients + missing SVs only -----------------
         for i in 0..m {
@@ -549,24 +559,22 @@ impl ProtocolEngine {
                 partial: false,
             };
             self.comm.record_down(msg.wire_bytes());
-            let (coeffs, block) = match msg {
-                Message::ModelDownload {
-                    coeffs, new_svs, ..
-                } => (coeffs, new_svs),
-                _ => unreachable!(),
-            };
+            let (coeffs, block) = msg
+                .into_model_parts()
+                .context("ModelDownload carries model parts")?;
             let local_snap = self.learners[i].snapshot();
-            let local = local_snap.as_kernel().unwrap();
+            let local = local_snap.as_kernel().context("kernel engine snapshot")?;
             let adopted = DeltaDecoder::apply_download(local, &coeffs, &block)
-                .expect("download consistent by construction");
+                .context("apply sync download")?;
             self.encoders[i].note_download(adopted.ids().iter().copied());
             let adopted_model = Model::Kernel(adopted);
             self.learners[i].set_model(adopted_model.clone());
             self.trackers[i].reset(adopted_model);
         }
+        Ok(())
     }
 
-    fn sync_linear(&mut self) {
+    fn sync_linear(&mut self) -> anyhow::Result<()> {
         let m = self.learners.len();
         // The coordinator averages what it decodes from the wire (f32
         // quantized) and every learner adopts the quantized average it
@@ -579,13 +587,10 @@ impl ProtocolEngine {
             let msg = Message::LinearUpload {
                 learner: i as u32,
                 round: self.round,
-                w: snap.as_linear().expect("linear engine").to_wire(),
+                w: snap.as_linear().context("linear engine snapshot")?.to_wire(),
             };
             self.comm.record_up(msg.wire_bytes());
-            let w = match msg {
-                Message::LinearUpload { w, .. } => w,
-                _ => unreachable!(),
-            };
+            let w = msg.into_linear_w().context("LinearUpload carries w")?;
             uploaded.push(Model::Linear(LinearModel::from_wire(&w)));
         }
         if self.record_divergence {
@@ -597,7 +602,7 @@ impl ProtocolEngine {
         }
         let refs: Vec<&Model> = uploaded.iter().collect();
         let (avg, _) = synchronize(&refs, Compressor::None);
-        let w32 = avg.as_linear().unwrap().to_wire();
+        let w32 = avg.as_linear().context("linear average")?.to_wire();
         let adopted = Model::Linear(LinearModel::from_wire(&w32));
         for i in 0..m {
             let msg = Message::LinearDownload {
@@ -608,15 +613,16 @@ impl ProtocolEngine {
             self.learners[i].set_model(adopted.clone());
             self.trackers[i].reset(adopted.clone());
         }
+        Ok(())
     }
 
     /// Run to the configured horizon and return the outcome.
-    pub fn run(mut self) -> Outcome {
+    pub fn run(mut self) -> anyhow::Result<Outcome> {
         let rounds = self.cfg.rounds as u64;
         while self.round < rounds {
-            self.step();
+            self.step()?;
         }
-        self.into_outcome()
+        Ok(self.into_outcome())
     }
 
     /// Finalize into an [`Outcome`] at the current round.
@@ -663,7 +669,8 @@ mod tests {
     fn nosync_never_communicates() {
         let o = ProtocolEngine::new(small(ProtocolConfig::NoSync))
             .unwrap()
-            .run();
+            .run()
+            .unwrap();
         assert_eq!(o.comm.total_bytes(), 0);
         assert_eq!(o.comm.syncs, 0);
     }
@@ -672,7 +679,8 @@ mod tests {
     fn continuous_syncs_every_round() {
         let o = ProtocolEngine::new(small(ProtocolConfig::Continuous))
             .unwrap()
-            .run();
+            .run()
+            .unwrap();
         assert_eq!(o.comm.syncs, 60);
         assert!(o.comm.total_bytes() > 0);
     }
@@ -681,7 +689,8 @@ mod tests {
     fn periodic_syncs_on_schedule() {
         let o = ProtocolEngine::new(small(ProtocolConfig::Periodic { period: 10 }))
             .unwrap()
-            .run();
+            .run()
+            .unwrap();
         assert_eq!(o.comm.syncs, 6);
     }
 
@@ -692,10 +701,12 @@ mod tests {
             check_period: 1,
         }))
         .unwrap()
-        .run();
+        .run()
+        .unwrap();
         let continuous = ProtocolEngine::new(small(ProtocolConfig::Continuous))
             .unwrap()
-            .run();
+            .run()
+            .unwrap();
         assert!(dynamic.comm.syncs < continuous.comm.syncs);
         assert!(dynamic.comm.total_bytes() < continuous.comm.total_bytes());
         // Loss should not explode relative to continuous.
@@ -706,7 +717,7 @@ mod tests {
     fn after_sync_models_agree() {
         let mut e = ProtocolEngine::new(small(ProtocolConfig::Continuous)).unwrap();
         for _ in 0..5 {
-            e.step();
+            e.step().unwrap();
         }
         // All learners hold (nearly — f32 SV quantization) the same model.
         let m0 = e.learner(0).snapshot();
@@ -731,7 +742,7 @@ mod tests {
         }))
         .unwrap();
         for _ in 0..40 {
-            let rep = e.step();
+            let rep = e.step().unwrap();
             if !rep.synced {
                 let snaps: Vec<Model> = (0..3).map(|i| e.learner(i).snapshot()).collect();
                 let refs: Vec<&Model> = snaps.iter().collect();
@@ -752,7 +763,7 @@ mod tests {
         cfg.learner.compression = CompressionConfig::Truncation { tau: 8 };
         let mut e = ProtocolEngine::new(cfg).unwrap();
         for _ in 0..30 {
-            e.step();
+            e.step().unwrap();
         }
         for i in 0..3 {
             let snap = e.learner(i).snapshot();
@@ -765,7 +776,7 @@ mod tests {
         let mut cfg = small(ProtocolConfig::Continuous);
         cfg.learner.kernel = crate::config::KernelConfig::Linear;
         cfg.learner.compression = CompressionConfig::None;
-        let o = ProtocolEngine::new(cfg).unwrap().run();
+        let o = ProtocolEngine::new(cfg).unwrap().run().unwrap();
         assert_eq!(o.comm.syncs, 60);
         // Fixed-size messages: per sync, m uploads + m downloads of
         // 18-dim f32 vectors (SUSY geometry). Upload: 1 tag + 4 learner +
@@ -788,7 +799,7 @@ mod tests {
 
         let mut e = ProtocolEngine::new(cfg).unwrap();
         for _ in 0..60 {
-            let rep = e.step();
+            let rep = e.step().unwrap();
             if !rep.synced {
                 // Whether quiet or partially balanced, the divergence
                 // guarantee must hold.
@@ -815,7 +826,7 @@ mod tests {
             );
         }
 
-        let full_outcome = ProtocolEngine::new(full_cfg).unwrap().run();
+        let full_outcome = ProtocolEngine::new(full_cfg).unwrap().run().unwrap();
         // Partial balancing should resolve at least some violations
         // without a full sync, reducing global sync count.
         if partial > 0 {
@@ -843,7 +854,7 @@ mod tests {
         cfg.learners = 4;
         let mut e = ProtocolEngine::new(cfg).unwrap();
         for _ in 0..60 {
-            let rep = e.step();
+            let rep = e.step().unwrap();
             if !rep.synced {
                 let snaps: Vec<Model> = (0..4).map(|i| e.learner(i).snapshot()).collect();
                 let refs: Vec<&Model> = snaps.iter().collect();
@@ -862,7 +873,8 @@ mod tests {
     fn outcome_series_is_monotone() {
         let o = ProtocolEngine::new(small(ProtocolConfig::Periodic { period: 7 }))
             .unwrap()
-            .run();
+            .run()
+            .unwrap();
         for w in o.series.windows(2) {
             assert!(w[1].cum_loss >= w[0].cum_loss);
             assert!(w[1].cum_bytes >= w[0].cum_bytes);

@@ -129,6 +129,7 @@ impl ConditionTracker {
             (Some(Model::Linear(r)), Model::Linear(l)) => {
                 crate::util::float::dot(&l.w, &r.w)
             }
+            // kdol-lint: allow(no-unwrap-in-runtime) — tracker invariant: reference and model share one family
             _ => panic!("mixed model kinds"),
         };
     }

@@ -184,15 +184,14 @@ impl XlaRuntime {
 
 impl std::fmt::Debug for XlaRuntime {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // kdol-lint: allow(no-nondeterministic-iteration) — keys are sorted before display
+        let mut names: Vec<String> = self.entries.keys().cloned().collect();
+        names.sort_unstable();
         write!(
             f,
             "XlaRuntime(variant={}, entries=[{}])",
             self.variant,
-            self.entries
-                .keys()
-                .cloned()
-                .collect::<Vec<_>>()
-                .join(", ")
+            names.join(", ")
         )
     }
 }

@@ -76,21 +76,25 @@ impl<'a> Reader<'a> {
 
     #[inline]
     pub fn u32(&mut self) -> Result<u32, DecodeError> {
+        // kdol-lint: allow(no-unwrap-in-runtime) — infallible: take(4) yields exactly 4 bytes
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     #[inline]
     pub fn u64(&mut self) -> Result<u64, DecodeError> {
+        // kdol-lint: allow(no-unwrap-in-runtime) — infallible: take(8) yields exactly 8 bytes
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     #[inline]
     pub fn f32(&mut self) -> Result<f32, DecodeError> {
+        // kdol-lint: allow(no-unwrap-in-runtime) — infallible: take(4) yields exactly 4 bytes
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     #[inline]
     pub fn f64(&mut self) -> Result<f64, DecodeError> {
+        // kdol-lint: allow(no-unwrap-in-runtime) — infallible: take(8) yields exactly 8 bytes
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
@@ -99,6 +103,7 @@ impl<'a> Reader<'a> {
         let raw = self.take(n * 4)?;
         Ok(raw
             .chunks_exact(4)
+            // kdol-lint: allow(no-unwrap-in-runtime) — infallible: chunks_exact(4) yields 4-byte slices
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
@@ -108,6 +113,7 @@ impl<'a> Reader<'a> {
         let raw = self.take(n * 8)?;
         Ok(raw
             .chunks_exact(8)
+            // kdol-lint: allow(no-unwrap-in-runtime) — infallible: chunks_exact(8) yields 8-byte slices
             .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }

@@ -49,7 +49,7 @@ pub fn quantile(xs: &[f64], p: f64) -> f64 {
         return f64::NAN;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let idx = ((s.len() as f64 - 1.0) * p).round() as usize;
     s[idx.min(s.len() - 1)]
 }

@@ -166,7 +166,7 @@ fn engine_records_divergence_when_asked() {
         ProtocolEngine::new(with_protocol(ProtocolConfig::Periodic { period: 25 })).unwrap();
     e.record_divergence = true;
     for _ in 0..100 {
-        e.step();
+        e.step().unwrap();
     }
     assert_eq!(e.sync_divergences.len(), 4);
     for (_, d) in &e.sync_divergences {

@@ -1,0 +1,12 @@
+// Clean mirror of trigger/accounted_sends: counted sends carry their
+// accounting call in the same statement; control messages carry the
+// `uncounted-control` waiver naming the message.
+
+pub fn notify(bus: &Bus, acc: &mut Accounting, msg: &Message) {
+    acc.record_down(bus.send_to(1, msg));
+}
+
+pub fn shutdown(bus: &Bus, msg: &Message) {
+    // kdol-lint: allow(uncounted-control) — Shutdown is runtime control, never a protocol byte
+    bus.broadcast(msg);
+}

@@ -1,0 +1,11 @@
+// Clean mirror of trigger/float_reduction: each closure invocation
+// writes only its own disjoint chunk — no shared state anywhere in the
+// sweep span.
+
+pub fn good_scale(rows: &mut [Vec<f64>]) {
+    par_rows(rows, 4, |_, chunk| {
+        for row in chunk.iter_mut() {
+            row[0] *= 2.0;
+        }
+    });
+}

@@ -1,0 +1,20 @@
+// Clean mirror of trigger/no_unwrap: defaulting combinators are fine, a
+// waived unwrap with a reason is fine, and test code is exempt.
+
+pub fn safe(v: Option<u32>) -> u32 {
+    v.unwrap_or(0)
+}
+
+pub fn waived(v: Option<u32>) -> u32 {
+    // kdol-lint: allow(no-unwrap-in-runtime) — infallible: the caller checked is_some
+    v.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_unwraps_are_exempt() {
+        let x: Option<u32> = Some(3);
+        assert_eq!(x.unwrap(), 3);
+    }
+}

@@ -1,0 +1,16 @@
+// Clean mirror of trigger/nondet_iter: ordered collections iterate
+// freely, and point lookups on hash collections are not iteration.
+
+use std::collections::{BTreeMap, HashMap};
+
+pub fn sum_counts(counts: &BTreeMap<u64, f64>) -> f64 {
+    let mut total = 0.0;
+    for (_, v) in counts.iter() {
+        total += v;
+    }
+    total
+}
+
+pub fn lookup(m: &HashMap<u64, f64>, id: u64) -> f64 {
+    m.get(&id).copied().unwrap_or(0.0)
+}

@@ -1,0 +1,26 @@
+// Clean mirror of trigger/norms: every `&mut self` SV-storage mutation
+// maintains the norms cache in lockstep; read-only accessors are free.
+
+pub struct SvModel {
+    xs: Vec<f64>,
+    sv_norms_sq: Vec<f64>,
+    dim: usize,
+}
+
+impl SvModel {
+    pub fn push(&mut self, x: &[f64]) {
+        let n: f64 = x.iter().map(|v| v * v).sum();
+        self.sv_norms_sq.push(n);
+        self.xs.extend_from_slice(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len() / self.dim
+    }
+
+    pub fn rescale(&mut self, c: f64) {
+        for v in &mut self.alpha_like {
+            *v *= c;
+        }
+    }
+}

@@ -1,0 +1,14 @@
+// Clean mirror of trigger/wire: the committed wire.fingerprint next to
+// this tree matches these definitions exactly.
+
+pub struct Ping {
+    pub seq: u64,
+}
+
+pub enum Message {
+    Ping(Ping),
+    Data { x: u32, ys: Vec<(u64, f64)> },
+}
+
+pub const TAG_PING: u8 = 1;
+pub const TAG_DATA: u8 = 2;

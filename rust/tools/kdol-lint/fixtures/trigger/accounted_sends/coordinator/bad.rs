@@ -1,0 +1,11 @@
+// Must trigger `accounted-sends` twice: a send and a broadcast in
+// coordinator/ with no record_up/record_down in the statement and no
+// waiver.
+
+pub fn notify(bus: &Bus, msg: &Message) {
+    bus.send_to(1, msg);
+}
+
+pub fn announce(bus: &Bus, msg: &Message) {
+    bus.broadcast(msg);
+}

@@ -1,0 +1,12 @@
+// Must trigger `no-cross-thread-float-reduction`: the sweep closure
+// smuggles a cross-thread reduction through an atomic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bad_reduce(rows: &mut [Vec<f64>]) -> u64 {
+    let total = AtomicU64::new(0);
+    par_rows(rows, 4, |_, row| {
+        total.fetch_add(row[0][0] as u64, Ordering::Relaxed);
+    });
+    total.into_inner()
+}

@@ -1,0 +1,14 @@
+// Must trigger `no-unwrap-in-runtime` three times: unwrap, expect, and
+// a panic-family macro, all on a runtime path.
+
+pub fn risky(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn still_risky(v: Option<u32>) -> u32 {
+    v.expect("present")
+}
+
+pub fn dead_end() -> u32 {
+    unreachable!("but lexically reachable")
+}

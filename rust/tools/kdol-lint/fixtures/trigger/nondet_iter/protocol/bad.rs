@@ -1,0 +1,21 @@
+// Must trigger `no-nondeterministic-iteration` twice: a direct
+// iteration-method call and a bare `for … in` over a hash collection,
+// both inside an order-sensitive directory (protocol/).
+
+use std::collections::{HashMap, HashSet};
+
+pub fn sum_counts(counts: &HashMap<u64, f64>) -> f64 {
+    let mut total = 0.0;
+    for (_, v) in counts.iter() {
+        total += v;
+    }
+    total
+}
+
+pub fn collect_ids(seen: &HashSet<u64>) -> Vec<u64> {
+    let mut out = Vec::new();
+    for id in seen {
+        out.push(*id);
+    }
+    out
+}

@@ -1,0 +1,14 @@
+// Must trigger `norms-coherence`: a `&mut self` fn mutates the SV
+// storage (`xs`) without touching the norms cache.
+
+pub struct SvModel {
+    xs: Vec<f64>,
+    sv_norms_sq: Vec<f64>,
+    dim: usize,
+}
+
+impl SvModel {
+    pub fn push_raw(&mut self, x: &[f64]) {
+        self.xs.extend_from_slice(x);
+    }
+}

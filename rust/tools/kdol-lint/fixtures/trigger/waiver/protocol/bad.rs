@@ -1,0 +1,10 @@
+// Deliberately malformed waivers: both must surface as `waiver-syntax`
+// violations, and neither registers — so the unwrap below still fires.
+
+// kdol-lint: allow(no-unwrap-in-runtime)
+pub fn reasonless(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+// kdol-lint: allow(not-a-rule) — unknown rules never register
+pub fn unknown() {}

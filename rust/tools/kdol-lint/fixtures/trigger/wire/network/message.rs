@@ -1,0 +1,14 @@
+// Must trigger `wire-fingerprint`: `seq` is u64 here, but the committed
+// stale.fingerprint next to this tree says u32.
+
+pub struct Ping {
+    pub seq: u64,
+}
+
+pub enum Message {
+    Ping(Ping),
+    Data { x: u32, ys: Vec<(u64, f64)> },
+}
+
+pub const TAG_PING: u8 = 1;
+pub const TAG_DATA: u8 = 2;

@@ -1,0 +1,1474 @@
+//! `kdol-lint` — a dependency-free static-analysis pass over `rust/src`
+//! that machine-checks the contracts kdol otherwise documents only as
+//! prose: deterministic iteration where order reaches results or the
+//! wire, the `util::par` bitwise-equality ban on cross-thread reductions,
+//! protocol-byte accounting adjacent to every coordinator send,
+//! `sv_norms_sq` maintenance across SV mutations, no panicking escape
+//! hatches on runtime paths, and a committed fingerprint of the wire
+//! format. See `LINTS.md` (next to this crate) for the rule catalogue and
+//! the motivating invariants.
+//!
+//! The build environment is offline, so there is no syn/proc-macro:
+//! everything here is a handwritten lexer ([`lex`]) plus per-file,
+//! token-stream rules. The rules are deliberately *lexical* — they trade
+//! type information for zero dependencies — and every rule supports an
+//! inline waiver on the offending line or the line above it:
+//!
+//! ```text
+//! // kdol-lint: allow(<rule>[, <rule>...]) — <reason>
+//! ```
+//!
+//! A waiver with no reason, or naming an unknown rule, is itself reported
+//! (rule `waiver-syntax`, not waivable). Code inside `#[cfg(test)]`
+//! modules is exempt from every rule.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Rule 1: no iteration over `HashMap`/`HashSet` in order-sensitive dirs.
+pub const RULE_NONDET_ITER: &str = "no-nondeterministic-iteration";
+/// Rule 2: no shared-state reduction primitives inside `util::par` sweeps.
+pub const RULE_FLOAT_REDUCTION: &str = "no-cross-thread-float-reduction";
+/// Rule 3: every coordinator bus send sits next to an accounting call.
+pub const RULE_ACCOUNTED_SENDS: &str = "accounted-sends";
+/// Rule 4: `&mut self` fns in `kernel/model.rs` touching SV storage must
+/// mention the norms cache.
+pub const RULE_NORMS: &str = "norms-coherence";
+/// Rule 5: no `unwrap()`/`expect(`/`panic!` on runtime paths.
+pub const RULE_NO_UNWRAP: &str = "no-unwrap-in-runtime";
+/// Rule 6: `network/message.rs` field lists match the committed
+/// `wire.fingerprint`.
+pub const RULE_WIRE: &str = "wire-fingerprint";
+/// Pseudo-rule for malformed waiver comments (not itself waivable).
+pub const RULE_WAIVER_SYNTAX: &str = "waiver-syntax";
+
+/// Waiver alias for [`RULE_ACCOUNTED_SENDS`]: control messages that are
+/// deliberately never counted as protocol bytes (`Shutdown`, `Proceed`).
+/// The reason must name the control message.
+pub const WAIVER_UNCOUNTED_CONTROL: &str = "uncounted-control";
+
+/// The rule inventory, in reporting order (all severity `error`).
+pub const RULES: &[&str] = &[
+    RULE_NONDET_ITER,
+    RULE_FLOAT_REDUCTION,
+    RULE_ACCOUNTED_SENDS,
+    RULE_NORMS,
+    RULE_NO_UNWRAP,
+    RULE_WIRE,
+];
+
+// ---- lexer -----------------------------------------------------------------
+
+/// Token class. Strings/chars keep no text (no rule looks inside them);
+/// numbers are lumped (suffixes, exponents and all).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Punct,
+    Lifetime,
+}
+
+/// One lexed token. Multi-char operators (`::`, `->`, `&&`) arrive as
+/// consecutive single-char `Punct` tokens — the rules only ever match
+/// single chars, so nothing is lost.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub text: String,
+    pub kind: TokKind,
+    pub line: u32,
+}
+
+/// A `//` comment, kept out-of-band for waiver parsing.
+#[derive(Clone, Debug)]
+pub struct LineComment {
+    pub line: u32,
+    /// Text after the `//`, untrimmed.
+    pub text: String,
+}
+
+/// Lex Rust source into tokens + line comments. Handles nested block
+/// comments, cooked/raw/byte strings, char-vs-lifetime disambiguation,
+/// and float/exponent literals; everything else is single-char `Punct`.
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<LineComment>) {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut line = 1u32;
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            comments.push(LineComment {
+                line,
+                text: cs[start..j].iter().collect(),
+            });
+            i = j;
+            continue;
+        }
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            // Nested block comments, per the Rust grammar.
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if cs[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if cs[j] == '/' && j + 1 < n && cs[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if cs[j] == '*' && j + 1 < n && cs[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        if c == '"' || c == 'r' || c == 'b' {
+            if let Some(end) = string_like_end(&cs, i, &mut line) {
+                toks.push(Tok {
+                    text: String::new(),
+                    kind: TokKind::Str,
+                    line,
+                });
+                i = end;
+                continue;
+            }
+            // 'r'/'b' that did not start a string: fall through to ident.
+        }
+        if c == '\'' {
+            if i + 1 < n && cs[i + 1] == '\\' {
+                // Escaped char literal: scan from after the escape pair.
+                let mut j = i + 3;
+                while j < n && cs[j] != '\'' {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+                toks.push(Tok {
+                    text: String::new(),
+                    kind: TokKind::Str,
+                    line,
+                });
+                i = j + 1;
+                continue;
+            }
+            if i + 2 < n && cs[i + 2] == '\'' && cs[i + 1] != '\'' {
+                // Plain char literal 'x'.
+                toks.push(Tok {
+                    text: String::new(),
+                    kind: TokKind::Str,
+                    line,
+                });
+                i += 3;
+                continue;
+            }
+            // Lifetime.
+            let mut j = i + 1;
+            while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            toks.push(Tok {
+                text: cs[i..j].iter().collect(),
+                kind: TokKind::Lifetime,
+                line,
+            });
+            i = j.max(i + 1);
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            toks.push(Tok {
+                text: cs[i..j].iter().collect(),
+                kind: TokKind::Ident,
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n {
+                let d = cs[j];
+                if d.is_alphanumeric() || d == '_' {
+                    j += 1;
+                } else if d == '.' && j + 1 < n && cs[j + 1].is_ascii_digit() {
+                    // `1.5` continues the literal; `0..n` does not.
+                    j += 1;
+                } else if (d == '+' || d == '-')
+                    && matches!(cs[j - 1], 'e' | 'E')
+                    && j + 1 < n
+                    && cs[j + 1].is_ascii_digit()
+                {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok {
+                text: cs[i..j].iter().collect(),
+                kind: TokKind::Num,
+                line,
+            });
+            i = j;
+            continue;
+        }
+        toks.push(Tok {
+            text: c.to_string(),
+            kind: TokKind::Punct,
+            line,
+        });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+/// If position `i` starts a string-like literal (`"…"`, `r"…"`, `r#"…"#`,
+/// `b"…"`, `br"…"`, `b'…'`), return the index one past its end; otherwise
+/// `None` (caller falls back to ident lexing for `r`/`b`).
+fn string_like_end(cs: &[char], i: usize, line: &mut u32) -> Option<usize> {
+    let n = cs.len();
+    match cs[i] {
+        '"' => Some(cooked_string_end(cs, i, line)),
+        'r' => {
+            let mut k = 0usize;
+            while i + 1 + k < n && cs[i + 1 + k] == '#' {
+                k += 1;
+            }
+            if i + 1 + k < n && cs[i + 1 + k] == '"' {
+                Some(raw_string_end(cs, i + 1 + k, k, line))
+            } else {
+                None
+            }
+        }
+        'b' => {
+            if i + 1 < n && cs[i + 1] == '"' {
+                return Some(cooked_string_end(cs, i + 1, line));
+            }
+            if i + 1 < n && cs[i + 1] == 'r' {
+                let mut k = 0usize;
+                while i + 2 + k < n && cs[i + 2 + k] == '#' {
+                    k += 1;
+                }
+                if i + 2 + k < n && cs[i + 2 + k] == '"' {
+                    return Some(raw_string_end(cs, i + 2 + k, k, line));
+                }
+                return None;
+            }
+            if i + 1 < n && cs[i + 1] == '\'' {
+                // Byte char: b'x' or b'\n'.
+                let mut j = i + 2;
+                if j < n && cs[j] == '\\' {
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+                while j < n && cs[j] != '\'' {
+                    j += 1;
+                }
+                return Some(j + 1);
+            }
+            None
+        }
+        _ => None,
+    }
+}
+
+/// End of a cooked string whose opening quote is at `q`.
+fn cooked_string_end(cs: &[char], q: usize, line: &mut u32) -> usize {
+    let n = cs.len();
+    let mut j = q + 1;
+    while j < n {
+        match cs[j] {
+            '\\' => j += 2,
+            '"' => return j + 1,
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// End of a raw string whose opening quote is at `q`, closed by `"` + `k`
+/// hashes.
+fn raw_string_end(cs: &[char], q: usize, k: usize, line: &mut u32) -> usize {
+    let n = cs.len();
+    let mut j = q + 1;
+    while j < n {
+        if cs[j] == '\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if cs[j] == '"' && (1..=k).all(|h| j + h < n && cs[j + h] == '#') {
+            return j + 1 + k;
+        }
+        j += 1;
+    }
+    j
+}
+
+// ---- token helpers ---------------------------------------------------------
+
+/// Index one past the delimiter that matches `toks[open_idx]` (which must
+/// be `open`); `toks.len()` if unbalanced.
+fn match_delim(toks: &[Tok], open_idx: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0usize;
+    let mut k = open_idx;
+    while k < toks.len() {
+        if toks[k].text == open {
+            depth += 1;
+        } else if toks[k].text == close {
+            depth -= 1;
+            if depth == 0 {
+                return k + 1;
+            }
+        }
+        k += 1;
+    }
+    toks.len()
+}
+
+/// Index one past the `>` closing the `<` at `open_idx`. `->` inside
+/// `Fn(..) -> T` bounds does not count as a closer.
+fn skip_generics(toks: &[Tok], open_idx: usize) -> usize {
+    let mut depth = 0i32;
+    let mut k = open_idx;
+    while k < toks.len() {
+        match toks[k].text.as_str() {
+            "<" => depth += 1,
+            ">" if k == 0 || toks[k - 1].text != "-" => {
+                depth -= 1;
+                if depth == 0 {
+                    return k + 1;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    toks.len()
+}
+
+fn is_seq(toks: &[Tok], i: usize, texts: &[&str]) -> bool {
+    toks.len() >= i + texts.len() && texts.iter().enumerate().all(|(k, t)| toks[i + k].text == *t)
+}
+
+fn is_keyword(s: &str) -> bool {
+    matches!(
+        s,
+        "as" | "break"
+            | "const"
+            | "continue"
+            | "crate"
+            | "dyn"
+            | "else"
+            | "enum"
+            | "fn"
+            | "for"
+            | "if"
+            | "impl"
+            | "in"
+            | "let"
+            | "loop"
+            | "match"
+            | "mod"
+            | "move"
+            | "mut"
+            | "pub"
+            | "ref"
+            | "return"
+            | "self"
+            | "static"
+            | "struct"
+            | "super"
+            | "trait"
+            | "type"
+            | "unsafe"
+            | "use"
+            | "where"
+            | "while"
+    )
+}
+
+/// Inclusive line spans of `#[cfg(test)]` items (modules or fns): every
+/// rule exempts code inside them.
+pub fn test_spans(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_seq(toks, i, &["#", "[", "cfg", "(", "test", ")", "]"]) {
+            let start = toks[i].line;
+            let mut j = i + 7;
+            // Skip any further attributes on the same item.
+            while j + 1 < toks.len() && toks[j].text == "#" && toks[j + 1].text == "[" {
+                j = match_delim(toks, j + 1, "[", "]");
+            }
+            // The item body is the first `{` before a top-level `;`.
+            let mut k = j;
+            let mut open = None;
+            while k < toks.len() {
+                match toks[k].text.as_str() {
+                    "{" => {
+                        open = Some(k);
+                        break;
+                    }
+                    ";" => break,
+                    _ => k += 1,
+                }
+            }
+            if let Some(open) = open {
+                let close = match_delim(toks, open, "{", "}");
+                let end = if close > 0 && close <= toks.len() {
+                    toks[close - 1].line
+                } else {
+                    start
+                };
+                spans.push((start, end));
+                i = close;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+fn in_span(line: u32, spans: &[(u32, u32)]) -> bool {
+    spans.iter().any(|&(a, b)| a <= line && line <= b)
+}
+
+// ---- waivers ---------------------------------------------------------------
+
+/// A parsed, well-formed waiver comment.
+#[derive(Clone, Debug)]
+pub struct Waiver {
+    pub line: u32,
+    pub rules: Vec<String>,
+    pub reason: String,
+}
+
+fn known_waiver_name(name: &str) -> bool {
+    name == WAIVER_UNCOUNTED_CONTROL || RULES.contains(&name)
+}
+
+fn waiver_matches(w: &Waiver, rule: &str) -> bool {
+    w.rules
+        .iter()
+        .any(|r| r == rule || (r == WAIVER_UNCOUNTED_CONTROL && rule == RULE_ACCOUNTED_SENDS))
+}
+
+/// A waiver suppresses a violation when it names the rule and sits on the
+/// violating line or the line directly above it.
+fn waiver_covers(w: &Waiver, v: &Violation) -> bool {
+    waiver_matches(w, v.rule) && (w.line == v.line || w.line + 1 == v.line)
+}
+
+fn is_reason_sep(ch: char) -> bool {
+    ch.is_whitespace() || matches!(ch, '—' | '–' | '-' | ':')
+}
+
+/// Extract waivers from a file's comments. Malformed waivers (no
+/// `allow(...)`, unknown rule, missing reason) become `waiver-syntax`
+/// violations and do NOT register — so the underlying violation still
+/// fires too. Comments inside test spans are ignored.
+pub fn parse_waivers(
+    comments: &[LineComment],
+    spans: &[(u32, u32)],
+    file: &Path,
+    out: &mut Vec<Violation>,
+) -> Vec<Waiver> {
+    let mut waivers = Vec::new();
+    for c in comments {
+        let Some(pos) = c.text.find("kdol-lint:") else {
+            continue;
+        };
+        if in_span(c.line, spans) {
+            continue;
+        }
+        let mut bad = false;
+        let rest = c.text[pos + "kdol-lint:".len()..].trim_start();
+        let Some(inner) = rest.strip_prefix("allow(") else {
+            out.push(Violation {
+                file: file.to_path_buf(),
+                line: c.line,
+                rule: RULE_WAIVER_SYNTAX,
+                msg: "expected `kdol-lint: allow(<rule>) — <reason>`".into(),
+            });
+            continue;
+        };
+        let Some(close) = inner.find(')') else {
+            out.push(Violation {
+                file: file.to_path_buf(),
+                line: c.line,
+                rule: RULE_WAIVER_SYNTAX,
+                msg: "unclosed `allow(` in waiver".into(),
+            });
+            continue;
+        };
+        let rules: Vec<String> = inner[..close]
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .collect();
+        for r in &rules {
+            if !known_waiver_name(r) {
+                out.push(Violation {
+                    file: file.to_path_buf(),
+                    line: c.line,
+                    rule: RULE_WAIVER_SYNTAX,
+                    msg: format!("unknown rule `{r}` in waiver"),
+                });
+                bad = true;
+            }
+        }
+        let reason = inner[close + 1..].trim_start_matches(is_reason_sep).trim();
+        if reason.is_empty() {
+            out.push(Violation {
+                file: file.to_path_buf(),
+                line: c.line,
+                rule: RULE_WAIVER_SYNTAX,
+                msg: "waiver must give a reason after the rule list".into(),
+            });
+            bad = true;
+        }
+        if !bad {
+            waivers.push(Waiver {
+                line: c.line,
+                rules,
+                reason: reason.to_string(),
+            });
+        }
+    }
+    waivers
+}
+
+// ---- report types ----------------------------------------------------------
+
+/// One reported violation.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub file: PathBuf,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// Result of linting a tree.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Surviving (unwaived) violations, sorted by (file, line, rule).
+    pub violations: Vec<Violation>,
+    /// Declared-waiver count per canonical rule name (waiver debt —
+    /// counts every well-formed waiver, used or not).
+    pub waiver_counts: BTreeMap<&'static str, usize>,
+}
+
+/// Linting options.
+#[derive(Debug, Default)]
+pub struct Options {
+    /// Fingerprint file for [`RULE_WIRE`]; `None` skips the rule.
+    pub fingerprint: Option<PathBuf>,
+    /// Regenerate the fingerprint instead of checking it.
+    pub bless: bool,
+}
+
+struct FileScan {
+    path: PathBuf,
+    /// Root-relative path with `/` separators (rule applicability).
+    rel: String,
+    toks: Vec<Tok>,
+    spans: Vec<(u32, u32)>,
+    waivers: Vec<Waiver>,
+}
+
+// ---- rule 1: no-nondeterministic-iteration ---------------------------------
+
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+fn rel_has_component(rel: &str, names: &[&str]) -> bool {
+    rel.split('/').any(|c| names.contains(&c))
+}
+
+/// Names bound (via `name: HashMap<..>` annotations or
+/// `let name = HashMap::new()` initializers) to a hash collection.
+fn hash_bound_names(toks: &[Tok]) -> Vec<String> {
+    let mut names = Vec::new();
+    for idx in 0..toks.len() {
+        let t = &toks[idx];
+        if t.kind != TokKind::Ident || (t.text != "HashMap" && t.text != "HashSet") {
+            continue;
+        }
+        let mut j = idx as isize - 1;
+        while j >= 0 {
+            let p = &toks[j as usize];
+            let skip = p.kind == TokKind::Lifetime
+                || matches!(p.text.as_str(), ":" | "&" | "mut" | "std" | "collections");
+            if skip {
+                j -= 1;
+            } else {
+                break;
+            }
+        }
+        if j < 0 {
+            continue;
+        }
+        let p = &toks[j as usize];
+        if p.kind == TokKind::Ident && !is_keyword(&p.text) {
+            names.push(p.text.clone());
+        } else if p.text == "=" && j >= 1 && toks[j as usize - 1].kind == TokKind::Ident {
+            names.push(toks[j as usize - 1].text.clone());
+        }
+    }
+    names.sort();
+    names.dedup();
+    names
+}
+
+fn rule_nondet_iter(scan: &FileScan, out: &mut Vec<Violation>) {
+    if !rel_has_component(
+        &scan.rel,
+        &["protocol", "coordinator", "kernel", "network", "runtime"],
+    ) {
+        return;
+    }
+    let toks = &scan.toks;
+    let names = hash_bound_names(toks);
+    if names.is_empty() {
+        return;
+    }
+    let has = |s: &str| names.iter().any(|n| n == s);
+    // Direct iteration-method calls: NAME . method (
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind == TokKind::Ident
+            && has(&t.text)
+            && is_seq(toks, i + 1, &["."])
+            && i + 3 < toks.len()
+            && toks[i + 2].kind == TokKind::Ident
+            && ITER_METHODS.contains(&toks[i + 2].text.as_str())
+            && toks[i + 3].text == "("
+        {
+            out.push(Violation {
+                file: scan.path.clone(),
+                line: t.line,
+                rule: RULE_NONDET_ITER,
+                msg: format!(
+                    "`{}.{}()` iterates a hash collection in an order-sensitive module; \
+                     use BTreeMap/BTreeSet or sort first",
+                    t.text, toks[i + 2].text
+                ),
+            });
+        }
+    }
+    // for-loops: `for PAT in <expr containing NAME> {`
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].kind == TokKind::Ident && toks[i].text == "for" {
+            let mut j = i + 1;
+            let mut in_idx = None;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "in" if toks[j].kind == TokKind::Ident => {
+                        in_idx = Some(j);
+                        break;
+                    }
+                    "{" | ";" => break,
+                    _ => j += 1,
+                }
+            }
+            if let Some(start) = in_idx {
+                let mut k = start + 1;
+                let mut depth = 0i32;
+                while k < toks.len() {
+                    let tx = toks[k].text.as_str();
+                    if depth == 0 && tx == "{" {
+                        break;
+                    }
+                    match tx {
+                        "(" | "[" => depth += 1,
+                        ")" | "]" => depth -= 1,
+                        _ => {}
+                    }
+                    // A bare hash-bound name in the iterable is implicit
+                    // IntoIterator / &-iteration; names followed by `.`
+                    // are left to the method pattern above (so `.len()`
+                    // etc. stay clean).
+                    if toks[k].kind == TokKind::Ident
+                        && has(&toks[k].text)
+                        && (k + 1 >= toks.len() || toks[k + 1].text != ".")
+                    {
+                        out.push(Violation {
+                            file: scan.path.clone(),
+                            line: toks[i].line,
+                            rule: RULE_NONDET_ITER,
+                            msg: format!(
+                                "`for … in` over hash collection `{}` in an order-sensitive \
+                                 module; use BTreeMap/BTreeSet or sort first",
+                                toks[k].text
+                            ),
+                        });
+                    }
+                    k += 1;
+                }
+                i = k;
+                continue;
+            }
+        }
+        i += 1;
+    }
+}
+
+// ---- rule 2: no-cross-thread-float-reduction -------------------------------
+
+/// Idents that would let a closure smuggle state across the disjoint-rows
+/// partition — in safe Rust, any cross-thread float reduction must go
+/// through one of these, so their absence implies the bitwise contract
+/// holds.
+const SHARED_STATE_IDENTS: &[&str] = &[
+    "Mutex",
+    "RwLock",
+    "Condvar",
+    "Sender",
+    "SyncSender",
+    "Receiver",
+    "channel",
+    "unsafe",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_update",
+    "fetch_max",
+    "fetch_min",
+    "compare_exchange",
+    "compare_exchange_weak",
+    "AtomicBool",
+    "AtomicUsize",
+    "AtomicIsize",
+    "AtomicU8",
+    "AtomicU16",
+    "AtomicU32",
+    "AtomicU64",
+    "AtomicI8",
+    "AtomicI16",
+    "AtomicI32",
+    "AtomicI64",
+];
+
+/// Body token range of `let NAME = [move] |…| …`, if `NAME` is bound to a
+/// closure in this file (one level of resolution, no nesting).
+fn closure_body_span(toks: &[Tok], name: &str) -> Option<(usize, usize)> {
+    let mut i = 0usize;
+    while i + 3 < toks.len() {
+        if toks[i].text == "let" {
+            let mut j = i + 1;
+            if toks[j].text == "mut" {
+                j += 1;
+            }
+            if j + 1 < toks.len() && toks[j].text == name && toks[j + 1].text == "=" {
+                let mut k = j + 2;
+                if k < toks.len() && toks[k].text == "move" {
+                    k += 1;
+                }
+                if k < toks.len() && toks[k].text == "|" {
+                    let mut p = k + 1;
+                    while p < toks.len() && toks[p].text != "|" {
+                        p += 1;
+                    }
+                    let body = p + 1;
+                    if body >= toks.len() {
+                        return None;
+                    }
+                    if toks[body].text == "{" {
+                        return Some((body, match_delim(toks, body, "{", "}")));
+                    }
+                    let mut q = body;
+                    let mut depth = 0i32;
+                    while q < toks.len() {
+                        let tx = toks[q].text.as_str();
+                        if depth == 0 && tx == ";" {
+                            break;
+                        }
+                        match tx {
+                            "(" | "[" | "{" => depth += 1,
+                            ")" | "]" | "}" => depth -= 1,
+                            _ => {}
+                        }
+                        q += 1;
+                    }
+                    return Some((body, q));
+                }
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+fn span_has_shared_state(toks: &[Tok], a: usize, b: usize) -> Option<String> {
+    let hi = b.min(toks.len());
+    let lo = a.min(hi);
+    toks[lo..hi]
+        .iter()
+        .find(|t| t.kind == TokKind::Ident && SHARED_STATE_IDENTS.contains(&t.text.as_str()))
+        .map(|t| t.text.clone())
+}
+
+fn rule_float_reduction(scan: &FileScan, out: &mut Vec<Violation>) {
+    let toks = &scan.toks;
+    let under_util = rel_has_component(&scan.rel, &["util"]);
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let is_par = t.text == "par_rows" || t.text == "par_rows_by_cost";
+        // `spawn` is only the backend's own concern: the coordinator's
+        // long-lived worker threads are message-passing by design and are
+        // covered by the parity suites instead.
+        let is_spawn = t.text == "spawn" && under_util;
+        if !(is_par || is_spawn) || i + 1 >= toks.len() || toks[i + 1].text != "(" {
+            continue;
+        }
+        let end = match_delim(toks, i + 1, "(", ")");
+        let mut offender = span_has_shared_state(toks, i + 2, end.saturating_sub(1));
+        if offender.is_none() {
+            // Resolve named-closure arguments one level deep.
+            let mut depth = 0i32;
+            for k in (i + 1)..end {
+                match toks[k].text.as_str() {
+                    "(" | "[" | "{" => depth += 1,
+                    ")" | "]" | "}" => depth -= 1,
+                    _ => {}
+                }
+                let plain_arg = depth == 1
+                    && toks[k].kind == TokKind::Ident
+                    && k > 0
+                    && matches!(toks[k - 1].text.as_str(), "(" | ",")
+                    && k + 1 < toks.len()
+                    && matches!(toks[k + 1].text.as_str(), ")" | ",");
+                if plain_arg {
+                    if let Some((a, b)) = closure_body_span(toks, &toks[k].text) {
+                        offender = span_has_shared_state(toks, a, b);
+                        if offender.is_some() {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(what) = offender {
+            out.push(Violation {
+                file: scan.path.clone(),
+                line: t.line,
+                rule: RULE_FLOAT_REDUCTION,
+                msg: format!(
+                    "`{}` sweep closes over shared state (`{what}`): cross-thread \
+                     reductions break the bitwise determinism contract of util::par",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---- rule 3: accounted-sends -----------------------------------------------
+
+fn rule_accounted_sends(scan: &FileScan, out: &mut Vec<Violation>) {
+    if !rel_has_component(&scan.rel, &["coordinator"]) {
+        return;
+    }
+    let toks = &scan.toks;
+    for i in 1..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident
+            || (t.text != "send_to" && t.text != "broadcast")
+            || toks[i - 1].text != "."
+            || i + 1 >= toks.len()
+            || toks[i + 1].text != "("
+        {
+            continue;
+        }
+        // Statement span: back to the previous `;`/`{`/`}`, forward to
+        // the next `;`.
+        let mut a = i;
+        while a > 0 && !matches!(toks[a - 1].text.as_str(), ";" | "{" | "}") {
+            a -= 1;
+        }
+        let mut b = i;
+        while b < toks.len() && toks[b].text != ";" {
+            b += 1;
+        }
+        let accounted = toks[a..b.min(toks.len())].iter().any(|t| {
+            t.kind == TokKind::Ident && (t.text == "record_up" || t.text == "record_down")
+        });
+        if !accounted {
+            out.push(Violation {
+                file: scan.path.clone(),
+                line: t.line,
+                rule: RULE_ACCOUNTED_SENDS,
+                msg: format!(
+                    "`.{}(…)` without an adjacent record_up/record_down; count the bytes \
+                     or waive with allow({WAIVER_UNCOUNTED_CONTROL}) naming the control message",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---- rule 4: norms-coherence -----------------------------------------------
+
+fn rule_norms_coherence(scan: &FileScan, out: &mut Vec<Violation>) {
+    if !scan.rel.ends_with("kernel/model.rs") {
+        return;
+    }
+    let toks = &scan.toks;
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(toks[i].kind == TokKind::Ident && toks[i].text == "fn" && i + 2 < toks.len()) {
+            i += 1;
+            continue;
+        }
+        let name = &toks[i + 1];
+        let mut j = i + 2;
+        if j < toks.len() && toks[j].text == "<" {
+            j = skip_generics(toks, j);
+        }
+        while j < toks.len() && toks[j].text != "(" {
+            j += 1;
+        }
+        if j >= toks.len() {
+            break;
+        }
+        let params_end = match_delim(toks, j, "(", ")");
+        let params = &toks[j + 1..params_end.saturating_sub(1)];
+        let takes_mut_self = params
+            .windows(2)
+            .any(|w| w[0].text == "mut" && w[1].text == "self");
+        // Body: first `{` before a `;` (trait decls have none).
+        let mut k = params_end;
+        let mut open = None;
+        while k < toks.len() {
+            match toks[k].text.as_str() {
+                "{" => {
+                    open = Some(k);
+                    break;
+                }
+                ";" => break,
+                _ => k += 1,
+            }
+        }
+        let Some(open) = open else {
+            i = params_end;
+            continue;
+        };
+        let close = match_delim(toks, open, "{", "}");
+        if takes_mut_self {
+            let body = &toks[open + 1..close.saturating_sub(1)];
+            let mentions = |s: &str| body.iter().any(|t| t.kind == TokKind::Ident && t.text == s);
+            if mentions("xs") && !(mentions("sv_norms_sq") || mentions("norm_x_sq")) {
+                out.push(Violation {
+                    file: scan.path.clone(),
+                    line: toks[i].line,
+                    rule: RULE_NORMS,
+                    msg: format!(
+                        "`fn {}` takes `&mut self` and touches SV storage (`xs`) without \
+                         maintaining `sv_norms_sq` (see the norms invariant in kernel/mod.rs)",
+                        name.text
+                    ),
+                });
+            }
+        }
+        i = close;
+    }
+}
+
+// ---- rule 5: no-unwrap-in-runtime ------------------------------------------
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+fn rule_no_unwrap(scan: &FileScan, out: &mut Vec<Violation>) {
+    // CLI arg parsing and bench plumbing may abort; the library runtime
+    // paths must not.
+    if rel_has_component(&scan.rel, &["cli", "bench_util"]) || scan.rel.ends_with("main.rs") {
+        return;
+    }
+    let toks = &scan.toks;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        if (t.text == "unwrap" || t.text == "expect")
+            && i > 0
+            && toks[i - 1].text == "."
+            && i + 1 < toks.len()
+            && toks[i + 1].text == "("
+        {
+            out.push(Violation {
+                file: scan.path.clone(),
+                line: t.line,
+                rule: RULE_NO_UNWRAP,
+                msg: format!(
+                    "`.{}()` on a runtime path; propagate a Result (vendored anyhow) or \
+                     waive with a reason",
+                    t.text
+                ),
+            });
+        }
+        if PANIC_MACROS.contains(&t.text.as_str())
+            && i + 1 < toks.len()
+            && toks[i + 1].text == "!"
+        {
+            out.push(Violation {
+                file: scan.path.clone(),
+                line: t.line,
+                rule: RULE_NO_UNWRAP,
+                msg: format!(
+                    "`{}!` on a runtime path; propagate a Result (vendored anyhow) or \
+                     waive with a reason",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---- rule 6: wire-fingerprint ----------------------------------------------
+
+/// Canonical wire description of `network/message.rs`: one line per
+/// struct/enum (field names + types, no spaces) in source order, then one
+/// `tags{…}` line with every `TAG_*` constant and its value.
+pub fn wire_canonical(toks: &[Tok], spans: &[(u32, u32)]) -> Vec<String> {
+    let mut lines = Vec::new();
+    let mut tags: Vec<String> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident || in_span(t.line, spans) {
+            i += 1;
+            continue;
+        }
+        match t.text.as_str() {
+            "struct" | "enum" if i + 1 < toks.len() => {
+                let kw = t.text.clone();
+                let name = toks[i + 1].text.clone();
+                let mut j = i + 2;
+                while j < toks.len() && toks[j].text != "{" && toks[j].text != ";" {
+                    j += 1;
+                }
+                if j >= toks.len() || toks[j].text == ";" {
+                    i = j + 1;
+                    continue;
+                }
+                let close = match_delim(toks, j, "{", "}");
+                let body = &toks[j + 1..close.saturating_sub(1)];
+                if kw == "struct" {
+                    lines.push(format!("struct {name}{{{}}}", render_fields(body)));
+                } else {
+                    lines.push(format!("enum {name}{{{}}}", render_variants(body)));
+                }
+                i = close;
+            }
+            "const"
+                if i + 1 < toks.len()
+                    && toks[i + 1].kind == TokKind::Ident
+                    && toks[i + 1].text.starts_with("TAG_") =>
+            {
+                let name = toks[i + 1].text.clone();
+                let mut j = i + 2;
+                while j < toks.len() && toks[j].text != "=" && toks[j].text != ";" {
+                    j += 1;
+                }
+                if j + 1 < toks.len() && toks[j].text == "=" {
+                    tags.push(format!("{name}={}", toks[j + 1].text));
+                }
+                i = j + 1;
+            }
+            _ => i += 1,
+        }
+    }
+    if !tags.is_empty() {
+        lines.push(format!("tags{{{}}}", tags.join(",")));
+    }
+    lines
+}
+
+/// `name:Type,name:Type` for a brace-delimited field list (attributes and
+/// visibility stripped, type tokens concatenated without spaces).
+fn render_fields(body: &[Tok]) -> String {
+    let mut parts = Vec::new();
+    let mut i = 0usize;
+    while i < body.len() {
+        if body[i].text == "#" && i + 1 < body.len() && body[i + 1].text == "[" {
+            i = match_delim(body, i + 1, "[", "]");
+            continue;
+        }
+        if body[i].text == "pub" {
+            i += 1;
+            if i < body.len() && body[i].text == "(" {
+                i = match_delim(body, i, "(", ")");
+            }
+            continue;
+        }
+        if body[i].kind == TokKind::Ident && i + 1 < body.len() && body[i + 1].text == ":" {
+            let name = body[i].text.clone();
+            let mut j = i + 2;
+            let mut depth = 0i32;
+            let mut ty = String::new();
+            while j < body.len() {
+                let tx = body[j].text.as_str();
+                if depth == 0 && tx == "," {
+                    break;
+                }
+                match tx {
+                    "<" | "(" | "[" => depth += 1,
+                    ">" | ")" | "]" => depth -= 1,
+                    _ => {}
+                }
+                ty.push_str(tx);
+                j += 1;
+            }
+            parts.push(format!("{name}:{ty}"));
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    parts.join(",")
+}
+
+/// `Variant{f:T}`, `Variant(T,U)` or `Variant` per enum variant.
+fn render_variants(body: &[Tok]) -> String {
+    let mut parts = Vec::new();
+    let mut i = 0usize;
+    while i < body.len() {
+        if body[i].text == "#" && i + 1 < body.len() && body[i + 1].text == "[" {
+            i = match_delim(body, i + 1, "[", "]");
+            continue;
+        }
+        if body[i].kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        let name = body[i].text.clone();
+        if i + 1 < body.len() && body[i + 1].text == "{" {
+            let close = match_delim(body, i + 1, "{", "}");
+            parts.push(format!(
+                "{name}{{{}}}",
+                render_fields(&body[i + 2..close.saturating_sub(1)])
+            ));
+            i = close;
+        } else if i + 1 < body.len() && body[i + 1].text == "(" {
+            let close = match_delim(body, i + 1, "(", ")");
+            let tys: String = body[i + 2..close.saturating_sub(1)]
+                .iter()
+                .map(|t| t.text.as_str())
+                .collect();
+            parts.push(format!("{name}({tys})"));
+            i = close;
+        } else {
+            parts.push(name);
+            i += 1;
+        }
+    }
+    parts.join(",")
+}
+
+fn check_fingerprint(
+    canon: &[String],
+    fp_path: &Path,
+    msg_file: &Path,
+    out: &mut Vec<Violation>,
+) {
+    let Ok(committed) = fs::read_to_string(fp_path) else {
+        out.push(Violation {
+            file: msg_file.to_path_buf(),
+            line: 1,
+            rule: RULE_WIRE,
+            msg: format!(
+                "wire fingerprint `{}` is missing; generate it with `--bless`",
+                fp_path.display()
+            ),
+        });
+        return;
+    };
+    let committed: Vec<&str> = committed
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+        .collect();
+    if committed.len() != canon.len()
+        || committed.iter().zip(canon).any(|(a, b)| a != b)
+    {
+        let first = committed
+            .iter()
+            .zip(canon)
+            .position(|(a, b)| a != b)
+            .map_or(committed.len().min(canon.len()), |p| p);
+        out.push(Violation {
+            file: msg_file.to_path_buf(),
+            line: 1,
+            rule: RULE_WIRE,
+            msg: format!(
+                "wire format drifted from `{}` (first difference at entry {}); if the \
+                 change is intentional, regenerate with `--bless` and review the diff",
+                fp_path.display(),
+                first + 1
+            ),
+        });
+    }
+}
+
+/// Write the fingerprint file (deterministic: header + canonical lines).
+pub fn write_fingerprint(canon: &[String], fp_path: &Path) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("# kdol-lint wire fingerprint — canonical field lists of network/message.rs.\n");
+    s.push_str("# Regenerate with: cargo run -p kdol-lint -- rust/src --bless\n");
+    for l in canon {
+        s.push_str(l);
+        s.push('\n');
+    }
+    fs::write(fp_path, s)
+}
+
+// ---- driver ----------------------------------------------------------------
+
+fn collect_rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    if root.is_file() {
+        return Ok(vec![root.to_path_buf()]);
+    }
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<_> = fs::read_dir(&dir)?.collect::<Result<_, _>>()?;
+        entries.sort_by_key(|e| e.file_name());
+        for e in entries {
+            let p = e.path();
+            let name = e.file_name().to_string_lossy().into_owned();
+            if p.is_dir() {
+                // The linter's own golden fixtures contain deliberate
+                // violations; never lint them as part of a tree scan.
+                if name != "target" && name != "fixtures" {
+                    stack.push(p);
+                }
+            } else if name.ends_with(".rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn scan_file(root: &Path, path: PathBuf) -> std::io::Result<(FileScan, Vec<Violation>)> {
+    let src = fs::read_to_string(&path)?;
+    let (toks, comments) = lex(&src);
+    let spans = test_spans(&toks);
+    let mut pre = Vec::new();
+    let rel = path
+        .strip_prefix(root)
+        .unwrap_or(&path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/");
+    let waivers = parse_waivers(&comments, &spans, &path, &mut pre);
+    Ok((
+        FileScan {
+            path,
+            rel,
+            toks,
+            spans,
+            waivers,
+        },
+        pre,
+    ))
+}
+
+/// Lint every `.rs` file under `root` (or `root` itself if it is a file).
+pub fn lint_tree(root: &Path, opts: &Options) -> std::io::Result<LintReport> {
+    let mut report = LintReport::default();
+    let mut message_scan: Option<usize> = None;
+    let mut scans = Vec::new();
+    for path in collect_rs_files(root)? {
+        let (scan, pre) = scan_file(root, path)?;
+        let mut vs = pre;
+        rule_nondet_iter(&scan, &mut vs);
+        rule_float_reduction(&scan, &mut vs);
+        rule_accounted_sends(&scan, &mut vs);
+        rule_norms_coherence(&scan, &mut vs);
+        rule_no_unwrap(&scan, &mut vs);
+        // Test code is exempt from every rule.
+        vs.retain(|v| !in_span(v.line, &scan.spans));
+        // Apply waivers (same line or the line above).
+        vs.retain(|v| {
+            v.rule == RULE_WAIVER_SYNTAX || !scan.waivers.iter().any(|w| waiver_covers(w, v))
+        });
+        vs.sort_by(|x, y| (x.line, x.rule).cmp(&(y.line, y.rule)));
+        vs.dedup_by(|x, y| x.line == y.line && x.rule == y.rule);
+        for w in &scan.waivers {
+            for r in &w.rules {
+                let canonical = if r == WAIVER_UNCOUNTED_CONTROL {
+                    RULE_ACCOUNTED_SENDS
+                } else {
+                    RULES
+                        .iter()
+                        .copied()
+                        .find(|k| *k == r.as_str())
+                        .unwrap_or(RULE_WAIVER_SYNTAX)
+                };
+                *report.waiver_counts.entry(canonical).or_insert(0) += 1;
+            }
+        }
+        report.violations.extend(vs);
+        if scan.rel.ends_with("network/message.rs") {
+            message_scan = Some(scans.len());
+        }
+        scans.push(scan);
+    }
+    if let (Some(idx), Some(fp)) = (message_scan, opts.fingerprint.as_ref()) {
+        let scan = &scans[idx];
+        let canon = wire_canonical(&scan.toks, &scan.spans);
+        if opts.bless {
+            write_fingerprint(&canon, fp)?;
+        } else {
+            check_fingerprint(&canon, fp, &scan.path, &mut report.violations);
+        }
+    }
+    report
+        .violations
+        .sort_by(|x, y| (&x.file, x.line, x.rule).cmp(&(&y.file, y.line, y.rule)));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexer_basics() {
+        let (toks, comments) = lex(concat!(
+            "let a = m.keys(); // kdol-lint: allow(no-unwrap-in-runtime) — x\n",
+            "let s = \"str { with } braces\";\n",
+            "let r = r#\"raw \" inner\"#;\n",
+            "let c = 'x'; let nl = '\\n'; let lt: &'static str = s;\n",
+            "/* block /* nested */ still comment */ let z = 1.5e-3;\n",
+        ));
+        assert_eq!(comments.len(), 1);
+        assert_eq!(comments[0].line, 1);
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert!(idents.contains(&"keys"));
+        assert!(idents.contains(&"z"));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "'static"));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Num && t.text == "1.5e-3"));
+        // The brace inside the string must not unbalance anything.
+        assert!(!toks.iter().any(|t| t.text == "{"));
+    }
+
+    #[test]
+    fn test_span_detection() {
+        let (toks, _) = lex(concat!(
+            "fn runtime() { f(); }\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() { x.unwrap(); }\n",
+            "}\n",
+            "fn after() {}\n",
+        ));
+        let spans = test_spans(&toks);
+        assert_eq!(spans, vec![(2, 6)]);
+        assert!(in_span(5, &spans));
+        assert!(!in_span(7, &spans));
+    }
+
+    #[test]
+    fn waiver_parsing_and_malformed() {
+        let (_, comments) = lex(concat!(
+            "// kdol-lint: allow(no-unwrap-in-runtime) — infallible by construction\n",
+            "// kdol-lint: allow(uncounted-control) — Shutdown is runtime control\n",
+            "// kdol-lint: allow(no-unwrap-in-runtime)\n",
+            "// kdol-lint: allow(not-a-rule) — whatever\n",
+        ));
+        let mut out = Vec::new();
+        let ws = parse_waivers(&comments, &[], Path::new("x.rs"), &mut out);
+        assert_eq!(ws.len(), 2);
+        assert!(waiver_matches(&ws[1], RULE_ACCOUNTED_SENDS));
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|v| v.rule == RULE_WAIVER_SYNTAX));
+    }
+
+    #[test]
+    fn wire_canonicalization() {
+        let (toks, _) = lex(concat!(
+            "pub struct SvBlock { pub ids: Vec<u64>, pub dim: u32 }\n",
+            "pub enum Message { Ping, Data { x: u32, ys: Vec<(u64, f64)> }, Pair(u8, u16) }\n",
+            "pub const TAG_PING: u8 = 1;\n",
+            "pub const TAG_DATA: u8 = 2;\n",
+        ));
+        let canon = wire_canonical(&toks, &[]);
+        assert_eq!(
+            canon,
+            vec![
+                "struct SvBlock{ids:Vec<u64>,dim:u32}".to_string(),
+                "enum Message{Ping,Data{x:u32,ys:Vec<(u64,f64)>},Pair(u8,u16)}".to_string(),
+                "tags{TAG_PING=1,TAG_DATA=2}".to_string(),
+            ]
+        );
+    }
+
+    #[test]
+    fn hash_binding_collection() {
+        let (toks, _) = lex(concat!(
+            "use std::collections::{HashMap, HashSet};\n",
+            "struct S { store: HashMap<u64, Vec<f64>>, tags: Vec<HashSet<u64>> }\n",
+            "fn f(m: &HashMap<u64, u32>) { let mut seen = HashSet::new(); }\n",
+        ));
+        let names = hash_bound_names(&toks);
+        assert_eq!(names, vec!["m".to_string(), "seen".into(), "store".into()]);
+    }
+}

@@ -1,0 +1,80 @@
+//! CLI for the kdol invariant linter. See `LINTS.md` for the rules.
+//!
+//! ```text
+//! cargo run -p kdol-lint -- rust/src              # lint, exit 1 on violations
+//! cargo run -p kdol-lint -- rust/src --bless      # re-snapshot the wire fingerprint
+//! cargo run -p kdol-lint -- rust/src --list       # machine-readable rule inventory
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use kdol_lint::{lint_tree, Options, RULES};
+
+const USAGE: &str = "usage: kdol-lint [--list] [--bless] [--fingerprint <file>] [path]\n\
+  path           tree (or file) to lint; default rust/src\n\
+  --list         print `rule=<name> severity=<sev> waivers=<n>` per rule and exit 0\n\
+  --bless        regenerate the wire fingerprint instead of checking it\n\
+  --fingerprint  fingerprint file; default <kdol-lint crate dir>/wire.fingerprint";
+
+fn main() -> ExitCode {
+    let mut path: Option<PathBuf> = None;
+    let mut list = false;
+    let mut bless = false;
+    let mut fingerprint: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--list" => list = true,
+            "--bless" => bless = true,
+            "--fingerprint" => match args.next() {
+                Some(p) => fingerprint = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("--fingerprint needs a file argument\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            _ if a.starts_with('-') => {
+                eprintln!("unknown flag `{a}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+            _ => path = Some(PathBuf::from(a)),
+        }
+    }
+    let root = path.unwrap_or_else(|| PathBuf::from("rust/src"));
+    let fingerprint = fingerprint
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("wire.fingerprint"));
+    let opts = Options {
+        fingerprint: Some(fingerprint),
+        bless,
+    };
+    let report = match lint_tree(&root, &opts) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("kdol-lint: {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if list {
+        // Waiver debt inventory for dashboards: stable key=value fields,
+        // one rule per line. Always exits 0 (it reports, not gates).
+        for rule in RULES {
+            let n = report.waiver_counts.get(*rule).copied().unwrap_or(0);
+            println!("rule={rule} severity=error waivers={n}");
+        }
+        return ExitCode::SUCCESS;
+    }
+    for v in &report.violations {
+        println!("{}:{}: [{}] {}", v.file.display(), v.line, v.rule, v.msg);
+    }
+    if report.violations.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("kdol-lint: {} violation(s)", report.violations.len());
+        ExitCode::FAILURE
+    }
+}

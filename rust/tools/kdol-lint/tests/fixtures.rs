@@ -1,0 +1,114 @@
+//! Golden-fixture conformance for the linter itself: every
+//! `fixtures/trigger/<case>` tree must yield at least one violation of
+//! the rule it targets, every `fixtures/clean/<case>` mirror must be
+//! spotless under the same scan, and `--bless` must be byte-deterministic.
+
+use std::path::PathBuf;
+
+use kdol_lint::*;
+
+fn fixture(case: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(case)
+}
+
+fn lint(case: &str, fingerprint: Option<&str>) -> LintReport {
+    let opts = Options {
+        fingerprint: fingerprint.map(|f| fixture(case).join(f)),
+        bless: false,
+    };
+    lint_tree(&fixture(case), &opts).expect("fixture tree is readable")
+}
+
+fn rules_hit(report: &LintReport) -> Vec<&'static str> {
+    report.violations.iter().map(|v| v.rule).collect()
+}
+
+#[test]
+fn trigger_fixtures_fire_their_rule() {
+    for (case, rule) in [
+        ("trigger/nondet_iter", RULE_NONDET_ITER),
+        ("trigger/float_reduction", RULE_FLOAT_REDUCTION),
+        ("trigger/accounted_sends", RULE_ACCOUNTED_SENDS),
+        ("trigger/norms", RULE_NORMS),
+        ("trigger/no_unwrap", RULE_NO_UNWRAP),
+    ] {
+        let r = lint(case, None);
+        assert!(
+            r.violations.iter().any(|v| v.rule == rule),
+            "{case} must trigger {rule}; hit {:?}",
+            rules_hit(&r)
+        );
+        assert!(
+            r.violations.iter().all(|v| v.rule == rule),
+            "{case} must trigger only {rule}; hit {:?}",
+            rules_hit(&r)
+        );
+    }
+}
+
+#[test]
+fn trigger_wire_stale_fingerprint_fires() {
+    let r = lint("trigger/wire", Some("stale.fingerprint"));
+    assert_eq!(rules_hit(&r), [RULE_WIRE]);
+}
+
+#[test]
+fn malformed_waivers_fire_and_do_not_suppress() {
+    let r = lint("trigger/waiver", None);
+    let syntax = r
+        .violations
+        .iter()
+        .filter(|v| v.rule == RULE_WAIVER_SYNTAX)
+        .count();
+    assert_eq!(syntax, 2, "hit {:?}", rules_hit(&r));
+    assert!(
+        r.violations.iter().any(|v| v.rule == RULE_NO_UNWRAP),
+        "a malformed waiver must not register: {:?}",
+        rules_hit(&r)
+    );
+}
+
+#[test]
+fn clean_mirrors_are_spotless() {
+    for case in [
+        "clean/nondet_iter",
+        "clean/float_reduction",
+        "clean/accounted_sends",
+        "clean/norms",
+        "clean/no_unwrap",
+    ] {
+        let r = lint(case, None);
+        assert!(r.violations.is_empty(), "{case}: {:?}", r.violations);
+    }
+    let r = lint("clean/wire", Some("wire.fingerprint"));
+    assert!(r.violations.is_empty(), "clean/wire: {:?}", r.violations);
+}
+
+#[test]
+fn waiver_debt_is_counted_even_when_unused() {
+    // clean/accounted_sends carries one `uncounted-control` waiver and
+    // clean/no_unwrap one `no-unwrap-in-runtime` waiver; `--list` reports
+    // them as debt under their canonical rule names.
+    let r = lint("clean/accounted_sends", None);
+    assert_eq!(r.waiver_counts.get(RULE_ACCOUNTED_SENDS), Some(&1));
+    let r = lint("clean/no_unwrap", None);
+    assert_eq!(r.waiver_counts.get(RULE_NO_UNWRAP), Some(&1));
+}
+
+#[test]
+fn bless_is_deterministic_and_matches_committed() {
+    let tmp = std::env::temp_dir().join(format!("kdol-lint-bless-{}.fp", std::process::id()));
+    let opts = Options {
+        fingerprint: Some(tmp.clone()),
+        bless: true,
+    };
+    lint_tree(&fixture("clean/wire"), &opts).expect("bless run");
+    let first = std::fs::read_to_string(&tmp).expect("fingerprint written");
+    lint_tree(&fixture("clean/wire"), &opts).expect("bless rerun");
+    let second = std::fs::read_to_string(&tmp).expect("fingerprint rewritten");
+    let _ = std::fs::remove_file(&tmp);
+    assert_eq!(first, second, "--bless must be byte-deterministic");
+    let committed = std::fs::read_to_string(fixture("clean/wire").join("wire.fingerprint"))
+        .expect("committed fixture fingerprint");
+    assert_eq!(first, committed, "committed fixture fingerprint is stale");
+}

@@ -1,0 +1,29 @@
+//! The repository's own sources must be lint-clean at HEAD — the same
+//! gate CI applies via `cargo run -p kdol-lint -- rust/src`. A failure
+//! here means either a real contract violation or a missing/malformed
+//! waiver; see LINTS.md next to this crate.
+
+use std::path::PathBuf;
+
+use kdol_lint::{lint_tree, Options};
+
+#[test]
+fn rust_src_is_lint_clean_at_head() {
+    let crate_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let opts = Options {
+        fingerprint: Some(crate_dir.join("wire.fingerprint")),
+        bless: false,
+    };
+    let root = crate_dir.join("..").join("..").join("src");
+    let report = lint_tree(&root, &opts).expect("rust/src is readable");
+    let rendered: Vec<String> = report
+        .violations
+        .iter()
+        .map(|v| format!("{}:{}: [{}] {}", v.file.display(), v.line, v.rule, v.msg))
+        .collect();
+    assert!(
+        report.violations.is_empty(),
+        "kdol-lint violations at HEAD:\n{}",
+        rendered.join("\n")
+    );
+}
