@@ -279,9 +279,26 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "config", "preset", "protocol", "delta", "period", "check-period", "learners", "rounds",
         "seed", "partial", "threads", "kernel", "gamma", "rff-dim", "data", "dim", "drift",
-        "lockstep",
+        "lockstep", "fault-plan", "retry", "recv-timeout", "churn",
     ])?;
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
+    // Robustness overrides are cluster-only (the serial engine has no bus
+    // to fault), so they layer on after the shared overrides and the
+    // config is re-validated with them in place.
+    if let Some(spec) = args.get("fault-plan") {
+        let plan = crate::network::fault::parse_fault_spec(spec).map_err(|e| anyhow::anyhow!(e))?;
+        cfg.faults = Some(plan);
+    }
+    if let Some(spec) = args.get("churn") {
+        cfg.churn = crate::network::fault::parse_churn_spec(spec).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(n) = args.get_u64("retry")? {
+        cfg.max_retries = n as u32;
+    }
+    if let Some(ms) = args.get_u64("recv-timeout")? {
+        cfg.recv_timeout_ms = ms;
+    }
+    cfg.validate()?;
     let out = crate::coordinator::run_cluster(&cfg)?;
     println!("== cluster run: {} ==", cfg.name);
     println!("cumulative loss  : {:.2}", out.cum_loss);
@@ -301,6 +318,19 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "quiescent for    : {} rounds",
         out.comm.quiescent_rounds(out.rounds)
     );
+    let r = &out.robustness;
+    if cfg.faults.is_some() || !cfg.churn.is_empty() || r.retries + r.quarantined > 0 {
+        println!("faults injected  : {}", r.faults_injected);
+        println!("retries          : {}", r.retries);
+        println!(
+            "suppressed       : {} duplicate / {} stale",
+            r.dup_suppressed, r.stale_suppressed
+        );
+        println!("quarantined      : {}", r.quarantined);
+        for q in &out.quarantine {
+            println!("  worker {} @ round {}: {}", q.learner, q.round, q.reason);
+        }
+    }
     Ok(())
 }
 

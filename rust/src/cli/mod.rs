@@ -44,7 +44,16 @@ CLUSTER FLAGS:
     same as RUN (minus --csv/--divergence); --partial enables subset
     balancing in the threaded leader/worker runtime (all model
     families); --lockstep paces workers one protocol round at a time
-    (deterministic conformance mode — engine-exact trajectories)
+    (deterministic conformance mode — engine-exact trajectories); plus:
+    --recv-timeout <ms>    leader per-attempt receive deadline    [60000]
+    --retry <n>            re-request attempts before quarantine  [2]
+    --fault-plan <spec>    seeded fault injection, keys seed, workers
+                           (ids split by |), {up,down}_{drop,delay,
+                           delay_polls,duplicate,reorder,corrupt}, e.g.
+                           seed=7,up_drop=0.1,down_delay=0.2,workers=0|2
+    --churn <spec>         planned membership windows `worker:join..leave`
+                           split by `;`, e.g. 1:10..50;2:30..100
+                           (requires --lockstep)
 
 BENCH FLAGS:
     bench <target>         fig1 | fig2 | headline | sweep-delta |
@@ -63,6 +72,8 @@ EXAMPLES:
              --protocol dynamic --delta 0.3 --partial
     kdol cluster --kernel linear --data hyperplane --protocol dynamic \\
                  --delta 0.3 --partial --lockstep
+    kdol cluster --protocol dynamic --delta 0.2 --recv-timeout 400 --retry 3 \\
+                 --fault-plan seed=7,up_drop=0.1,up_duplicate=0.05
     kdol bench fig2 --scale 0.25 --csv fig2.csv
     kdol serve --requests 4096
 ";

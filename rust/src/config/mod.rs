@@ -5,6 +5,7 @@
 mod schema;
 pub mod toml;
 
+pub use crate::network::fault::{ChurnEntry, FaultPlanConfig, LinkFaultConfig};
 pub use schema::{
     CompressionConfig, DataConfig, ExperimentConfig, KernelConfig, LearnerConfig, LossKind,
     ProtocolConfig, RuntimeBackend,

@@ -6,6 +6,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::toml::{self, Table, Value};
+use crate::network::fault::{ChurnEntry, FaultPlanConfig, LinkFaultConfig};
 
 /// Which compute backend executes the kernel algebra.
 #[derive(Debug, Clone, PartialEq)]
@@ -196,6 +197,19 @@ pub struct ExperimentConfig {
     /// barrier per round; off (free-running workers) is the deployable
     /// default.
     pub lockstep: bool,
+    /// Leader receive deadline per collection attempt (ms). Exceeding it
+    /// triggers the bounded retry ladder; after `max_retries` the leader
+    /// escalates (full sync) or quarantines the unresponsive worker.
+    pub recv_timeout_ms: u64,
+    /// Re-request attempts after the first deadline before escalating.
+    pub max_retries: u32,
+    /// Seeded fault-injection plan for the cluster bus (`None` = clean).
+    /// Same seed ⇒ identical fault schedule, so chaos runs replay.
+    pub faults: Option<FaultPlanConfig>,
+    /// Planned worker membership windows (join/leave churn); empty = all
+    /// workers play every round. Requires lockstep mode — the plan is
+    /// round-synchronous and known to leader and workers alike.
+    pub churn: Vec<ChurnEntry>,
 }
 
 impl ExperimentConfig {
@@ -223,6 +237,10 @@ impl ExperimentConfig {
             partial_sync: false,
             threads: 0,
             lockstep: false,
+            recv_timeout_ms: 60_000,
+            max_retries: 2,
+            faults: None,
+            churn: Vec::new(),
         }
     }
 
@@ -280,6 +298,10 @@ impl ExperimentConfig {
             partial_sync: false,
             threads: 0,
             lockstep: false,
+            recv_timeout_ms: 60_000,
+            max_retries: 2,
+            faults: None,
+            churn: Vec::new(),
         }
     }
 
@@ -386,6 +408,37 @@ impl ExperimentConfig {
         {
             bail!("compression only applies to support-vector models");
         }
+        if self.recv_timeout_ms == 0 {
+            bail!("recv_timeout_ms must be >= 1");
+        }
+        if let Some(f) = &self.faults {
+            f.validate(self.learners).map_err(|e| anyhow!(e))?;
+        }
+        if !self.churn.is_empty() {
+            if !self.lockstep {
+                bail!("churn requires lockstep mode (the membership plan is round-synchronous)");
+            }
+            let mut seen = vec![false; self.learners];
+            for c in &self.churn {
+                if c.worker >= self.learners {
+                    bail!(
+                        "churn names worker {}, but the cluster has {}",
+                        c.worker,
+                        self.learners
+                    );
+                }
+                if seen[c.worker] {
+                    bail!("churn lists worker {} twice", c.worker);
+                }
+                seen[c.worker] = true;
+                if c.join == 0 || c.join > c.leave {
+                    bail!("churn window {c} must satisfy 1 <= join <= leave");
+                }
+                if c.leave > self.rounds as u64 {
+                    bail!("churn window {c} ends after the last round {}", self.rounds);
+                }
+            }
+        }
         match (&self.data, self.learner.loss) {
             (d, LossKind::Squared) | (d, LossKind::EpsInsensitive(_)) if d.is_classification() => {
                 bail!("regression loss on a classification stream")
@@ -457,6 +510,24 @@ impl ExperimentConfig {
                 }
                 cfg.threads = n as usize;
             }
+        }
+        if let Some(v) = get_int(t, "recv_timeout_ms") {
+            if v <= 0 {
+                bail!("recv_timeout_ms must be >= 1");
+            }
+            cfg.recv_timeout_ms = v as u64;
+        }
+        if let Some(v) = get_int(t, "max_retries") {
+            if v < 0 {
+                bail!("max_retries must be >= 0");
+            }
+            cfg.max_retries = v as u32;
+        }
+        if let Some(f) = t.get("faults").and_then(Value::as_table) {
+            cfg.faults = Some(parse_faults(f)?);
+        }
+        if let Some(entries) = t.get("churn").and_then(Value::as_table_array) {
+            cfg.churn = parse_churn(entries)?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -559,6 +630,68 @@ fn parse_protocol(t: &Table) -> Result<ProtocolConfig> {
     }
 }
 
+fn parse_fault_link(t: &Table, prefix: &str) -> Result<LinkFaultConfig> {
+    let f = |name: &str| get_float(t, &format!("{prefix}_{name}")).unwrap_or(0.0);
+    let polls = match get_int(t, &format!("{prefix}_delay_polls")) {
+        Some(n) if n >= 1 => n as u32,
+        Some(n) => bail!("faults.{prefix}_delay_polls must be >= 1, got {n}"),
+        None => 1,
+    };
+    Ok(LinkFaultConfig {
+        drop: f("drop"),
+        delay: f("delay"),
+        delay_polls: polls,
+        duplicate: f("duplicate"),
+        reorder: f("reorder"),
+        corrupt: f("corrupt"),
+    })
+}
+
+/// `[faults]` table: flat keys — `seed`, `{up,down}_{drop,delay,
+/// delay_polls,duplicate,reorder,corrupt}`, and a `workers = [..]` list
+/// restricting injection to those links.
+fn parse_faults(t: &Table) -> Result<FaultPlanConfig> {
+    let mut f = FaultPlanConfig::clean(get_int(t, "seed").unwrap_or(0) as u64);
+    f.up = parse_fault_link(t, "up")?;
+    f.down = parse_fault_link(t, "down")?;
+    if let Some(v) = t.get("workers") {
+        let Value::Array(items) = v else {
+            bail!("faults.workers must be an array of worker ids");
+        };
+        let mut ws = Vec::with_capacity(items.len());
+        for it in items {
+            match it.as_int() {
+                Some(w) if w >= 0 => ws.push(w as usize),
+                _ => bail!("faults.workers must be an array of worker ids"),
+            }
+        }
+        f.workers = Some(ws);
+    }
+    Ok(f)
+}
+
+/// `[[churn]]` entries: `worker`, `join`, `leave` (1-based inclusive
+/// round window).
+fn parse_churn(entries: &[Table]) -> Result<Vec<ChurnEntry>> {
+    let mut plan = Vec::with_capacity(entries.len());
+    for e in entries {
+        let worker = match get_int(e, "worker") {
+            Some(w) if w >= 0 => w as usize,
+            _ => bail!("churn entry needs a worker id >= 0"),
+        };
+        let round = |key: &str| match get_int(e, key) {
+            Some(r) if r >= 1 => Ok(r as u64),
+            _ => bail!("churn entry for worker {worker} needs {key} >= 1"),
+        };
+        plan.push(ChurnEntry {
+            worker,
+            join: round("join")?,
+            leave: round("leave")?,
+        });
+    }
+    Ok(plan)
+}
+
 fn parse_backend(t: &Table) -> Result<RuntimeBackend> {
     match get_str(t, "backend") {
         Some("native") | None => Ok(RuntimeBackend::Native),
@@ -639,6 +772,56 @@ threads = 3
     }
 
     #[test]
+    fn faults_and_churn_from_toml() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+learners = 4
+rounds = 100
+lockstep = true
+recv_timeout_ms = 500
+max_retries = 3
+
+[faults]
+seed = 9
+up_drop = 0.25
+up_delay = 0.1
+up_delay_polls = 3
+down_corrupt = 0.05
+workers = [0, 2]
+
+[[churn]]
+worker = 1
+join = 10
+leave = 50
+
+[[churn]]
+worker = 2
+join = 30
+leave = 100
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.recv_timeout_ms, 500);
+        assert_eq!(cfg.max_retries, 3);
+        let f = cfg.faults.as_ref().unwrap();
+        assert_eq!(f.seed, 9);
+        assert_eq!(f.up.drop, 0.25);
+        assert_eq!(f.up.delay, 0.1);
+        assert_eq!(f.up.delay_polls, 3);
+        assert_eq!(f.down.corrupt, 0.05);
+        assert_eq!(f.workers, Some(vec![0, 2]));
+        assert_eq!(cfg.churn.len(), 2);
+        assert_eq!(
+            cfg.churn[0],
+            ChurnEntry {
+                worker: 1,
+                join: 10,
+                leave: 50
+            }
+        );
+    }
+
+    #[test]
     fn invalid_configs_rejected() {
         let mut c = ExperimentConfig::quickstart();
         c.learners = 0;
@@ -673,6 +856,62 @@ threads = 3
         // Negative TOML threads rejected at parse time (would wrap to
         // usize::MAX through the `as` cast otherwise).
         assert!(ExperimentConfig::from_toml("[runtime]\nthreads = -1\n").is_err());
+
+        // Zero leader timeout is a busy-loop, not a deadline.
+        let mut c = ExperimentConfig::quickstart();
+        c.recv_timeout_ms = 0;
+        assert!(c.validate().is_err());
+
+        // Fault probabilities outside [0, 1] rejected.
+        let mut c = ExperimentConfig::quickstart();
+        let mut f = FaultPlanConfig::clean(1);
+        f.up.drop = 1.5;
+        c.faults = Some(f);
+        assert!(c.validate().is_err());
+
+        // Churn without lockstep has no round-synchronous plan to follow.
+        let mut c = ExperimentConfig::quickstart();
+        c.churn = vec![ChurnEntry {
+            worker: 0,
+            join: 1,
+            leave: 10,
+        }];
+        assert!(c.validate().is_err());
+
+        // Inverted or out-of-range churn windows rejected.
+        let mut c = ExperimentConfig::quickstart();
+        c.lockstep = true;
+        c.churn = vec![ChurnEntry {
+            worker: 0,
+            join: 50,
+            leave: 10,
+        }];
+        assert!(c.validate().is_err());
+        c.churn = vec![ChurnEntry {
+            worker: 0,
+            join: 1,
+            leave: c.rounds as u64 + 1,
+        }];
+        assert!(c.validate().is_err());
+        c.churn = vec![
+            ChurnEntry {
+                worker: 0,
+                join: 1,
+                leave: 10,
+            },
+            ChurnEntry {
+                worker: 0,
+                join: 20,
+                leave: 30,
+            },
+        ];
+        assert!(c.validate().is_err());
+        c.churn = vec![ChurnEntry {
+            worker: 0,
+            join: 2,
+            leave: 10,
+        }];
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -21,18 +21,32 @@
 //! [`CommStats::record_sync`] is stamped with the protocol round that
 //! triggered the event (carried in violation/upload messages), so
 //! quiescence statistics refer to protocol rounds, not event counts.
+//!
+//! The leader is also fault tolerant (see [`crate::coordinator`] for the
+//! full flows): every wait for worker responses runs a bounded retry
+//! ladder (re-request on deadline, exponential backoff, escalate or
+//! quarantine on exhaustion), duplicate and stale frames are suppressed
+//! when a fault plan is active, and a worker that sends provably-invalid
+//! frames — undecodable payloads, non-finite coordinates, a wrong-family
+//! upload — is quarantined with recorded evidence while the survivors
+//! recalibrate and finish the run. All retry traffic is byte-accounted
+//! like any other protocol message; suppression is only enabled under an
+//! injected fault plan, so clean runs take the exact engine-parity paths.
 
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::compression::Compressor;
-use crate::config::{ExperimentConfig, ProtocolConfig};
+use crate::config::{ChurnEntry, ExperimentConfig, ProtocolConfig};
 use crate::data::build_streams;
 use crate::kernel::{LinearModel, Model, SvModel, SyncCacheStats, SyncGramCache};
 use crate::learner::build_learner;
 use crate::metrics::MetricsRecorder;
-use crate::network::{Bus, CommStats, DeltaDecoder, Message};
+use crate::network::fault::invalid_frame_reason;
+use crate::network::{
+    Bus, BusError, CommStats, DeltaDecoder, Message, QuarantineRecord, RobustnessStats,
+};
 use crate::protocol::balancing::{BalanceGeometry, BalancingSet, FixedGeometry, KernelGeometry};
 use crate::protocol::sync::synchronize;
 use crate::protocol::{SyncDecision, SyncPolicy};
@@ -55,6 +69,10 @@ pub struct ClusterOutcome {
     pub sync_cache: SyncCacheStats,
     /// Final globally synchronized model, if any full sync happened.
     pub final_model: Option<Model>,
+    /// Retry/quarantine/suppression counters (all zero on a clean run).
+    pub robustness: RobustnessStats,
+    /// Evidence for every quarantined worker, in quarantine order.
+    pub quarantine: Vec<QuarantineRecord>,
 }
 
 /// Run the full cluster: spawns workers, drives the leader loop, joins.
@@ -68,7 +86,7 @@ pub fn run_cluster(cfg: &ExperimentConfig) -> Result<ClusterOutcome> {
     // only: results are bitwise identical at any setting.
     crate::util::par::set_threads(cfg.threads);
     let m = cfg.learners;
-    let (bus, endpoints) = Bus::new(m);
+    let (bus, endpoints) = Bus::new_with_faults(m, cfg.faults.as_ref());
     let streams = build_streams(&cfg.data, m, cfg.seed);
 
     // Spawn workers.
@@ -91,7 +109,10 @@ pub fn run_cluster(cfg: &ExperimentConfig) -> Result<ClusterOutcome> {
             Err(_) => bail!("worker panicked"),
         }
     }
-    outcome
+    let mut outcome = outcome?;
+    // The bus counter is only final once every worker thread has joined.
+    outcome.robustness.faults_injected = bus.faults_injected();
+    Ok(outcome)
 }
 
 /// Leader-side state for one cluster run.
@@ -134,7 +155,28 @@ struct Leader<'a> {
     /// Coordinator-side metrics recorder (compression `eps` of every
     /// averaged model; the cluster twin of the engine's recorder).
     metrics: MetricsRecorder,
+    /// Base deadline of one wait attempt (`cfg.recv_timeout_ms`); each
+    /// retry attempt doubles it.
     timeout: Duration,
+    /// Re-request budget per wait before escalating or quarantining.
+    max_retries: u32,
+    /// A fault plan is active: enable duplicate/stale suppression and the
+    /// lenient stray-frame arms. Off by default so clean runs keep the
+    /// strict engine-parity message discipline.
+    faults_enabled: bool,
+    /// Per-worker: inside its churn window (always true without churn).
+    active: Vec<bool>,
+    /// Per-worker: excluded for misbehavior or unresponsiveness.
+    quarantined: Vec<bool>,
+    /// Evidence for each quarantine, in order.
+    evidence: Vec<QuarantineRecord>,
+    robust: RobustnessStats,
+    /// Round of the last *counted* violation per worker — later frames
+    /// stamped with the same or an older round are fault-plan duplicates.
+    last_violation_round: Vec<u64>,
+    /// The run's churn plan (leader-side copy; workers derive their own
+    /// windows from the same config).
+    churn: Vec<ChurnEntry>,
 }
 
 /// Hard cap on how long the leader waits for co-violations after the
@@ -170,6 +212,12 @@ fn leader_loop(cfg: &ExperimentConfig, bus: &Bus) -> Result<ClusterOutcome> {
         None => Compressor::None,
     };
     let sync_cache = is_kernel.then(|| SyncGramCache::new(template.kernel, template.dim));
+    // Workers with a churn window joining later than round 1 start out
+    // inactive; their `Join` arrives at the round the plan names.
+    let mut active = vec![true; m];
+    for c in &cfg.churn {
+        active[c.worker] = c.join <= 1;
+    }
     let mut leader = Leader {
         bus,
         m,
@@ -190,7 +238,15 @@ fn leader_loop(cfg: &ExperimentConfig, bus: &Bus) -> Result<ClusterOutcome> {
         known_distance: vec![None; m],
         sync_cache,
         metrics: MetricsRecorder::new(cfg.record_every as u64),
-        timeout: Duration::from_secs(60),
+        timeout: Duration::from_millis(cfg.recv_timeout_ms),
+        max_retries: cfg.max_retries,
+        faults_enabled: cfg.faults.is_some(),
+        active,
+        quarantined: vec![false; m],
+        evidence: Vec::new(),
+        robust: RobustnessStats::default(),
+        last_violation_round: vec![0; m],
+        churn: cfg.churn.clone(),
     };
     if cfg.lockstep {
         leader.run_lockstep(cfg.rounds as u64)?;
@@ -210,17 +266,175 @@ fn leader_loop(cfg: &ExperimentConfig, bus: &Bus) -> Result<ClusterOutcome> {
             .map(|c| c.stats())
             .unwrap_or_default(),
         final_model: leader.final_model,
+        robustness: leader.robust,
+        quarantine: leader.evidence,
     })
 }
 
 impl Leader<'_> {
+    /// Worker is live from the protocol's point of view: inside its churn
+    /// window (as observed via Join/Leave) and not quarantined.
+    fn participant(&self, i: usize) -> bool {
+        self.active[i] && !self.quarantined[i]
+    }
+
+    /// Whether the churn plan schedules worker `i` to run round `round`.
+    /// Barriers and collections expect workers by *plan*, not by observed
+    /// Join/Leave frames: a Join may still sit in the queue behind other
+    /// workers' barrier messages, and waiting on the plan instead closes
+    /// that race (the worker's Join always precedes its RoundDone and
+    /// upload on the same FIFO channel, so it is processed on the way).
+    fn planned_active(&self, i: usize, round: u64) -> bool {
+        match self.churn.iter().find(|c| c.worker == i) {
+            Some(c) => round >= c.join && round <= c.leave,
+            None => true,
+        }
+    }
+
+    /// Deadline of one wait attempt: the configured base timeout, doubled
+    /// per retry attempt (capped so the shift cannot overflow).
+    fn attempt_deadline(&self, attempt: u32) -> Duration {
+        self.timeout.saturating_mul(1u32 << attempt.min(6))
+    }
+
+    /// Has every worker the plan expects at `round` reached the barrier
+    /// (or been excluded from it by quarantine)?
+    fn barrier_done(&self, arrived: &[bool], round: u64) -> bool {
+        (0..self.m).all(|i| arrived[i] || self.quarantined[i] || !self.planned_active(i, round))
+    }
+
+    /// Exclude a worker: record the evidence, stop listening to it, and
+    /// shut its thread down so the end-of-run join stays clean. Idempotent.
+    fn quarantine(&mut self, learner: usize, round: u64, reason: String) {
+        if learner >= self.m || self.quarantined[learner] {
+            return;
+        }
+        self.quarantined[learner] = true;
+        self.robust.quarantined += 1;
+        self.evidence.push(QuarantineRecord {
+            learner: learner as u32,
+            round,
+            reason,
+        });
+        // kdol-lint: allow(uncounted-control) — Shutdown to a quarantined worker is runtime control
+        let _ = self.bus.send_to(learner, &Message::Shutdown);
+    }
+
+    /// Receive with fault discipline. Deadline expiry surfaces as
+    /// `Ok(None)` so callers can drive their retry ladders; an
+    /// undecodable or provably-invalid frame quarantines its sender
+    /// (evidence stamped with `round`) and the wait continues; frames
+    /// from already-quarantined workers are dropped silently.
+    fn recv_checked(
+        &mut self,
+        deadline: Instant,
+        round: u64,
+    ) -> Result<Option<(usize, Message, usize)>> {
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match self.bus.recv(remaining) {
+                Ok((from, msg, n)) => {
+                    if from < self.m && self.quarantined[from] {
+                        continue;
+                    }
+                    if let Some(reason) = invalid_frame_reason(&msg) {
+                        self.quarantine(from, round, reason);
+                        continue;
+                    }
+                    return Ok(Some((from, msg, n)));
+                }
+                Err(BusError::Timeout) => return Ok(None),
+                Err(BusError::Disconnected) => bail!("leader: every worker link hung up"),
+                Err(BusError::Decode { from, err }) => {
+                    self.quarantine(from, round, format!("undecodable frame: {err}"));
+                }
+            }
+        }
+    }
+
+    /// Account one violation frame, applying the staleness filter and —
+    /// under a fault plan — duplicate suppression. Returns true when the
+    /// violation is fresh (should join the current violator set).
+    fn note_violation(&mut self, learner: usize, round: u64, distance_sq: f64, n: usize) -> bool {
+        if self.faults_enabled && round <= self.last_violation_round[learner] {
+            // A frame stamped with an already-counted round can only be a
+            // fault-plan duplicate: a worker reports one violation per
+            // round, and adoption bumps `adopted_round` past old rounds.
+            self.robust.dup_suppressed += 1;
+            return false;
+        }
+        self.comm.record_up(n);
+        self.comm.record_violation();
+        self.last_violation_round[learner] = self.last_violation_round[learner].max(round);
+        if round > self.adopted_round[learner] {
+            self.known_distance[learner] = Some(distance_sq);
+            true
+        } else {
+            if self.faults_enabled {
+                self.robust.stale_suppressed += 1;
+            }
+            false
+        }
+    }
+
+    /// Register a planned mid-stream join. An unplanned or mistimed one
+    /// is misbehavior — quarantined, not trusted.
+    fn note_join(&mut self, learner: usize, round: u64) {
+        match self.churn.iter().find(|c| c.worker == learner) {
+            Some(c) if c.join == round => {
+                self.active[learner] = true;
+                // The joiner bootstraps from the zero model: no push on
+                // join (its first violation triggers a normal event), a
+                // fresh tracker and no adopted model yet.
+                self.adopted_round[learner] = 0;
+                self.last_violation_round[learner] = 0;
+                self.known_distance[learner] = None;
+            }
+            _ => self.quarantine(learner, round, format!("unplanned join at round {round}")),
+        }
+    }
+
+    /// Register a planned clean departure (after the worker's `Done`).
+    fn note_leave(&mut self, learner: usize, round: u64) {
+        match self.churn.iter().find(|c| c.worker == learner) {
+            Some(c) if c.leave == round => {
+                self.active[learner] = false;
+                self.known_distance[learner] = None;
+            }
+            _ => self.quarantine(learner, round, format!("unplanned leave at round {round}")),
+        }
+    }
+
     /// Main loop: react to worker messages until every worker is done.
     ///
     /// For scheduled protocols the workers initiate uploads themselves;
     /// for dynamic protocols the leader reacts to violation notices.
     fn run(&mut self) -> Result<()> {
-        while self.done.iter().any(|d| !d) {
-            let (_, msg, n) = self.bus.recv(self.timeout)?;
+        // `Done` is unfaulted control, so an honest worker always reports
+        // in eventually; a quiet deadline here can only mean a worker hung
+        // for good, so after the retry budget the stragglers are
+        // quarantined rather than deadlocking the run.
+        let mut idle: u32 = 0;
+        while (0..self.m).any(|i| !self.done[i] && !self.quarantined[i]) {
+            let deadline = Instant::now() + self.attempt_deadline(idle);
+            let Some((_, msg, n)) = self.recv_checked(deadline, 0)? else {
+                if idle >= self.max_retries {
+                    for i in 0..self.m {
+                        if !self.done[i] && !self.quarantined[i] {
+                            let k = idle + 1;
+                            self.quarantine(i, 0, format!("missed {k} consecutive deadlines"));
+                        }
+                    }
+                } else {
+                    idle += 1;
+                }
+                continue;
+            };
+            idle = 0;
+            // Worker-initiated uploads only exist under scheduled
+            // protocols; under a fault plan a dynamic-protocol upload at
+            // the top level is a retry straggler, not a sync trigger.
+            let dynamic = self.policy.delta(1).is_some();
             match msg {
                 Message::Done {
                     learner,
@@ -232,12 +446,14 @@ impl Leader<'_> {
                     round,
                     distance_sq,
                 } => {
-                    self.comm.record_up(n);
-                    self.comm.record_violation();
-                    if round > self.adopted_round[learner as usize] {
-                        self.known_distance[learner as usize] = Some(distance_sq);
+                    if self.note_violation(learner as usize, round, distance_sq, n) {
                         self.handle_violation(learner as usize, round, distance_sq)?;
                     }
+                }
+                Message::ModelUpload { .. } | Message::LinearUpload { .. }
+                    if self.faults_enabled && dynamic =>
+                {
+                    self.robust.dup_suppressed += 1;
                 }
                 Message::ModelUpload {
                     learner,
@@ -256,7 +472,7 @@ impl Leader<'_> {
                     kernels[i] = Some(first);
                     let mut up_round = vec![0u64; self.m];
                     up_round[i] = round;
-                    self.collect_and_finish(kernels, vec![None; self.m], 1, up_round, round)?;
+                    self.collect_and_finish(kernels, vec![None; self.m], up_round, round)?;
                 }
                 Message::LinearUpload { learner, round, w } => {
                     self.comm.record_up(n);
@@ -265,7 +481,10 @@ impl Leader<'_> {
                     linears[i] = Some(w);
                     let mut up_round = vec![0u64; self.m];
                     up_round[i] = round;
-                    self.collect_and_finish(vec![None; self.m], linears, 1, up_round, round)?;
+                    self.collect_and_finish(vec![None; self.m], linears, up_round, round)?;
+                }
+                Message::DistanceReport { .. } if self.faults_enabled => {
+                    self.robust.dup_suppressed += 1;
                 }
                 other => bail!("leader: unexpected message {other:?}"),
             }
@@ -287,77 +506,139 @@ impl Leader<'_> {
     /// the engine's byte-for-byte (the conformance suite asserts this).
     fn run_lockstep(&mut self, rounds: u64) -> Result<()> {
         for round in 1..=rounds {
-            // Scheduled protocols: every worker enters its synchronization
-            // exchange before reporting the round done, so collect the
-            // uploads first (no RoundDone can arrive while a worker still
-            // blocks for its download).
+            // Scheduled protocols: every active worker enters its
+            // synchronization exchange before reporting the round done, so
+            // collect the uploads first (no RoundDone can arrive while a
+            // worker still blocks for its download).
             if self.policy.decide(round, false) == SyncDecision::Sync {
                 self.collect_and_finish(
                     vec![None; self.m],
                     vec![None; self.m],
-                    0,
                     vec![0u64; self.m],
                     round,
                 )?;
             }
-            // Round barrier: collect every worker's RoundDone, accumulating
-            // the round's violations (they precede their sender's barrier
-            // message).
-            let mut done = 0usize;
+            // Round barrier: collect every live worker's RoundDone,
+            // accumulating the round's violations (they precede their
+            // sender's barrier message) and any planned churn. RoundDone
+            // is unfaulted control, so a missed barrier deadline means the
+            // worker is gone — after the retry budget it is quarantined so
+            // the surviving cluster cannot deadlock.
+            // The expected set is derived from the churn *plan* (not from
+            // observed Join/Leave frames): a joiner's Join may still be
+            // queued behind other workers' barrier messages, and waiting
+            // on the plan guarantees it is processed before the barrier
+            // breaks (it precedes the joiner's RoundDone on its FIFO).
+            let mut arrived = vec![false; self.m];
             let mut in_set = vec![false; self.m];
             let mut violators: Vec<(usize, f64)> = Vec::new();
-            while done < self.m {
-                let (_, msg, n) = self.bus.recv(self.timeout)?;
-                match msg {
-                    Message::RoundDone { round: r, .. } => {
-                        anyhow::ensure!(
-                            r == round,
-                            "lockstep barrier out of order: worker at round {r}, leader at {round}"
-                        );
-                        done += 1;
+            let mut attempt: u32 = 0;
+            'barrier: loop {
+                if self.barrier_done(&arrived, round) {
+                    break;
+                }
+                let deadline = Instant::now() + self.attempt_deadline(attempt);
+                loop {
+                    if self.barrier_done(&arrived, round) {
+                        break 'barrier;
                     }
-                    Message::Violation {
-                        learner,
-                        round: r,
-                        distance_sq,
-                    } => {
-                        self.comm.record_up(n);
-                        self.comm.record_violation();
-                        let i = learner as usize;
-                        if r > self.adopted_round[i] {
-                            self.known_distance[i] = Some(distance_sq);
-                            if !in_set[i] {
+                    let Some((_, msg, n)) = self.recv_checked(deadline, round)? else {
+                        break;
+                    };
+                    match msg {
+                        Message::RoundDone { learner, round: r } => {
+                            let i = learner as usize;
+                            if r == round {
+                                arrived[i] = true;
+                            } else if self.faults_enabled {
+                                self.quarantine(
+                                    i,
+                                    round,
+                                    format!("barrier out of order: worker at round {r}"),
+                                );
+                            } else {
+                                bail!(
+                                    "lockstep barrier out of order: worker at round {r}, leader at {round}"
+                                );
+                            }
+                        }
+                        Message::Violation {
+                            learner,
+                            round: r,
+                            distance_sq,
+                        } => {
+                            let i = learner as usize;
+                            if self.note_violation(i, r, distance_sq, n) && !in_set[i] {
                                 in_set[i] = true;
                                 violators.push((i, distance_sq));
                             }
                         }
+                        Message::Join { learner, round: r } => self.note_join(learner as usize, r),
+                        Message::Leave { learner, round: r } => {
+                            self.note_leave(learner as usize, r)
+                        }
+                        Message::Done {
+                            learner,
+                            cum_loss,
+                            cum_error,
+                        } => self.note_done(learner, cum_loss, cum_error),
+                        // Stray answer to a retried request whose original
+                        // also landed — already collected, drop it.
+                        Message::ModelUpload { .. }
+                        | Message::LinearUpload { .. }
+                        | Message::DistanceReport { .. }
+                            if self.faults_enabled =>
+                        {
+                            self.robust.dup_suppressed += 1;
+                        }
+                        other => {
+                            bail!("leader(lockstep): unexpected message at barrier: {other:?}")
+                        }
                     }
-                    other => bail!("leader(lockstep): unexpected message at barrier: {other:?}"),
                 }
+                if attempt >= self.max_retries {
+                    let k = attempt + 1;
+                    for i in 0..self.m {
+                        if self.planned_active(i, round) && !self.quarantined[i] && !arrived[i] {
+                            self.quarantine(
+                                i,
+                                round,
+                                format!("missed {k} consecutive barrier deadlines"),
+                            );
+                        }
+                    }
+                    break;
+                }
+                attempt += 1;
             }
             // Resolve the round's event exactly like the engine: subset
             // balancing first (when enabled and the violators don't cover
-            // the cluster), escalating to a full synchronization.
+            // the live cluster), escalating to a full synchronization.
+            violators.retain(|&(i, _)| self.participant(i));
             if !violators.is_empty() {
                 violators.sort_by_key(|&(i, _)| i);
                 let delta = self
                     .policy
                     .delta(round)
                     .context("violations only occur under dynamic protocols")?;
+                let live = (0..self.m).filter(|&i| self.participant(i)).count();
                 let resolved = self.partial_sync
-                    && violators.len() < self.m
-                    && self.try_partial_sync(&violators, delta)?;
+                    && violators.len() < live
+                    && self.try_partial_sync(&violators, delta, round)?;
                 if resolved {
                     self.partial_syncs += 1;
                 } else {
                     for i in 0..self.m {
-                        self.comm
-                            .record_down(self.bus.send_to(i, &Message::SyncRequest)?);
+                        // Plan-checked: don't request from a departed
+                        // worker whose Leave is still in flight.
+                        if self.participant(i) && self.planned_active(i, round) {
+                            self.comm
+                                .record_down(self.bus.send_to(i, &Message::SyncRequest)?);
+                        }
                     }
                     self.collect_and_finish(
                         vec![None; self.m],
                         vec![None; self.m],
-                        0,
                         vec![0u64; self.m],
                         round,
                     )?;
@@ -367,19 +648,52 @@ impl Leader<'_> {
             // round (the event paths above already closed theirs; a
             // zero-byte close never moves the peak).
             self.comm.end_round();
-            // Release the cluster into the next round (uncounted control).
+            // Release the cluster into the next round. Every endpoint gets
+            // it — pre-join workers count these releases to time their
+            // entry. A failed send to a live participant means its thread
+            // is gone: quarantine it rather than aborting the survivors.
             // kdol-lint: allow(uncounted-control) — Proceed is the lockstep round-release control message
-            self.bus.broadcast(&Message::Proceed)?;
+            let releases = self.bus.broadcast(&Message::Proceed);
+            for (i, r) in releases.into_iter().enumerate() {
+                // Plan-derived liveness: a just-departed worker's Leave may
+                // still be queued, so `active` can lag the plan — don't
+                // quarantine a worker the plan says has already left.
+                if r.is_err() && self.planned_active(i, round) && !self.quarantined[i] {
+                    self.quarantine(i, round, "release failed: worker hung up".to_string());
+                }
+            }
         }
-        // Workers send their final metrics after the last release.
-        while self.done.iter().any(|d| !d) {
-            let (_, msg, _) = self.bus.recv(self.timeout)?;
+        // Workers send their final metrics after the last release (early
+        // leavers already did, right before their Leave).
+        let mut idle: u32 = 0;
+        while (0..self.m).any(|i| !self.done[i] && !self.quarantined[i]) {
+            let deadline = Instant::now() + self.attempt_deadline(idle);
+            let Some((_, msg, _)) = self.recv_checked(deadline, rounds)? else {
+                if idle >= self.max_retries {
+                    let k = idle + 1;
+                    for i in 0..self.m {
+                        if !self.done[i] && !self.quarantined[i] {
+                            self.quarantine(
+                                i,
+                                rounds,
+                                format!("missed {k} consecutive deadlines after horizon"),
+                            );
+                        }
+                    }
+                } else {
+                    idle += 1;
+                }
+                continue;
+            };
+            idle = 0;
             match msg {
                 Message::Done {
                     learner,
                     cum_loss,
                     cum_error,
                 } => self.note_done(learner, cum_loss, cum_error),
+                Message::Leave { learner, round: r } => self.note_leave(learner as usize, r),
+                _ if self.faults_enabled => self.robust.dup_suppressed += 1,
                 other => bail!("leader(lockstep): unexpected message after horizon: {other:?}"),
             }
         }
@@ -421,14 +735,11 @@ impl Leader<'_> {
         // Once a violation from a later round (or a Done) arrives, the
         // trigger round is over somewhere and its co-violations are
         // already behind it in the queue — stop blocking and just drain.
+        let deadline = wait_start + cap;
         let mut round_passed = false;
         loop {
-            let remaining = if round_passed {
-                Duration::ZERO
-            } else {
-                cap.saturating_sub(wait_start.elapsed())
-            };
-            let Ok((_, msg, n)) = self.bus.recv(remaining) else {
+            let d = if round_passed { Instant::now() } else { deadline };
+            let Some((_, msg, n)) = self.recv_checked(d, round)? else {
                 break;
             };
             match msg {
@@ -437,15 +748,10 @@ impl Leader<'_> {
                     round: r,
                     distance_sq,
                 } => {
-                    self.comm.record_up(n);
-                    self.comm.record_violation();
                     let i = learner as usize;
-                    if r > self.adopted_round[i] {
-                        self.known_distance[i] = Some(distance_sq);
-                        if !in_set[i] {
-                            in_set[i] = true;
-                            violators.push((i, distance_sq));
-                        }
+                    if self.note_violation(i, r, distance_sq, n) && !in_set[i] {
+                        in_set[i] = true;
+                        violators.push((i, distance_sq));
                     }
                     if r > round {
                         round_passed = true;
@@ -459,32 +765,48 @@ impl Leader<'_> {
                     self.note_done(learner, cum_loss, cum_error);
                     round_passed = true;
                 }
+                Message::ModelUpload { .. }
+                | Message::LinearUpload { .. }
+                | Message::DistanceReport { .. }
+                    if self.faults_enabled =>
+                {
+                    self.robust.dup_suppressed += 1;
+                }
                 other => bail!("leader: unexpected message before sync: {other:?}"),
             }
+        }
+        // The trigger itself may have been quarantined while draining
+        // (e.g. its follow-up frame was corrupt); an event with no live
+        // violators has nothing to resolve.
+        violators.retain(|&(i, _)| self.participant(i));
+        if violators.is_empty() {
+            return Ok(());
         }
         // The engine seeds the balancing set in ascending learner order.
         violators.sort_by_key(|&(i, _)| i);
 
-        if self.partial_sync && violators.len() < self.m {
+        let live = (0..self.m).filter(|&i| self.participant(i)).count();
+        if self.partial_sync && violators.len() < live {
             let delta = self
                 .policy
                 .delta(round)
                 .context("violations only occur under dynamic protocols")?;
-            if self.try_partial_sync(&violators, delta)? {
+            if self.try_partial_sync(&violators, delta, round)? {
                 self.partial_syncs += 1;
                 return Ok(());
             }
         }
-        // Full synchronization: ask every worker for its model. Workers
-        // still blocked inside a partial exchange answer with a fresh
-        // upload (escalation).
+        // Full synchronization: ask every live worker for its model.
+        // Workers still blocked inside a partial exchange answer with a
+        // fresh upload (escalation).
         for i in 0..self.m {
-            self.comm.record_down(self.bus.send_to(i, &Message::SyncRequest)?);
+            if self.participant(i) {
+                self.comm.record_down(self.bus.send_to(i, &Message::SyncRequest)?);
+            }
         }
         self.collect_and_finish(
             vec![None; self.m],
             vec![None; self.m],
-            0,
             vec![0u64; self.m],
             round,
         )
@@ -506,18 +828,23 @@ impl Leader<'_> {
     /// and rows persist across events so a warm event only evaluates the
     /// genuinely new SVs. Fixed-size events run the same algorithm on the
     /// Euclidean geometry ([`FixedGeometry`]) instead.
-    fn try_partial_sync(&mut self, violators: &[(usize, f64)], delta: f64) -> Result<bool> {
+    fn try_partial_sync(
+        &mut self,
+        violators: &[(usize, f64)],
+        delta: f64,
+        round: u64,
+    ) -> Result<bool> {
         if !self.is_kernel {
             // Fixed-size models (plain linear / RFF) balance on the
             // Euclidean geometry — no Gram cache involved.
-            return self.partial_sync_event_fixed(violators, delta);
+            return self.partial_sync_event_fixed(violators, delta, round);
         }
         // Take the cache out of `self` for the event so the borrow checker
         // lets the event body use the leader's other fields freely.
         let Some(mut cache) = self.sync_cache.take() else {
             return Ok(false);
         };
-        let resolved = self.partial_sync_event(&mut cache, violators, delta);
+        let resolved = self.partial_sync_event(&mut cache, violators, delta, round);
         self.sync_cache = Some(cache);
         resolved
     }
@@ -530,59 +857,110 @@ impl Leader<'_> {
     /// about — shrinking the dynamic-protocol byte gap vs. the engine
     /// (and matching the fixed-size engine path, which mirrors these
     /// probe messages, byte for byte).
-    fn gather_distances(&mut self, in_b: &[bool], distances: &mut [Option<f64>]) -> Result<()> {
-        let mut expected = 0usize;
+    /// Returns `Ok(false)` when the probe retry budget is exhausted with
+    /// reports still missing — the caller abandons the partial event and
+    /// escalates to a full synchronization (which has its own, stronger
+    /// recovery: unresponsive workers end up quarantined there).
+    fn gather_distances(
+        &mut self,
+        in_b: &[bool],
+        distances: &mut [Option<f64>],
+        round: u64,
+    ) -> Result<bool> {
+        let mut probed: Vec<usize> = Vec::new();
         for i in 0..self.m {
-            if !in_b[i] {
+            // Plan-checked on top of `participant`: a departed worker's
+            // Leave may still be in flight, and probing its dropped
+            // endpoint would abort the run.
+            if !in_b[i] && self.participant(i) && self.planned_active(i, round) {
                 if let Some(d) = self.known_distance[i] {
                     distances[i] = Some(d);
                 } else {
                     self.comm
                         .record_down(self.bus.send_to(i, &Message::DistanceRequest)?);
-                    expected += 1;
+                    probed.push(i);
                 }
             }
         }
-        let mut got = 0usize;
-        while got < expected {
-            let (_, msg, n) = self.bus.recv(self.timeout)?;
-            match msg {
-                Message::DistanceReport {
-                    learner,
-                    distance_sq,
-                    ..
-                } => {
-                    self.comm.record_up(n);
-                    let i = learner as usize;
-                    self.known_distance[i] = Some(distance_sq);
-                    if !in_b[i] && distances[i].replace(distance_sq).is_none() {
-                        got += 1;
-                    }
+        let mut attempt: u32 = 0;
+        'probe: loop {
+            let outstanding = |q: &[bool], d: &[Option<f64>]| {
+                probed
+                    .iter()
+                    .copied()
+                    .filter(|&i| d[i].is_none() && !q[i])
+                    .collect::<Vec<usize>>()
+            };
+            if outstanding(&self.quarantined, distances).is_empty() {
+                break;
+            }
+            let deadline = Instant::now() + self.attempt_deadline(attempt);
+            loop {
+                if outstanding(&self.quarantined, distances).is_empty() {
+                    break 'probe;
                 }
-                // Violations racing the probe are counted; their senders
-                // stay outside the seed set (they will re-report if the
-                // balancing leaves them violated).
-                Message::Violation {
-                    learner,
-                    round,
-                    distance_sq,
-                } => {
-                    self.comm.record_up(n);
-                    self.comm.record_violation();
-                    let i = learner as usize;
-                    if round > self.adopted_round[i] {
+                let Some((_, msg, n)) = self.recv_checked(deadline, round)? else {
+                    break;
+                };
+                match msg {
+                    Message::DistanceReport {
+                        learner,
+                        distance_sq,
+                        ..
+                    } => {
+                        let i = learner as usize;
+                        if self.faults_enabled && (in_b[i] || distances[i].is_some()) {
+                            // A duplicate (or an answer to a retried probe
+                            // whose original also landed): drop it.
+                            self.robust.dup_suppressed += 1;
+                            continue;
+                        }
+                        self.comm.record_up(n);
                         self.known_distance[i] = Some(distance_sq);
+                        if !in_b[i] {
+                            distances[i] = Some(distance_sq);
+                        }
                     }
+                    // Violations racing the probe are counted; their
+                    // senders stay outside the seed set (they will
+                    // re-report if the balancing leaves them violated).
+                    Message::Violation {
+                        learner,
+                        round: r,
+                        distance_sq,
+                    } => {
+                        self.note_violation(learner as usize, r, distance_sq, n);
+                    }
+                    Message::Done {
+                        learner,
+                        cum_loss,
+                        cum_error,
+                    } => self.note_done(learner, cum_loss, cum_error),
+                    Message::Join { learner, round: r } => self.note_join(learner as usize, r),
+                    Message::Leave { learner, round: r } => self.note_leave(learner as usize, r),
+                    Message::ModelUpload { .. } | Message::LinearUpload { .. }
+                        if self.faults_enabled =>
+                    {
+                        self.robust.dup_suppressed += 1;
+                    }
+                    other => bail!("leader: unexpected message during distance probe: {other:?}"),
                 }
-                Message::Done {
-                    learner,
-                    cum_loss,
-                    cum_error,
-                } => self.note_done(learner, cum_loss, cum_error),
-                other => bail!("leader: unexpected message during distance probe: {other:?}"),
+            }
+            let missing = outstanding(&self.quarantined, distances);
+            if missing.is_empty() {
+                break;
+            }
+            if attempt >= self.max_retries {
+                return Ok(false);
+            }
+            attempt += 1;
+            self.robust.retries += missing.len() as u64;
+            for &i in &missing {
+                self.comm
+                    .record_down(self.bus.send_to(i, &Message::DistanceRequest)?);
             }
         }
-        Ok(())
+        Ok(true)
     }
 
     /// Body of one partial-synchronization event over the (borrowed-out)
@@ -594,6 +972,7 @@ impl Leader<'_> {
         ug: &mut SyncGramCache,
         violators: &[(usize, f64)],
         delta: f64,
+        round: u64,
     ) -> Result<bool> {
         let m = self.m;
         let mut in_b = vec![false; m];
@@ -604,7 +983,9 @@ impl Leader<'_> {
             distances[i] = Some(d);
             seed.push(i);
         }
-        self.gather_distances(&in_b, &mut distances)?;
+        if !self.gather_distances(&in_b, &mut distances, round)? {
+            return Ok(false); // probe budget exhausted: escalate
+        }
         let dists: Vec<f64> = distances.iter().map(|d| d.unwrap_or(0.0)).collect();
 
         // Move the reference out for the event instead of cloning the
@@ -621,7 +1002,7 @@ impl Leader<'_> {
         // would cover the cluster; break out with the adopted average so
         // the geometry's borrow of the cache ends before the cache event
         // is closed below.
-        let outcome: Option<(Model, f64)> = loop {
+        let outcome: Option<(Model, f64)> = 'grow: loop {
             if set.is_full() {
                 break None; // escalate: full sync with a fresh reference
             }
@@ -632,42 +1013,114 @@ impl Leader<'_> {
                 .copied()
                 .filter(|&i| uploaded[i].is_none())
                 .collect();
+            // Balancing can only use live workers; if growth reached a
+            // quarantined or departed one (plan-checked: a Leave may
+            // still be in flight), escalate (the full sync averages over
+            // the survivors).
+            if pending
+                .iter()
+                .any(|&i| !self.participant(i) || !self.planned_active(i, round))
+            {
+                break None;
+            }
             for &i in &pending {
                 self.comm
                     .record_down(self.bus.send_to(i, &Message::PartialSyncRequest)?);
             }
-            let mut waiting = pending.len();
-            while waiting > 0 {
-                let (_, msg, n) = self.bus.recv(self.timeout)?;
-                match msg {
-                    Message::ModelUpload {
-                        learner,
-                        round,
-                        coeffs,
-                        new_svs,
-                    } => {
-                        self.comm.record_up(n);
-                        let i = learner as usize;
-                        let k = self
-                            .decoder
-                            .ingest_upload(i, &coeffs, &new_svs, &self.template)?;
-                        if uploaded[i].replace(Model::Kernel(k)).is_none() {
-                            waiting -= 1;
-                        }
-                        up_round[i] = round;
-                    }
-                    Message::Violation { .. } => {
-                        self.comm.record_up(n);
-                        self.comm.record_violation();
-                    }
-                    Message::DistanceReport { .. } => self.comm.record_up(n),
-                    Message::Done {
-                        learner,
-                        cum_loss,
-                        cum_error,
-                    } => self.note_done(learner, cum_loss, cum_error),
-                    other => bail!("leader: unexpected message during balancing: {other:?}"),
+            let mut attempt: u32 = 0;
+            loop {
+                let waiting = |q: &[bool], u: &[Option<Model>]| {
+                    pending
+                        .iter()
+                        .copied()
+                        .filter(|&i| u[i].is_none() && !q[i])
+                        .collect::<Vec<usize>>()
+                };
+                if waiting(&self.quarantined, &uploaded).is_empty() {
+                    break;
                 }
+                let deadline = Instant::now() + self.attempt_deadline(attempt);
+                loop {
+                    if waiting(&self.quarantined, &uploaded).is_empty() {
+                        break;
+                    }
+                    let Some((_, msg, n)) = self.recv_checked(deadline, round)? else {
+                        break;
+                    };
+                    match msg {
+                        Message::ModelUpload {
+                            learner,
+                            round: r,
+                            coeffs,
+                            new_svs,
+                        } => {
+                            let i = learner as usize;
+                            if self.faults_enabled
+                                && (uploaded[i].is_some() || !pending.contains(&i))
+                            {
+                                // Duplicate, or a stray answer to a
+                                // retried request: never re-ingest.
+                                self.robust.dup_suppressed += 1;
+                                continue;
+                            }
+                            self.comm.record_up(n);
+                            let k = self
+                                .decoder
+                                .ingest_upload(i, &coeffs, &new_svs, &self.template)?;
+                            uploaded[i] = Some(Model::Kernel(k));
+                            up_round[i] = r;
+                        }
+                        Message::Violation {
+                            learner, round: r, ..
+                        } => {
+                            let i = learner as usize;
+                            if self.faults_enabled && r <= self.last_violation_round[i] {
+                                self.robust.dup_suppressed += 1;
+                            } else {
+                                self.comm.record_up(n);
+                                self.comm.record_violation();
+                                self.last_violation_round[i] =
+                                    self.last_violation_round[i].max(r);
+                            }
+                        }
+                        Message::DistanceReport { .. } => {
+                            if self.faults_enabled {
+                                self.robust.dup_suppressed += 1;
+                            } else {
+                                self.comm.record_up(n);
+                            }
+                        }
+                        Message::Done {
+                            learner,
+                            cum_loss,
+                            cum_error,
+                        } => self.note_done(learner, cum_loss, cum_error),
+                        Message::Join { learner, round: r } => {
+                            self.note_join(learner as usize, r)
+                        }
+                        Message::Leave { learner, round: r } => {
+                            self.note_leave(learner as usize, r)
+                        }
+                        other => bail!("leader: unexpected message during balancing: {other:?}"),
+                    }
+                }
+                let missing = waiting(&self.quarantined, &uploaded);
+                if missing.is_empty() {
+                    break;
+                }
+                if attempt >= self.max_retries {
+                    break 'grow None; // escalate: the full sync recovers
+                }
+                attempt += 1;
+                self.robust.retries += missing.len() as u64;
+                for &i in &missing {
+                    self.comm
+                        .record_down(self.bus.send_to(i, &Message::PartialSyncRequest)?);
+                }
+            }
+            // A member quarantined mid-collection cannot contribute.
+            if pending.iter().any(|&i| !self.participant(i)) {
+                break None;
             }
             // Register the fresh uploads on the event's union Gram in
             // deterministic B order (not network-arrival order, which is
@@ -747,7 +1200,12 @@ impl Leader<'_> {
     /// message flow — `PartialSyncRequest` up-requests, `LinearUpload`
     /// collection, `LinearDownload { partial: true }` adoption — so under
     /// lockstep the event matches the engine's byte-for-byte.
-    fn partial_sync_event_fixed(&mut self, violators: &[(usize, f64)], delta: f64) -> Result<bool> {
+    fn partial_sync_event_fixed(
+        &mut self,
+        violators: &[(usize, f64)],
+        delta: f64,
+        round: u64,
+    ) -> Result<bool> {
         let m = self.m;
         let mut in_b = vec![false; m];
         let mut distances: Vec<Option<f64>> = vec![None; m];
@@ -757,7 +1215,9 @@ impl Leader<'_> {
             distances[i] = Some(d);
             seed.push(i);
         }
-        self.gather_distances(&in_b, &mut distances)?;
+        if !self.gather_distances(&in_b, &mut distances, round)? {
+            return Ok(false); // probe budget exhausted: escalate
+        }
         let dists: Vec<f64> = distances.iter().map(|d| d.unwrap_or(0.0)).collect();
 
         let reference: Option<LinearModel> = match &self.reference {
@@ -770,7 +1230,7 @@ impl Leader<'_> {
         let mut uploaded: Vec<Option<Model>> = vec![None; m];
         let mut up_round = vec![0u64; m];
 
-        let outcome: Option<Model> = loop {
+        let outcome: Option<Model> = 'grow: loop {
             if set.is_full() {
                 break None; // escalate: full sync with a fresh reference
             }
@@ -780,35 +1240,109 @@ impl Leader<'_> {
                 .copied()
                 .filter(|&i| uploaded[i].is_none())
                 .collect();
+            // Balancing can only use live workers; if growth reached a
+            // quarantined or departed one (plan-checked: a Leave may
+            // still be in flight), escalate.
+            if pending
+                .iter()
+                .any(|&i| !self.participant(i) || !self.planned_active(i, round))
+            {
+                break None;
+            }
             for &i in &pending {
                 self.comm
                     .record_down(self.bus.send_to(i, &Message::PartialSyncRequest)?);
             }
-            let mut waiting = pending.len();
-            while waiting > 0 {
-                let (_, msg, n) = self.bus.recv(self.timeout)?;
-                match msg {
-                    Message::LinearUpload { learner, round, w } => {
-                        self.comm.record_up(n);
-                        let i = learner as usize;
-                        let model = Model::Linear(LinearModel::from_wire(&w));
-                        if uploaded[i].replace(model).is_none() {
-                            waiting -= 1;
-                        }
-                        up_round[i] = round;
-                    }
-                    Message::Violation { .. } => {
-                        self.comm.record_up(n);
-                        self.comm.record_violation();
-                    }
-                    Message::DistanceReport { .. } => self.comm.record_up(n),
-                    Message::Done {
-                        learner,
-                        cum_loss,
-                        cum_error,
-                    } => self.note_done(learner, cum_loss, cum_error),
-                    other => bail!("leader: unexpected message during fixed balancing: {other:?}"),
+            let mut attempt: u32 = 0;
+            loop {
+                let waiting = |q: &[bool], u: &[Option<Model>]| {
+                    pending
+                        .iter()
+                        .copied()
+                        .filter(|&i| u[i].is_none() && !q[i])
+                        .collect::<Vec<usize>>()
+                };
+                if waiting(&self.quarantined, &uploaded).is_empty() {
+                    break;
                 }
+                let deadline = Instant::now() + self.attempt_deadline(attempt);
+                loop {
+                    if waiting(&self.quarantined, &uploaded).is_empty() {
+                        break;
+                    }
+                    let Some((_, msg, n)) = self.recv_checked(deadline, round)? else {
+                        break;
+                    };
+                    match msg {
+                        Message::LinearUpload {
+                            learner,
+                            round: r,
+                            w,
+                        } => {
+                            let i = learner as usize;
+                            if self.faults_enabled
+                                && (uploaded[i].is_some() || !pending.contains(&i))
+                            {
+                                self.robust.dup_suppressed += 1;
+                                continue;
+                            }
+                            self.comm.record_up(n);
+                            uploaded[i] = Some(Model::Linear(LinearModel::from_wire(&w)));
+                            up_round[i] = r;
+                        }
+                        Message::Violation {
+                            learner, round: r, ..
+                        } => {
+                            let i = learner as usize;
+                            if self.faults_enabled && r <= self.last_violation_round[i] {
+                                self.robust.dup_suppressed += 1;
+                            } else {
+                                self.comm.record_up(n);
+                                self.comm.record_violation();
+                                self.last_violation_round[i] =
+                                    self.last_violation_round[i].max(r);
+                            }
+                        }
+                        Message::DistanceReport { .. } => {
+                            if self.faults_enabled {
+                                self.robust.dup_suppressed += 1;
+                            } else {
+                                self.comm.record_up(n);
+                            }
+                        }
+                        Message::Done {
+                            learner,
+                            cum_loss,
+                            cum_error,
+                        } => self.note_done(learner, cum_loss, cum_error),
+                        Message::Join { learner, round: r } => {
+                            self.note_join(learner as usize, r)
+                        }
+                        Message::Leave { learner, round: r } => {
+                            self.note_leave(learner as usize, r)
+                        }
+                        other => {
+                            bail!("leader: unexpected message during fixed balancing: {other:?}")
+                        }
+                    }
+                }
+                let missing = waiting(&self.quarantined, &uploaded);
+                if missing.is_empty() {
+                    break;
+                }
+                if attempt >= self.max_retries {
+                    break 'grow None; // escalate: the full sync recovers
+                }
+                attempt += 1;
+                self.robust.retries += missing.len() as u64;
+                for &i in &missing {
+                    self.comm
+                        .record_down(self.bus.send_to(i, &Message::PartialSyncRequest)?);
+                }
+            }
+            // A member quarantined mid-collection cannot contribute.
+            if pending.iter().any(|&i| !self.participant(i)) {
+                break None;
             }
             for &i in &pending {
                 if let Some(model) = &uploaded[i] {
@@ -858,8 +1392,38 @@ impl Leader<'_> {
         Ok(true)
     }
 
-    /// Collect uploads until every learner has contributed, then average,
-    /// download to everyone, and close the synchronization event.
+    /// Workers whose upload for the current full-sync collection is still
+    /// outstanding (family-keyed: a kernel run only looks at the kernel
+    /// slots, a fixed-size run at the linear ones). Liveness is derived
+    /// from the churn plan at `round`, not from observed Join/Leave: a
+    /// joiner's Join may still be queued behind other workers' uploads
+    /// (it always precedes the joiner's own upload on its FIFO channel,
+    /// so waiting on the plan processes it on the way), and a leaver's
+    /// Leave may lag the rounds it no longer runs.
+    fn missing_uploads(
+        &self,
+        kernels: &[Option<SvModel>],
+        linears: &[Option<Vec<f32>>],
+        round: u64,
+    ) -> Vec<usize> {
+        (0..self.m)
+            .filter(|&i| {
+                self.planned_active(i, round)
+                    && !self.quarantined[i]
+                    && if self.is_kernel {
+                        kernels[i].is_none()
+                    } else {
+                        linears[i].is_none()
+                    }
+            })
+            .collect()
+    }
+
+    /// Collect uploads until every live participant has contributed, then
+    /// average, download to the participants, and close the
+    /// synchronization event. Missing uploads are re-requested on a
+    /// bounded backoff ladder; workers silent through the whole budget are
+    /// quarantined and the survivors finish the sync.
     ///
     /// `trigger_round` is the protocol round that initiated the event (a
     /// violation's round, or the first scheduled upload's round) — the
@@ -868,54 +1432,148 @@ impl Leader<'_> {
         &mut self,
         mut kernels: Vec<Option<SvModel>>,
         mut linears: Vec<Option<Vec<f32>>>,
-        mut have: usize,
         mut up_round: Vec<u64>,
         trigger_round: u64,
     ) -> Result<()> {
-        while have < self.m {
-            let (_, msg, n) = self.bus.recv(self.timeout)?;
-            match msg {
-                Message::ModelUpload {
-                    learner,
-                    round,
-                    coeffs,
-                    new_svs,
-                } => {
-                    self.comm.record_up(n);
-                    let i = learner as usize;
-                    let k = self
-                        .decoder
-                        .ingest_upload(i, &coeffs, &new_svs, &self.template)?;
-                    if kernels[i].replace(k).is_none() {
-                        have += 1;
+        // A worker has contributed when its family slot is filled; the
+        // collection is over once every live participant has. Join/Leave
+        // arriving mid-collection re-shape the participant set (a joiner's
+        // scheduled upload follows its Join on the same FIFO channel, and
+        // a leaver's Done/Leave precede the rounds it no longer runs).
+        let mut attempt: u32 = 0;
+        'collect: loop {
+            if self
+                .missing_uploads(&kernels, &linears, trigger_round)
+                .is_empty()
+            {
+                break;
+            }
+            let deadline = Instant::now() + self.attempt_deadline(attempt);
+            loop {
+                if self
+                    .missing_uploads(&kernels, &linears, trigger_round)
+                    .is_empty()
+                {
+                    break 'collect;
+                }
+                let Some((_, msg, n)) = self.recv_checked(deadline, trigger_round)? else {
+                    break;
+                };
+                match msg {
+                    Message::ModelUpload {
+                        learner,
+                        round,
+                        coeffs,
+                        new_svs,
+                    } => {
+                        let i = learner as usize;
+                        if !self.is_kernel {
+                            if self.faults_enabled {
+                                self.quarantine(
+                                    i,
+                                    trigger_round,
+                                    "wrong-family upload (kernel in a fixed-size run)".to_string(),
+                                );
+                                continue;
+                            }
+                            bail!("mixed kernel/linear uploads in one sync");
+                        }
+                        if self.faults_enabled && kernels[i].is_some() {
+                            // Duplicate (or an answer to a retried request
+                            // whose original also landed): never re-ingest.
+                            self.robust.dup_suppressed += 1;
+                            continue;
+                        }
+                        self.comm.record_up(n);
+                        let k = self
+                            .decoder
+                            .ingest_upload(i, &coeffs, &new_svs, &self.template)?;
+                        kernels[i] = Some(k);
+                        up_round[i] = round;
                     }
-                    up_round[i] = round;
-                }
-                Message::LinearUpload { learner, round, w } => {
-                    self.comm.record_up(n);
-                    let i = learner as usize;
-                    if linears[i].replace(w).is_none() {
-                        have += 1;
+                    Message::LinearUpload { learner, round, w } => {
+                        let i = learner as usize;
+                        if self.is_kernel {
+                            if self.faults_enabled {
+                                self.quarantine(
+                                    i,
+                                    trigger_round,
+                                    "wrong-family upload (fixed-size in a kernel run)".to_string(),
+                                );
+                                continue;
+                            }
+                            bail!("mixed kernel/linear uploads in one sync");
+                        }
+                        if self.faults_enabled && linears[i].is_some() {
+                            self.robust.dup_suppressed += 1;
+                            continue;
+                        }
+                        self.comm.record_up(n);
+                        linears[i] = Some(w);
+                        up_round[i] = round;
                     }
-                    up_round[i] = round;
+                    // Stale violations during collection are counted only.
+                    Message::Violation {
+                        learner, round: r, ..
+                    } => {
+                        let i = learner as usize;
+                        if self.faults_enabled && r <= self.last_violation_round[i] {
+                            self.robust.dup_suppressed += 1;
+                        } else {
+                            self.comm.record_up(n);
+                            self.comm.record_violation();
+                            self.last_violation_round[i] = self.last_violation_round[i].max(r);
+                        }
+                    }
+                    Message::DistanceReport { .. } => {
+                        if self.faults_enabled {
+                            self.robust.dup_suppressed += 1;
+                        } else {
+                            self.comm.record_up(n);
+                        }
+                    }
+                    Message::Done {
+                        learner,
+                        cum_loss,
+                        cum_error,
+                    } => self.note_done(learner, cum_loss, cum_error),
+                    Message::Join { learner, round: r } => self.note_join(learner as usize, r),
+                    Message::Leave { learner, round: r } => self.note_leave(learner as usize, r),
+                    other => bail!("unexpected message during sync collection: {other:?}"),
                 }
-                // Stale violations during collection are counted only.
-                Message::Violation { .. } => {
-                    self.comm.record_up(n);
-                    self.comm.record_violation();
+            }
+            let missing = self.missing_uploads(&kernels, &linears, trigger_round);
+            if missing.is_empty() {
+                break;
+            }
+            if attempt >= self.max_retries {
+                // A worker that stayed silent through every re-request is
+                // gone for good: quarantine it and let the survivors
+                // finish the synchronization.
+                let k = attempt + 1;
+                for i in missing {
+                    self.quarantine(
+                        i,
+                        trigger_round,
+                        format!("missed {k} consecutive upload deadlines"),
+                    );
                 }
-                Message::DistanceReport { .. } => self.comm.record_up(n),
-                Message::Done {
-                    learner,
-                    cum_loss,
-                    cum_error,
-                } => self.note_done(learner, cum_loss, cum_error),
-                other => bail!("unexpected message during sync collection: {other:?}"),
+                break;
+            }
+            attempt += 1;
+            self.robust.retries += missing.len() as u64;
+            for &i in &missing {
+                self.comm
+                    .record_down(self.bus.send_to(i, &Message::SyncRequest)?);
             }
         }
 
-        let avg = if kernels.iter().all(Option::is_some) {
+        // Average over whoever contributed — on a clean run that is every
+        // worker; under quarantine or churn it is the survivors, and the
+        // shared reference recalibrates over them.
+        let avg = if self.is_kernel {
             let models: Vec<Model> = kernels.into_iter().flatten().map(Model::Kernel).collect();
+            anyhow::ensure!(!models.is_empty(), "no surviving uploads to average");
             let refs: Vec<&Model> = models.iter().collect();
             let (avg, eps) = synchronize(&refs, self.compressor);
             if eps > 0.0 {
@@ -924,7 +1582,13 @@ impl Leader<'_> {
                 self.metrics.record_update(0.0, 0.0, 0.0, eps);
             }
             let avg_k = avg.as_kernel().context("kernel average")?;
+            // Downloads go to the plan's live set (a leaver whose Leave is
+            // still queued already dropped its endpoint — sending would
+            // abort the survivors).
             for i in 0..self.m {
+                if !self.planned_active(i, trigger_round) || self.quarantined[i] {
+                    continue;
+                }
                 let (coeffs, new_svs) = self.decoder.encode_download(i, avg_k);
                 let msg = Message::ModelDownload {
                     coeffs,
@@ -934,16 +1598,20 @@ impl Leader<'_> {
                 self.comm.record_down(self.bus.send_to(i, &msg)?);
             }
             avg
-        } else if linears.iter().all(Option::is_some) {
+        } else {
             let models: Vec<Model> = linears
                 .into_iter()
                 .flatten()
                 .map(|w| Model::Linear(LinearModel::from_wire(&w)))
                 .collect();
+            anyhow::ensure!(!models.is_empty(), "no surviving uploads to average");
             let refs: Vec<&Model> = models.iter().collect();
             let (avg, _) = synchronize(&refs, Compressor::None);
             let w32 = avg.as_linear().context("linear average")?.to_wire();
             for i in 0..self.m {
+                if !self.planned_active(i, trigger_round) || self.quarantined[i] {
+                    continue;
+                }
                 self.comm.record_down(self.bus.send_to(
                     i,
                     &Message::LinearDownload {
@@ -955,15 +1623,20 @@ impl Leader<'_> {
             // The shared reference is what the workers actually adopted —
             // the f32-quantized wire average (the engine stores the same).
             Model::Linear(LinearModel::from_wire(&w32))
-        } else {
-            bail!("mixed kernel/linear uploads in one sync")
         };
 
         // The sync event is stamped with the protocol round that
         // initiated it, not the event count — finished workers upload
         // with their round pinned at the horizon, so max(up_round) would
         // wrongly zero the quiescence metric on late dynamic syncs.
-        self.adopted_round.copy_from_slice(&up_round);
+        // Adoption rounds move for the participants only: a quarantined
+        // worker's stale slot must not mask its (already suppressed)
+        // traffic, and a departed worker's round stays where it left.
+        for i in 0..self.m {
+            if self.planned_active(i, trigger_round) && !self.quarantined[i] {
+                self.adopted_round[i] = up_round[i];
+            }
+        }
         self.comm.record_sync(trigger_round);
         self.comm.end_round();
         self.reference = Some(avg.clone());

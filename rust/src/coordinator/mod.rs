@@ -85,6 +85,75 @@
 //! `parity_engine_cluster`). Free-running mode remains the deployable
 //! default.
 //!
+//! # Fault tolerance: retry, quarantine, churn
+//!
+//! With a `[faults]` plan configured the bus injects seeded, reproducible
+//! frame faults (drop / delay-by-N-polls / duplicate / reorder /
+//! bit-corrupt, per link per direction — see [`crate::network::fault`]),
+//! and the leader runs the robustness discipline; without one, every
+//! leniency below is compiled out of the paths (`faults_enabled` gates)
+//! so clean runs take exactly the pre-fault code and stay parity-exact.
+//!
+//! **Retry ladders.** Every leader collection — the lockstep barrier,
+//! distance probes, partial-sync upload collection, full-sync upload
+//! collection, the final done-wait — waits one `recv_timeout_ms`
+//! deadline per attempt (exponential backoff, capped at 2^6), re-sends
+//! the outstanding request (`DistanceRequest` / `PartialSyncRequest` /
+//! `SyncRequest`, each re-send byte-accounted like the original) and
+//! retries up to `max_retries` times:
+//!
+//! ```text
+//! worker j --- (frame dropped by the fault plan) --------------X leader
+//!          (deadline expires)
+//! worker j <-- DistanceRequest (re-send, counted, retries += 1)- leader
+//! worker j --- DistanceReport{distance_sq} ------------------->  leader
+//! ```
+//!
+//! A partial event whose probes or collection exhaust the ladder aborts
+//! into the full-sync escalation (the safe fallback — a broadcast
+//! `SyncRequest` rescues workers blocked mid-partial); a full-sync
+//! collection that exhausts the ladder quarantines the missing workers
+//! and averages over the survivors.
+//!
+//! **Suppression.** Duplicated / reordered frames are ignored without
+//! being counted: a second upload from the same worker in one event, a
+//! report for an already-known distance, a violation whose round is ≤ the
+//! last violation round (duplicate) or ≤ the worker's last adoption
+//! (stale — its model was replaced since). Suppression happens *before*
+//! decoder ingestion so a duplicate `ModelUpload` can never corrupt the
+//! delta-decoder state; benign schedules (delay / duplicate only)
+//! therefore reproduce the engine's sync and byte counts exactly.
+//!
+//! **Quarantine.** Provably-invalid frames — undecodable payloads
+//! (`BusError::Decode`), non-finite coordinates / distances, wrong-family
+//! uploads, unplanned `Join`/`Leave` — and workers that miss
+//! `max_retries + 1` consecutive deadlines are quarantined: the leader
+//! records a [`QuarantineRecord`] (learner, round, reason), sends the
+//! worker `Shutdown`, drops its future frames, and recalibrates every
+//! collection/average/download over the surviving participant set.
+//! Counters land in `ClusterOutcome::robustness`
+//! (retries / quarantined / faults_injected / dup- and stale-suppressed)
+//! and the evidence in `ClusterOutcome::quarantine`.
+//!
+//! **Churn.** A `[[churn]]` plan (lockstep only, known to leader and
+//! workers) gives worker i a membership window `join..=leave`:
+//!
+//! ```text
+//! worker i ... counts join-1 Proceeds without playing ...
+//! worker i --- Join{learner, round: join} --------------------> leader   (uncounted control)
+//!          (leader activates i's trackers; i bootstraps from its first
+//!           violation — no model push on join)
+//! worker i ... plays rounds join..=leave ...
+//! worker i --- Done{...} + Leave{learner, round: leave} ------> leader   (uncounted control)
+//!          (leader deactivates i; reference/average recalibrate over
+//!           the remaining active set)
+//! ```
+//!
+//! The barrier and every collection derive their expected set from the
+//! churn *plan* (not from observed Join/Leave frames, which may still be
+//! queued), so a joiner/leaver in flight can never deadlock a round; a
+//! Join/Leave that contradicts the plan is quarantine evidence.
+//!
 //! Also hosts the real-time [`service`]: the batched prediction service
 //! whose hot path executes the AOT XLA artifacts (Python never runs at
 //! request time).

@@ -13,13 +13,20 @@
 //!   (`tracker.recalibrate`) or is replaced (`tracker.reset`).
 //! * [`Message::DistanceRequest`] — report `||f - r||^2` so the leader
 //!   can grow the balancing set farthest-first like the engine.
-//! * [`Message::Shutdown`] — exit.
+//! * [`Message::Shutdown`] — exit (graceful even mid-sync: the leader
+//!   may quarantine a worker while it waits for a download).
 //!
 //! In lockstep conformance mode (`cfg.lockstep`) the worker additionally
 //! parks at the end of every round (`RoundDone` up, wait for `Proceed`
 //! down — uncounted runtime control), serving the requests above while
 //! parked, so every exchange happens at exactly the protocol round the
 //! deterministic engine would use.
+//!
+//! A worker with a `[[churn]]` window (lockstep only) idles until its
+//! join round — counting the leader's per-round `Proceed` releases — then
+//! announces itself with `Message::Join`, runs rounds `join..=leave`, and
+//! departs cleanly with `Done` + `Message::Leave`. Join/Leave are
+//! runtime control and never counted.
 
 use std::time::Duration;
 
@@ -38,6 +45,12 @@ enum Served {
     Continue,
     Shutdown,
 }
+
+/// Dead-man deadline for leader responses. Must outlast the leader's
+/// own retry ladder (`recv_timeout` doubled per attempt): while the
+/// leader re-requests a lost frame from one worker, every other worker
+/// idles here and must not be the first to give up.
+const WORKER_DEADMAN: Duration = Duration::from_secs(120);
 
 /// Mutable learner-side state shared by the main loop and the post-`Done`
 /// serve loop.
@@ -73,7 +86,36 @@ pub fn run_worker(
     let mut cum_error = 0.0;
     let rounds = cfg.rounds as u64;
 
-    for round in 1..=rounds {
+    // Churn window: [first, last] is the span of rounds this worker is
+    // live for. Config validation guarantees churn implies lockstep and
+    // 1 <= join <= leave.
+    let window = cfg.churn.iter().find(|c| c.worker == id).copied();
+    let (first, last) = match window {
+        Some(c) => (c.join, c.leave.min(rounds)),
+        None => (1, rounds),
+    };
+
+    if first > 1 {
+        // Pre-join idle: count the leader's per-round Proceed releases
+        // so the first barrier this worker enters is exactly round
+        // `first`, then announce the planned registration.
+        let mut released = 0u64;
+        while released + 1 < first {
+            let (msg, _) = endpoint.recv(WORKER_DEADMAN)?;
+            match msg {
+                Message::Proceed => released += 1,
+                Message::Shutdown => return Ok(()),
+                _ => {}
+            }
+        }
+        // Runtime control — never counted.
+        endpoint.send(&Message::Join {
+            learner: id as u32,
+            round: first,
+        })?;
+    }
+
+    for round in first..=last {
         let (x, y) = stream.next_example();
         let ev = w.learner.update(&x, y);
         cum_loss += ev.loss;
@@ -95,8 +137,8 @@ pub fn run_worker(
         // wait for the leader's (partial) sync request triggered by some
         // violation.
         let scheduled = policy.decide(round, false) == SyncDecision::Sync;
-        if scheduled {
-            w.sync_exchange(&endpoint, round)?;
+        if scheduled && w.sync_exchange(&endpoint, round)? == Served::Shutdown {
+            return Ok(());
         }
         if cfg.lockstep {
             // Lockstep conformance mode: park at the end of the round
@@ -111,12 +153,8 @@ pub fn run_worker(
                 learner: id as u32,
                 round,
             })?;
-            // Parked deadline must outlast the leader's own per-event
-            // recv timeout (60s): while one slow worker stalls a round,
-            // every other worker idles here and must not be the first to
-            // give up.
             loop {
-                let (msg, _) = endpoint.recv(Duration::from_secs(120))?;
+                let (msg, _) = endpoint.recv(WORKER_DEADMAN)?;
                 match msg {
                     Message::Proceed => break,
                     other => {
@@ -142,10 +180,22 @@ pub fn run_worker(
         cum_error,
     })?;
 
+    if last < rounds {
+        // Clean early departure: the round-`last` barrier above already
+        // released, so the leader's next-round active set excludes this
+        // worker the moment it observes the Leave. Runtime control —
+        // never counted.
+        endpoint.send(&Message::Leave {
+            learner: id as u32,
+            round: last,
+        })?;
+        return Ok(());
+    }
+
     // Keep serving syncs and distance probes until the leader shuts the
     // cluster down (its round is pinned at the horizon from here on).
     loop {
-        let (msg, _) = endpoint.recv(Duration::from_secs(30))?;
+        let (msg, _) = endpoint.recv(WORKER_DEADMAN)?;
         if w.serve_one(&endpoint, msg, rounds)? == Served::Shutdown {
             return Ok(());
         }
@@ -157,8 +207,7 @@ impl Worker {
     fn serve_one(&mut self, endpoint: &Endpoint, msg: Message, round: u64) -> Result<Served> {
         match msg {
             Message::SyncRequest | Message::PartialSyncRequest => {
-                self.sync_exchange(endpoint, round)?;
-                Ok(Served::Continue)
+                self.sync_exchange(endpoint, round)
             }
             Message::DistanceRequest => {
                 self.report_distance(endpoint, round)?;
@@ -203,11 +252,13 @@ impl Worker {
     /// One synchronization exchange: upload the model, block for the
     /// download, adopt it. A `partial` download leaves the shared
     /// reference untouched (exact recalibration of `||f - r||^2`); a full
-    /// download installs the model as the new reference.
-    fn sync_exchange(&mut self, endpoint: &Endpoint, round: u64) -> Result<()> {
+    /// download installs the model as the new reference. Returns
+    /// [`Served::Shutdown`] if the leader shuts this worker down instead
+    /// of completing the exchange (quarantine, cluster teardown).
+    fn sync_exchange(&mut self, endpoint: &Endpoint, round: u64) -> Result<Served> {
         self.upload(endpoint, round)?;
         loop {
-            let (msg, _) = endpoint.recv(Duration::from_secs(30))?;
+            let (msg, _) = endpoint.recv(WORKER_DEADMAN)?;
             match msg {
                 Message::ModelDownload {
                     coeffs,
@@ -225,7 +276,7 @@ impl Worker {
                     } else {
                         self.tracker.reset(model);
                     }
-                    return Ok(());
+                    return Ok(Served::Continue);
                 }
                 Message::LinearDownload { w, partial } => {
                     let model = Model::Linear(crate::kernel::LinearModel::from_wire(&w));
@@ -237,17 +288,19 @@ impl Worker {
                     } else {
                         self.tracker.reset(model);
                     }
-                    return Ok(());
+                    return Ok(Served::Continue);
                 }
                 // The leader escalated a partial synchronization to a full
                 // one (the balancing set grew to the whole cluster) and is
-                // asking for a fresh upload; the bytes cross the wire
-                // again, mirroring the engine's escalation accounting.
+                // asking for a fresh upload, or its retry machinery
+                // re-requested an upload it believes was lost; the bytes
+                // cross the wire again, mirroring the engine's escalation
+                // accounting (retry duplicates are suppressed leader-side).
                 Message::SyncRequest | Message::PartialSyncRequest => {
                     self.upload(endpoint, round)?;
                 }
                 Message::DistanceRequest => self.report_distance(endpoint, round)?,
-                Message::Shutdown => anyhow::bail!("shutdown mid-sync"),
+                Message::Shutdown => return Ok(Served::Shutdown),
                 other => anyhow::bail!("unexpected message during sync: {other:?}"),
             }
         }

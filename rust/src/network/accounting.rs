@@ -77,9 +77,51 @@ impl CommStats {
     }
 }
 
+/// Robustness counters for a cluster run: how much of the leader's fault
+/// machinery actually fired. All-zero on a clean bus with honest workers
+/// (the chaos suite pins that).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RobustnessStats {
+    /// Re-requests issued after a collection deadline expired (each one
+    /// is also byte-accounted as a normal downstream protocol message).
+    pub retries: u64,
+    /// Workers excluded for misbehavior or unresponsiveness.
+    pub quarantined: u64,
+    /// Faults the injection layer actually applied (bus counter).
+    pub faults_injected: u64,
+    /// Duplicate frames (violations, uploads, reports) ignored.
+    pub dup_suppressed: u64,
+    /// Stale violations (round predating the last adoption) ignored.
+    pub stale_suppressed: u64,
+}
+
+/// Why a worker was quarantined — recorded evidence, surfaced in
+/// `ClusterOutcome` so a chaos run can assert the offender was excluded
+/// for the right reason.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuarantineRecord {
+    pub learner: u32,
+    /// Protocol round at which the evidence was observed.
+    pub round: u64,
+    pub reason: String,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn robustness_defaults_to_quiet() {
+        let r = RobustnessStats::default();
+        assert_eq!(r, RobustnessStats::default());
+        assert_eq!(r.retries + r.quarantined + r.faults_injected, 0);
+        let q = QuarantineRecord {
+            learner: 3,
+            round: 17,
+            reason: "non-finite weight coordinate".into(),
+        };
+        assert_eq!(q.clone(), q);
+    }
 
     #[test]
     fn accumulates_by_direction() {

@@ -2,14 +2,77 @@
 //! channel pair per learner, every payload actually serialized through the
 //! wire format (so the threaded runtime observes byte-identical
 //! communication to the deterministic engine).
+//!
+//! The bus can be wrapped in a seeded [`FaultPlanConfig`]
+//! ([`Bus::new_with_faults`]): each link direction then draws one
+//! [`FaultAction`] per faultable frame from its own deterministic stream
+//! and may drop, duplicate, bit-corrupt, or hold the frame. Fault state
+//! lives on the *sending* side of each link (the endpoint for upstream,
+//! the bus for downstream), so the action sequence is a pure function of
+//! the frame index on that link — independent of thread scheduling.
+//!
+//! Held (delayed/reordered) frames release on link *polls*: every
+//! faultable send and every receive poll-slice (~[`POLL_SLICE`]) advances
+//! the link's tick, and due frames flush in FIFO order. Two barriers keep
+//! every schedule deadlock-free: a control send (`Done`, `RoundDone`,
+//! `Join`, ...) flushes **all** held upstream frames first (a delayed
+//! violation can never arrive after the `RoundDone` that follows it), and
+//! any downstream send flushes **all** frames held on that worker's
+//! downstream link (a delayed request can never be overtaken by the next
+//! download and then starve its worker).
 
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
-
+use crate::network::fault::{fault_class, Dir, FaultAction, FaultPlan, FaultPlanConfig};
 use crate::network::message::Message;
-use crate::ser::{from_bytes, to_bytes};
+use crate::ser::{from_bytes, to_bytes, DecodeError};
+
+/// Receive poll granularity on fault-injected links. Held frames release
+/// within a few slices of wall time, far below any sane `recv_timeout`,
+/// so benign delay schedules do not trigger the leader's retry ladder.
+const POLL_SLICE: Duration = Duration::from_millis(5);
+
+/// Transport errors, typed so callers can tell retryable conditions
+/// (a [`BusError::Timeout`] worth a re-request) from fatal ones
+/// (a [`BusError::Disconnected`] peer) and from evidence of misbehavior
+/// (a [`BusError::Decode`] frame that names its sender).
+#[derive(Debug)]
+pub enum BusError {
+    /// Nothing arrived within the deadline — retryable.
+    Timeout,
+    /// The peer's channel is gone — fatal for this link.
+    Disconnected,
+    /// A frame arrived but did not decode; `from` names the sender
+    /// (quarantine evidence on the leader side).
+    Decode { from: usize, err: DecodeError },
+}
+
+impl fmt::Display for BusError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BusError::Timeout => write!(f, "recv timeout"),
+            BusError::Disconnected => write!(f, "peer hung up"),
+            BusError::Decode { from, err } => {
+                write!(f, "undecodable frame from learner {from}: {err}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BusError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BusError::Decode { err, .. } => Some(err),
+            _ => None,
+        }
+    }
+}
 
 /// A framed, serialized message in flight.
 #[derive(Debug)]
@@ -18,98 +81,371 @@ pub struct Frame {
     pub bytes: Vec<u8>,
 }
 
-/// Learner-side endpoint: send to / receive from the coordinator.
+/// Sender-side fault state of one link direction.
+struct LinkState {
+    plan: FaultPlan,
+    /// Frames held by delay/reorder actions: `(release_tick, frame)`,
+    /// FIFO — the front frame blocks those behind it.
+    held: VecDeque<(u64, Frame)>,
+    ticks: u64,
+}
+
+impl LinkState {
+    fn new(cfg: &FaultPlanConfig, worker: usize, dir: Dir) -> LinkState {
+        LinkState {
+            plan: FaultPlan::for_link(cfg, worker, dir),
+            held: VecDeque::new(),
+            ticks: 0,
+        }
+    }
+}
+
+/// Flip the tag byte so the frame is guaranteed to fail decoding on
+/// arrival (no valid tag survives `^ 0xFF` — tags are small).
+fn corrupt_frame(bytes: &mut [u8]) {
+    if let Some(b) = bytes.first_mut() {
+        *b ^= 0xFF;
+    }
+}
+
+fn fault_state(
+    cfg: Option<&FaultPlanConfig>,
+    worker: usize,
+    dir: Dir,
+) -> Option<RefCell<LinkState>> {
+    let cfg = cfg?;
+    let targeted = match &cfg.workers {
+        Some(ws) => ws.contains(&worker),
+        None => true,
+    };
+    let side_cfg = match dir {
+        Dir::Up => &cfg.up,
+        Dir::Down => &cfg.down,
+    };
+    (targeted && !side_cfg.is_clean()).then(|| RefCell::new(LinkState::new(cfg, worker, dir)))
+}
+
+/// Learner-side endpoint: send to / receive from the coordinator. Owns
+/// the fault state of its *upstream* link.
 pub struct Endpoint {
     pub id: usize,
     to_coord: Sender<Frame>,
     from_coord: Receiver<Frame>,
+    up_faults: Option<RefCell<LinkState>>,
+    injected: Arc<AtomicU64>,
 }
 
 impl Endpoint {
-    /// Serialize and send; returns the wire size.
-    pub fn send(&self, msg: &Message) -> Result<usize> {
+    /// Serialize and send; returns the wire size of what the sender put
+    /// on the link — a dropped or corrupted frame still returns `Ok(n)`,
+    /// because the sender accounts what it sent, not what arrived.
+    pub fn send(&self, msg: &Message) -> Result<usize, BusError> {
         let bytes = to_bytes(msg);
         let n = bytes.len();
-        self.to_coord
-            .send(Frame {
-                from: self.id,
-                bytes,
-            })
-            .map_err(|_| anyhow!("coordinator hung up"))?;
+        let frame = Frame {
+            from: self.id,
+            bytes,
+        };
+        match &self.up_faults {
+            None => self.push_up(frame)?,
+            Some(cell) => {
+                let mut st = cell.borrow_mut();
+                if fault_class(msg, Dir::Up) {
+                    st.ticks += 1;
+                    self.flush_up(&mut st, false)?;
+                    match st.plan.next_action() {
+                        FaultAction::Deliver => self.push_up(frame)?,
+                        FaultAction::Drop => {
+                            self.injected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        FaultAction::Duplicate => {
+                            self.injected.fetch_add(1, Ordering::Relaxed);
+                            self.push_up(Frame {
+                                from: frame.from,
+                                bytes: frame.bytes.clone(),
+                            })?;
+                            self.push_up(frame)?;
+                        }
+                        FaultAction::Corrupt => {
+                            self.injected.fetch_add(1, Ordering::Relaxed);
+                            let mut frame = frame;
+                            corrupt_frame(&mut frame.bytes);
+                            self.push_up(frame)?;
+                        }
+                        FaultAction::Delay(polls) => {
+                            self.injected.fetch_add(1, Ordering::Relaxed);
+                            let due = st.ticks + polls as u64;
+                            st.held.push_back((due, frame));
+                        }
+                    }
+                } else {
+                    // Control barrier: everything held must precede the
+                    // control frame (a delayed violation may not arrive
+                    // after its round's RoundDone).
+                    self.flush_up(&mut st, true)?;
+                    self.push_up(frame)?;
+                }
+            }
+        }
         Ok(n)
     }
 
-    /// Blocking receive with timeout.
-    pub fn recv(&self, timeout: Duration) -> Result<(Message, usize)> {
-        match self.from_coord.recv_timeout(timeout) {
-            Ok(f) => {
-                let n = f.bytes.len();
-                Ok((from_bytes(&f.bytes)?, n))
+    fn push_up(&self, frame: Frame) -> Result<(), BusError> {
+        self.to_coord
+            .send(frame)
+            .map_err(|_| BusError::Disconnected)
+    }
+
+    /// Release held upstream frames in FIFO order; `all` ignores release
+    /// ticks (control barrier), otherwise the front frame blocks until due.
+    fn flush_up(&self, st: &mut LinkState, all: bool) -> Result<(), BusError> {
+        loop {
+            match st.held.front() {
+                Some((due, _)) if all || *due <= st.ticks => {}
+                _ => break,
             }
-            Err(RecvTimeoutError::Timeout) => Err(anyhow!("recv timeout")),
-            Err(RecvTimeoutError::Disconnected) => Err(anyhow!("coordinator hung up")),
+            if let Some((_, frame)) = st.held.pop_front() {
+                self.push_up(frame)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Blocking receive with timeout. On a fault-injected link the wait
+    /// is sliced into short polls, each advancing the upstream tick so
+    /// frames this endpoint has in delay-hold release while it waits.
+    /// Undecodable (corrupted) downstream frames are skipped silently —
+    /// to the worker they are indistinguishable from a dropped request,
+    /// and the leader's retry ladder covers both.
+    pub fn recv(&self, timeout: Duration) -> Result<(Message, usize), BusError> {
+        if self.up_faults.is_none() {
+            return match self.from_coord.recv_timeout(timeout) {
+                Ok(f) => {
+                    let n = f.bytes.len();
+                    match from_bytes(&f.bytes) {
+                        Ok(msg) => Ok((msg, n)),
+                        Err(err) => Err(BusError::Decode { from: usize::MAX, err }),
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => Err(BusError::Timeout),
+                Err(RecvTimeoutError::Disconnected) => Err(BusError::Disconnected),
+            };
+        }
+        let start = Instant::now();
+        loop {
+            if let Some(cell) = &self.up_faults {
+                let mut st = cell.borrow_mut();
+                st.ticks += 1;
+                self.flush_up(&mut st, false)?;
+            }
+            let remaining = timeout.saturating_sub(start.elapsed());
+            match self.from_coord.recv_timeout(remaining.min(POLL_SLICE)) {
+                Ok(f) => {
+                    let n = f.bytes.len();
+                    match from_bytes(&f.bytes) {
+                        Ok(msg) => return Ok((msg, n)),
+                        Err(_) => continue,
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if start.elapsed() >= timeout {
+                        return Err(BusError::Timeout);
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(BusError::Disconnected),
+            }
         }
     }
 }
 
-/// Coordinator-side bus over all learners.
+/// Coordinator-side bus over all learners. Owns the fault state of every
+/// *downstream* link.
 pub struct Bus {
     from_learners: Receiver<Frame>,
     to_learners: Vec<Sender<Frame>>,
+    down_faults: Vec<Option<RefCell<LinkState>>>,
+    injected: Arc<AtomicU64>,
+    /// Any downstream link has fault state → receives must poll-slice.
+    sliced: bool,
 }
 
 impl Bus {
-    /// Create a bus and the per-learner endpoints.
+    /// Create a clean bus and the per-learner endpoints.
     pub fn new(learners: usize) -> (Bus, Vec<Endpoint>) {
+        Bus::new_with_faults(learners, None)
+    }
+
+    /// Create a bus whose links inject the given seeded fault plan
+    /// (`None` = clean, identical to [`Bus::new`]).
+    pub fn new_with_faults(
+        learners: usize,
+        faults: Option<&FaultPlanConfig>,
+    ) -> (Bus, Vec<Endpoint>) {
+        let injected = Arc::new(AtomicU64::new(0));
         let (up_tx, up_rx) = channel::<Frame>();
         let mut to_learners = Vec::with_capacity(learners);
+        let mut down_faults = Vec::with_capacity(learners);
         let mut endpoints = Vec::with_capacity(learners);
         for id in 0..learners {
             let (down_tx, down_rx) = channel::<Frame>();
             to_learners.push(down_tx);
+            down_faults.push(fault_state(faults, id, Dir::Down));
             endpoints.push(Endpoint {
                 id,
                 to_coord: up_tx.clone(),
                 from_coord: down_rx,
+                up_faults: fault_state(faults, id, Dir::Up),
+                injected: Arc::clone(&injected),
             });
         }
+        let sliced = down_faults.iter().any(Option::is_some);
         (
             Bus {
                 from_learners: up_rx,
                 to_learners,
+                down_faults,
+                injected,
+                sliced,
             },
             endpoints,
         )
     }
 
-    /// Send to one learner; returns wire size.
-    pub fn send_to(&self, learner: usize, msg: &Message) -> Result<usize> {
+    /// Total faults injected so far across every link (both directions).
+    pub fn faults_injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Send to one learner; returns wire size of what was sent (dropped
+    /// and corrupted frames included — the sender accounts its sends).
+    pub fn send_to(&self, learner: usize, msg: &Message) -> Result<usize, BusError> {
         let bytes = to_bytes(msg);
         let n = bytes.len();
-        self.to_learners[learner]
-            .send(Frame { from: usize::MAX, bytes })
-            .map_err(|_| anyhow!("learner {learner} hung up"))?;
+        let frame = Frame {
+            from: usize::MAX,
+            bytes,
+        };
+        match &self.down_faults[learner] {
+            None => self.push_down(learner, frame)?,
+            Some(cell) => {
+                let mut st = cell.borrow_mut();
+                st.ticks += 1;
+                // Any downstream send releases everything held on this
+                // link first: a delayed request must never be overtaken
+                // by a later download (the worker would block forever on
+                // a download that already passed it).
+                self.flush_down(learner, &mut st, true);
+                if fault_class(msg, Dir::Down) {
+                    match st.plan.next_action() {
+                        FaultAction::Deliver => self.push_down(learner, frame)?,
+                        FaultAction::Drop => {
+                            self.injected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        FaultAction::Duplicate => {
+                            self.injected.fetch_add(1, Ordering::Relaxed);
+                            self.push_down(
+                                learner,
+                                Frame {
+                                    from: frame.from,
+                                    bytes: frame.bytes.clone(),
+                                },
+                            )?;
+                            self.push_down(learner, frame)?;
+                        }
+                        FaultAction::Corrupt => {
+                            self.injected.fetch_add(1, Ordering::Relaxed);
+                            let mut frame = frame;
+                            corrupt_frame(&mut frame.bytes);
+                            self.push_down(learner, frame)?;
+                        }
+                        FaultAction::Delay(polls) => {
+                            self.injected.fetch_add(1, Ordering::Relaxed);
+                            let due = st.ticks + polls as u64;
+                            st.held.push_back((due, frame));
+                        }
+                    }
+                } else {
+                    self.push_down(learner, frame)?;
+                }
+            }
+        }
         Ok(n)
     }
 
-    /// Broadcast to all learners; returns total wire bytes.
-    pub fn broadcast(&self, msg: &Message) -> Result<usize> {
-        let mut total = 0;
-        for i in 0..self.to_learners.len() {
-            total += self.send_to(i, msg)?;
-        }
-        Ok(total)
+    fn push_down(&self, learner: usize, frame: Frame) -> Result<(), BusError> {
+        self.to_learners[learner]
+            .send(frame)
+            .map_err(|_| BusError::Disconnected)
     }
 
-    /// Blocking receive from any learner.
-    pub fn recv(&self, timeout: Duration) -> Result<(usize, Message, usize)> {
-        match self.from_learners.recv_timeout(timeout) {
-            Ok(f) => {
-                let n = f.bytes.len();
-                Ok((f.from, from_bytes(&f.bytes)?, n))
+    /// Release held downstream frames in FIFO order. Send failures are
+    /// ignored here — a departed worker's link may be gone, and the
+    /// caller's own send reports that separately.
+    fn flush_down(&self, learner: usize, st: &mut LinkState, all: bool) {
+        loop {
+            match st.held.front() {
+                Some((due, _)) if all || *due <= st.ticks => {}
+                _ => break,
             }
-            Err(RecvTimeoutError::Timeout) => Err(anyhow!("recv timeout")),
-            Err(RecvTimeoutError::Disconnected) => Err(anyhow!("all learners hung up")),
+            if let Some((_, frame)) = st.held.pop_front() {
+                let _ = self.to_learners[learner].send(frame);
+            }
+        }
+    }
+
+    /// Advance every fault-injected downstream link by one poll and
+    /// release due frames (called from each receive slice, so a delayed
+    /// request flushes while the leader waits for its answer).
+    fn tick_down_links(&self) {
+        for (learner, slot) in self.down_faults.iter().enumerate() {
+            if let Some(cell) = slot {
+                let mut st = cell.borrow_mut();
+                st.ticks += 1;
+                self.flush_down(learner, &mut st, false);
+            }
+        }
+    }
+
+    /// Broadcast to all learners, delivering to every reachable one even
+    /// if some have hung up; returns the per-learner outcome (wire size
+    /// or error), so one dead worker cannot starve the rest.
+    pub fn broadcast(&self, msg: &Message) -> Vec<Result<usize, BusError>> {
+        (0..self.to_learners.len())
+            .map(|i| self.send_to(i, msg))
+            .collect()
+    }
+
+    /// Blocking receive from any learner. An undecodable frame surfaces
+    /// as [`BusError::Decode`] naming the sender — evidence, not a crash.
+    pub fn recv(&self, timeout: Duration) -> Result<(usize, Message, usize), BusError> {
+        if !self.sliced {
+            return match self.from_learners.recv_timeout(timeout) {
+                Ok(f) => Bus::decode_frame(f),
+                Err(RecvTimeoutError::Timeout) => Err(BusError::Timeout),
+                Err(RecvTimeoutError::Disconnected) => Err(BusError::Disconnected),
+            };
+        }
+        let start = Instant::now();
+        loop {
+            self.tick_down_links();
+            let remaining = timeout.saturating_sub(start.elapsed());
+            match self.from_learners.recv_timeout(remaining.min(POLL_SLICE)) {
+                Ok(f) => return Bus::decode_frame(f),
+                Err(RecvTimeoutError::Timeout) => {
+                    if start.elapsed() >= timeout {
+                        return Err(BusError::Timeout);
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(BusError::Disconnected),
+            }
+        }
+    }
+
+    fn decode_frame(f: Frame) -> Result<(usize, Message, usize), BusError> {
+        let n = f.bytes.len();
+        match from_bytes(&f.bytes) {
+            Ok(msg) => Ok((f.from, msg, n)),
+            Err(err) => Err(BusError::Decode { from: f.from, err }),
         }
     }
 
@@ -121,6 +457,24 @@ impl Bus {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::network::fault::LinkFaultConfig;
+
+    fn plan(up: LinkFaultConfig, down: LinkFaultConfig) -> FaultPlanConfig {
+        FaultPlanConfig {
+            seed: 7,
+            up,
+            down,
+            workers: None,
+        }
+    }
+
+    fn violation(round: u64) -> Message {
+        Message::Violation {
+            learner: 0,
+            round,
+            distance_sq: 0.5,
+        }
+    }
 
     #[test]
     fn roundtrip_through_bus() {
@@ -148,11 +502,193 @@ mod tests {
     #[test]
     fn broadcast_reaches_everyone() {
         let (bus, eps) = Bus::new(3);
-        let total = bus.broadcast(&Message::Shutdown).unwrap();
+        let total: usize = bus
+            .broadcast(&Message::Shutdown)
+            .into_iter()
+            .map(|r| r.unwrap())
+            .sum();
         assert_eq!(total, 3); // Shutdown is 1 byte each
         for ep in &eps {
             let (msg, _) = ep.recv(Duration::from_secs(1)).unwrap();
             assert_eq!(msg, Message::Shutdown);
         }
+    }
+
+    #[test]
+    fn broadcast_survives_a_hung_up_learner() {
+        let (bus, mut eps) = Bus::new(3);
+        drop(eps.remove(1)); // learner 1 is gone
+        let results = bus.broadcast(&Message::Proceed);
+        assert!(results[0].is_ok());
+        assert!(matches!(results[1], Err(BusError::Disconnected)));
+        assert!(results[2].is_ok());
+        for ep in &eps {
+            let (msg, _) = ep.recv(Duration::from_secs(1)).unwrap();
+            assert_eq!(msg, Message::Proceed);
+        }
+    }
+
+    #[test]
+    fn drop_all_loses_protocol_but_not_control() {
+        let cfg = plan(
+            LinkFaultConfig {
+                drop: 1.0,
+                ..LinkFaultConfig::default()
+            },
+            LinkFaultConfig::default(),
+        );
+        let (bus, eps) = Bus::new_with_faults(1, Some(&cfg));
+        // Sender still reports what it sent.
+        let n = eps[0].send(&violation(1)).unwrap();
+        assert!(n > 0);
+        assert!(matches!(
+            bus.recv(Duration::from_millis(20)),
+            Err(BusError::Timeout)
+        ));
+        // Control traffic is never faulted.
+        eps[0].send(&Message::Shutdown).unwrap();
+        let (_, msg, _) = bus.recv(Duration::from_secs(1)).unwrap();
+        assert_eq!(msg, Message::Shutdown);
+        assert_eq!(bus.faults_injected(), 1);
+    }
+
+    #[test]
+    fn corrupt_frame_surfaces_sender() {
+        let cfg = plan(
+            LinkFaultConfig {
+                corrupt: 1.0,
+                ..LinkFaultConfig::default()
+            },
+            LinkFaultConfig::default(),
+        );
+        let (bus, eps) = Bus::new_with_faults(2, Some(&cfg));
+        eps[1].send(&violation(1)).unwrap();
+        match bus.recv(Duration::from_secs(1)) {
+            Err(BusError::Decode { from, .. }) => assert_eq!(from, 1),
+            other => panic!("expected decode error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_delivers_twice() {
+        let cfg = plan(
+            LinkFaultConfig {
+                duplicate: 1.0,
+                ..LinkFaultConfig::default()
+            },
+            LinkFaultConfig::default(),
+        );
+        let (bus, eps) = Bus::new_with_faults(1, Some(&cfg));
+        eps[0].send(&violation(3)).unwrap();
+        for _ in 0..2 {
+            let (_, msg, _) = bus.recv(Duration::from_secs(1)).unwrap();
+            assert_eq!(msg, violation(3));
+        }
+        assert!(matches!(
+            bus.recv(Duration::from_millis(20)),
+            Err(BusError::Timeout)
+        ));
+    }
+
+    #[test]
+    fn delayed_frame_releases_before_control() {
+        let cfg = plan(
+            LinkFaultConfig {
+                delay: 1.0,
+                delay_polls: 1_000_000, // would never release by ticks alone
+                ..LinkFaultConfig::default()
+            },
+            LinkFaultConfig::default(),
+        );
+        let (bus, eps) = Bus::new_with_faults(1, Some(&cfg));
+        eps[0].send(&violation(5)).unwrap();
+        assert!(matches!(
+            bus.recv(Duration::from_millis(20)),
+            Err(BusError::Timeout)
+        ));
+        // The control barrier flushes the held violation first.
+        eps[0]
+            .send(&Message::RoundDone {
+                learner: 0,
+                round: 5,
+            })
+            .unwrap();
+        let (_, first, _) = bus.recv(Duration::from_secs(1)).unwrap();
+        assert_eq!(first, violation(5));
+        let (_, second, _) = bus.recv(Duration::from_secs(1)).unwrap();
+        assert_eq!(
+            second,
+            Message::RoundDone {
+                learner: 0,
+                round: 5
+            }
+        );
+    }
+
+    #[test]
+    fn delayed_frame_releases_by_polling() {
+        let cfg = plan(
+            LinkFaultConfig {
+                delay: 1.0,
+                delay_polls: 2,
+                ..LinkFaultConfig::default()
+            },
+            LinkFaultConfig::default(),
+        );
+        let (bus, eps) = Bus::new_with_faults(1, Some(&cfg));
+        let t = std::thread::spawn(move || {
+            eps[0].send(&violation(9)).unwrap();
+            // Waiting on the endpoint slices the upstream link's polls,
+            // releasing the held frame without any further send.
+            assert!(matches!(
+                eps[0].recv(Duration::from_millis(200)),
+                Err(BusError::Timeout)
+            ));
+        });
+        let (_, msg, _) = bus.recv(Duration::from_secs(2)).unwrap();
+        assert_eq!(msg, violation(9));
+        t.join().unwrap();
+        assert_eq!(bus.faults_injected(), 1);
+    }
+
+    #[test]
+    fn downstream_send_flushes_held_requests() {
+        let cfg = plan(
+            LinkFaultConfig::default(),
+            LinkFaultConfig {
+                delay: 1.0,
+                delay_polls: 1_000_000,
+                ..LinkFaultConfig::default()
+            },
+        );
+        let (bus, eps) = Bus::new_with_faults(1, Some(&cfg));
+        bus.send_to(0, &Message::DistanceRequest).unwrap(); // held
+        // The next downstream send (control, unfaulted) flushes it first.
+        bus.send_to(0, &Message::Proceed).unwrap();
+        let (first, _) = eps[0].recv(Duration::from_secs(1)).unwrap();
+        assert_eq!(first, Message::DistanceRequest);
+        let (second, _) = eps[0].recv(Duration::from_secs(1)).unwrap();
+        assert_eq!(second, Message::Proceed);
+    }
+
+    #[test]
+    fn worker_filter_limits_injection() {
+        let mut cfg = plan(
+            LinkFaultConfig {
+                drop: 1.0,
+                ..LinkFaultConfig::default()
+            },
+            LinkFaultConfig::default(),
+        );
+        cfg.workers = Some(vec![1]);
+        let (bus, eps) = Bus::new_with_faults(2, Some(&cfg));
+        eps[0].send(&violation(1)).unwrap(); // clean link: arrives
+        eps[1].send(&violation(1)).unwrap(); // targeted link: dropped
+        let (from, _, _) = bus.recv(Duration::from_secs(1)).unwrap();
+        assert_eq!(from, 0);
+        assert!(matches!(
+            bus.recv(Duration::from_millis(20)),
+            Err(BusError::Timeout)
+        ));
     }
 }

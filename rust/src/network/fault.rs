@@ -1,0 +1,603 @@
+//! Deterministic fault injection for the in-process bus.
+//!
+//! A [`FaultPlanConfig`] seeds one independent [`crate::util::Pcg64`]
+//! stream per link *direction* (worker `i` upstream = stream `2i`,
+//! downstream = stream `2i + 1`), and every faultable frame offered on
+//! that link consumes exactly **one** uniform draw. The fault sequence is
+//! therefore a pure function of `(seed, link, direction, frame index)` —
+//! independent of thread scheduling, wall-clock time, and whatever the
+//! *other* links are doing — so chaos runs replay bit-for-bit under the
+//! same seed ([`FaultPlan::trace`] exposes that sequence for the property
+//! suite to pin).
+//!
+//! What may be faulted is deliberately narrow (see [`fault_class`]):
+//! upstream protocol reports/uploads and downstream requests. Runtime
+//! control (`Done`, `Shutdown`, `RoundDone`, `Proceed`, `Join`, `Leave`)
+//! is never faulted — it has no retry story and corrupting it would test
+//! the harness, not the protocol. Model *downloads* are also exempt: a
+//! worker blocked in a sync exchange has no deadline and no way to
+//! re-request, so a lost download is unrecoverable without an ack layer
+//! the paper's protocol does not have. Loss on the request side of the
+//! same exchange exercises the identical leader retry machinery while
+//! keeping every schedule deadlock-free by construction.
+
+use std::fmt;
+
+use crate::network::message::Message;
+use crate::util::{Pcg64, Rng};
+
+/// Per-link, per-direction fault probabilities. All probabilities are in
+/// `[0, 1]` and their sum must not exceed 1 (one draw decides the frame's
+/// fate). `reorder` is sugar for a one-poll delay — just long enough for
+/// a later frame to overtake — while `delay` holds the frame for
+/// `delay_polls` polls.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LinkFaultConfig {
+    /// Probability the frame is silently dropped.
+    pub drop: f64,
+    /// Probability the frame is held for [`LinkFaultConfig::delay_polls`].
+    pub delay: f64,
+    /// Hold time of a delayed frame, in link polls (sends and receive
+    /// poll slices both count).
+    pub delay_polls: u32,
+    /// Probability the frame is delivered twice back-to-back.
+    pub duplicate: f64,
+    /// Probability the frame is held for exactly one poll (so a
+    /// subsequent frame can overtake it).
+    pub reorder: f64,
+    /// Probability the frame's tag byte is bit-flipped (guaranteed decode
+    /// failure on arrival — the "provably invalid frame" case).
+    pub corrupt: f64,
+}
+
+impl LinkFaultConfig {
+    /// True when every probability is zero (the link is clean).
+    pub fn is_clean(&self) -> bool {
+        self.drop == 0.0
+            && self.delay == 0.0
+            && self.duplicate == 0.0
+            && self.reorder == 0.0
+            && self.corrupt == 0.0
+    }
+
+    /// Validate probabilities: each in [0, 1], summing to at most 1.
+    pub fn validate(&self, what: &str) -> Result<(), String> {
+        let ps = [
+            ("drop", self.drop),
+            ("delay", self.delay),
+            ("duplicate", self.duplicate),
+            ("reorder", self.reorder),
+            ("corrupt", self.corrupt),
+        ];
+        for (name, p) in ps {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("{what}.{name} must be in [0, 1], got {p}"));
+            }
+        }
+        let sum: f64 = ps.iter().map(|&(_, p)| p).sum();
+        if sum > 1.0 {
+            return Err(format!(
+                "{what} fault probabilities sum to {sum} > 1 (one draw decides each frame)"
+            ));
+        }
+        if self.delay > 0.0 && self.delay_polls == 0 {
+            return Err(format!("{what}.delay needs delay_polls >= 1"));
+        }
+        Ok(())
+    }
+}
+
+/// A complete seeded fault plan for a cluster run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlanConfig {
+    /// Seed of the per-link fault streams (independent of the experiment
+    /// seed so the same data run can be replayed under many schedules).
+    pub seed: u64,
+    /// Faults on worker -> leader frames.
+    pub up: LinkFaultConfig,
+    /// Faults on leader -> worker frames.
+    pub down: LinkFaultConfig,
+    /// Restrict injection to these workers' links (`None` = all links).
+    pub workers: Option<Vec<usize>>,
+}
+
+impl FaultPlanConfig {
+    /// A clean plan (useful as a spec-parsing base).
+    pub fn clean(seed: u64) -> Self {
+        FaultPlanConfig {
+            seed,
+            up: LinkFaultConfig::default(),
+            down: LinkFaultConfig::default(),
+            workers: None,
+        }
+    }
+
+    /// Does the plan inject anything at all on `worker`'s links?
+    pub fn applies_to(&self, worker: usize) -> bool {
+        let targeted = match &self.workers {
+            Some(ws) => ws.contains(&worker),
+            None => true,
+        };
+        targeted && !(self.up.is_clean() && self.down.is_clean())
+    }
+
+    pub fn validate(&self, learners: usize) -> Result<(), String> {
+        self.up.validate("faults.up")?;
+        self.down.validate("faults.down")?;
+        if let Some(ws) = &self.workers {
+            for &w in ws {
+                if w >= learners {
+                    return Err(format!(
+                        "faults.workers names worker {w}, but the cluster has {learners}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Direction of a link, selecting the fault stream and config half.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    /// Worker -> leader.
+    Up,
+    /// Leader -> worker.
+    Down,
+}
+
+/// The fate of one offered frame (one RNG draw).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    Deliver,
+    Drop,
+    Duplicate,
+    Corrupt,
+    /// Hold for this many link polls before delivery.
+    Delay(u32),
+}
+
+/// Per-link-direction fault state: the seeded stream plus its config.
+/// One [`FaultPlan::next_action`] call per offered frame keeps the action
+/// sequence a pure function of the frame index.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    rng: Pcg64,
+    cfg: LinkFaultConfig,
+}
+
+impl FaultPlan {
+    /// Plan for one link direction of `worker` under `cfg`.
+    pub fn for_link(cfg: &FaultPlanConfig, worker: usize, dir: Dir) -> FaultPlan {
+        let (link_cfg, stream) = match dir {
+            Dir::Up => (cfg.up, 2 * worker as u64),
+            Dir::Down => (cfg.down, 2 * worker as u64 + 1),
+        };
+        FaultPlan {
+            rng: Pcg64::new(cfg.seed, stream),
+            cfg: link_cfg,
+        }
+    }
+
+    /// Fate of the next offered frame. Exactly one draw per call: the
+    /// cumulative-threshold order is fixed (drop, duplicate, corrupt,
+    /// reorder, delay) so a given `(seed, link, dir, index)` always maps
+    /// to the same action.
+    pub fn next_action(&mut self) -> FaultAction {
+        let u = self.rng.f64();
+        let c = &self.cfg;
+        let mut t = c.drop;
+        if u < t {
+            return FaultAction::Drop;
+        }
+        t += c.duplicate;
+        if u < t {
+            return FaultAction::Duplicate;
+        }
+        t += c.corrupt;
+        if u < t {
+            return FaultAction::Corrupt;
+        }
+        t += c.reorder;
+        if u < t {
+            return FaultAction::Delay(1);
+        }
+        t += c.delay;
+        if u < t {
+            return FaultAction::Delay(c.delay_polls);
+        }
+        FaultAction::Deliver
+    }
+
+    /// The first `n` actions of one link direction — the replayable fault
+    /// trace the determinism property suite pins bitwise.
+    pub fn trace(cfg: &FaultPlanConfig, worker: usize, dir: Dir, n: usize) -> Vec<FaultAction> {
+        let mut plan = FaultPlan::for_link(cfg, worker, dir);
+        (0..n).map(|_| plan.next_action()).collect()
+    }
+}
+
+/// Is this message fair game for fault injection in `dir`?
+///
+/// Only protocol traffic with a retry/suppression story is faultable:
+/// upstream reports and uploads (the leader re-requests on timeout and
+/// suppresses duplicates), downstream requests (idempotent — a re-served
+/// request produces a duplicate upload the leader suppresses). Control
+/// messages and model downloads are exempt (see the module docs).
+pub fn fault_class(msg: &Message, dir: Dir) -> bool {
+    match dir {
+        Dir::Up => matches!(
+            msg,
+            Message::Violation { .. }
+                | Message::DistanceReport { .. }
+                | Message::ModelUpload { .. }
+                | Message::LinearUpload { .. }
+        ),
+        Dir::Down => matches!(
+            msg,
+            Message::SyncRequest | Message::PartialSyncRequest | Message::DistanceRequest
+        ),
+    }
+}
+
+/// Leader-side frame validation: the "provably invalid" reasons that
+/// justify quarantining a sender, as a human-readable evidence string.
+/// Returns `None` for well-formed frames.
+pub fn invalid_frame_reason(msg: &Message) -> Option<String> {
+    fn bad(x: f64) -> bool {
+        !x.is_finite()
+    }
+    match msg {
+        Message::Violation { distance_sq, .. } if bad(*distance_sq) => {
+            Some(format!("non-finite violation distance {distance_sq}"))
+        }
+        Message::DistanceReport { distance_sq, .. } if bad(*distance_sq) => {
+            Some(format!("non-finite reported distance {distance_sq}"))
+        }
+        Message::ModelUpload { coeffs, new_svs, .. } => {
+            if let Some((id, a)) = coeffs.iter().find(|(_, a)| bad(*a)) {
+                return Some(format!("non-finite coefficient {a} on sv {id}"));
+            }
+            if !new_svs.is_consistent() {
+                return Some("inconsistent sv block (ids x dim != coords)".into());
+            }
+            if new_svs.coords.iter().any(|c| !c.is_finite()) {
+                return Some("non-finite sv coordinate".into());
+            }
+            None
+        }
+        Message::LinearUpload { w, .. } => w
+            .iter()
+            .any(|c| !c.is_finite())
+            .then(|| "non-finite weight coordinate".into()),
+        Message::Done {
+            cum_loss,
+            cum_error,
+            ..
+        } if bad(*cum_loss) || bad(*cum_error) => Some("non-finite final metrics".into()),
+        _ => None,
+    }
+}
+
+// ---- compact CLI specs -----------------------------------------------------
+
+/// Parse the `--fault-plan` compact spec:
+/// `seed=7,up_drop=0.1,up_delay=0.2,up_delay_polls=3,down_corrupt=0.01,workers=0|2`.
+/// Keys are `seed`, `workers` (worker ids separated by `|`), and
+/// `{up,down}_{drop,delay,delay_polls,duplicate,reorder,corrupt}`.
+pub fn parse_fault_spec(spec: &str) -> Result<FaultPlanConfig, String> {
+    let mut cfg = FaultPlanConfig::clean(0);
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let (key, val) = part
+            .split_once('=')
+            .ok_or_else(|| format!("fault spec `{part}` is not key=value"))?;
+        let (key, val) = (key.trim(), val.trim());
+        let fval = || -> Result<f64, String> {
+            val.parse::<f64>()
+                .map_err(|_| format!("fault spec {key}={val}: not a number"))
+        };
+        let ival = || -> Result<u64, String> {
+            val.parse::<u64>()
+                .map_err(|_| format!("fault spec {key}={val}: not an integer"))
+        };
+        match key {
+            "seed" => cfg.seed = ival()?,
+            "workers" => {
+                let mut ws = Vec::new();
+                for w in val.split('|').filter(|w| !w.is_empty()) {
+                    ws.push(
+                        w.parse::<usize>()
+                            .map_err(|_| format!("fault spec workers: bad id `{w}`"))?,
+                    );
+                }
+                cfg.workers = Some(ws);
+            }
+            _ => {
+                let (link, field) = key
+                    .split_once('_')
+                    .ok_or_else(|| format!("unknown fault spec key `{key}`"))?;
+                let side = match link {
+                    "up" => &mut cfg.up,
+                    "down" => &mut cfg.down,
+                    _ => return Err(format!("unknown fault spec key `{key}`")),
+                };
+                match field {
+                    "drop" => side.drop = fval()?,
+                    "delay" => side.delay = fval()?,
+                    "delay_polls" => side.delay_polls = ival()? as u32,
+                    "duplicate" => side.duplicate = fval()?,
+                    "reorder" => side.reorder = fval()?,
+                    "corrupt" => side.corrupt = fval()?,
+                    _ => return Err(format!("unknown fault spec key `{key}`")),
+                }
+            }
+        }
+    }
+    // Delayed links need a hold time; default to one poll when the spec
+    // enables delay without setting it.
+    for side in [&mut cfg.up, &mut cfg.down] {
+        if side.delay > 0.0 && side.delay_polls == 0 {
+            side.delay_polls = 1;
+        }
+    }
+    Ok(cfg)
+}
+
+/// Parse the `--churn` compact spec: `worker:join..leave` entries
+/// separated by `;`, e.g. `1:10..50;2:30..100`.
+pub fn parse_churn_spec(spec: &str) -> Result<Vec<ChurnEntry>, String> {
+    let mut out = Vec::new();
+    for part in spec.split(';').filter(|p| !p.trim().is_empty()) {
+        let (worker, window) = part
+            .split_once(':')
+            .ok_or_else(|| format!("churn spec `{part}` is not worker:join..leave"))?;
+        let worker = worker
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| format!("churn spec `{part}`: bad worker id"))?;
+        let (join, leave) = window
+            .split_once("..")
+            .ok_or_else(|| format!("churn spec `{part}`: window is not join..leave"))?;
+        let join = join
+            .trim()
+            .parse::<u64>()
+            .map_err(|_| format!("churn spec `{part}`: bad join round"))?;
+        let leave = leave
+            .trim()
+            .parse::<u64>()
+            .map_err(|_| format!("churn spec `{part}`: bad leave round"))?;
+        out.push(ChurnEntry {
+            worker,
+            join,
+            leave,
+        });
+    }
+    Ok(out)
+}
+
+/// One worker's planned membership window: it participates in protocol
+/// rounds `join..=leave` (1-based, inclusive). The plan is part of the
+/// experiment config — known to leader *and* workers — so the lockstep
+/// barrier's expectations stay deterministic; the `Join`/`Leave` wire
+/// messages announce the transitions at runtime and are cross-checked
+/// against the plan (a mismatch is quarantine evidence).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChurnEntry {
+    pub worker: usize,
+    /// First round the worker plays (1 = from the start).
+    pub join: u64,
+    /// Last round the worker plays; it departs cleanly afterwards.
+    pub leave: u64,
+}
+
+impl fmt::Display for ChurnEntry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}..{}", self.worker, self.join, self.leave)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::message::SvBlock;
+
+    fn mixed() -> FaultPlanConfig {
+        FaultPlanConfig {
+            seed: 42,
+            up: LinkFaultConfig {
+                drop: 0.2,
+                delay: 0.2,
+                delay_polls: 3,
+                duplicate: 0.1,
+                reorder: 0.1,
+                corrupt: 0.05,
+            },
+            down: LinkFaultConfig {
+                drop: 0.1,
+                ..LinkFaultConfig::default()
+            },
+            workers: None,
+        }
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_link_independent() {
+        let cfg = mixed();
+        let a = FaultPlan::trace(&cfg, 1, Dir::Up, 256);
+        let b = FaultPlan::trace(&cfg, 1, Dir::Up, 256);
+        assert_eq!(a, b);
+        // Other links draw from independent streams.
+        assert_ne!(a, FaultPlan::trace(&cfg, 2, Dir::Up, 256));
+        assert_ne!(a, FaultPlan::trace(&cfg, 1, Dir::Down, 256));
+        // And a different seed reshuffles everything.
+        let mut reseeded = cfg.clone();
+        reseeded.seed = 43;
+        assert_ne!(a, FaultPlan::trace(&reseeded, 1, Dir::Up, 256));
+    }
+
+    #[test]
+    fn extreme_probabilities_pin_the_action() {
+        let mut cfg = FaultPlanConfig::clean(7);
+        cfg.up.drop = 1.0;
+        assert!(FaultPlan::trace(&cfg, 0, Dir::Up, 64)
+            .iter()
+            .all(|a| *a == FaultAction::Drop));
+        let clean = FaultPlanConfig::clean(7);
+        assert!(FaultPlan::trace(&clean, 0, Dir::Up, 64)
+            .iter()
+            .all(|a| *a == FaultAction::Deliver));
+    }
+
+    #[test]
+    fn mixed_plan_draws_every_action() {
+        let cfg = mixed();
+        let trace = FaultPlan::trace(&cfg, 0, Dir::Up, 2048);
+        for want in [
+            FaultAction::Drop,
+            FaultAction::Duplicate,
+            FaultAction::Corrupt,
+            FaultAction::Delay(1),
+            FaultAction::Delay(3),
+            FaultAction::Deliver,
+        ] {
+            assert!(trace.contains(&want), "missing {want:?}");
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_probabilities() {
+        let mut cfg = FaultPlanConfig::clean(1);
+        cfg.up.drop = 1.5;
+        assert!(cfg.validate(4).is_err());
+        let mut cfg = FaultPlanConfig::clean(1);
+        cfg.up.drop = 0.6;
+        cfg.up.duplicate = 0.6;
+        assert!(cfg.validate(4).is_err());
+        let mut cfg = FaultPlanConfig::clean(1);
+        cfg.down.delay = 0.1; // delay_polls left at 0
+        assert!(cfg.validate(4).is_err());
+        let mut cfg = FaultPlanConfig::clean(1);
+        cfg.workers = Some(vec![5]);
+        assert!(cfg.validate(4).is_err());
+        assert!(mixed().validate(4).is_ok());
+    }
+
+    #[test]
+    fn applies_to_respects_worker_filter() {
+        let mut cfg = mixed();
+        assert!(cfg.applies_to(0) && cfg.applies_to(3));
+        cfg.workers = Some(vec![1]);
+        assert!(cfg.applies_to(1));
+        assert!(!cfg.applies_to(0));
+        assert!(!FaultPlanConfig::clean(9).applies_to(0));
+    }
+
+    #[test]
+    fn fault_class_spares_control_and_downloads() {
+        let up_ok = Message::Violation {
+            learner: 0,
+            round: 1,
+            distance_sq: 0.5,
+        };
+        assert!(fault_class(&up_ok, Dir::Up));
+        assert!(fault_class(&Message::SyncRequest, Dir::Down));
+        for never in [
+            Message::Shutdown,
+            Message::Proceed,
+            Message::Done {
+                learner: 0,
+                cum_loss: 0.0,
+                cum_error: 0.0,
+            },
+            Message::RoundDone {
+                learner: 0,
+                round: 1,
+            },
+            Message::Join {
+                learner: 0,
+                round: 1,
+            },
+            Message::Leave {
+                learner: 0,
+                round: 1,
+            },
+            Message::LinearDownload {
+                w: vec![1.0],
+                partial: false,
+            },
+        ] {
+            assert!(!fault_class(&never, Dir::Up), "{never:?}");
+            assert!(!fault_class(&never, Dir::Down), "{never:?}");
+        }
+    }
+
+    #[test]
+    fn invalid_frames_are_named() {
+        assert!(invalid_frame_reason(&Message::Violation {
+            learner: 0,
+            round: 1,
+            distance_sq: f64::NAN,
+        })
+        .is_some());
+        assert!(invalid_frame_reason(&Message::LinearUpload {
+            learner: 0,
+            round: 1,
+            w: vec![1.0, f32::INFINITY],
+        })
+        .is_some());
+        assert!(invalid_frame_reason(&Message::ModelUpload {
+            learner: 0,
+            round: 1,
+            coeffs: vec![(4, f64::NAN)],
+            new_svs: SvBlock::default(),
+        })
+        .is_some());
+        assert!(invalid_frame_reason(&Message::Violation {
+            learner: 0,
+            round: 1,
+            distance_sq: 0.25,
+        })
+        .is_none());
+    }
+
+    #[test]
+    fn fault_spec_roundtrip() {
+        let cfg = parse_fault_spec("seed=7,up_drop=0.1,up_delay=0.2,up_delay_polls=4").unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.up.drop, 0.1);
+        assert_eq!(cfg.up.delay, 0.2);
+        assert_eq!(cfg.up.delay_polls, 4);
+        let cfg = parse_fault_spec("down_corrupt=0.05,workers=0|2").unwrap();
+        assert_eq!(cfg.down.corrupt, 0.05);
+        assert_eq!(cfg.workers, Some(vec![0, 2]));
+        // delay without polls defaults to 1
+        let cfg = parse_fault_spec("up_delay=0.3").unwrap();
+        assert_eq!(cfg.up.delay_polls, 1);
+        assert!(parse_fault_spec("up_bogus=1").is_err());
+        assert!(parse_fault_spec("sideways_drop=0.1").is_err());
+        assert!(parse_fault_spec("updrop").is_err());
+    }
+
+    #[test]
+    fn churn_spec_roundtrip() {
+        let plan = parse_churn_spec("1:10..50;2:30..100").unwrap();
+        assert_eq!(
+            plan,
+            vec![
+                ChurnEntry {
+                    worker: 1,
+                    join: 10,
+                    leave: 50
+                },
+                ChurnEntry {
+                    worker: 2,
+                    join: 30,
+                    leave: 100
+                },
+            ]
+        );
+        assert_eq!(plan[0].to_string(), "1:10..50");
+        assert!(parse_churn_spec("1-10..50").is_err());
+        assert!(parse_churn_spec("1:10").is_err());
+    }
+}

@@ -157,6 +157,17 @@ pub enum Message {
     /// synchronization work (if any) is complete; start the next round.
     /// Runtime control — not counted as protocol communication.
     Proceed,
+    /// Worker -> coordinator: the worker starts participating in protocol
+    /// round `round` (churn). The leader re-registers its tracker and
+    /// includes it in barrier/violation bookkeeping from that round on;
+    /// the announcement is cross-checked against the configured membership
+    /// plan. Runtime control — not counted as protocol communication.
+    Join { learner: u32, round: u64 },
+    /// Worker -> coordinator: clean departure after finishing protocol
+    /// round `round` (churn). The leader drops the worker from barrier
+    /// bookkeeping and future synchronizations recalibrate over the
+    /// survivors. Runtime control — not counted as protocol communication.
+    Leave { learner: u32, round: u64 },
 }
 
 const TAG_VIOLATION: u8 = 1;
@@ -172,6 +183,8 @@ const TAG_DISTANCE_REQUEST: u8 = 10;
 const TAG_DISTANCE_REPORT: u8 = 11;
 const TAG_ROUND_DONE: u8 = 12;
 const TAG_PROCEED: u8 = 13;
+const TAG_JOIN: u8 = 14;
+const TAG_LEAVE: u8 = 15;
 
 fn encode_coeffs(w: &mut Writer, coeffs: &[(u64, f64)]) {
     w.u32(coeffs.len() as u32);
@@ -275,6 +288,16 @@ impl Encode for Message {
                 w.u64(*round);
             }
             Message::Proceed => w.u8(TAG_PROCEED),
+            Message::Join { learner, round } => {
+                w.u8(TAG_JOIN);
+                w.u32(*learner);
+                w.u64(*round);
+            }
+            Message::Leave { learner, round } => {
+                w.u8(TAG_LEAVE);
+                w.u32(*learner);
+                w.u64(*round);
+            }
         }
     }
 }
@@ -335,6 +358,14 @@ impl Decode for Message {
                 round: r.u64()?,
             }),
             TAG_PROCEED => Ok(Message::Proceed),
+            TAG_JOIN => Ok(Message::Join {
+                learner: r.u32()?,
+                round: r.u64()?,
+            }),
+            TAG_LEAVE => Ok(Message::Leave {
+                learner: r.u32()?,
+                round: r.u64()?,
+            }),
             t => Err(DecodeError::BadTag(t)),
         }
     }
@@ -436,6 +467,14 @@ mod tests {
                 round: 33,
             },
             Message::Proceed,
+            Message::Join {
+                learner: 2,
+                round: 11,
+            },
+            Message::Leave {
+                learner: 2,
+                round: 90,
+            },
         ];
         for m in msgs {
             let bytes = to_bytes(&m);

@@ -1,14 +1,17 @@
 //! Cluster networking: protocol messages, the support-vector delta
 //! encoding (the paper's "trivial communication reduction strategy"),
-//! byte-exact communication accounting, and the thread/channel message bus
-//! used by the leader/worker runtime.
+//! byte-exact communication accounting, the thread/channel message bus
+//! used by the leader/worker runtime, and the deterministic fault
+//! injection layer the chaos suite drives it with.
 
 pub mod accounting;
 pub mod bus;
 pub mod delta;
+pub mod fault;
 pub mod message;
 
-pub use accounting::CommStats;
-pub use bus::{Bus, Endpoint};
+pub use accounting::{CommStats, QuarantineRecord, RobustnessStats};
+pub use bus::{Bus, BusError, Endpoint};
 pub use delta::{DeltaDecoder, DeltaEncoder};
+pub use fault::{ChurnEntry, FaultPlan, FaultPlanConfig, LinkFaultConfig};
 pub use message::{Message, SvBlock};

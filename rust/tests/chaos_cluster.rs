@@ -1,0 +1,423 @@
+//! Chaos conformance suite: the threaded cluster under seeded fault
+//! injection and planned churn.
+//!
+//! The contract, scenario by scenario:
+//!
+//! * **Benign schedules** (delay-only, duplicate-only on the upstream
+//!   links) are absorbed by flush ordering and duplicate suppression:
+//!   lockstep fixed-size runs must keep **exact** engine parity — same
+//!   syncs, violations, bytes, messages — with the fault machinery
+//!   provably exercised (`faults_injected > 0`, retries zero).
+//! * **Lossy schedules** (drops, and the all-faults combination) must
+//!   terminate through the leader's retry ladders, and a same-seed rerun
+//!   must replay **bitwise**: identical robustness counters, byte
+//!   counts, quarantine evidence, and cumulative loss. The fault
+//!   sequence is a pure function of `(seed, link, dir, frame index)`
+//!   and lockstep pins the frame order, so chaos runs are reproducible.
+//! * **A misbehaving worker** (every upload bit-corrupted) is
+//!   quarantined with recorded evidence, and the surviving cluster's
+//!   communication stays loss-proportional (the paper's efficiency
+//!   criterion, evaluated exactly as in `e2e_loss_proportionality`).
+//! * **Planned churn** (workers with `join..=leave` windows) runs clean:
+//!   no retries, no quarantine, deterministic across reruns.
+
+use kdol::config::{
+    CompressionConfig, DataConfig, ExperimentConfig, KernelConfig, ProtocolConfig,
+};
+use kdol::coordinator::{run_cluster, ClusterOutcome};
+use kdol::experiments::run_experiment;
+use kdol::metrics::{EfficiencyReport, Outcome};
+use kdol::network::{ChurnEntry, CommStats, FaultPlanConfig, LinkFaultConfig, RobustnessStats};
+
+/// Base dynamic drift scenario (fixed-size model, lockstep) — the same
+/// shape as the parity suite's conformance matrix, shortened to keep the
+/// retry-deadline cost of lossy schedules bounded.
+fn chaos_cfg(label: &str, delta: f64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::quickstart();
+    c.name = format!("chaos-{label}-delta{delta}");
+    c.seed = 7;
+    c.learners = 4;
+    c.rounds = 60;
+    c.data = DataConfig::Hyperplane {
+        dim: 8,
+        drift: 0.05,
+    };
+    c.learner.kernel = KernelConfig::Linear;
+    c.learner.compression = CompressionConfig::None;
+    c.learner.eta = 0.1;
+    c.protocol = ProtocolConfig::Dynamic {
+        delta,
+        check_period: 1,
+    };
+    c.partial_sync = true;
+    c.lockstep = true;
+    c.recv_timeout_ms = 500;
+    c.max_retries = 3;
+    c
+}
+
+/// Pick a threshold whose clean engine run produces between `lo` and
+/// `hi` resolution events: enough traffic for the fault plan to bite,
+/// few enough that per-drop retry deadlines keep the test fast.
+fn pick_eventful(label: &str, partial: bool, lo: u64, hi: u64) -> ExperimentConfig {
+    for &delta in &[0.2, 0.1, 0.05, 0.02, 0.01] {
+        let mut c = chaos_cfg(label, delta);
+        c.partial_sync = partial;
+        let engine = run_experiment(&c).unwrap();
+        let events = engine.comm.syncs + engine.partial_syncs;
+        if (lo..=hi).contains(&events) {
+            return c;
+        }
+    }
+    panic!("{label}: no delta in the sweep produced {lo}..={hi} events");
+}
+
+fn up_only(seed: u64, up: LinkFaultConfig) -> FaultPlanConfig {
+    FaultPlanConfig {
+        seed,
+        up,
+        down: LinkFaultConfig::default(),
+        workers: None,
+    }
+}
+
+/// Internal-consistency invariants every outcome must satisfy.
+fn assert_consistent(out: &ClusterOutcome) {
+    assert_eq!(
+        out.robustness.quarantined as usize,
+        out.quarantine.len(),
+        "quarantine counter disagrees with the evidence list"
+    );
+    assert!(out.cum_loss.is_finite(), "non-finite cumulative loss");
+}
+
+fn assert_comm_eq(a: &CommStats, b: &CommStats, what: &str) {
+    assert_eq!(a.syncs, b.syncs, "{what}: syncs");
+    assert_eq!(a.violations, b.violations, "{what}: violations");
+    assert_eq!(a.up_bytes, b.up_bytes, "{what}: up bytes");
+    assert_eq!(a.down_bytes, b.down_bytes, "{what}: down bytes");
+    assert_eq!(a.up_msgs, b.up_msgs, "{what}: up messages");
+    assert_eq!(a.down_msgs, b.down_msgs, "{what}: down messages");
+    assert_eq!(a.last_sync_round, b.last_sync_round, "{what}: last sync round");
+    assert_eq!(
+        a.peak_round_bytes, b.peak_round_bytes,
+        "{what}: peak round bytes"
+    );
+}
+
+/// Exact engine parity for a benign fault schedule: the clean engine run
+/// of the same config is the reference trajectory.
+fn assert_benign_parity(cfg: &ExperimentConfig) -> ClusterOutcome {
+    let mut clean = cfg.clone();
+    clean.faults = None;
+    let engine = run_experiment(&clean).unwrap();
+    assert!(
+        engine.comm.syncs + engine.partial_syncs > 0,
+        "{}: scenario never communicates — parity would be vacuous",
+        cfg.name
+    );
+    let cluster = run_cluster(cfg).unwrap();
+    assert_consistent(&cluster);
+    assert!(
+        cluster.robustness.faults_injected > 0,
+        "{}: the fault plan never fired — benign parity untested",
+        cfg.name
+    );
+    assert_comm_eq(&engine.comm, &cluster.comm, &cfg.name);
+    assert_eq!(
+        engine.partial_syncs, cluster.partial_syncs,
+        "{}: partial syncs",
+        cfg.name
+    );
+    assert_eq!(cluster.robustness.retries, 0, "{}: benign retries", cfg.name);
+    assert!(cluster.quarantine.is_empty(), "{}: benign quarantine", cfg.name);
+    let rel = (engine.cumulative_loss - cluster.cum_loss).abs()
+        / engine.cumulative_loss.abs().max(1e-9);
+    assert!(
+        rel < 1e-9,
+        "{}: engine loss {} vs cluster {}",
+        cfg.name,
+        engine.cumulative_loss,
+        cluster.cum_loss
+    );
+    cluster
+}
+
+#[test]
+fn benign_delay_schedule_keeps_exact_engine_parity() {
+    // Held frames flush before any control barrier and within every
+    // receive poll slice, so delays reorder nothing the protocol can
+    // observe: the trajectory and every byte count match the engine.
+    let mut cfg = pick_eventful("delay", true, 3, 40);
+    cfg.faults = Some(up_only(
+        5,
+        LinkFaultConfig {
+            delay: 0.35,
+            delay_polls: 2,
+            ..LinkFaultConfig::default()
+        },
+    ));
+    cfg.validate().unwrap();
+    let out = assert_benign_parity(&cfg);
+    assert_eq!(out.robustness.dup_suppressed, 0);
+    assert_eq!(out.robustness.stale_suppressed, 0);
+}
+
+#[test]
+fn benign_duplicate_schedule_keeps_exact_engine_parity() {
+    // Every duplicated violation / report / upload is suppressed before
+    // it can be double-ingested or double-counted, so the engine's
+    // trajectory and byte counts survive untouched.
+    let mut cfg = pick_eventful("duplicate", true, 3, 40);
+    cfg.faults = Some(up_only(
+        5,
+        LinkFaultConfig {
+            duplicate: 0.5,
+            ..LinkFaultConfig::default()
+        },
+    ));
+    cfg.validate().unwrap();
+    let out = assert_benign_parity(&cfg);
+    assert!(
+        out.robustness.dup_suppressed + out.robustness.stale_suppressed > 0,
+        "duplicates were injected but never suppressed"
+    );
+}
+
+#[test]
+fn drop_schedule_terminates_and_replays_bitwise() {
+    // Drops on both directions force the retry ladders; the run must
+    // terminate and a same-seed rerun must replay every counter exactly.
+    let mut cfg = pick_eventful("drop", true, 4, 20);
+    cfg.recv_timeout_ms = 250;
+    cfg.faults = Some(FaultPlanConfig {
+        seed: 11,
+        up: LinkFaultConfig {
+            drop: 0.15,
+            ..LinkFaultConfig::default()
+        },
+        down: LinkFaultConfig {
+            drop: 0.1,
+            ..LinkFaultConfig::default()
+        },
+        workers: None,
+    });
+    cfg.validate().unwrap();
+    let a = run_cluster(&cfg).unwrap();
+    let b = run_cluster(&cfg).unwrap();
+    for out in [&a, &b] {
+        assert_consistent(out);
+        assert_eq!(out.rounds, cfg.rounds as u64);
+    }
+    assert!(a.robustness.faults_injected > 0, "drop plan never fired");
+    assert_eq!(a.robustness, b.robustness, "robustness counters replay");
+    assert_eq!(a.quarantine, b.quarantine, "quarantine evidence replays");
+    assert_comm_eq(&a.comm, &b.comm, "drop rerun");
+    assert_eq!(a.partial_syncs, b.partial_syncs);
+    assert_eq!(a.cum_loss.to_bits(), b.cum_loss.to_bits(), "loss replays bitwise");
+}
+
+#[test]
+fn combined_chaos_schedule_terminates_and_replays_bitwise() {
+    // Everything at once — loss, delay, duplication, reordering, and a
+    // sliver of corruption on both directions. The only promises are
+    // termination and bitwise reproducibility under the same seed.
+    let mut cfg = pick_eventful("combined", true, 4, 20);
+    cfg.recv_timeout_ms = 250;
+    cfg.faults = Some(FaultPlanConfig {
+        seed: 23,
+        up: LinkFaultConfig {
+            drop: 0.08,
+            delay: 0.1,
+            delay_polls: 2,
+            duplicate: 0.1,
+            reorder: 0.08,
+            corrupt: 0.04,
+        },
+        down: LinkFaultConfig {
+            drop: 0.06,
+            duplicate: 0.06,
+            reorder: 0.05,
+            corrupt: 0.04,
+            ..LinkFaultConfig::default()
+        },
+        workers: None,
+    });
+    cfg.validate().unwrap();
+    let a = run_cluster(&cfg).unwrap();
+    let b = run_cluster(&cfg).unwrap();
+    for out in [&a, &b] {
+        assert_consistent(out);
+        assert_eq!(out.rounds, cfg.rounds as u64);
+    }
+    assert!(a.robustness.faults_injected > 0, "chaos plan never fired");
+    assert_eq!(a.robustness, b.robustness, "robustness counters replay");
+    assert_eq!(a.quarantine, b.quarantine, "quarantine evidence replays");
+    assert_comm_eq(&a.comm, &b.comm, "chaos rerun");
+    assert_eq!(a.partial_syncs, b.partial_syncs);
+    assert_eq!(a.cum_loss.to_bits(), b.cum_loss.to_bits(), "loss replays bitwise");
+}
+
+#[test]
+fn corrupt_worker_is_quarantined_and_survivors_stay_loss_proportional() {
+    // Worker 2's every upstream protocol frame is bit-corrupted — the
+    // "provably misbehaving" node. Corruption flips the tag byte, so its
+    // frames are undecodable on arrival: the leader must quarantine it
+    // with that evidence and finish the run over the survivors, whose
+    // communication still satisfies the paper's loss-proportionality
+    // criterion (same PA setup and ETA_C as `e2e_loss_proportionality`;
+    // pure protocol — the per-event bound argument needs full syncs).
+    const ETA_C: f64 = 2.0;
+    let delta = 0.2;
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.name = "chaos-corrupt-worker".into();
+    cfg.seed = 13;
+    cfg.learners = 4;
+    cfg.rounds = 200;
+    cfg.data = DataConfig::Hyperplane {
+        dim: 8,
+        drift: 0.05,
+    };
+    cfg.learner.kernel = KernelConfig::Linear;
+    cfg.learner.compression = CompressionConfig::None;
+    cfg.learner.eta = 0.3; // PA cap C
+    cfg.learner.passive_aggressive = true;
+    cfg.protocol = ProtocolConfig::Dynamic {
+        delta,
+        check_period: 1,
+    };
+    cfg.partial_sync = false;
+    cfg.lockstep = true;
+    cfg.recv_timeout_ms = 500;
+    cfg.max_retries = 2;
+    cfg.faults = Some(FaultPlanConfig {
+        seed: 13,
+        up: LinkFaultConfig {
+            corrupt: 1.0,
+            ..LinkFaultConfig::default()
+        },
+        down: LinkFaultConfig::default(),
+        workers: Some(vec![2]),
+    });
+    cfg.validate().unwrap();
+
+    let out = run_cluster(&cfg).unwrap();
+    assert_consistent(&out);
+    assert_eq!(
+        out.quarantine.len(),
+        1,
+        "exactly the corrupted worker is quarantined: {:?}",
+        out.quarantine
+    );
+    assert_eq!(out.quarantine[0].learner, 2, "wrong offender");
+    assert!(
+        out.quarantine[0].reason.contains("undecodable"),
+        "evidence should name the decode failure, got: {}",
+        out.quarantine[0].reason
+    );
+    assert!(
+        out.comm.syncs > 0,
+        "survivors never synchronized — the bound check would be vacuous"
+    );
+
+    // Survivor efficiency: evaluate the loss-form Prop. 6 bound and the
+    // fixed-size communication bound on the cluster outcome.
+    let measured = Outcome {
+        name: cfg.name.clone(),
+        learners: cfg.learners,
+        rounds: out.rounds,
+        cumulative_loss: out.cum_loss,
+        cumulative_error: out.cum_error,
+        cum_drift: 0.0, // unknown cluster-side; the drift-form check is skipped
+        cum_compression_err: out.cum_compression_err,
+        comm: out.comm.clone(),
+        partial_syncs: out.partial_syncs,
+        sync_cache: Default::default(),
+        series: vec![],
+        mean_svs: 0.0,
+        wall_secs: 0.0,
+    };
+    let rep = EfficiencyReport::evaluate(&measured, ETA_C, delta, 0, cfg.data.dim(), None);
+    let loss_form = rep
+        .checks
+        .iter()
+        .find(|c| c.name == "Prop6 events <= eta*L/sqrt(Delta)")
+        .expect("loss-form Prop6 check missing");
+    assert!(
+        loss_form.holds(),
+        "survivor events {} exceed the loss-proportional bound {}",
+        loss_form.measured,
+        loss_form.bound
+    );
+    let comm = rep
+        .checks
+        .iter()
+        .find(|c| c.name == "comm bound (fixed-size)")
+        .expect("fixed-size communication bound check missing");
+    assert!(
+        comm.holds(),
+        "survivor bytes {} exceed the loss-proportional communication bound {}",
+        comm.measured,
+        comm.bound
+    );
+}
+
+#[test]
+fn planned_churn_runs_clean_and_replays_bitwise() {
+    // Membership windows on a clean bus: a late joiner and an early
+    // leaver. No fault machinery may fire — churn is planned, not a
+    // failure — and the lockstep trajectory is deterministic.
+    let mut cfg = chaos_cfg("churn", 0.1);
+    cfg.churn = vec![
+        ChurnEntry {
+            worker: 1,
+            join: 5,
+            leave: 40,
+        },
+        ChurnEntry {
+            worker: 3,
+            join: 20,
+            leave: 60,
+        },
+    ];
+    cfg.validate().unwrap();
+    let a = run_cluster(&cfg).unwrap();
+    let b = run_cluster(&cfg).unwrap();
+    for out in [&a, &b] {
+        assert_consistent(out);
+        assert_eq!(out.rounds, cfg.rounds as u64);
+        assert_eq!(
+            out.robustness,
+            RobustnessStats::default(),
+            "planned churn must not trip the fault machinery"
+        );
+        assert!(out.quarantine.is_empty());
+        assert!(out.cum_loss > 0.0, "joined workers never played");
+    }
+    assert_comm_eq(&a.comm, &b.comm, "churn rerun");
+    assert_eq!(a.partial_syncs, b.partial_syncs);
+    assert_eq!(a.cum_loss.to_bits(), b.cum_loss.to_bits(), "loss replays bitwise");
+}
+
+#[test]
+fn free_running_drop_schedule_terminates() {
+    // No lockstep barrier to lean on: free-running workers under
+    // upstream loss. Dropped violations are simply lost events; dropped
+    // uploads ride the retry ladder. The run must still complete the
+    // full horizon with internally consistent accounting.
+    let mut cfg = pick_eventful("free", false, 1, 20);
+    cfg.lockstep = false;
+    cfg.recv_timeout_ms = 250;
+    cfg.max_retries = 2;
+    cfg.faults = Some(up_only(
+        31,
+        LinkFaultConfig {
+            drop: 0.2,
+            ..LinkFaultConfig::default()
+        },
+    ));
+    cfg.validate().unwrap();
+    let out = run_cluster(&cfg).unwrap();
+    assert_consistent(&out);
+    assert_eq!(out.rounds, cfg.rounds as u64);
+}

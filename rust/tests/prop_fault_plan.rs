@@ -1,0 +1,197 @@
+//! Property tests pinning the fault-injection plan's determinism
+//! contract: the action sequence of a link direction is a pure function
+//! of `(seed, link, direction, frame index)` — bitwise reproducible
+//! across calls and across threads, prefix-stable (one RNG draw per
+//! offered frame, so observing fewer frames never changes the fate of
+//! the ones that were offered), independent between links, and drawing
+//! only actions the configuration gives positive probability. Run with
+//! `KDOL_PROP_CASES=256` (the scheduled deep CI job does) for the wide
+//! matrix.
+
+use kdol::network::fault::{Dir, FaultAction, FaultPlan};
+use kdol::network::{FaultPlanConfig, LinkFaultConfig};
+use kdol::testing::{check, default_cases, gen};
+use kdol::util::{Pcg64, Rng};
+
+/// Random link config: probabilities drawn then scaled so their sum
+/// stays in [0, 1] (the one-draw-decides-the-frame invariant).
+fn link(rng: &mut Pcg64) -> LinkFaultConfig {
+    let raw: Vec<f64> = (0..5).map(|_| rng.uniform(0.0, 1.0)).collect();
+    let scale = rng.uniform(0.0, 1.0) / raw.iter().sum::<f64>().max(1e-12);
+    // Zero out a random subset so degenerate plans (clean links, one
+    // dominant fault) are covered too.
+    let keep: Vec<f64> = raw
+        .iter()
+        .map(|&p| if rng.f64() < 0.7 { p * scale } else { 0.0 })
+        .collect();
+    LinkFaultConfig {
+        drop: keep[0],
+        delay: keep[1],
+        delay_polls: gen::int(rng, 1, 8) as u32,
+        duplicate: keep[2],
+        reorder: keep[3],
+        corrupt: keep[4],
+    }
+}
+
+fn plan(rng: &mut Pcg64) -> FaultPlanConfig {
+    FaultPlanConfig {
+        seed: rng.below(u64::MAX),
+        up: link(rng),
+        down: link(rng),
+        workers: None,
+    }
+}
+
+fn dir(rng: &mut Pcg64) -> Dir {
+    if rng.f64() < 0.5 {
+        Dir::Up
+    } else {
+        Dir::Down
+    }
+}
+
+#[test]
+fn prop_trace_is_bitwise_reproducible() {
+    check("trace reproducible", default_cases(), |rng| {
+        let cfg = plan(rng);
+        let worker = gen::int(rng, 0, 15);
+        let d = dir(rng);
+        let n = gen::int(rng, 1, 512);
+        let a = FaultPlan::trace(&cfg, worker, d, n);
+        let b = FaultPlan::trace(&cfg, worker, d, n);
+        assert_eq!(a, b, "same (seed, link, dir) must replay identically");
+    });
+}
+
+#[test]
+fn prop_trace_is_prefix_stable() {
+    // Exactly one draw per offered frame: a shorter observation window
+    // is a strict prefix of a longer one, never a different sequence.
+    check("trace prefix-stable", default_cases(), |rng| {
+        let cfg = plan(rng);
+        let worker = gen::int(rng, 0, 15);
+        let d = dir(rng);
+        let n = gen::int(rng, 2, 512);
+        let k = gen::int(rng, 1, n - 1);
+        let long = FaultPlan::trace(&cfg, worker, d, n);
+        let short = FaultPlan::trace(&cfg, worker, d, k);
+        assert_eq!(short.as_slice(), &long[..k]);
+    });
+}
+
+#[test]
+fn prop_trace_matches_incremental_draws() {
+    // `trace` is exactly the sequence `next_action` produces — the bus's
+    // live draws and the suite's replayed traces can never diverge.
+    check("trace matches next_action", default_cases(), |rng| {
+        let cfg = plan(rng);
+        let worker = gen::int(rng, 0, 15);
+        let d = dir(rng);
+        let n = gen::int(rng, 1, 256);
+        let mut live = FaultPlan::for_link(&cfg, worker, d);
+        let drawn: Vec<FaultAction> = (0..n).map(|_| live.next_action()).collect();
+        assert_eq!(drawn, FaultPlan::trace(&cfg, worker, d, n));
+    });
+}
+
+#[test]
+fn prop_trace_is_identical_across_threads() {
+    // Thread scheduling must not leak into the fault sequence: the same
+    // trace computed concurrently on several threads is bitwise equal.
+    check("trace thread-independent", default_cases(), |rng| {
+        let cfg = plan(rng);
+        let worker = gen::int(rng, 0, 7);
+        let d = dir(rng);
+        let n = gen::int(rng, 1, 256);
+        let reference = FaultPlan::trace(&cfg, worker, d, n);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let cfg = cfg.clone();
+                std::thread::spawn(move || FaultPlan::trace(&cfg, worker, d, n))
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), reference);
+        }
+    });
+}
+
+#[test]
+fn prop_actions_respect_the_configuration() {
+    // Every drawn action must have positive configured probability, and
+    // a delay must hold for exactly `delay_polls` (reorder = one poll).
+    check("actions legal", default_cases(), |rng| {
+        let cfg = plan(rng);
+        let worker = gen::int(rng, 0, 15);
+        let d = dir(rng);
+        let side = match d {
+            Dir::Up => cfg.up,
+            Dir::Down => cfg.down,
+        };
+        for action in FaultPlan::trace(&cfg, worker, d, 512) {
+            match action {
+                FaultAction::Deliver => {}
+                FaultAction::Drop => assert!(side.drop > 0.0, "{side:?}"),
+                FaultAction::Duplicate => assert!(side.duplicate > 0.0, "{side:?}"),
+                FaultAction::Corrupt => assert!(side.corrupt > 0.0, "{side:?}"),
+                FaultAction::Delay(p) => {
+                    if p == 1 {
+                        assert!(
+                            side.reorder > 0.0 || (side.delay > 0.0 && side.delay_polls == 1),
+                            "{side:?}"
+                        );
+                    } else {
+                        assert!(
+                            side.delay > 0.0 && side.delay_polls == p,
+                            "delay({p}) from {side:?}"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_links_draw_from_independent_streams() {
+    // Changing the link or the direction reseeds the stream; changing
+    // the seed reshuffles every link. (Equality of two independent
+    // 256-draw traces is astronomically unlikely for any plan with at
+    // least one meaningfully probable fault, so require one.)
+    check("links independent", default_cases(), |rng| {
+        let mut cfg = plan(rng);
+        cfg.up.drop = cfg.up.drop.max(0.3);
+        cfg.down.drop = cfg.down.drop.max(0.3);
+        // Renormalize so the probabilities still sum to <= 1.
+        for side in [&mut cfg.up, &mut cfg.down] {
+            let sum = side.drop + side.delay + side.duplicate + side.reorder + side.corrupt;
+            if sum > 1.0 {
+                side.delay /= sum;
+                side.duplicate /= sum;
+                side.reorder /= sum;
+                side.corrupt /= sum;
+                side.drop /= sum;
+            }
+        }
+        let worker = gen::int(rng, 0, 7);
+        let a = FaultPlan::trace(&cfg, worker, Dir::Up, 256);
+        assert_ne!(
+            a,
+            FaultPlan::trace(&cfg, worker + 1, Dir::Up, 256),
+            "neighbouring links share a stream"
+        );
+        assert_ne!(
+            a,
+            FaultPlan::trace(&cfg, worker, Dir::Down, 256),
+            "directions share a stream"
+        );
+        let mut reseeded = cfg.clone();
+        reseeded.seed = cfg.seed.wrapping_add(1);
+        assert_ne!(
+            a,
+            FaultPlan::trace(&reseeded, worker, Dir::Up, 256),
+            "seed does not reach the stream"
+        );
+    });
+}
