@@ -1,0 +1,112 @@
+//! Serving-tier benchmarks: end-to-end load throughput and latency
+//! quantiles under snapshot swap churn at 1 vs 4 shards, plus the
+//! publish / hot-read / skipped-republish micro costs of the RCU
+//! snapshot cell.
+//!
+//! ```sh
+//! cargo bench --bench serve
+//! # machine-readable trajectory (cargo runs benches with cwd = rust/,
+//! # so give an absolute path to hit the committed repo-root skeleton):
+//! cargo bench --bench serve -- --json "$PWD/BENCH_8.json" --label post-PR8
+//! # CI smoke: tiny budget
+//! cargo bench --bench serve -- --budget-ms 50 --label ci-smoke --json /tmp/b.json
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use kdol::bench_util::{bench_for, black_box, report, BenchCli, BenchResult};
+use kdol::coordinator::serving::load::{run_load, seeded_model, LoadConfig};
+use kdol::coordinator::serving::snapshot::{SnapshotCell, SnapshotReader};
+
+fn main() {
+    let mut cli = BenchCli::from_env("serve", Duration::from_millis(300));
+    let budget = cli.budget;
+    // Each load scenario runs for about one bench budget of wall time.
+    let duration = budget.max(Duration::from_millis(40));
+
+    // --- end-to-end load: throughput + latency under swap churn -------------
+    for shards in [1usize, 4] {
+        let cfg = LoadConfig {
+            clients: 16,
+            shards,
+            duration,
+            seed: 7,
+            swap_every: Some(Duration::from_millis(10)),
+            dim: 8,
+            svs: 64,
+            gamma: 0.25,
+        };
+        let rep = run_load(&cfg).expect("serve load scenario");
+        let lat = rep.serving.latency;
+        let per_pred = if rep.predictions == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos((rep.elapsed.as_nanos() / rep.predictions as u128) as u64)
+        };
+        let thr = BenchResult {
+            name: format!("serve throughput shards={shards} clients=16"),
+            iters: rep.predictions as usize,
+            mean: per_pred,
+            p50: per_pred,
+            p99: per_pred,
+            min: per_pred,
+        };
+        println!(
+            "{} ({:.0} pred/s, {} swaps, {} skipped republishes)",
+            report(&thr),
+            rep.throughput_per_sec(),
+            rep.serving.swaps,
+            rep.serving.skipped_repads
+        );
+        cli.record(&thr);
+        let latr = BenchResult {
+            name: format!("serve latency shards={shards} clients=16"),
+            iters: lat.count as usize,
+            mean: Duration::from_nanos(lat.mean_ns),
+            p50: Duration::from_nanos(lat.p50_ns),
+            p99: Duration::from_nanos(lat.p99_ns),
+            // Per-query minima are not tracked by the histogram; p50 is
+            // the recorded floor proxy.
+            min: Duration::from_nanos(lat.p50_ns),
+        };
+        println!(
+            "{} (queue high-water {})",
+            report(&latr),
+            rep.serving.queue_high_water
+        );
+        cli.record(&latr);
+    }
+
+    // --- RCU snapshot cell micro costs ---------------------------------------
+    {
+        let model = seeded_model(1, 64, 18, 0.25);
+        let cell = Arc::new(SnapshotCell::new(model.clone(), None));
+        let r = bench_for("snapshot publish tau=64 (clone + swap)", budget, || {
+            black_box(cell.publish(model.clone(), None));
+        });
+        println!("{}", report(&r));
+        cli.record(&r);
+
+        let mut reader = SnapshotReader::new(Arc::clone(&cell));
+        let r = bench_for("snapshot read hot path (version check)", budget, || {
+            black_box(reader.snapshot().version);
+        });
+        println!("{}", report(&r));
+        cli.record(&r);
+
+        // Bitwise-identical republish: the skip must cost a comparison,
+        // not a snapshot construction.
+        let identical = seeded_model(1, 64, 18, 0.25);
+        let r = bench_for("snapshot republish identical tau=64", budget, || {
+            let skipped = cell
+                .publish_if_changed(identical.clone(), |_| Ok(None))
+                .expect("publish_if_changed");
+            black_box(skipped);
+        });
+        println!("{}", report(&r));
+        cli.record(&r);
+    }
+
+    cli.finish().expect("writing bench JSON");
+}

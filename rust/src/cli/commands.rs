@@ -279,7 +279,8 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "config", "preset", "protocol", "delta", "period", "check-period", "learners", "rounds",
         "seed", "partial", "threads", "kernel", "gamma", "rff-dim", "data", "dim", "drift",
-        "lockstep", "fault-plan", "retry", "recv-timeout", "churn",
+        "lockstep", "fault-plan", "retry", "recv-timeout", "churn", "serve-clients",
+        "serve-shards",
     ])?;
     let mut cfg = load_config(args)?;
     // Robustness overrides are cluster-only (the serial engine has no bus
@@ -297,6 +298,12 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     }
     if let Some(ms) = args.get_u64("recv-timeout")? {
         cfg.recv_timeout_ms = ms;
+    }
+    if let Some(n) = args.get_usize("serve-clients")? {
+        cfg.serve_clients = n;
+    }
+    if let Some(n) = args.get_usize("serve-shards")? {
+        cfg.serve_shards = n;
     }
     cfg.validate()?;
     let out = crate::coordinator::run_cluster(&cfg)?;
@@ -331,15 +338,60 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             println!("  worker {} @ round {}: {}", q.learner, q.round, q.reason);
         }
     }
+    if let Some(s) = &out.serving {
+        println!(
+            "serving tier     : {} predictions over {} shards ({} batches)",
+            s.served, s.shards, s.batches
+        );
+        println!("  latency        : {}", s.latency);
+        println!(
+            "  queue high-water {} / snapshot swaps {} / identical republishes skipped {}",
+            s.queue_high_water, s.swaps, s.skipped_repads
+        );
+    }
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.reject_unknown(&["artifacts", "variant", "requests"])?;
-    let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
-    let variant = args.get("variant").unwrap_or("susy").to_string();
-    let requests = args.get_usize("requests")?.unwrap_or(1024);
-    crate::cli::serve_demo(Path::new(&dir), &variant, requests)
+    args.reject_unknown(&[
+        "artifacts",
+        "variant",
+        "requests",
+        "clients",
+        "shards",
+        "duration-ms",
+        "seed",
+        "swap-every-ms",
+        "json",
+    ])?;
+    // The original XLA artifact demo stays reachable through its flags;
+    // the default `kdol serve` is the sharded load scenario.
+    if args.get("artifacts").is_some()
+        || args.get("variant").is_some()
+        || args.get("requests").is_some()
+    {
+        let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+        let variant = args.get("variant").unwrap_or("susy").to_string();
+        let requests = args.get_usize("requests")?.unwrap_or(1024);
+        return crate::cli::serve_demo(Path::new(&dir), &variant, requests);
+    }
+    let mut cfg = crate::coordinator::serving::load::LoadConfig::default();
+    if let Some(n) = args.get_usize("clients")? {
+        cfg.clients = n.max(1);
+    }
+    if let Some(n) = args.get_usize("shards")? {
+        cfg.shards = n.max(1);
+    }
+    if let Some(ms) = args.get_u64("duration-ms")? {
+        cfg.duration = std::time::Duration::from_millis(ms.max(1));
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(ms) = args.get_u64("swap-every-ms")? {
+        cfg.swap_every = (ms > 0).then(|| std::time::Duration::from_millis(ms));
+    }
+    crate::cli::serve_load(&cfg, args.get("json").map(Path::new))
 }
 
 fn cmd_artifacts(args: &Args) -> Result<()> {

@@ -16,7 +16,8 @@ COMMANDS:
     run           Run one experiment (config file or preset + overrides)
     bench         Reproduce a paper figure / ablation table
     cluster       Run the threaded leader/worker cluster runtime
-    serve         Batched prediction service demo over the XLA hot path
+    serve         Sharded serving-tier load scenario (or the XLA demo
+                  via --artifacts/--variant/--requests)
     artifacts     Validate the AOT artifacts (manifest + PJRT compile)
     help          Show this message
 
@@ -54,6 +55,9 @@ CLUSTER FLAGS:
     --churn <spec>         planned membership windows `worker:join..leave`
                            split by `;`, e.g. 1:10..50;2:30..100
                            (requires --lockstep)
+    --serve-clients <n>    closed-loop serving clients scoring the shared
+                           reference live during the run (0 = off) [0]
+    --serve-shards <n>     serving shards backing them (0 = one)   [0]
 
 BENCH FLAGS:
     bench <target>         fig1 | fig2 | headline | sweep-delta |
@@ -61,7 +65,15 @@ BENCH FLAGS:
     --scale <f>            fraction of the paper horizon        [1.0]
     --csv <file>           write series CSV
 
-SERVE FLAGS:
+SERVE FLAGS (load scenario — the default):
+    --clients <n>          closed-loop client threads           [64]
+    --shards <n>           serving shards                       [4]
+    --duration-ms <ms>     load duration                        [2000]
+    --seed <n>             scenario seed (model, queries, drift) [7]
+    --swap-every-ms <ms>   model-swap cadence (0 = no swaps)    [100]
+    --json <file>          write the result as a JSON bench point
+
+SERVE FLAGS (XLA artifact demo — any of these selects it):
     --artifacts <dir>      artifacts directory                  [artifacts]
     --variant <name>       shape variant                        [susy]
     --requests <n>         number of synthetic requests         [1024]
@@ -74,7 +86,10 @@ EXAMPLES:
                  --delta 0.3 --partial --lockstep
     kdol cluster --protocol dynamic --delta 0.2 --recv-timeout 400 --retry 3 \\
                  --fault-plan seed=7,up_drop=0.1,up_duplicate=0.05
+    kdol cluster --protocol dynamic --delta 0.2 --serve-clients 32 \\
+                 --serve-shards 4
     kdol bench fig2 --scale 0.25 --csv fig2.csv
+    kdol serve --clients 64 --shards 4 --duration-ms 2000
     kdol serve --requests 4096
 ";
 
@@ -88,6 +103,62 @@ pub fn main_with_args(argv: Vec<String>) -> i32 {
             1
         }
     }
+}
+
+/// Default `kdol serve`: the sharded serving-tier load scenario — seeded
+/// closed-loop clients hammer the tier while a swap thread publishes
+/// drifting models mid-run (see `coordinator::serving::load`). Reports
+/// throughput, latency quantiles and queue depth; optionally writes the
+/// result as a JSON bench point.
+pub fn serve_load(
+    cfg: &crate::coordinator::serving::load::LoadConfig,
+    json: Option<&std::path::Path>,
+) -> anyhow::Result<()> {
+    use std::fmt::Write as _;
+
+    let report = crate::coordinator::serving::load::run_load(cfg)?;
+    let s = &report.serving;
+    let lat = &s.latency;
+    println!("== kdol serve (load scenario) ==");
+    println!("clients         : {}", cfg.clients);
+    println!("shards          : {}", s.shards);
+    println!("predictions     : {}", report.predictions);
+    println!("wall time       : {:?}", report.elapsed);
+    println!("throughput      : {:.0} pred/s", report.throughput_per_sec());
+    println!("predict batches : {}", s.batches);
+    println!("latency         : {lat}");
+    println!("queue high-water: {}", s.queue_high_water);
+    println!(
+        "snapshot swaps  : {} ({} identical republishes skipped)",
+        s.swaps, s.skipped_repads
+    );
+    if let Some(path) = json {
+        let mut body = String::new();
+        let _ = writeln!(body, "{{");
+        let _ = writeln!(body, "  \"bench\": \"serve\",");
+        let _ = writeln!(body, "  \"clients\": {},", cfg.clients);
+        let _ = writeln!(body, "  \"shards\": {},", s.shards);
+        let _ = writeln!(body, "  \"duration_ms\": {},", cfg.duration.as_millis());
+        let _ = writeln!(body, "  \"seed\": {},", cfg.seed);
+        let _ = writeln!(body, "  \"predictions\": {},", report.predictions);
+        let _ = writeln!(
+            body,
+            "  \"throughput_per_sec\": {:.1},",
+            report.throughput_per_sec()
+        );
+        let _ = writeln!(body, "  \"p50_ns\": {},", lat.p50_ns);
+        let _ = writeln!(body, "  \"p90_ns\": {},", lat.p90_ns);
+        let _ = writeln!(body, "  \"p99_ns\": {},", lat.p99_ns);
+        let _ = writeln!(body, "  \"max_ns\": {},", lat.max_ns);
+        let _ = writeln!(body, "  \"mean_ns\": {},", lat.mean_ns);
+        let _ = writeln!(body, "  \"queue_high_water\": {},", s.queue_high_water);
+        let _ = writeln!(body, "  \"swaps\": {},", s.swaps);
+        let _ = writeln!(body, "  \"skipped_repads\": {}", s.skipped_repads);
+        let _ = writeln!(body, "}}");
+        std::fs::write(path, body)?;
+        eprintln!("bench point written to {}", path.display());
+    }
+    Ok(())
 }
 
 /// Serving demo used by `kdol serve`: stream synthetic SUSY-like queries

@@ -210,6 +210,13 @@ pub struct ExperimentConfig {
     /// workers play every round. Requires lockstep mode — the plan is
     /// round-synchronous and known to leader and workers alike.
     pub churn: Vec<ChurnEntry>,
+    /// Closed-loop serving clients scoring the shared reference *while*
+    /// the cluster trains (0 = no live serving tier). Requires an RBF
+    /// kernel model — the tier serves SV expansions. See
+    /// `coordinator::serving`.
+    pub serve_clients: usize,
+    /// Serving shards backing those clients (0 = one shard).
+    pub serve_shards: usize,
 }
 
 impl ExperimentConfig {
@@ -241,6 +248,8 @@ impl ExperimentConfig {
             max_retries: 2,
             faults: None,
             churn: Vec::new(),
+            serve_clients: 0,
+            serve_shards: 0,
         }
     }
 
@@ -302,6 +311,8 @@ impl ExperimentConfig {
             max_retries: 2,
             faults: None,
             churn: Vec::new(),
+            serve_clients: 0,
+            serve_shards: 0,
         }
     }
 
@@ -410,6 +421,9 @@ impl ExperimentConfig {
         }
         if self.recv_timeout_ms == 0 {
             bail!("recv_timeout_ms must be >= 1");
+        }
+        if self.serve_clients > 0 && !matches!(self.learner.kernel, KernelConfig::Rbf { .. }) {
+            bail!("serve_clients requires an RBF kernel model (the serving tier serves SvModels)");
         }
         if let Some(f) = &self.faults {
             f.validate(self.learners).map_err(|e| anyhow!(e))?;
@@ -522,6 +536,18 @@ impl ExperimentConfig {
                 bail!("max_retries must be >= 0");
             }
             cfg.max_retries = v as u32;
+        }
+        if let Some(v) = get_int(t, "serve_clients") {
+            if v < 0 {
+                bail!("serve_clients must be >= 0");
+            }
+            cfg.serve_clients = v as usize;
+        }
+        if let Some(v) = get_int(t, "serve_shards") {
+            if v < 0 {
+                bail!("serve_shards must be >= 0 (0 = one shard)");
+            }
+            cfg.serve_shards = v as usize;
         }
         if let Some(f) = t.get("faults").and_then(Value::as_table) {
             cfg.faults = Some(parse_faults(f)?);

@@ -33,12 +33,16 @@
 //! like any other protocol message; suppression is only enabled under an
 //! injected fault plan, so clean runs take the exact engine-parity paths.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::compression::Compressor;
 use crate::config::{ChurnEntry, ExperimentConfig, ProtocolConfig};
+use crate::coordinator::serving::load::ServeHarness;
+use crate::coordinator::serving::snapshot::SnapshotCell;
+use crate::coordinator::serving::{ServingConfig, ServingReport};
 use crate::data::build_streams;
 use crate::kernel::{LinearModel, Model, SvModel, SyncCacheStats, SyncGramCache};
 use crate::learner::build_learner;
@@ -73,6 +77,11 @@ pub struct ClusterOutcome {
     pub robustness: RobustnessStats,
     /// Evidence for every quarantined worker, in quarantine order.
     pub quarantine: Vec<QuarantineRecord>,
+    /// Live serving-tier report (`Some` only when `serve_clients > 0`):
+    /// closed-loop clients scored against the shared reference while the
+    /// cluster trained, adopting each full sync's model via RCU snapshot
+    /// swaps (see [`crate::coordinator::serving`]).
+    pub serving: Option<ServingReport>,
 }
 
 /// Run the full cluster: spawns workers, drives the leader loop, joins.
@@ -98,7 +107,32 @@ pub fn run_cluster(cfg: &ExperimentConfig) -> Result<ClusterOutcome> {
         }));
     }
 
-    let outcome = leader_loop(cfg, &bus);
+    // Optional live serving tier: closed-loop clients score against the
+    // shared reference (initially the zero function) while the cluster
+    // trains; the leader republishes after every sync event. Swaps ride
+    // the RCU snapshot cell — serving never blocks the protocol and the
+    // protocol never blocks serving.
+    let serve = if cfg.serve_clients > 0 {
+        let gamma = match cfg.learner.kernel {
+            crate::config::KernelConfig::Rbf { gamma } => gamma,
+            _ => bail!("serve_clients requires an RBF kernel model (SvModel serving tier)"),
+        };
+        let model = SvModel::new(crate::kernel::Kernel::Rbf { gamma }, cfg.data.dim());
+        let serving_cfg = ServingConfig {
+            shards: cfg.serve_shards.max(1),
+            ..ServingConfig::default()
+        };
+        Some(ServeHarness::start(
+            model,
+            cfg.serve_clients,
+            &serving_cfg,
+            cfg.seed,
+        ))
+    } else {
+        None
+    };
+
+    let outcome = leader_loop(cfg, &bus, serve.as_ref().map(ServeHarness::cell));
 
     // Always attempt shutdown, then join.
     // kdol-lint: allow(uncounted-control) — Shutdown is runtime control, never a protocol byte
@@ -109,9 +143,16 @@ pub fn run_cluster(cfg: &ExperimentConfig) -> Result<ClusterOutcome> {
             Err(_) => bail!("worker panicked"),
         }
     }
+    // Wind the serving tier down even when the leader failed — its client
+    // threads must never outlive the run.
+    let serving = match serve {
+        Some(harness) => Some(harness.finish()?.serving),
+        None => None,
+    };
     let mut outcome = outcome?;
     // The bus counter is only final once every worker thread has joined.
     outcome.robustness.faults_injected = bus.faults_injected();
+    outcome.serving = serving;
     Ok(outcome)
 }
 
@@ -177,6 +218,11 @@ struct Leader<'a> {
     /// The run's churn plan (leader-side copy; workers derive their own
     /// windows from the same config).
     churn: Vec<ChurnEntry>,
+    /// Publish-only handle on the live serving tier's snapshot cell
+    /// (`None` when no tier is attached). Bitwise-identical republishes
+    /// — the common case after a partial sync, which leaves the shared
+    /// reference untouched — are skipped inside the cell.
+    serving: Option<Arc<SnapshotCell>>,
 }
 
 /// Hard cap on how long the leader waits for co-violations after the
@@ -189,7 +235,11 @@ struct Leader<'a> {
 /// many would-be events into one.
 const CO_VIOLATION_WAIT: Duration = Duration::from_millis(2);
 
-fn leader_loop(cfg: &ExperimentConfig, bus: &Bus) -> Result<ClusterOutcome> {
+fn leader_loop(
+    cfg: &ExperimentConfig,
+    bus: &Bus,
+    serving: Option<Arc<SnapshotCell>>,
+) -> Result<ClusterOutcome> {
     let m = cfg.learners;
     let dim = cfg.data.dim();
     let is_kernel = build_learner(&cfg.learner, dim, 0)
@@ -247,6 +297,7 @@ fn leader_loop(cfg: &ExperimentConfig, bus: &Bus) -> Result<ClusterOutcome> {
         robust: RobustnessStats::default(),
         last_violation_round: vec![0; m],
         churn: cfg.churn.clone(),
+        serving,
     };
     if cfg.lockstep {
         leader.run_lockstep(cfg.rounds as u64)?;
@@ -268,6 +319,8 @@ fn leader_loop(cfg: &ExperimentConfig, bus: &Bus) -> Result<ClusterOutcome> {
         final_model: leader.final_model,
         robustness: leader.robust,
         quarantine: leader.evidence,
+        // Filled by `run_cluster` once the tier is wound down.
+        serving: None,
     })
 }
 
@@ -276,6 +329,23 @@ impl Leader<'_> {
     /// window (as observed via Join/Leave) and not quarantined.
     fn participant(&self, i: usize) -> bool {
         self.active[i] && !self.quarantined[i]
+    }
+
+    /// Hand the shared reference to the live serving tier (no-op without
+    /// one, or before the first full sync, or for non-kernel references).
+    /// Called at every sync-event boundary: after a full sync this swaps
+    /// the served snapshot; after a partial sync the reference is
+    /// unchanged, so the cell's bitwise short-circuit counts a skipped
+    /// republish instead of disturbing the shards. Publishing happens off
+    /// the protocol path and is never byte-accounted.
+    fn publish_serving_reference(&self) -> Result<()> {
+        let Some(cell) = &self.serving else {
+            return Ok(());
+        };
+        if let Some(k) = self.reference.as_ref().and_then(Model::as_kernel) {
+            cell.publish_if_changed(k.clone(), |_| Ok(None))?;
+        }
+        Ok(())
     }
 
     /// Whether the churn plan schedules worker `i` to run round `round`.
@@ -1190,6 +1260,9 @@ impl Leader<'_> {
         // Event boundary: machine-checked cache ↔ store coherence.
         self.decoder.debug_assert_cache_coherent(ug);
         self.comm.end_round();
+        // The reference did not move: the serving tier's cell turns this
+        // into a counted skipped republish, not a snapshot swap.
+        self.publish_serving_reference()?;
         Ok(true)
     }
 
@@ -1650,6 +1723,9 @@ impl Leader<'_> {
             // Event boundary: machine-checked cache ↔ store coherence.
             self.decoder.debug_assert_cache_coherent(cache);
         }
+        // Serve the freshly synchronized reference (RCU swap; shards
+        // adopt it at their next batch without blocking).
+        self.publish_serving_reference()?;
         Ok(())
     }
 }

@@ -154,13 +154,40 @@
 //! queued), so a joiner/leaver in flight can never deadlock a round; a
 //! Join/Leave that contradicts the plan is quarantine evidence.
 //!
-//! Also hosts the real-time [`service`]: the batched prediction service
-//! whose hot path executes the AOT XLA artifacts (Python never runs at
-//! request time).
+//! Also hosts the real-time prediction tier: the single-shard
+//! [`service`] facade (whose hot path executes the AOT XLA artifacts —
+//! Python never runs at request time) and the sharded [`serving`] tier
+//! behind it.
+//!
+//! # Serving snapshot lifecycle (publish → adopt → retire)
+//!
+//! Both serving front ends share one model-swap discipline, RCU-style
+//! (see [`serving::snapshot`]):
+//!
+//! ```text
+//! publish   The publisher (leader after a sync, `set_model*`, the
+//!           `kdol serve` swap thread) builds a complete snapshot —
+//!           model clone, cached SV norms, padded f32 tensors — OFF the
+//!           serving path, then swaps the cell's Arc pointer and bumps
+//!           the version (Release). A model bitwise-identical to the
+//!           served one is skipped before any construction
+//!           (`skipped_repads`); readers are not disturbed.
+//! adopt     Each shard's SnapshotReader notices the version moved (one
+//!           Acquire load per batch), clones the new Arc, and scores all
+//!           subsequent batches against it. A batch in flight keeps the
+//!           snapshot it started with — no torn models, every score is
+//!           attributable to exactly one published version.
+//! retire    Nothing is freed eagerly: the old snapshot lives until the
+//!           last Arc clone (the cell's slot, a mid-batch shard, a
+//!           facade) drops it. Publishing therefore never blocks
+//!           serving, and serving never blocks publishing.
+//! ```
 
 pub mod leader;
 pub mod service;
+pub mod serving;
 pub mod worker;
 
 pub use leader::{run_cluster, ClusterOutcome};
 pub use service::{PredictionService, ScorePath};
+pub use serving::{ServingConfig, ServingReport, ServingTier};

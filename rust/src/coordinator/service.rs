@@ -3,11 +3,22 @@
 //! the AOT XLA `predict` artifact (the PJRT hot path — Python never runs
 //! here); a native fallback serves models whose size exceeds the artifact
 //! budget or deployments without artifacts.
+//!
+//! Since the sharded tier landed (see [`crate::coordinator::serving`])
+//! this type is the *single-shard facade*: it keeps the submit/flush API
+//! every call site uses, but its model lives in an RCU
+//! [`SnapshotCell`], so a model swap builds the snapshot (clone +
+//! padded tensors) off the scoring path, bitwise-identical refreshes
+//! short-circuit (`skipped_repads`), and the hot path re-uses its queue
+//! and padding allocations instead of re-allocating per flush.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::coordinator::serving::snapshot::{ModelSnapshot, SnapshotCell};
 use crate::kernel::SvModel;
-use crate::runtime::{pad_expansion, pad_points, XlaRuntime};
+use crate::runtime::{pad_expansion, pad_points_into, ArtifactSpec, XlaRuntime};
 
 /// Which compute path scored a batch (exposed for tests / metrics).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,12 +30,21 @@ pub enum ScorePath {
 /// Batched scoring service over the current synchronized model.
 pub struct PredictionService {
     runtime: Option<XlaRuntime>,
-    model: SvModel,
+    /// `predict` entry-point spec, resolved once at construction (not
+    /// re-fetched per batch).
+    predict_spec: Option<ArtifactSpec>,
+    /// RCU cell holding the served snapshot (model + padded tensors).
+    cell: SnapshotCell,
+    /// The snapshot this facade scores against (adopted after publish).
+    snapshot: Arc<ModelSnapshot>,
     gamma: f32,
-    /// Padded model tensors, rebuilt on model swap (not per query).
-    padded: Option<(Vec<f32>, Vec<f32>)>,
     batch: usize,
     queue: Vec<Vec<f64>>,
+    /// Retired queue allocation; `flush` ping-pongs it with `queue` so
+    /// the outer Vec is reused instead of re-allocated per flush.
+    scratch: Vec<Vec<f64>>,
+    /// Reused padded-query buffer for the XLA path.
+    pad_buf: Vec<f32>,
     pub served: u64,
     pub xla_batches: u64,
     pub native_batches: u64,
@@ -35,58 +55,85 @@ pub struct PredictionService {
     /// synchronizations — the reference is unchanged but a balanced
     /// member's model moved (see [`crate::coordinator`] message flow).
     pub partial_refreshes: u64,
+    /// Sync refreshes whose model was bitwise-identical to the served
+    /// one: the snapshot (and its padded tensors) was kept, not rebuilt.
+    pub skipped_repads: u64,
 }
 
 impl PredictionService {
     /// Build over an optional XLA runtime; `gamma` must match the model's
     /// RBF bandwidth (the artifact takes it as a runtime input).
     pub fn new(runtime: Option<XlaRuntime>, model: SvModel, gamma: f64) -> Result<Self> {
-        let batch = match &runtime {
-            Some(rt) => rt.spec("predict")?.batch,
-            None => 8,
+        let predict_spec = match &runtime {
+            Some(rt) => Some(rt.spec("predict")?.clone()),
+            None => None,
         };
-        let mut svc = PredictionService {
+        let batch = predict_spec.as_ref().map_or(8, |s| s.batch);
+        let padded = Self::build_padded(predict_spec.as_ref(), &model)?;
+        let cell = SnapshotCell::new(model, padded);
+        let snapshot = cell.load();
+        Ok(PredictionService {
             runtime,
-            model,
+            predict_spec,
+            cell,
+            snapshot,
             gamma: gamma as f32,
-            padded: None,
             batch,
             queue: Vec::new(),
+            scratch: Vec::new(),
+            pad_buf: Vec::new(),
             served: 0,
             xla_batches: 0,
             native_batches: 0,
             full_refreshes: 0,
             partial_refreshes: 0,
-        };
-        svc.repad()?;
-        Ok(svc)
+            skipped_repads: 0,
+        })
+    }
+
+    /// Padded model tensors for the artifact path, when the model fits
+    /// the artifact's shape budget (`None` otherwise — native fallback).
+    fn build_padded(
+        spec: Option<&ArtifactSpec>,
+        model: &SvModel,
+    ) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        match spec {
+            Some(s) if model.len() <= s.tau && model.dim == s.d => {
+                Ok(Some(pad_expansion(model, s.tau)?))
+            }
+            _ => Ok(None),
+        }
     }
 
     /// Swap in a freshly synchronized model (e.g. after a protocol sync).
+    /// The snapshot is built before the publish; a concurrent reader of
+    /// the cell never observes a half-swapped model.
     pub fn set_model(&mut self, model: SvModel) -> Result<()> {
-        self.model = model;
-        self.repad()
+        let padded = Self::build_padded(self.predict_spec.as_ref(), &model)?;
+        self.cell.publish(model, padded);
+        self.snapshot = self.cell.load();
+        Ok(())
     }
 
     /// Swap in a model produced by a cluster synchronization, recording
     /// its provenance: `partial = true` for a subset-balancing (partial)
     /// sync, `false` for a full sync that replaced the shared reference.
+    /// A model bitwise-identical to the served one (common after partial
+    /// syncs, which leave the reference unchanged) skips the republish —
+    /// no padding rebuild — and bumps `skipped_repads` instead.
     pub fn set_model_from_sync(&mut self, model: SvModel, partial: bool) -> Result<()> {
         if partial {
             self.partial_refreshes += 1;
         } else {
             self.full_refreshes += 1;
         }
-        self.set_model(model)
-    }
-
-    fn repad(&mut self) -> Result<()> {
-        self.padded = None;
-        if let Some(rt) = &self.runtime {
-            let spec = rt.spec("predict")?;
-            if self.model.len() <= spec.tau && self.model.dim == spec.d {
-                self.padded = Some(pad_expansion(&self.model, spec.tau)?);
-            }
+        let spec = self.predict_spec.as_ref();
+        match self
+            .cell
+            .publish_if_changed(model, |m| Self::build_padded(spec, m))?
+        {
+            Some(_) => self.snapshot = self.cell.load(),
+            None => self.skipped_repads += 1,
         }
         Ok(())
     }
@@ -101,31 +148,37 @@ impl PredictionService {
         }
     }
 
-    /// Score all queued queries now (partial batch allowed).
+    /// Score all queued queries now (partial batch allowed). The drained
+    /// queue allocation is kept in `scratch` and swapped back in on the
+    /// next flush (steady state allocates no new queue storage).
     pub fn flush(&mut self) -> Result<Vec<(Vec<f64>, f64)>> {
         if self.queue.is_empty() {
             return Ok(Vec::new());
         }
-        let queries = std::mem::take(&mut self.queue);
+        let mut queries = std::mem::take(&mut self.scratch);
+        std::mem::swap(&mut queries, &mut self.queue);
         let (scores, _path) = self.score_batch(&queries)?;
         self.served += queries.len() as u64;
-        Ok(queries.into_iter().zip(scores).collect())
+        let out = queries.drain(..).zip(scores).collect();
+        self.scratch = queries;
+        Ok(out)
     }
 
     /// Score one batch, choosing the XLA path when available.
     pub fn score_batch(&mut self, queries: &[Vec<f64>]) -> Result<(Vec<f64>, ScorePath)> {
-        if let (Some(rt), Some((svs, alphas))) = (&self.runtime, &self.padded) {
-            let spec = rt.spec("predict")?;
-            if queries.len() <= spec.batch {
-                let (x, n) = pad_points(queries, spec.batch, spec.d)?;
-                let y = rt.predict(svs, alphas, &x, self.gamma)?;
-                self.xla_batches += 1;
-                return Ok((y[..n].iter().map(|&v| v as f64).collect(), ScorePath::Xla));
+        if let Some(spec) = &self.predict_spec {
+            if let (Some(rt), Some((svs, alphas))) = (&self.runtime, &self.snapshot.padded) {
+                if queries.len() <= spec.batch {
+                    let n = pad_points_into(queries, spec.batch, spec.d, &mut self.pad_buf)?;
+                    let y = rt.predict(svs, alphas, &self.pad_buf, self.gamma)?;
+                    self.xla_batches += 1;
+                    return Ok((y[..n].iter().map(|&v| v as f64).collect(), ScorePath::Xla));
+                }
             }
         }
         // Native fallback: one blocked GEMM-shaped sweep over the batch.
         self.native_batches += 1;
-        Ok((self.model.predict_batch(queries), ScorePath::Native))
+        Ok((self.snapshot.model.predict_batch(queries), ScorePath::Native))
     }
 
     pub fn batch_size(&self) -> usize {
@@ -185,6 +238,37 @@ mod tests {
         svc.set_model_from_sync(model(), true).unwrap();
         assert_eq!(svc.full_refreshes, 1);
         assert_eq!(svc.partial_refreshes, 2);
+    }
+
+    #[test]
+    fn identical_sync_refresh_skips_republish() {
+        let mut svc = PredictionService::new(None, model(), 0.5).unwrap();
+        // Bitwise-identical model: provenance is recorded, snapshot kept.
+        svc.set_model_from_sync(model(), true).unwrap();
+        assert_eq!(svc.skipped_repads, 1);
+        assert_eq!(svc.partial_refreshes, 1);
+        // A changed model still swaps and rescores.
+        let mut m2 = model();
+        m2.alpha_mut()[0] = 2.0;
+        svc.set_model_from_sync(m2.clone(), true).unwrap();
+        assert_eq!(svc.skipped_repads, 1);
+        let (scores, _) = svc.score_batch(&[vec![1.0, 0.0]]).unwrap();
+        assert_eq!(scores[0].to_bits(), m2.predict(&[1.0, 0.0]).to_bits());
+    }
+
+    #[test]
+    fn flush_reuses_queue_allocation() {
+        let mut svc = PredictionService::new(None, model(), 0.5).unwrap();
+        for round in 0..3 {
+            for i in 0..4 {
+                svc.submit(vec![i as f64 + round as f64, 0.0]).unwrap();
+            }
+            assert_eq!(svc.flush().unwrap().len(), 4);
+        }
+        // After the first two flushes the ping-pong is primed: both the
+        // live queue and the scratch carry capacity from earlier rounds.
+        assert!(svc.scratch.capacity() >= 4);
+        assert_eq!(svc.served, 12);
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! Seeded closed-loop load generation for the serving tier.
+//!
+//! Two entry points:
+//!
+//! * [`run_load`] — the self-contained `kdol serve` scenario: a seeded
+//!   synthetic model, N closed-loop client threads hammering the tier,
+//!   and a swap thread publishing drifted models mid-run (every drift is
+//!   published twice, so the bitwise-identical republish short-circuit
+//!   is exercised under live traffic, not just in unit tests).
+//! * [`ServeHarness`] — the embeddable half: clients + tier only, no
+//!   swapper and no fixed duration, so `kdol cluster` can serve while
+//!   the *leader* plays publisher after each synchronization.
+//!
+//! Everything is deterministic given the seed except wall-clock timing
+//! (how many predictions fit in the duration, where swaps land between
+//! batches); every *score* is pinned bitwise to whichever snapshot
+//! served it, which is what the stress tests check.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::kernel::{Kernel, SvModel};
+use crate::util::{Pcg64, Rng};
+
+use super::shard::Ticket;
+use super::snapshot::SnapshotCell;
+use super::{ServingConfig, ServingReport, ServingTier};
+
+/// `kdol serve` scenario knobs.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    pub clients: usize,
+    pub shards: usize,
+    pub duration: Duration,
+    pub seed: u64,
+    /// Cadence of mid-run model publishes (`None`: serve one model).
+    pub swap_every: Option<Duration>,
+    /// Synthetic model shape.
+    pub dim: usize,
+    pub svs: usize,
+    pub gamma: f64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            clients: 64,
+            shards: 4,
+            duration: Duration::from_millis(2000),
+            seed: 7,
+            swap_every: Some(Duration::from_millis(100)),
+            dim: 8,
+            svs: 64,
+            gamma: 0.25,
+        }
+    }
+}
+
+/// What a load run hands back.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Predictions completed by clients (equals `serving.served`: every
+    /// submit is awaited before the client re-checks the stop flag).
+    pub predictions: u64,
+    pub elapsed: Duration,
+    pub serving: ServingReport,
+}
+
+impl LoadReport {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.elapsed.is_zero() {
+            return 0.0;
+        }
+        self.predictions as f64 / self.elapsed.as_secs_f64()
+    }
+}
+
+/// Deterministic synthetic RBF expansion (no training loop — `kdol
+/// serve` measures the serving tier, not the learner).
+pub fn seeded_model(seed: u64, svs: usize, dim: usize, gamma: f64) -> SvModel {
+    let mut rng = Pcg64::new(seed, 13);
+    let mut m = SvModel::new(Kernel::Rbf { gamma }, dim);
+    let mut x = vec![0.0f64; dim];
+    for i in 0..svs {
+        for v in x.iter_mut() {
+            *v = rng.normal();
+        }
+        m.push(i as u64 + 1, &x, 0.5 * rng.normal());
+    }
+    m
+}
+
+/// Deterministic drift step `k`: rescale the dual weights. Distinct `k`
+/// (mod 8) give distinct models; equal `k` give bitwise-equal ones.
+fn drift(m: &mut SvModel, k: u64) {
+    let factor = 1.0 + 0.25 * ((k % 8) + 1) as f64;
+    for a in m.alpha_mut() {
+        *a *= factor;
+    }
+}
+
+/// Tier + closed-loop clients, running until [`ServeHarness::finish`].
+/// Publishing is the caller's business via [`ServeHarness::cell`].
+pub struct ServeHarness {
+    tier: Arc<ServingTier>,
+    stop: Arc<AtomicBool>,
+    clients: Vec<JoinHandle<Result<u64>>>,
+    started: Instant,
+}
+
+impl ServeHarness {
+    /// Spawn the tier and `clients` closed-loop client threads. Each
+    /// client owns stream `seed/1000+id` of the RNG, draws `model.dim`
+    /// uniforms per query, and blocks on its (reused) ticket — so
+    /// in-flight work is bounded by the client count.
+    pub fn start(model: SvModel, clients: usize, cfg: &ServingConfig, seed: u64) -> ServeHarness {
+        let dim = model.dim;
+        let tier = Arc::new(ServingTier::start(model, cfg));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::with_capacity(clients.max(1));
+        for client_id in 0..clients.max(1) as u64 {
+            let tier = Arc::clone(&tier);
+            let stop = Arc::clone(&stop);
+            handles.push(std::thread::spawn(move || -> Result<u64> {
+                let mut rng = Pcg64::new(seed, 1_000 + client_id);
+                let ticket = Ticket::new();
+                let mut query = vec![0.0f64; dim];
+                let mut count = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    for v in query.iter_mut() {
+                        *v = rng.uniform(-1.0, 1.0);
+                    }
+                    tier.submit(client_id, query.clone(), Arc::clone(&ticket))?;
+                    let _ = ticket.wait();
+                    count += 1;
+                }
+                Ok(count)
+            }));
+        }
+        ServeHarness {
+            tier,
+            stop,
+            clients: handles,
+            started: Instant::now(),
+        }
+    }
+
+    /// Publisher handle (the leader publishes through this after syncs).
+    pub fn cell(&self) -> Arc<SnapshotCell> {
+        self.tier.cell()
+    }
+
+    /// Stop the clients, drain and join the shards, fold the report.
+    pub fn finish(self) -> Result<LoadReport> {
+        self.stop.store(true, Ordering::Relaxed);
+        let mut predictions = 0u64;
+        for handle in self.clients {
+            predictions += handle
+                .join()
+                .map_err(|_| anyhow!("serve load client panicked"))??;
+        }
+        let elapsed = self.started.elapsed();
+        let tier = Arc::try_unwrap(self.tier)
+            .map_err(|_| anyhow!("serving tier still referenced at shutdown"))?;
+        let serving = tier.shutdown()?;
+        Ok(LoadReport {
+            predictions,
+            elapsed,
+            serving,
+        })
+    }
+}
+
+/// Run the full `kdol serve` load scenario (see module docs).
+pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport> {
+    let model = seeded_model(cfg.seed, cfg.svs, cfg.dim.max(1), cfg.gamma);
+    let base = model.clone();
+    let serving_cfg = ServingConfig {
+        shards: cfg.shards.max(1),
+        ..ServingConfig::default()
+    };
+    let harness = ServeHarness::start(model, cfg.clients, &serving_cfg, cfg.seed);
+    let stop = Arc::new(AtomicBool::new(false));
+    let swapper = cfg.swap_every.map(|every| {
+        let cell = harness.cell();
+        let stop = Arc::clone(&stop);
+        let every = every.max(Duration::from_millis(1));
+        std::thread::spawn(move || -> Result<()> {
+            let mut step = 0u64;
+            loop {
+                // Chunked sleep so shutdown is prompt even for long cadences.
+                let mut waited = Duration::ZERO;
+                while waited < every && !stop.load(Ordering::Relaxed) {
+                    let nap = (every - waited).min(Duration::from_millis(5));
+                    std::thread::sleep(nap);
+                    waited += nap;
+                }
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                // Each drift is published twice: the first swaps, the
+                // second is bitwise-identical and must be skipped.
+                let mut m = base.clone();
+                drift(&mut m, step / 2);
+                cell.publish_if_changed(m, |_| Ok(None))?;
+                step += 1;
+            }
+        })
+    });
+    std::thread::sleep(cfg.duration);
+    stop.store(true, Ordering::Relaxed);
+    if let Some(handle) = swapper {
+        handle
+            .join()
+            .map_err(|_| anyhow!("serve swap thread panicked"))??;
+    }
+    harness.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_model_is_deterministic() {
+        let a = seeded_model(7, 16, 4, 0.5);
+        let b = seeded_model(7, 16, 4, 0.5);
+        assert!(a.bitwise_eq(&b));
+        assert_eq!(a.len(), 16);
+        let c = seeded_model(8, 16, 4, 0.5);
+        assert!(!a.bitwise_eq(&c));
+    }
+
+    #[test]
+    fn load_run_serves_under_swap_churn() {
+        let cfg = LoadConfig {
+            clients: 4,
+            shards: 2,
+            duration: Duration::from_millis(300),
+            seed: 11,
+            swap_every: Some(Duration::from_millis(15)),
+            dim: 4,
+            svs: 8,
+            gamma: 0.5,
+        };
+        let report = run_load(&cfg).unwrap();
+        assert!(report.predictions > 0);
+        assert_eq!(report.serving.served, report.predictions);
+        assert_eq!(report.serving.latency.count, report.predictions);
+        assert_eq!(report.serving.shards, 2);
+        // ~20 swap ticks in 300ms; even a heavily loaded CI box lands a
+        // few, and every second tick is an exercised identical republish.
+        assert!(report.serving.swaps >= 1, "no swap landed mid-run");
+        assert!(
+            report.serving.skipped_repads >= 1,
+            "identical republish never skipped"
+        );
+        assert!(report.throughput_per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,218 @@
+//! Sharded, lock-free-read serving tier.
+//!
+//! Three layers, bottom-up:
+//!
+//! * [`snapshot`] — RCU-style model snapshots: publishers build off the
+//!   serving path and swap an `Arc` pointer; readers never block.
+//! * [`shard`] — per-shard bounded micro-batching queues draining into
+//!   native `predict_batch`, with per-query latency histograms.
+//! * [`ServingTier`] — owns the cell plus N shards, routes clients
+//!   deterministically (`client_id % shards`), and folds shard stats
+//!   into one [`ServingReport`] at shutdown.
+//!
+//! [`load`] adds the seeded closed-loop generator behind `kdol serve`
+//! and the cluster-mode harness.
+//!
+//! The tier deliberately does *not* replace
+//! [`crate::coordinator::PredictionService`]: that facade stays as the
+//! single-shard, XLA-capable front end used by `kdol predict`/`serve
+//! --artifacts`, now backed by the same [`snapshot::SnapshotCell`].
+
+pub mod load;
+pub mod shard;
+pub mod snapshot;
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::kernel::SvModel;
+use crate::metrics::{LatencyHistogram, LatencySummary};
+
+use shard::{run_shard, Shard, ShardStats, Ticket};
+use snapshot::{SnapshotCell, SnapshotReader};
+
+/// Knobs for a [`ServingTier`]. Defaults favor latency: small batches,
+/// a 50 µs micro-batch fill window, and a queue deep enough that
+/// backpressure only bites under real overload.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub shards: usize,
+    /// Micro-batch target per `predict_batch` call.
+    pub batch: usize,
+    /// Per-shard queue bound (submitters block beyond it).
+    pub queue_capacity: usize,
+    /// How long a shard waits for the batch to fill before flushing.
+    pub flush: Duration,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            shards: 1,
+            batch: 8,
+            queue_capacity: 1024,
+            flush: Duration::from_micros(50),
+        }
+    }
+}
+
+/// Aggregated serving-tier outcome, merged across shards at shutdown.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServingReport {
+    pub shards: usize,
+    /// Predictions fulfilled.
+    pub served: u64,
+    /// `predict_batch` calls issued.
+    pub batches: u64,
+    /// Snapshot swaps actually published.
+    pub swaps: u64,
+    /// Republishes skipped as bitwise-identical.
+    pub skipped_repads: u64,
+    /// Deepest any shard queue ever got.
+    pub queue_high_water: usize,
+    /// Queue-to-delivery latency, merged across shards.
+    pub latency: LatencySummary,
+}
+
+/// The sharded serving tier: one [`SnapshotCell`] shared by N shard
+/// workers. Scores are bitwise-equal to serial `predict_batch` at any
+/// shard count (see the [`shard`] module docs for why).
+pub struct ServingTier {
+    cell: Arc<SnapshotCell>,
+    shards: Vec<Arc<Shard>>,
+    handles: Vec<JoinHandle<ShardStats>>,
+}
+
+impl ServingTier {
+    /// Spawn the shard workers around an initial model.
+    pub fn start(model: SvModel, cfg: &ServingConfig) -> ServingTier {
+        let cell = Arc::new(SnapshotCell::new(model, None));
+        let n = cfg.shards.max(1);
+        let mut shards = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for _ in 0..n {
+            let shard = Arc::new(Shard::new(cfg.queue_capacity));
+            let reader = SnapshotReader::new(Arc::clone(&cell));
+            let worker_shard = Arc::clone(&shard);
+            let (batch, flush) = (cfg.batch, cfg.flush);
+            handles.push(std::thread::spawn(move || {
+                run_shard(&worker_shard, reader, batch, flush)
+            }));
+            shards.push(shard);
+        }
+        ServingTier {
+            cell,
+            shards,
+            handles,
+        }
+    }
+
+    /// Handle for publishers (the leader, a swap thread, a facade).
+    pub fn cell(&self) -> Arc<SnapshotCell> {
+        Arc::clone(&self.cell)
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Route a query to its client's home shard (deterministic:
+    /// `client_id % shards`). Blocks under backpressure.
+    pub fn submit(&self, client_id: u64, query: Vec<f64>, ticket: Arc<Ticket>) -> Result<()> {
+        let idx = (client_id % self.shards.len() as u64) as usize;
+        self.shards[idx].submit(query, ticket)
+    }
+
+    /// Publish a model unless it is bitwise-identical to the one being
+    /// served (native-only: shards carry no padded tensors).
+    pub fn publish(&self, model: SvModel) -> Result<Option<u64>> {
+        self.cell.publish_if_changed(model, |_| Ok(None))
+    }
+
+    /// Close every shard, drain queued work, join the workers, and merge
+    /// their stats.
+    pub fn shutdown(self) -> Result<ServingReport> {
+        for shard in &self.shards {
+            shard.close();
+        }
+        let mut report = ServingReport {
+            shards: self.shards.len(),
+            ..ServingReport::default()
+        };
+        let mut hist = LatencyHistogram::new();
+        for handle in self.handles {
+            let stats = handle
+                .join()
+                .map_err(|_| anyhow!("serving shard worker panicked"))?;
+            report.served += stats.served;
+            report.batches += stats.batches;
+            report.queue_high_water = report.queue_high_water.max(stats.queue_high_water);
+            hist.merge(&stats.latency);
+        }
+        report.swaps = self.cell.published();
+        report.skipped_repads = self.cell.skipped_repads();
+        report.latency = hist.summary();
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Kernel;
+
+    fn model(alpha: f64) -> SvModel {
+        let mut m = SvModel::new(Kernel::Rbf { gamma: 0.25 }, 3);
+        m.push(1, &[1.0, 0.0, -0.5], alpha);
+        m.push(2, &[-0.25, 2.0, 0.5], -alpha);
+        m
+    }
+
+    #[test]
+    fn tier_routes_serves_and_reports() {
+        let cfg = ServingConfig {
+            shards: 3,
+            ..ServingConfig::default()
+        };
+        let tier = ServingTier::start(model(1.0), &cfg);
+        assert_eq!(tier.shard_count(), 3);
+        let m = model(1.0);
+        let ticket = Ticket::new();
+        let mut scored = 0u64;
+        for client in 0..12u64 {
+            let q = vec![client as f64 * 0.2, -0.3, 0.7];
+            tier.submit(client, q.clone(), Arc::clone(&ticket)).unwrap();
+            let (score, version) = ticket.wait();
+            assert_eq!(version, 1);
+            assert_eq!(score.to_bits(), m.predict(&q).to_bits());
+            scored += 1;
+        }
+        let report = tier.shutdown().unwrap();
+        assert_eq!(report.shards, 3);
+        assert_eq!(report.served, scored);
+        assert_eq!(report.latency.count, scored);
+        assert!(report.batches >= 1 && report.batches <= scored);
+        assert_eq!(report.swaps, 0);
+        assert!(report.queue_high_water >= 1);
+    }
+
+    #[test]
+    fn publish_swaps_and_skips_identically() {
+        let tier = ServingTier::start(model(1.0), &ServingConfig::default());
+        assert_eq!(tier.publish(model(1.0)).unwrap(), None); // bitwise-identical
+        assert_eq!(tier.publish(model(2.0)).unwrap(), Some(2));
+        let m2 = model(2.0);
+        let ticket = Ticket::new();
+        tier.submit(0, vec![0.1, 0.2, 0.3], Arc::clone(&ticket))
+            .unwrap();
+        let (score, version) = ticket.wait();
+        assert_eq!(version, 2);
+        assert_eq!(score.to_bits(), m2.predict(&[0.1, 0.2, 0.3]).to_bits());
+        let report = tier.shutdown().unwrap();
+        assert_eq!(report.swaps, 1);
+        assert_eq!(report.skipped_repads, 1);
+    }
+}

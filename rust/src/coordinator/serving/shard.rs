@@ -1,0 +1,309 @@
+//! One serving shard: a bounded micro-batching queue plus the worker
+//! loop that drains it through [`SvModel::predict_batch`].
+//!
+//! # Determinism across shard counts
+//!
+//! A shard never changes *what* is computed, only *when*: each query is
+//! scored by `predict_batch` against one snapshot, and `predict_batch`
+//! guarantees `out[i]` is bitwise identical to `predict(&queries[i])`
+//! regardless of how the batch was composed (see `kernel/model.rs`).
+//! Sharding therefore only re-partitions queries into different batches
+//! — per-query scores are bitwise equal to the serial service at any
+//! shard count, the serving extension of the `util::par` contract. No
+//! float ever crosses a thread boundary except as a completed score
+//! handed to exactly one waiting [`Ticket`] (a handoff, not a
+//! reduction).
+//!
+//! # Why the shard path is native-only
+//!
+//! The XLA artifact runtime is a process-wide PJRT client owned by the
+//! single-shard [`crate::coordinator::PredictionService`] facade; it is
+//! not shareable across shard threads. Shards score through the native
+//! batched path, which is also the only path the bitwise contract above
+//! covers.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::serving::snapshot::SnapshotReader;
+use crate::metrics::LatencyHistogram;
+
+/// One-slot reply cell a client blocks on. Reusable: `wait` consumes the
+/// fulfilled `(score, snapshot_version)` so a closed-loop client can
+/// carry one ticket across its whole session.
+#[derive(Debug, Default)]
+pub struct Ticket {
+    slot: Mutex<Option<(f64, u64)>>,
+    ready: Condvar,
+}
+
+impl Ticket {
+    pub fn new() -> Arc<Ticket> {
+        Arc::new(Ticket::default())
+    }
+
+    /// Deliver a score attributed to the snapshot version that produced
+    /// it (the torn-model stress test checks the attribution).
+    pub fn fulfill(&self, score: f64, version: u64) {
+        let mut slot = self.slot.lock().unwrap_or_else(PoisonError::into_inner);
+        *slot = Some((score, version));
+        drop(slot);
+        self.ready.notify_one();
+    }
+
+    /// Block until fulfilled; consumes the reply.
+    pub fn wait(&self) -> (f64, u64) {
+        let mut slot = self.slot.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            if let Some(reply) = slot.take() {
+                return reply;
+            }
+            slot = self.ready.wait(slot).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+/// One queued query.
+struct Job {
+    query: Vec<f64>,
+    enqueued: Instant,
+    ticket: Arc<Ticket>,
+}
+
+struct ShardState {
+    queue: VecDeque<Job>,
+    /// Deepest the queue ever got (backpressure observability).
+    high_water: usize,
+    closed: bool,
+}
+
+/// Bounded MPSC queue feeding one shard worker. Submitters block when
+/// the queue is at capacity (backpressure, never unbounded memory); the
+/// worker blocks when it is empty. `close` drains-then-stops: every
+/// accepted job is still scored and fulfilled before the worker exits.
+pub struct Shard {
+    state: Mutex<ShardState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl Shard {
+    pub fn new(capacity: usize) -> Self {
+        Shard {
+            state: Mutex::new(ShardState {
+                queue: VecDeque::new(),
+                high_water: 0,
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Enqueue a query (blocks while the shard is at capacity).
+    pub fn submit(&self, query: Vec<f64>, ticket: Arc<Ticket>) -> Result<()> {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        while st.queue.len() >= self.capacity && !st.closed {
+            st = self.not_full.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        if st.closed {
+            bail!("serving shard is shut down");
+        }
+        st.queue.push_back(Job {
+            query,
+            enqueued: Instant::now(),
+            ticket,
+        });
+        st.high_water = st.high_water.max(st.queue.len());
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Stop accepting work and wake everyone; queued jobs still drain.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Deepest the queue ever got.
+    pub fn high_water(&self) -> usize {
+        self.state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .high_water
+    }
+
+    /// Take the next micro-batch: blocks for the first job, then gives
+    /// later submissions one bounded `flush` window to fill the batch up
+    /// to `target` before draining what is there. Returns `false` once
+    /// the shard is closed and fully drained (`out` left empty).
+    fn next_batch(&self, target: usize, flush: Duration, out: &mut Vec<Job>) -> bool {
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        while st.queue.is_empty() && !st.closed {
+            st = self.not_empty.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        if !st.closed && st.queue.len() < target {
+            let (guard, _timed_out) = self
+                .not_empty
+                .wait_timeout(st, flush)
+                .unwrap_or_else(PoisonError::into_inner);
+            st = guard;
+        }
+        let n = st.queue.len().min(target);
+        out.extend(st.queue.drain(..n));
+        let keep_running = !st.closed || !st.queue.is_empty() || !out.is_empty();
+        drop(st);
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        keep_running
+    }
+}
+
+/// What one shard hands back when it exits.
+pub struct ShardStats {
+    pub served: u64,
+    pub batches: u64,
+    pub queue_high_water: usize,
+    pub latency: LatencyHistogram,
+}
+
+/// The shard worker loop: refresh the snapshot (one atomic check — see
+/// [`SnapshotReader`]), drain a micro-batch, score it in one
+/// `predict_batch` call *outside* every lock, fulfill the tickets, and
+/// record per-query queue-to-delivery latency.
+pub fn run_shard(
+    shard: &Shard,
+    mut reader: SnapshotReader,
+    batch_target: usize,
+    flush: Duration,
+) -> ShardStats {
+    let target = batch_target.max(1);
+    let mut served = 0u64;
+    let mut batches = 0u64;
+    let mut latency = LatencyHistogram::new();
+    let mut jobs: Vec<Job> = Vec::with_capacity(target);
+    let mut queries: Vec<Vec<f64>> = Vec::with_capacity(target);
+    let mut replies: Vec<(Arc<Ticket>, Instant)> = Vec::with_capacity(target);
+    loop {
+        jobs.clear();
+        let keep_running = shard.next_batch(target, flush, &mut jobs);
+        if jobs.is_empty() {
+            if keep_running {
+                continue;
+            }
+            break;
+        }
+        let snap = Arc::clone(reader.snapshot());
+        queries.clear();
+        replies.clear();
+        for job in jobs.drain(..) {
+            queries.push(job.query);
+            replies.push((job.ticket, job.enqueued));
+        }
+        let scores = snap.model.predict_batch(&queries);
+        for ((ticket, enqueued), score) in replies.drain(..).zip(scores) {
+            ticket.fulfill(score, snap.version);
+            latency.record(enqueued.elapsed().as_nanos() as u64);
+            served += 1;
+        }
+        batches += 1;
+        if !keep_running {
+            break;
+        }
+    }
+    ShardStats {
+        served,
+        batches,
+        queue_high_water: shard.high_water(),
+        latency,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serving::snapshot::SnapshotCell;
+    use crate::kernel::{Kernel, SvModel};
+
+    fn model() -> SvModel {
+        let mut m = SvModel::new(Kernel::Rbf { gamma: 0.5 }, 2);
+        m.push(1, &[1.0, 0.0], 1.0);
+        m.push(2, &[-1.0, 0.0], -1.0);
+        m
+    }
+
+    #[test]
+    fn shard_scores_and_drains_on_close() {
+        let cell = Arc::new(SnapshotCell::new(model(), None));
+        let shard = Arc::new(Shard::new(64));
+        let reader = SnapshotReader::new(Arc::clone(&cell));
+        let worker = {
+            let shard = Arc::clone(&shard);
+            std::thread::spawn(move || run_shard(&shard, reader, 8, Duration::from_micros(50)))
+        };
+        let m = model();
+        let mut tickets = Vec::new();
+        let mut queries = Vec::new();
+        for i in 0..20 {
+            let q = vec![i as f64 * 0.1 - 1.0, 0.3];
+            let t = Ticket::new();
+            shard.submit(q.clone(), Arc::clone(&t)).unwrap();
+            tickets.push(t);
+            queries.push(q);
+        }
+        shard.close();
+        let stats = worker.join().unwrap();
+        assert_eq!(stats.served, 20, "close must drain accepted jobs");
+        assert!(stats.batches >= 1);
+        assert!(stats.queue_high_water >= 1);
+        assert_eq!(stats.latency.count(), 20);
+        for (t, q) in tickets.iter().zip(&queries) {
+            let (score, version) = t.wait();
+            assert_eq!(version, 1);
+            assert_eq!(score.to_bits(), m.predict(q).to_bits());
+        }
+    }
+
+    #[test]
+    fn submit_after_close_is_rejected() {
+        let shard = Shard::new(4);
+        shard.close();
+        assert!(shard.submit(vec![0.0], Ticket::new()).is_err());
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        let cell = Arc::new(SnapshotCell::new(model(), None));
+        let shard = Arc::new(Shard::new(2));
+        let reader = SnapshotReader::new(Arc::clone(&cell));
+        let worker = {
+            let shard = Arc::clone(&shard);
+            std::thread::spawn(move || run_shard(&shard, reader, 4, Duration::from_micros(10)))
+        };
+        // Many more submissions than capacity: submit blocks instead of
+        // growing the queue, and the high-water mark respects the bound.
+        let mut tickets = Vec::new();
+        for _ in 0..50 {
+            let t = Ticket::new();
+            shard.submit(vec![0.5, 0.5], Arc::clone(&t)).unwrap();
+            tickets.push(t);
+        }
+        for t in &tickets {
+            let _ = t.wait();
+        }
+        shard.close();
+        let stats = worker.join().unwrap();
+        assert_eq!(stats.served, 50);
+        assert!(stats.queue_high_water <= 2);
+    }
+}

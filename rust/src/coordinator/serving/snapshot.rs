@@ -1,0 +1,227 @@
+//! RCU-style model snapshots: the serving tier's read path.
+//!
+//! A [`ModelSnapshot`] is an immutable bundle of everything one
+//! prediction needs — the model (whose per-SV squared norms are already
+//! cached inside [`SvModel`], see `kernel/model.rs`), plus the prebuilt
+//! padded f32 tensors when an XLA artifact serves it. Snapshots are
+//! shared as `Arc<ModelSnapshot>` and swapped through a [`SnapshotCell`]:
+//! an `ArcSwap` equivalent built from `std::sync::atomic` + `Arc` only
+//! (the build is offline; no new dependencies), with the same
+//! discipline as `util::par` — no `unsafe`, and nothing float-valued
+//! ever crosses a thread boundary through the cell, only the pointer.
+//!
+//! # Why readers never block on a publish
+//!
+//! The expensive part of adopting a model — cloning the expansion,
+//! rebuilding padded tensors — happens in the *publisher*, before the
+//! cell is touched; readers keep serving the old `Arc` throughout. The
+//! swap itself is a pointer store under a `Mutex` whose critical section
+//! is pointer-sized (publishers: one `Arc` store + one atomic version
+//! bump; readers: one `Arc::clone`). Readers do not even take that lock
+//! on the hot path: a [`SnapshotReader`] caches the `Arc` and re-checks
+//! a single `AtomicU64` version (Acquire) per batch, locking only when
+//! the version moved. Retirement is `Arc` reference counting — the old
+//! snapshot is freed by whichever party drops the last clone, never
+//! while a shard is still scoring against it.
+//!
+//! # Skipped republishes
+//!
+//! Partial synchronizations leave the shared reference unchanged, so the
+//! model they hand the serving tier is frequently bit-identical to the
+//! one already served. [`SnapshotCell::publish_if_changed`] compares
+//! bitwise ([`SvModel::bitwise_eq`]) *before* constructing anything and
+//! counts the skip (`skipped_repads`) instead of rebuilding tensors and
+//! invalidating every reader's cache for a no-op swap.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+
+use anyhow::Result;
+
+use crate::kernel::SvModel;
+
+/// Immutable, shareable state one prediction batch runs against.
+#[derive(Debug)]
+pub struct ModelSnapshot {
+    pub model: SvModel,
+    /// Prebuilt `(svs, alphas)` f32 tensors for the XLA artifact path
+    /// (`None` on native-only deployments or over-budget models).
+    pub padded: Option<(Vec<f32>, Vec<f32>)>,
+    /// Publication sequence number (1-based; the initial snapshot is 1).
+    /// Scores can be attributed to exactly one published snapshot by this
+    /// version — the torn-model stress test relies on it.
+    pub version: u64,
+}
+
+/// Atomically swappable `Arc<ModelSnapshot>` + swap accounting.
+#[derive(Debug)]
+pub struct SnapshotCell {
+    /// Version of the snapshot in `slot` (Release-published after the
+    /// slot store; readers Acquire-load it as their staleness check).
+    version: AtomicU64,
+    slot: Mutex<Arc<ModelSnapshot>>,
+    published: AtomicU64,
+    skipped: AtomicU64,
+}
+
+impl SnapshotCell {
+    /// Wrap an initial model (version 1, padding built by `build_padded`).
+    pub fn new(model: SvModel, padded: Option<(Vec<f32>, Vec<f32>)>) -> Self {
+        SnapshotCell {
+            version: AtomicU64::new(1),
+            slot: Mutex::new(Arc::new(ModelSnapshot {
+                model,
+                padded,
+                version: 1,
+            })),
+            published: AtomicU64::new(0),
+            skipped: AtomicU64::new(0),
+        }
+    }
+
+    /// Clone out the current snapshot (pointer-sized critical section).
+    pub fn load(&self) -> Arc<ModelSnapshot> {
+        Arc::clone(&self.slot.lock().unwrap_or_else(PoisonError::into_inner))
+    }
+
+    /// Version of the currently published snapshot.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Snapshot swaps actually published.
+    pub fn published(&self) -> u64 {
+        self.published.load(Ordering::Relaxed)
+    }
+
+    /// Republishes skipped because the model was bitwise-identical.
+    pub fn skipped_repads(&self) -> u64 {
+        self.skipped.load(Ordering::Relaxed)
+    }
+
+    /// Unconditionally publish a new snapshot; returns its version.
+    /// The snapshot (model clone, padded tensors) is fully built before
+    /// the lock is taken — readers keep serving the old one until the
+    /// pointer store.
+    pub fn publish(&self, model: SvModel, padded: Option<(Vec<f32>, Vec<f32>)>) -> u64 {
+        let mut slot = self.slot.lock().unwrap_or_else(PoisonError::into_inner);
+        let version = self.version.load(Ordering::Relaxed) + 1;
+        *slot = Arc::new(ModelSnapshot {
+            model,
+            padded,
+            version,
+        });
+        self.version.store(version, Ordering::Release);
+        self.published.fetch_add(1, Ordering::Relaxed);
+        version
+    }
+
+    /// Publish unless `model` is bitwise-identical to the served one; the
+    /// identical case skips snapshot construction entirely (no padding
+    /// rebuild, no reader cache invalidation) and bumps `skipped_repads`.
+    /// `build_padded` runs only when a swap actually happens. Returns the
+    /// new version, or `None` on a skip.
+    pub fn publish_if_changed<F>(&self, model: SvModel, build_padded: F) -> Result<Option<u64>>
+    where
+        F: FnOnce(&SvModel) -> Result<Option<(Vec<f32>, Vec<f32>)>>,
+    {
+        if self.load().model.bitwise_eq(&model) {
+            self.skipped.fetch_add(1, Ordering::Relaxed);
+            return Ok(None);
+        }
+        let padded = build_padded(&model)?;
+        Ok(Some(self.publish(model, padded)))
+    }
+}
+
+/// Read-side cache: one Acquire load per [`SnapshotReader::snapshot`]
+/// call on the hot path; the cell's lock is taken only when the version
+/// moved since the last call.
+pub struct SnapshotReader {
+    cell: Arc<SnapshotCell>,
+    seen: u64,
+    cached: Arc<ModelSnapshot>,
+}
+
+impl SnapshotReader {
+    pub fn new(cell: Arc<SnapshotCell>) -> Self {
+        let cached = cell.load();
+        SnapshotReader {
+            seen: cached.version,
+            cached,
+            cell,
+        }
+    }
+
+    /// The current snapshot, refreshed if a newer one was published.
+    #[inline]
+    pub fn snapshot(&mut self) -> &Arc<ModelSnapshot> {
+        if self.cell.version.load(Ordering::Acquire) != self.seen {
+            self.cached = self.cell.load();
+            self.seen = self.cached.version;
+        }
+        &self.cached
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Kernel;
+
+    fn model(alpha: f64) -> SvModel {
+        let mut m = SvModel::new(Kernel::Rbf { gamma: 0.5 }, 2);
+        m.push(1, &[1.0, 0.0], alpha);
+        m
+    }
+
+    #[test]
+    fn publish_bumps_version_and_reader_adopts() {
+        let cell = Arc::new(SnapshotCell::new(model(1.0), None));
+        let mut reader = SnapshotReader::new(Arc::clone(&cell));
+        assert_eq!(reader.snapshot().version, 1);
+        let v = cell.publish(model(2.0), None);
+        assert_eq!(v, 2);
+        assert_eq!(reader.snapshot().version, 2);
+        assert_eq!(reader.snapshot().model.alpha()[0], 2.0);
+        assert_eq!(cell.published(), 1);
+    }
+
+    #[test]
+    fn identical_republish_is_skipped_without_building() {
+        let cell = SnapshotCell::new(model(1.0), None);
+        let mut built = 0;
+        let r = cell
+            .publish_if_changed(model(1.0), |_| {
+                built += 1;
+                Ok(None)
+            })
+            .unwrap();
+        assert_eq!(r, None);
+        assert_eq!(built, 0, "identical model must skip construction");
+        assert_eq!(cell.skipped_repads(), 1);
+        assert_eq!(cell.published(), 0);
+        assert_eq!(cell.version(), 1);
+        // A genuinely different model still swaps (and builds).
+        let r = cell
+            .publish_if_changed(model(3.0), |_| {
+                built += 1;
+                Ok(None)
+            })
+            .unwrap();
+        assert_eq!(r, Some(2));
+        assert_eq!(built, 1);
+        assert_eq!(cell.published(), 1);
+    }
+
+    #[test]
+    fn old_snapshot_survives_until_dropped() {
+        let cell = SnapshotCell::new(model(1.0), None);
+        let held = cell.load();
+        cell.publish(model(2.0), None);
+        // The retired snapshot is still fully usable by its holder.
+        assert_eq!(held.version, 1);
+        assert_eq!(held.model.alpha()[0], 1.0);
+        assert_eq!(cell.load().version, 2);
+    }
+}

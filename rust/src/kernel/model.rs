@@ -326,6 +326,30 @@ impl SvModel {
         (self_norm_sq + other_norm_sq - 2.0 * self.inner(other)).max(0.0)
     }
 
+    /// Bitwise structural equality: same kernel, dim, ids, and
+    /// bit-identical coefficients and SV coordinates. Used by the serving
+    /// tier to skip snapshot construction when a partial synchronization
+    /// republishes an unchanged reference — `==` on the floats would also
+    /// equate `0.0`/`-0.0` and reject `NaN == NaN`, neither of which is
+    /// the "is this the same bytes we already serve" question.
+    pub fn bitwise_eq(&self, other: &SvModel) -> bool {
+        self.kernel == other.kernel
+            && self.dim == other.dim
+            && self.ids == other.ids
+            && self.alpha.len() == other.alpha.len()
+            && self.xs.len() == other.xs.len()
+            && self
+                .alpha
+                .iter()
+                .zip(&other.alpha)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+            && self
+                .xs
+                .iter()
+                .zip(&other.xs)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+
     /// Replace the whole expansion (used when adopting a synchronized
     /// model from the coordinator).
     pub fn replace_with(&mut self, other: &SvModel) {
@@ -690,5 +714,29 @@ mod tests {
         let id = make_sv_id(3, 77);
         assert_ne!(make_sv_id(2, 77), id);
         assert_ne!(make_sv_id(3, 78), id);
+    }
+
+    #[test]
+    fn bitwise_eq_discriminates() {
+        let mut a = SvModel::new(rbf(), 2);
+        a.push(1, &[1.0, 2.0], 0.5);
+        a.push(2, &[-1.0, 0.5], -0.25);
+        assert!(a.bitwise_eq(&a.clone()));
+        let mut b = a.clone();
+        b.alpha_mut()[0] = 0.5 + f64::EPSILON; // one-ulp coefficient change
+        assert!(!a.bitwise_eq(&b));
+        let mut c = a.clone();
+        c.swap_remove(1);
+        assert!(!a.bitwise_eq(&c));
+        let mut d = SvModel::new(rbf(), 2);
+        d.push(9, &[1.0, 2.0], 0.5); // same coords, different id
+        d.push(2, &[-1.0, 0.5], -0.25);
+        assert!(!a.bitwise_eq(&d));
+        // -0.0 vs 0.0 differ bitwise even though they compare ==.
+        let mut e = a.clone();
+        e.alpha_mut()[1] = 0.0;
+        let mut f = a.clone();
+        f.alpha_mut()[1] = -0.0;
+        assert!(!e.bitwise_eq(&f));
     }
 }

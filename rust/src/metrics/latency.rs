@@ -1,0 +1,256 @@
+//! Dependency-free log-bucketed latency histogram for the serving tier.
+//!
+//! Values (nanoseconds) land in power-of-two octaves subdivided into 16
+//! linear sub-buckets, so any recorded value is attributed with ≤ 1/16
+//! (6.25%) relative error while the whole range of `u64` fits in 976
+//! fixed `u64` counters — no allocation after construction, `record` is
+//! a couple of bit operations and one increment. Histograms from
+//! different shards merge by element-wise addition (the bucket layout is
+//! static), which is how the serving tier aggregates per-shard latency
+//! without any cross-thread shared state: each shard owns its histogram
+//! and the tier merges them after the shard threads have joined.
+//!
+//! Quantiles are answered by a cumulative walk and reported as the
+//! bucket's lower bound (deterministic, never overstates); `max` and
+//! `sum` are tracked exactly alongside.
+
+/// log2 of the linear sub-buckets per octave.
+const SUB_BITS: u32 = 4;
+/// Linear sub-buckets per octave.
+const SUB: usize = 1 << SUB_BITS;
+/// Total buckets: values `0..SUB` get exact buckets, then one octave of
+/// `SUB` sub-buckets per remaining bit of `u64` magnitude.
+const BUCKETS: usize = (64 - SUB_BITS as usize) * SUB + SUB;
+
+/// Mergeable log-bucketed histogram of `u64` samples (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u128,
+    max: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Bucket index of a sample: exact below `SUB`, then
+/// `octave * SUB + sub` where `sub` is the `SUB_BITS` bits under the
+/// leading one — the classic HDR layout.
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let octave = (msb - SUB_BITS + 1) as usize;
+    let sub = ((v >> (msb - SUB_BITS)) as usize) & (SUB - 1);
+    octave * SUB + sub
+}
+
+/// Lower bound of bucket `i` (inverse of [`bucket_index`]).
+#[inline]
+fn bucket_floor(i: usize) -> u64 {
+    let octave = i / SUB;
+    let sub = (i % SUB) as u64;
+    if octave == 0 {
+        sub
+    } else {
+        ((SUB as u64) | sub) << (octave - 1)
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0,
+            max: 0,
+        }
+    }
+
+    /// Record one sample (nanoseconds).
+    #[inline]
+    pub fn record(&mut self, ns: u64) {
+        self.counts[bucket_index(ns)] += 1;
+        self.count += 1;
+        self.sum += ns as u128;
+        self.max = self.max.max(ns);
+    }
+
+    /// Fold another histogram in (element-wise; exact).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact maximum recorded sample (0 when empty).
+    pub fn max_ns(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of all samples, rounded down (0 when empty).
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            (self.sum / self.count as u128) as u64
+        }
+    }
+
+    /// Quantile `q` in [0, 1]: the lower bound of the bucket holding the
+    /// `ceil(q * count)`-th smallest sample (0 when empty). Within ≤ 1/16
+    /// relative of the true order statistic by the bucket geometry.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_floor(i);
+            }
+        }
+        self.max
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.count,
+            p50_ns: self.quantile(0.50),
+            p90_ns: self.quantile(0.90),
+            p99_ns: self.quantile(0.99),
+            max_ns: self.max,
+            mean_ns: self.mean_ns(),
+        }
+    }
+}
+
+/// Compact summary of one histogram (what reports and benches carry).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub p50_ns: u64,
+    pub p90_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+    pub mean_ns: u64,
+}
+
+impl std::fmt::Display for LatencySummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "p50 {:.1}us  p90 {:.1}us  p99 {:.1}us  max {:.1}us  mean {:.1}us ({} samples)",
+            self.p50_ns as f64 / 1e3,
+            self.p90_ns as f64 / 1e3,
+            self.p99_ns as f64 / 1e3,
+            self.max_ns as f64 / 1e3,
+            self.mean_ns as f64 / 1e3,
+            self.count
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_roundtrip_bounds_error() {
+        // Every sample's reported bucket floor is <= the sample and within
+        // 1/16 relative below it (exact under SUB).
+        let probes: Vec<u64> = (0..64)
+            .flat_map(|b| {
+                let v = 1u64 << b;
+                [v, v + 1, v + (v >> 1), v.saturating_mul(2).saturating_sub(1)]
+            })
+            .chain(0..64)
+            .collect();
+        for v in probes {
+            let f = bucket_floor(bucket_index(v));
+            assert!(f <= v, "floor {f} > value {v}");
+            if v >= SUB as u64 {
+                assert!((v - f) as f64 <= v as f64 / SUB as f64, "v={v} floor={f}");
+            } else {
+                assert_eq!(f, v);
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_floors_monotone() {
+        for i in 1..BUCKETS {
+            assert!(bucket_floor(i) > bucket_floor(i - 1), "bucket {i}");
+        }
+    }
+
+    #[test]
+    fn quantiles_and_max_on_uniform_ramp() {
+        let mut h = LatencyHistogram::new();
+        for v in 1..=1000u64 {
+            h.record(v * 1000); // 1us..1ms ramp
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.max_ns(), 1_000_000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= 500_000 && p50 >= 500_000 * 15 / 16, "p50={p50}");
+        assert!(p99 <= 990_000 && p99 >= 990_000 * 15 / 16, "p99={p99}");
+        assert!(h.quantile(1.0) <= h.max_ns());
+        let mean = h.mean_ns();
+        assert!((mean as i64 - 500_500).abs() < 2, "mean={mean}");
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        let s = h.summary();
+        assert_eq!(s, LatencySummary::default());
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut both = LatencyHistogram::new();
+        for v in [0u64, 3, 17, 900, 1_000_000, u64::MAX] {
+            a.record(v);
+            both.record(v);
+        }
+        for v in [5u64, 5, 123_456, 42] {
+            b.record(v);
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.max_ns(), both.max_ns());
+        assert_eq!(a.mean_ns(), both.mean_ns());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), both.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn display_formats() {
+        let mut h = LatencyHistogram::new();
+        h.record(1500);
+        let s = format!("{}", h.summary());
+        assert!(s.contains("p99"));
+        assert!(s.contains("1 samples"));
+    }
+}

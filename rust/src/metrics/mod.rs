@@ -3,8 +3,10 @@
 //! efficiency-criterion checks (Def. 1 / Prop. 6 / Thm. 7 bounds).
 
 pub mod efficiency;
+pub mod latency;
 pub mod recorder;
 pub mod report;
 
 pub use efficiency::{BoundCheck, EfficiencyReport};
+pub use latency::{LatencyHistogram, LatencySummary};
 pub use recorder::{MetricsRecorder, Outcome, Sample};

@@ -13,4 +13,4 @@ mod padding;
 
 pub use artifact::{load_manifest, ArtifactSpec};
 pub use client::XlaRuntime;
-pub use padding::{pad_expansion, pad_points};
+pub use padding::{pad_expansion, pad_points, pad_points_into};

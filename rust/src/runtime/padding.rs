@@ -32,22 +32,38 @@ pub fn pad_expansion(model: &SvModel, tau: usize) -> Result<(Vec<f32>, Vec<f32>)
 /// (their outputs are ignored by the caller). Returns the flat array and
 /// the true row count.
 pub fn pad_points(points: &[Vec<f64>], batch: usize, d: usize) -> Result<(Vec<f32>, usize)> {
+    let mut flat = Vec::new();
+    let n = pad_points_into(points, batch, d, &mut flat)?;
+    Ok((flat, n))
+}
+
+/// [`pad_points`] into a caller-owned buffer: `out` is cleared and
+/// refilled, so a serving loop that pads one batch per flush reuses one
+/// allocation instead of building a fresh `batch * d` array per call.
+/// Returns the true row count.
+pub fn pad_points_into(
+    points: &[Vec<f64>],
+    batch: usize,
+    d: usize,
+    out: &mut Vec<f32>,
+) -> Result<usize> {
     if points.len() > batch {
         bail!(
             "query batch {} exceeds artifact batch {batch}",
             points.len()
         );
     }
-    let mut flat = vec![0.0f32; batch * d];
+    out.clear();
+    out.resize(batch * d, 0.0f32);
     for (i, p) in points.iter().enumerate() {
         if p.len() != d {
             bail!("point {i} has dim {} != {d}", p.len());
         }
         for (j, &v) in p.iter().enumerate() {
-            flat[i * d + j] = v as f32;
+            out[i * d + j] = v as f32;
         }
     }
-    Ok((flat, points.len()))
+    Ok(points.len())
 }
 
 #[cfg(test)]
@@ -82,5 +98,19 @@ mod tests {
         assert!(pad_points(&[vec![1.0]], 4, 2).is_err()); // dim mismatch
         let too_many: Vec<Vec<f64>> = (0..5).map(|_| vec![1.0, 2.0]).collect();
         assert!(pad_points(&too_many, 4, 2).is_err()); // too many
+    }
+
+    #[test]
+    fn pad_points_into_reuses_and_clears() {
+        let mut buf = vec![7.0f32; 2]; // stale garbage, wrong length
+        let n = pad_points_into(&[vec![1.0, 2.0]], 3, 2, &mut buf).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(buf, vec![1.0, 2.0, 0.0, 0.0, 0.0, 0.0]);
+        // Refill with fewer points: old rows must not leak through.
+        let cap = buf.capacity();
+        let n = pad_points_into(&[], 3, 2, &mut buf).unwrap();
+        assert_eq!(n, 0);
+        assert_eq!(buf, vec![0.0; 6]);
+        assert_eq!(buf.capacity(), cap); // the allocation survived
     }
 }

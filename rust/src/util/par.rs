@@ -17,6 +17,13 @@
 //!
 //! Built on `std::thread::scope` only — the build environment is offline,
 //! so no rayon/crossbeam.
+//!
+//! The serving tier (`coordinator::serving`) reuses this disjoint-
+//! partition discipline one level up: shards own disjoint queues, each
+//! score is computed serially by exactly one shard and crosses threads
+//! only as a completed value handed to its ticket — never a reduction.
+//! Shard micro-batches sit far below [`PAR_MIN_ELEMS`], so a nested
+//! `predict_batch` inside a shard stays on the serial path here.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

@@ -1,0 +1,154 @@
+//! Serving-tier stress tests: submit/flush hammering against concurrent
+//! snapshot publishes.
+//!
+//! The contracts under fire (see `coordinator/serving/`):
+//!
+//! * **No torn models.** Every fulfilled score is attributable to exactly
+//!   one published snapshot: the `(score, version)` pair a client gets
+//!   back must bitwise-match what *that* version's model predicts for the
+//!   query. A half-swapped model would produce a score matching no
+//!   published version.
+//! * **No stall.** Publishing never blocks serving: clients complete a
+//!   fixed amount of work while the publisher churns through swaps.
+//! * **Shard-count invariance.** Per-query scores are bitwise-equal to
+//!   serial `predict_batch` (and to the single-shard facade's native
+//!   path) at any shard count.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use kdol::coordinator::serving::load::seeded_model;
+use kdol::coordinator::serving::shard::Ticket;
+use kdol::coordinator::{PredictionService, ScorePath, ServingConfig, ServingTier};
+use kdol::kernel::{Kernel, SvModel};
+use kdol::util::{Pcg64, Rng};
+
+/// Single-SV RBF model; distinct `alpha` values give distinct (and thus
+/// bitwise-distinguishable) scores for any fixed probe query.
+fn probe_model(alpha: f64) -> SvModel {
+    let mut m = SvModel::new(Kernel::Rbf { gamma: 0.5 }, 4);
+    m.push(1, &[0.5, -0.5, 0.25, 1.0], alpha);
+    m
+}
+
+#[test]
+fn hammer_never_observes_torn_model_and_never_stalls() {
+    const CLIENTS: u64 = 4;
+    const ITERS: usize = 1000;
+    let probe = vec![0.4, -0.2, 0.9, 0.1];
+    let models: Vec<SvModel> = (0..10).map(|k| probe_model(0.25 + 0.5 * k as f64)).collect();
+
+    // version -> the only score bits that version may ever produce.
+    let mut expect: HashMap<u64, u64> = HashMap::new();
+    expect.insert(1, models[0].predict(&probe).to_bits());
+
+    let cfg = ServingConfig {
+        shards: 2,
+        batch: 4,
+        ..ServingConfig::default()
+    };
+    let tier = Arc::new(ServingTier::start(models[0].clone(), &cfg));
+
+    let mut clients = Vec::new();
+    for client in 0..CLIENTS {
+        let tier = Arc::clone(&tier);
+        let probe = probe.clone();
+        clients.push(std::thread::spawn(move || {
+            let ticket = Ticket::new();
+            let mut seen = Vec::with_capacity(ITERS);
+            for _ in 0..ITERS {
+                tier.submit(client, probe.clone(), Arc::clone(&ticket))
+                    .unwrap();
+                seen.push(ticket.wait());
+            }
+            seen
+        }));
+    }
+
+    // Publish the remaining nine models while the clients hammer away.
+    for m in &models[1..] {
+        let v = tier
+            .publish(m.clone())
+            .unwrap()
+            .expect("distinct model must swap, not skip");
+        expect.insert(v, m.predict(&probe).to_bits());
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // The joins themselves are the no-stall check: every client finishes
+    // its fixed workload despite the concurrent swap churn.
+    let mut total = 0u64;
+    for handle in clients {
+        for (score, version) in handle.join().unwrap() {
+            let want = expect
+                .get(&version)
+                .unwrap_or_else(|| panic!("score attributed to unpublished version {version}"));
+            assert_eq!(
+                score.to_bits(),
+                *want,
+                "torn model: score does not match snapshot v{version}"
+            );
+            total += 1;
+        }
+    }
+    assert_eq!(total, CLIENTS * ITERS as u64);
+
+    let tier = Arc::try_unwrap(tier).unwrap_or_else(|_| panic!("tier still referenced"));
+    let report = tier.shutdown().unwrap();
+    assert_eq!(report.served, total);
+    assert_eq!(report.latency.count, total);
+    assert_eq!(report.swaps, 9);
+    assert_eq!(report.skipped_repads, 0);
+    assert!(report.queue_high_water >= 1);
+    assert!(report.latency.max_ns >= report.latency.p50_ns);
+}
+
+#[test]
+fn scores_are_bitwise_shard_count_invariant() {
+    const QUERIES: usize = 400;
+    let model = seeded_model(11, 48, 6, 0.25);
+    let mut rng = Pcg64::new(99, 5);
+    let queries: Vec<Vec<f64>> = (0..QUERIES)
+        .map(|_| (0..model.dim).map(|_| rng.uniform(-1.0, 1.0)).collect())
+        .collect();
+    let serial = model.predict_batch(&queries);
+
+    // The single-shard facade's native path is the same computation.
+    let mut svc = PredictionService::new(None, model.clone(), 0.25).unwrap();
+    let (facade, path) = svc.score_batch(&queries).unwrap();
+    assert_eq!(path, ScorePath::Native);
+    for (i, (a, b)) in serial.iter().zip(&facade).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "facade differs at query {i}");
+    }
+
+    for shards in [1usize, 2, 4] {
+        let cfg = ServingConfig {
+            shards,
+            batch: 8,
+            ..ServingConfig::default()
+        };
+        let tier = ServingTier::start(model.clone(), &cfg);
+        let tickets: Vec<Arc<Ticket>> = (0..QUERIES).map(|_| Ticket::new()).collect();
+        for (i, q) in queries.iter().enumerate() {
+            // client_id = query index: round-robins queries across shards,
+            // so every shard count partitions the batch differently.
+            tier.submit(i as u64, q.clone(), Arc::clone(&tickets[i]))
+                .unwrap();
+        }
+        for (i, ticket) in tickets.iter().enumerate() {
+            let (score, version) = ticket.wait();
+            assert_eq!(version, 1);
+            assert_eq!(
+                score.to_bits(),
+                serial[i].to_bits(),
+                "shards={shards}: query {i} diverged from serial predict_batch"
+            );
+        }
+        let report = tier.shutdown().unwrap();
+        assert_eq!(report.shards, shards);
+        assert_eq!(report.served, QUERIES as u64);
+        assert_eq!(report.latency.count, QUERIES as u64);
+        assert!(report.queue_high_water >= 1);
+    }
+}
