@@ -7,6 +7,7 @@ use anyhow::{bail, Result};
 use crate::cli::Args;
 use crate::config::{
     CompressionConfig, DataConfig, ExperimentConfig, KernelConfig, LossKind, ProtocolConfig,
+    TransportConfig,
 };
 use crate::experiments::{fig1, fig2, headline, runner, sweeps};
 use crate::metrics::report::{comparison_table, series_csv, write_report};
@@ -280,7 +281,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "config", "preset", "protocol", "delta", "period", "check-period", "learners", "rounds",
         "seed", "partial", "threads", "kernel", "gamma", "rff-dim", "data", "dim", "drift",
         "lockstep", "fault-plan", "retry", "recv-timeout", "churn", "serve-clients",
-        "serve-shards",
+        "serve-shards", "listen", "join", "worker-id",
     ])?;
     let mut cfg = load_config(args)?;
     // Robustness overrides are cluster-only (the serial engine has no bus
@@ -305,8 +306,45 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     if let Some(n) = args.get_usize("serve-shards")? {
         cfg.serve_shards = n;
     }
+    // Transport flags layer last (they may also come from a `[transport]`
+    // TOML section; explicit flags win).
+    match (args.get("listen"), args.get("join")) {
+        (Some(_), Some(_)) => bail!("--listen and --join are mutually exclusive"),
+        (Some(addr), None) => {
+            cfg.transport = TransportConfig::Listen {
+                addr: addr.to_string(),
+            };
+        }
+        (None, Some(addr)) => {
+            let worker = match args.get_usize("worker-id")? {
+                Some(w) => w,
+                None => bail!("--join needs --worker-id <i> naming this process's learner slot"),
+            };
+            cfg.transport = TransportConfig::Join {
+                addr: addr.to_string(),
+                worker,
+            };
+        }
+        (None, None) => {
+            if args.get("worker-id").is_some()
+                && !matches!(cfg.transport, TransportConfig::Join { .. })
+            {
+                bail!("--worker-id requires --join <addr>");
+            }
+        }
+    }
     cfg.validate()?;
-    let out = crate::coordinator::run_cluster(&cfg)?;
+    let out = match cfg.transport.clone() {
+        TransportConfig::Join { worker, .. } => {
+            // Worker process: quiet by design — the leader prints the
+            // cluster report; a worker only needs an exit status.
+            crate::coordinator::run_cluster_join(&cfg)?;
+            eprintln!("worker {worker} finished");
+            return Ok(());
+        }
+        TransportConfig::Listen { .. } => crate::coordinator::run_cluster_listen(&cfg)?,
+        TransportConfig::InProcess => crate::coordinator::run_cluster(&cfg)?,
+    };
     println!("== cluster run: {} ==", cfg.name);
     println!("cumulative loss  : {:.2}", out.cum_loss);
     println!("cumulative error : {:.2}", out.cum_error);

@@ -58,6 +58,15 @@ CLUSTER FLAGS:
     --serve-clients <n>    closed-loop serving clients scoring the shared
                            reference live during the run (0 = off) [0]
     --serve-shards <n>     serving shards backing them (0 = one)   [0]
+    --listen <addr>        be the leader of a multi-process TCP cluster:
+                           bind <addr>, accept every worker, run, report
+    --join <addr>          be one worker process: connect to the leader
+                           (requires --worker-id; both sides must be
+                           launched with the same experiment flags — the
+                           handshake refuses a config-digest mismatch)
+    --worker-id <i>        this process's learner slot, 0-based (--join)
+                           (fault injection / --fault-plan stays
+                           in-process only; TCP runs reject it)
 
 BENCH FLAGS:
     bench <target>         fig1 | fig2 | headline | sweep-delta |
@@ -88,6 +97,8 @@ EXAMPLES:
                  --fault-plan seed=7,up_drop=0.1,up_duplicate=0.05
     kdol cluster --protocol dynamic --delta 0.2 --serve-clients 32 \\
                  --serve-shards 4
+    kdol cluster --learners 2 --lockstep --listen 127.0.0.1:7070
+    kdol cluster --learners 2 --lockstep --join 127.0.0.1:7070 --worker-id 0
     kdol bench fig2 --scale 0.25 --csv fig2.csv
     kdol serve --clients 64 --shards 4 --duration-ms 2000
     kdol serve --requests 4096

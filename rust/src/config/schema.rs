@@ -160,6 +160,21 @@ impl DataConfig {
     }
 }
 
+/// How `kdol cluster` wires the leader and its workers together.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TransportConfig {
+    /// One OS process, worker threads on the in-process channel bus — the
+    /// deterministic default, and the only transport that supports fault
+    /// injection (seeded link state lives in sender-side memory).
+    InProcess,
+    /// This process is the leader: bind `addr` (e.g. `127.0.0.1:7070`)
+    /// and accept every worker over TCP before the run starts.
+    Listen { addr: String },
+    /// This process is worker `worker`: connect to the leader at `addr`
+    /// and run that learner's stream.
+    Join { addr: String, worker: usize },
+}
+
 /// A full experiment description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
@@ -217,6 +232,9 @@ pub struct ExperimentConfig {
     pub serve_clients: usize,
     /// Serving shards backing those clients (0 = one shard).
     pub serve_shards: usize,
+    /// Cluster transport: in-process bus (default) or one side of a
+    /// multi-process TCP cluster (`--listen` / `--join`).
+    pub transport: TransportConfig,
 }
 
 impl ExperimentConfig {
@@ -250,6 +268,7 @@ impl ExperimentConfig {
             churn: Vec::new(),
             serve_clients: 0,
             serve_shards: 0,
+            transport: TransportConfig::InProcess,
         }
     }
 
@@ -313,6 +332,7 @@ impl ExperimentConfig {
             churn: Vec::new(),
             serve_clients: 0,
             serve_shards: 0,
+            transport: TransportConfig::InProcess,
         }
     }
 
@@ -453,6 +473,29 @@ impl ExperimentConfig {
                 }
             }
         }
+        match &self.transport {
+            TransportConfig::InProcess => {}
+            TransportConfig::Listen { addr } | TransportConfig::Join { addr, .. } => {
+                if addr.is_empty() {
+                    bail!("transport addr must be non-empty (e.g. 127.0.0.1:7070)");
+                }
+                if self.faults.is_some() {
+                    // Seeded fault state lives in sender-side memory on the
+                    // in-process bus; a socket backend cannot replay the
+                    // same schedule deterministically.
+                    bail!("fault injection is in-process only; drop [faults] or [transport]");
+                }
+                if let TransportConfig::Join { worker, .. } = &self.transport {
+                    if *worker >= self.learners {
+                        bail!(
+                            "transport.worker is {}, but the cluster has {} learners",
+                            worker,
+                            self.learners
+                        );
+                    }
+                }
+            }
+        }
         match (&self.data, self.learner.loss) {
             (d, LossKind::Squared) | (d, LossKind::EpsInsensitive(_)) if d.is_classification() => {
                 bail!("regression loss on a classification stream")
@@ -462,6 +505,25 @@ impl ExperimentConfig {
             }
             _ => Ok(()),
         }
+    }
+
+    /// Digest over everything leader and workers must agree on for a
+    /// multi-process run; the TCP handshake refuses a mismatch before any
+    /// protocol frame crosses the link. The transport section itself is
+    /// normalized out — the leader listens while workers join, and that
+    /// asymmetry is expected. FNV-1a over the canonical `Debug` rendering
+    /// keeps this dependency-free and stable for any two processes of the
+    /// same build.
+    pub fn cluster_digest(&self) -> u64 {
+        let mut canon = self.clone();
+        canon.transport = TransportConfig::InProcess;
+        let repr = format!("{canon:?}");
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in repr.bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
     }
 
     // ----- TOML loading ----------------------------------------------------
@@ -554,6 +616,9 @@ impl ExperimentConfig {
         }
         if let Some(entries) = t.get("churn").and_then(Value::as_table_array) {
             cfg.churn = parse_churn(entries)?;
+        }
+        if let Some(tr) = t.get("transport").and_then(Value::as_table) {
+            cfg.transport = parse_transport(tr)?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -716,6 +781,30 @@ fn parse_churn(entries: &[Table]) -> Result<Vec<ChurnEntry>> {
         });
     }
     Ok(plan)
+}
+
+/// `[transport]` table: `mode = "in-process" | "listen" | "join"`, plus
+/// `addr` (listen/join) and `worker` (join).
+fn parse_transport(t: &Table) -> Result<TransportConfig> {
+    let addr = || match get_str(t, "addr") {
+        Some(a) => Ok(a.to_string()),
+        None => bail!("transport needs addr (e.g. \"127.0.0.1:7070\")"),
+    };
+    match get_str(t, "mode") {
+        Some("in-process") | None => Ok(TransportConfig::InProcess),
+        Some("listen") => Ok(TransportConfig::Listen { addr: addr()? }),
+        Some("join") => {
+            let worker = match get_int(t, "worker") {
+                Some(w) if w >= 0 => w as usize,
+                _ => bail!("transport mode \"join\" needs worker >= 0"),
+            };
+            Ok(TransportConfig::Join {
+                addr: addr()?,
+                worker,
+            })
+        }
+        Some(other) => bail!("unknown transport mode `{other}`"),
+    }
 }
 
 fn parse_backend(t: &Table) -> Result<RuntimeBackend> {
@@ -938,6 +1027,94 @@ leave = 100
             leave: 10,
         }];
         assert!(c.validate().is_ok());
+
+        // Fault injection is in-process only: a socket backend cannot
+        // replay a seeded schedule deterministically.
+        let mut c = ExperimentConfig::quickstart();
+        c.faults = Some(FaultPlanConfig::clean(1));
+        c.transport = TransportConfig::Listen {
+            addr: "127.0.0.1:7070".into(),
+        };
+        assert!(c.validate().is_err());
+
+        // Joining worker id must name a real learner slot.
+        let mut c = ExperimentConfig::quickstart();
+        c.transport = TransportConfig::Join {
+            addr: "127.0.0.1:7070".into(),
+            worker: c.learners,
+        };
+        assert!(c.validate().is_err());
+
+        // Empty address is a config mistake, not a bind error.
+        let mut c = ExperimentConfig::quickstart();
+        c.transport = TransportConfig::Listen { addr: String::new() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn transport_from_toml() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+learners = 2
+rounds = 20
+
+[transport]
+mode = "listen"
+addr = "127.0.0.1:7070"
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.transport,
+            TransportConfig::Listen {
+                addr: "127.0.0.1:7070".into()
+            }
+        );
+
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+learners = 2
+rounds = 20
+
+[transport]
+mode = "join"
+addr = "127.0.0.1:7070"
+worker = 1
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.transport,
+            TransportConfig::Join {
+                addr: "127.0.0.1:7070".into(),
+                worker: 1
+            }
+        );
+
+        // join without a worker id, and unknown modes, are parse errors.
+        assert!(
+            ExperimentConfig::from_toml("[transport]\nmode = \"join\"\naddr = \"x:1\"\n").is_err()
+        );
+        assert!(ExperimentConfig::from_toml("[transport]\nmode = \"carrier-pigeon\"\n").is_err());
+    }
+
+    #[test]
+    fn cluster_digest_ignores_transport_side() {
+        let mut leader = ExperimentConfig::quickstart();
+        leader.transport = TransportConfig::Listen {
+            addr: "127.0.0.1:7070".into(),
+        };
+        let mut worker = ExperimentConfig::quickstart();
+        worker.transport = TransportConfig::Join {
+            addr: "127.0.0.1:7070".into(),
+            worker: 1,
+        };
+        assert_eq!(leader.cluster_digest(), worker.cluster_digest());
+
+        // ...but any protocol-relevant divergence changes the digest.
+        let mut drifted = ExperimentConfig::quickstart();
+        drifted.seed += 1;
+        assert_ne!(leader.cluster_digest(), drifted.cluster_digest());
     }
 
     #[test]

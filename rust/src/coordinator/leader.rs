@@ -49,7 +49,8 @@ use crate::learner::build_learner;
 use crate::metrics::MetricsRecorder;
 use crate::network::fault::invalid_frame_reason;
 use crate::network::{
-    Bus, BusError, CommStats, DeltaDecoder, Message, QuarantineRecord, RobustnessStats,
+    Bus, BusError, CommStats, DeltaDecoder, Message, Peer, QuarantineRecord, RobustnessStats,
+    Transport,
 };
 use crate::protocol::balancing::{BalanceGeometry, BalancingSet, FixedGeometry, KernelGeometry};
 use crate::protocol::sync::synchronize;
@@ -112,25 +113,7 @@ pub fn run_cluster(cfg: &ExperimentConfig) -> Result<ClusterOutcome> {
     // trains; the leader republishes after every sync event. Swaps ride
     // the RCU snapshot cell — serving never blocks the protocol and the
     // protocol never blocks serving.
-    let serve = if cfg.serve_clients > 0 {
-        let gamma = match cfg.learner.kernel {
-            crate::config::KernelConfig::Rbf { gamma } => gamma,
-            _ => bail!("serve_clients requires an RBF kernel model (SvModel serving tier)"),
-        };
-        let model = SvModel::new(crate::kernel::Kernel::Rbf { gamma }, cfg.data.dim());
-        let serving_cfg = ServingConfig {
-            shards: cfg.serve_shards.max(1),
-            ..ServingConfig::default()
-        };
-        Some(ServeHarness::start(
-            model,
-            cfg.serve_clients,
-            &serving_cfg,
-            cfg.seed,
-        ))
-    } else {
-        None
-    };
+    let serve = start_serve_harness(cfg)?;
 
     let outcome = leader_loop(cfg, &bus, serve.as_ref().map(ServeHarness::cell));
 
@@ -156,9 +139,36 @@ pub fn run_cluster(cfg: &ExperimentConfig) -> Result<ClusterOutcome> {
     Ok(outcome)
 }
 
-/// Leader-side state for one cluster run.
-struct Leader<'a> {
-    bus: &'a Bus,
+/// Optional live serving tier for a cluster run: closed-loop clients
+/// score against the shared reference (initially the zero function) while
+/// the cluster trains; the leader republishes after every sync event.
+/// Shared by the in-process runner ([`run_cluster`]) and the TCP runners
+/// in [`crate::coordinator::net`].
+pub(crate) fn start_serve_harness(cfg: &ExperimentConfig) -> Result<Option<ServeHarness>> {
+    if cfg.serve_clients == 0 {
+        return Ok(None);
+    }
+    let gamma = match cfg.learner.kernel {
+        crate::config::KernelConfig::Rbf { gamma } => gamma,
+        _ => bail!("serve_clients requires an RBF kernel model (SvModel serving tier)"),
+    };
+    let model = SvModel::new(crate::kernel::Kernel::Rbf { gamma }, cfg.data.dim());
+    let serving_cfg = ServingConfig {
+        shards: cfg.serve_shards.max(1),
+        ..ServingConfig::default()
+    };
+    Ok(Some(ServeHarness::start(
+        model,
+        cfg.serve_clients,
+        &serving_cfg,
+        cfg.seed,
+    )))
+}
+
+/// Leader-side state for one cluster run, generic over the transport the
+/// frames ride (in-process [`Bus`] or the TCP backend).
+struct Leader<'a, T: Transport> {
+    bus: &'a T,
     m: usize,
     is_kernel: bool,
     partial_sync: bool,
@@ -235,9 +245,9 @@ struct Leader<'a> {
 /// many would-be events into one.
 const CO_VIOLATION_WAIT: Duration = Duration::from_millis(2);
 
-fn leader_loop(
+pub(crate) fn leader_loop<T: Transport>(
     cfg: &ExperimentConfig,
-    bus: &Bus,
+    bus: &T,
     serving: Option<Arc<SnapshotCell>>,
 ) -> Result<ClusterOutcome> {
     let m = cfg.learners;
@@ -324,7 +334,7 @@ fn leader_loop(
     })
 }
 
-impl Leader<'_> {
+impl<T: Transport> Leader<'_, T> {
     /// Worker is live from the protocol's point of view: inside its churn
     /// window (as observed via Join/Leave) and not quarantined.
     fn participant(&self, i: usize) -> bool {
@@ -415,8 +425,22 @@ impl Leader<'_> {
                 }
                 Err(BusError::Timeout) => return Ok(None),
                 Err(BusError::Disconnected) => bail!("leader: every worker link hung up"),
-                Err(BusError::Decode { from, err }) => {
+                Err(BusError::Decode {
+                    from: Peer::Learner(from),
+                    err,
+                }) => {
                     self.quarantine(from, round, format!("undecodable frame: {err}"));
+                }
+                Err(BusError::Decode {
+                    from: Peer::Coordinator,
+                    err,
+                }) => {
+                    // The upstream channel cannot carry coordinator frames;
+                    // a transport reporting this is broken, not a worker.
+                    bail!("leader: transport misreported provenance: {err}");
+                }
+                Err(err @ BusError::Encode(_)) => {
+                    bail!("leader: {err}");
                 }
             }
         }

@@ -154,6 +154,48 @@
 //! queued), so a joiner/leaver in flight can never deadlock a round; a
 //! Join/Leave that contradicts the plan is quarantine evidence.
 //!
+//! # Transport / session layering
+//!
+//! Everything above — message flow, lockstep, retry/quarantine — is
+//! *session* logic, written against the transport seam
+//! ([`crate::network::transport`]): the leader over
+//! [`crate::network::Transport`], the worker over
+//! [`crate::network::WorkerLink`]. Two backends exist:
+//!
+//! ```text
+//! session    leader.rs / worker.rs       protocol rounds, retry ladders,
+//!                                        quarantine, byte accounting
+//! ---------- Transport / WorkerLink ---- the seam (typed BusError surface)
+//! transport  network::bus               in-process channels; seeded fault
+//!                                        injection; deterministic default
+//!            network::transport::tcp    length-prefixed TCP; separate OS
+//!                                        processes; same frames, same codec
+//! ```
+//!
+//! `kdol cluster` picks the backend from the config's `[transport]`
+//! section (or the `--listen` / `--join` flags):
+//!
+//! * **in-process** (default): [`run_cluster`] spawns one worker thread
+//!   per learner over [`crate::network::Bus`];
+//! * **`--listen <addr>`**: this process is the leader
+//!   ([`net::run_cluster_listen`]). Lifecycle: bind, accept until every
+//!   learner id has handshaken (magic + wire version + worker id +
+//!   config digest; mismatches are refused without wedging formation),
+//!   run the identical leader loop, broadcast `Shutdown`, report the
+//!   same [`ClusterOutcome`];
+//! * **`--join <addr> --worker-id <i>`**: this process is worker `i`
+//!   ([`net::run_cluster_join`]). Lifecycle: connect (retrying while the
+//!   leader boots), handshake, run the identical worker loop over its
+//!   seed-derived stream slice, exit on `Shutdown` or link loss.
+//!
+//! Because both backends carry byte-identical frames and account only
+//! payload bytes, a lockstep run reports the *same* `ClusterOutcome`
+//! over sockets as in-process (asserted by `tests/transport_tcp.rs`).
+//! Fault injection stays in-process-only by design: the seeded schedule
+//! lives in sender-side link state, which is what makes it replayable —
+//! a real socket cannot promise that, so `[faults]` + `[transport]` is
+//! rejected at config validation and chaos suites always run on the bus.
+//!
 //! Also hosts the real-time prediction tier: the single-shard
 //! [`service`] facade (whose hot path executes the AOT XLA artifacts —
 //! Python never runs at request time) and the sharded [`serving`] tier
@@ -184,10 +226,12 @@
 //! ```
 
 pub mod leader;
+pub mod net;
 pub mod service;
 pub mod serving;
 pub mod worker;
 
 pub use leader::{run_cluster, ClusterOutcome};
+pub use net::{run_cluster_join, run_cluster_listen};
 pub use service::{PredictionService, ScorePath};
 pub use serving::{ServingConfig, ServingReport, ServingTier};

@@ -1,0 +1,99 @@
+//! Multi-process cluster runners: the same leader/worker protocol logic
+//! as [`super::leader`] / [`super::worker`], but with frames riding the
+//! length-prefixed TCP backend ([`crate::network::transport::tcp`])
+//! instead of the in-process bus.
+//!
+//! `kdol cluster --listen <addr>` runs [`run_cluster_listen`] (the leader
+//! process: bind, accept every worker, drive the leader loop);
+//! `kdol cluster --join <addr> --worker-id <i>` runs [`run_cluster_join`]
+//! (one worker process per learner). Leader and workers must be launched
+//! from the *same* experiment config — the TCP handshake carries
+//! [`ExperimentConfig::cluster_digest`] and the leader refuses any worker
+//! whose digest differs, so a drifted config fails at connection time
+//! instead of corrupting a run.
+//!
+//! Fault injection stays in-process-only: the seeded per-link fault state
+//! lives in sender-side memory on the bus (see [`crate::network::fault`]),
+//! which is exactly what makes its schedules replayable; a socket cannot
+//! offer that determinism, so configs combining `[transport]` with
+//! `[faults]` are rejected at validation.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ExperimentConfig, ProtocolConfig, TransportConfig};
+use crate::coordinator::leader::{leader_loop, start_serve_harness, ClusterOutcome};
+use crate::coordinator::serving::load::ServeHarness;
+use crate::coordinator::worker::run_worker;
+use crate::data::build_streams;
+use crate::network::transport::tcp::{TcpTransport, TcpWorkerLink};
+use crate::network::{Message, Transport};
+
+/// How long a joining worker keeps retrying its connect while the leader
+/// process is still starting up. Generous: separate OS processes race at
+/// startup, and a worker that gives up early strands the whole cluster in
+/// the leader's accept loop.
+const JOIN_RETRY_FOR: Duration = Duration::from_secs(30);
+
+/// Leader process: bind the configured listen address, accept every
+/// worker, and drive the cluster to completion. Requires
+/// `cfg.transport == TransportConfig::Listen { .. }`.
+pub fn run_cluster_listen(cfg: &ExperimentConfig) -> Result<ClusterOutcome> {
+    let TransportConfig::Listen { addr } = &cfg.transport else {
+        bail!("run_cluster_listen needs transport mode \"listen\"");
+    };
+    let listener =
+        TcpListener::bind(addr.as_str()).with_context(|| format!("bind cluster listener {addr}"))?;
+    run_cluster_listen_on(cfg, listener)
+}
+
+/// Leader loop over an already-bound listener. Split out from
+/// [`run_cluster_listen`] so tests can bind port 0 and learn the real
+/// address before spawning workers.
+pub fn run_cluster_listen_on(
+    cfg: &ExperimentConfig,
+    listener: TcpListener,
+) -> Result<ClusterOutcome> {
+    anyhow::ensure!(
+        cfg.protocol != ProtocolConfig::Serial,
+        "serial runs have no cluster"
+    );
+    crate::util::par::set_threads(cfg.threads);
+    let transport = TcpTransport::accept(&listener, cfg.learners, cfg.cluster_digest())?;
+    let serve = start_serve_harness(cfg)?;
+    let outcome = leader_loop(cfg, &transport, serve.as_ref().map(ServeHarness::cell));
+    // Always attempt shutdown; worker processes exit on it (or on the
+    // link dropping when this process exits).
+    // kdol-lint: allow(uncounted-control) — Shutdown is runtime control, never a protocol byte
+    let _ = transport.broadcast(&Message::Shutdown);
+    let serving = match serve {
+        Some(harness) => Some(harness.finish()?.serving),
+        None => None,
+    };
+    let mut outcome = outcome?;
+    // Real sockets never inject faults; the counter stays 0 by contract.
+    outcome.robustness.faults_injected = transport.faults_injected();
+    outcome.serving = serving;
+    Ok(outcome)
+}
+
+/// Worker process: connect to the leader, handshake as the configured
+/// learner id, and run that learner's stream to completion. Requires
+/// `cfg.transport == TransportConfig::Join { .. }`. The worker derives
+/// its data stream from the shared config exactly like the in-process
+/// runner does (`build_streams` is seed-deterministic), so the cluster's
+/// trajectory matches the single-process run.
+pub fn run_cluster_join(cfg: &ExperimentConfig) -> Result<()> {
+    let TransportConfig::Join { addr, worker } = &cfg.transport else {
+        bail!("run_cluster_join needs transport mode \"join\"");
+    };
+    crate::util::par::set_threads(cfg.threads);
+    let stream = build_streams(&cfg.data, cfg.learners, cfg.seed)
+        .into_iter()
+        .nth(*worker)
+        .with_context(|| format!("worker {worker} has no stream slot"))?;
+    let link = TcpWorkerLink::connect(addr, *worker, cfg.cluster_digest(), JOIN_RETRY_FOR)?;
+    run_worker(cfg, *worker, link, stream)
+}

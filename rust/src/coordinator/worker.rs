@@ -36,7 +36,7 @@ use crate::config::ExperimentConfig;
 use crate::data::DataStream;
 use crate::kernel::Model;
 use crate::learner::{build_learner, OnlineLearner};
-use crate::network::{DeltaDecoder, DeltaEncoder, Endpoint, Message};
+use crate::network::{DeltaDecoder, DeltaEncoder, Message, WorkerLink};
 use crate::protocol::{ConditionTracker, SyncDecision, SyncPolicy};
 
 /// What a served request asks the worker loop to do next.
@@ -64,10 +64,10 @@ struct Worker {
 
 /// Run the worker loop to completion (responds to syncs even after its
 /// stream is exhausted, until `Shutdown`).
-pub fn run_worker(
+pub fn run_worker<L: WorkerLink>(
     cfg: &ExperimentConfig,
     id: usize,
-    endpoint: Endpoint,
+    endpoint: L,
     mut stream: Box<dyn DataStream>,
 ) -> Result<()> {
     let dim = cfg.data.dim();
@@ -204,7 +204,12 @@ pub fn run_worker(
 
 impl Worker {
     /// Handle one leader request outside a synchronization.
-    fn serve_one(&mut self, endpoint: &Endpoint, msg: Message, round: u64) -> Result<Served> {
+    fn serve_one<L: WorkerLink>(
+        &mut self,
+        endpoint: &L,
+        msg: Message,
+        round: u64,
+    ) -> Result<Served> {
         match msg {
             Message::SyncRequest | Message::PartialSyncRequest => {
                 self.sync_exchange(endpoint, round)
@@ -218,7 +223,7 @@ impl Worker {
         }
     }
 
-    fn report_distance(&self, endpoint: &Endpoint, round: u64) -> Result<()> {
+    fn report_distance<L: WorkerLink>(&self, endpoint: &L, round: u64) -> Result<()> {
         endpoint.send(&Message::DistanceReport {
             learner: self.id as u32,
             round,
@@ -228,7 +233,7 @@ impl Worker {
     }
 
     /// Upload the current model (kernel delta-encoded, linear fixed-size).
-    fn upload(&mut self, endpoint: &Endpoint, round: u64) -> Result<()> {
+    fn upload<L: WorkerLink>(&mut self, endpoint: &L, round: u64) -> Result<()> {
         let snap = self.learner.snapshot();
         if self.is_kernel {
             let exp = snap.as_kernel().context("kernel worker snapshot")?;
@@ -255,7 +260,7 @@ impl Worker {
     /// download installs the model as the new reference. Returns
     /// [`Served::Shutdown`] if the leader shuts this worker down instead
     /// of completing the exchange (quarantine, cluster teardown).
-    fn sync_exchange(&mut self, endpoint: &Endpoint, round: u64) -> Result<Served> {
+    fn sync_exchange<L: WorkerLink>(&mut self, endpoint: &L, round: u64) -> Result<Served> {
         self.upload(endpoint, round)?;
         loop {
             let (msg, _) = endpoint.recv(WORKER_DEADMAN)?;

@@ -31,12 +31,32 @@ use std::time::{Duration, Instant};
 
 use crate::network::fault::{fault_class, Dir, FaultAction, FaultPlan, FaultPlanConfig};
 use crate::network::message::Message;
-use crate::ser::{from_bytes, to_bytes, DecodeError};
+use crate::ser::{from_bytes, to_bytes, DecodeError, EncodeError};
 
 /// Receive poll granularity on fault-injected links. Held frames release
 /// within a few slices of wall time, far below any sane `recv_timeout`,
 /// so benign delay schedules do not trigger the leader's retry ladder.
 const POLL_SLICE: Duration = Duration::from_millis(5);
+
+/// The far side of a link, as named in decode-failure evidence. Replaces
+/// the old `from: usize` field whose coordinator sentinel (`usize::MAX`)
+/// used to leak into quarantine records and logs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Peer {
+    /// The coordinator/leader process.
+    Coordinator,
+    /// Learner `i` (a worker).
+    Learner(usize),
+}
+
+impl fmt::Display for Peer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Peer::Coordinator => write!(f, "coordinator"),
+            Peer::Learner(i) => write!(f, "learner {i}"),
+        }
+    }
+}
 
 /// Transport errors, typed so callers can tell retryable conditions
 /// (a [`BusError::Timeout`] worth a re-request) from fatal ones
@@ -50,7 +70,10 @@ pub enum BusError {
     Disconnected,
     /// A frame arrived but did not decode; `from` names the sender
     /// (quarantine evidence on the leader side).
-    Decode { from: usize, err: DecodeError },
+    Decode { from: Peer, err: DecodeError },
+    /// The outgoing message could not be framed (a length prefix
+    /// overflowed `u32`) — nothing was put on the link.
+    Encode(EncodeError),
 }
 
 impl fmt::Display for BusError {
@@ -59,8 +82,9 @@ impl fmt::Display for BusError {
             BusError::Timeout => write!(f, "recv timeout"),
             BusError::Disconnected => write!(f, "peer hung up"),
             BusError::Decode { from, err } => {
-                write!(f, "undecodable frame from learner {from}: {err}")
+                write!(f, "undecodable frame from {from}: {err}")
             }
+            BusError::Encode(err) => write!(f, "unframeable message: {err}"),
         }
     }
 }
@@ -69,29 +93,36 @@ impl std::error::Error for BusError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             BusError::Decode { err, .. } => Some(err),
+            BusError::Encode(err) => Some(err),
             _ => None,
         }
     }
 }
 
-/// A framed, serialized message in flight.
+/// A framed, serialized message in flight on the upstream (learner →
+/// coordinator) channel. `from` is the sending learner's id — real
+/// provenance, stamped at `Endpoint::send`. Downstream frames carry no
+/// id because their channel type already proves the coordinator sent
+/// them; there is no sentinel anywhere.
 #[derive(Debug)]
 pub struct Frame {
     pub from: usize,
     pub bytes: Vec<u8>,
 }
 
-/// Sender-side fault state of one link direction.
-struct LinkState {
+/// Sender-side fault state of one link direction. Generic over the
+/// in-flight payload: upstream links hold [`Frame`]s, downstream links
+/// hold raw byte payloads.
+struct LinkState<P> {
     plan: FaultPlan,
     /// Frames held by delay/reorder actions: `(release_tick, frame)`,
     /// FIFO — the front frame blocks those behind it.
-    held: VecDeque<(u64, Frame)>,
+    held: VecDeque<(u64, P)>,
     ticks: u64,
 }
 
-impl LinkState {
-    fn new(cfg: &FaultPlanConfig, worker: usize, dir: Dir) -> LinkState {
+impl<P> LinkState<P> {
+    fn new(cfg: &FaultPlanConfig, worker: usize, dir: Dir) -> LinkState<P> {
         LinkState {
             plan: FaultPlan::for_link(cfg, worker, dir),
             held: VecDeque::new(),
@@ -108,11 +139,11 @@ fn corrupt_frame(bytes: &mut [u8]) {
     }
 }
 
-fn fault_state(
+fn fault_state<P>(
     cfg: Option<&FaultPlanConfig>,
     worker: usize,
     dir: Dir,
-) -> Option<RefCell<LinkState>> {
+) -> Option<RefCell<LinkState<P>>> {
     let cfg = cfg?;
     let targeted = match &cfg.workers {
         Some(ws) => ws.contains(&worker),
@@ -130,8 +161,8 @@ fn fault_state(
 pub struct Endpoint {
     pub id: usize,
     to_coord: Sender<Frame>,
-    from_coord: Receiver<Frame>,
-    up_faults: Option<RefCell<LinkState>>,
+    from_coord: Receiver<Vec<u8>>,
+    up_faults: Option<RefCell<LinkState<Frame>>>,
     injected: Arc<AtomicU64>,
 }
 
@@ -140,7 +171,7 @@ impl Endpoint {
     /// on the link — a dropped or corrupted frame still returns `Ok(n)`,
     /// because the sender accounts what it sent, not what arrived.
     pub fn send(&self, msg: &Message) -> Result<usize, BusError> {
-        let bytes = to_bytes(msg);
+        let bytes = to_bytes(msg).map_err(BusError::Encode)?;
         let n = bytes.len();
         let frame = Frame {
             from: self.id,
@@ -198,7 +229,7 @@ impl Endpoint {
 
     /// Release held upstream frames in FIFO order; `all` ignores release
     /// ticks (control barrier), otherwise the front frame blocks until due.
-    fn flush_up(&self, st: &mut LinkState, all: bool) -> Result<(), BusError> {
+    fn flush_up(&self, st: &mut LinkState<Frame>, all: bool) -> Result<(), BusError> {
         loop {
             match st.held.front() {
                 Some((due, _)) if all || *due <= st.ticks => {}
@@ -214,17 +245,22 @@ impl Endpoint {
     /// Blocking receive with timeout. On a fault-injected link the wait
     /// is sliced into short polls, each advancing the upstream tick so
     /// frames this endpoint has in delay-hold release while it waits.
-    /// Undecodable (corrupted) downstream frames are skipped silently —
-    /// to the worker they are indistinguishable from a dropped request,
-    /// and the leader's retry ladder covers both.
+    /// Undecodable (corrupted) downstream frames are skipped — to the
+    /// worker they are indistinguishable from a dropped request, and the
+    /// leader's retry ladder covers both — but each skip still re-checks
+    /// the deadline: a flood of corrupt frames must surface as a normal
+    /// [`BusError::Timeout`], not starve the caller past it.
     pub fn recv(&self, timeout: Duration) -> Result<(Message, usize), BusError> {
         if self.up_faults.is_none() {
             return match self.from_coord.recv_timeout(timeout) {
-                Ok(f) => {
-                    let n = f.bytes.len();
-                    match from_bytes(&f.bytes) {
+                Ok(bytes) => {
+                    let n = bytes.len();
+                    match from_bytes(&bytes) {
                         Ok(msg) => Ok((msg, n)),
-                        Err(err) => Err(BusError::Decode { from: usize::MAX, err }),
+                        Err(err) => Err(BusError::Decode {
+                            from: Peer::Coordinator,
+                            err,
+                        }),
                     }
                 }
                 Err(RecvTimeoutError::Timeout) => Err(BusError::Timeout),
@@ -240,11 +276,19 @@ impl Endpoint {
             }
             let remaining = timeout.saturating_sub(start.elapsed());
             match self.from_coord.recv_timeout(remaining.min(POLL_SLICE)) {
-                Ok(f) => {
-                    let n = f.bytes.len();
-                    match from_bytes(&f.bytes) {
+                Ok(bytes) => {
+                    let n = bytes.len();
+                    match from_bytes(&bytes) {
                         Ok(msg) => return Ok((msg, n)),
-                        Err(_) => continue,
+                        Err(_) => {
+                            // An undecodable frame consumed wall time too;
+                            // without this check a corrupt-frame flood
+                            // keeps the channel non-empty and the `Ok` arm
+                            // hot, so the timeout below is never reached.
+                            if start.elapsed() >= timeout {
+                                return Err(BusError::Timeout);
+                            }
+                        }
                     }
                 }
                 Err(RecvTimeoutError::Timeout) => {
@@ -262,8 +306,8 @@ impl Endpoint {
 /// *downstream* link.
 pub struct Bus {
     from_learners: Receiver<Frame>,
-    to_learners: Vec<Sender<Frame>>,
-    down_faults: Vec<Option<RefCell<LinkState>>>,
+    to_learners: Vec<Sender<Vec<u8>>>,
+    down_faults: Vec<Option<RefCell<LinkState<Vec<u8>>>>>,
     injected: Arc<AtomicU64>,
     /// Any downstream link has fault state → receives must poll-slice.
     sliced: bool,
@@ -287,7 +331,7 @@ impl Bus {
         let mut down_faults = Vec::with_capacity(learners);
         let mut endpoints = Vec::with_capacity(learners);
         for id in 0..learners {
-            let (down_tx, down_rx) = channel::<Frame>();
+            let (down_tx, down_rx) = channel::<Vec<u8>>();
             to_learners.push(down_tx);
             down_faults.push(fault_state(faults, id, Dir::Down));
             endpoints.push(Endpoint {
@@ -319,14 +363,10 @@ impl Bus {
     /// Send to one learner; returns wire size of what was sent (dropped
     /// and corrupted frames included — the sender accounts its sends).
     pub fn send_to(&self, learner: usize, msg: &Message) -> Result<usize, BusError> {
-        let bytes = to_bytes(msg);
+        let bytes = to_bytes(msg).map_err(BusError::Encode)?;
         let n = bytes.len();
-        let frame = Frame {
-            from: usize::MAX,
-            bytes,
-        };
         match &self.down_faults[learner] {
-            None => self.push_down(learner, frame)?,
+            None => self.push_down(learner, bytes)?,
             Some(cell) => {
                 let mut st = cell.borrow_mut();
                 st.ticks += 1;
@@ -337,58 +377,52 @@ impl Bus {
                 self.flush_down(learner, &mut st, true);
                 if fault_class(msg, Dir::Down) {
                     match st.plan.next_action() {
-                        FaultAction::Deliver => self.push_down(learner, frame)?,
+                        FaultAction::Deliver => self.push_down(learner, bytes)?,
                         FaultAction::Drop => {
                             self.injected.fetch_add(1, Ordering::Relaxed);
                         }
                         FaultAction::Duplicate => {
                             self.injected.fetch_add(1, Ordering::Relaxed);
-                            self.push_down(
-                                learner,
-                                Frame {
-                                    from: frame.from,
-                                    bytes: frame.bytes.clone(),
-                                },
-                            )?;
-                            self.push_down(learner, frame)?;
+                            self.push_down(learner, bytes.clone())?;
+                            self.push_down(learner, bytes)?;
                         }
                         FaultAction::Corrupt => {
                             self.injected.fetch_add(1, Ordering::Relaxed);
-                            let mut frame = frame;
-                            corrupt_frame(&mut frame.bytes);
-                            self.push_down(learner, frame)?;
+                            let mut bytes = bytes;
+                            corrupt_frame(&mut bytes);
+                            self.push_down(learner, bytes)?;
                         }
                         FaultAction::Delay(polls) => {
                             self.injected.fetch_add(1, Ordering::Relaxed);
                             let due = st.ticks + polls as u64;
-                            st.held.push_back((due, frame));
+                            st.held.push_back((due, bytes));
                         }
                     }
                 } else {
-                    self.push_down(learner, frame)?;
+                    self.push_down(learner, bytes)?;
                 }
             }
         }
         Ok(n)
     }
 
-    fn push_down(&self, learner: usize, frame: Frame) -> Result<(), BusError> {
+    fn push_down(&self, learner: usize, bytes: Vec<u8>) -> Result<(), BusError> {
         self.to_learners[learner]
-            .send(frame)
+            .send(bytes)
             .map_err(|_| BusError::Disconnected)
     }
 
     /// Release held downstream frames in FIFO order. Send failures are
     /// ignored here — a departed worker's link may be gone, and the
     /// caller's own send reports that separately.
-    fn flush_down(&self, learner: usize, st: &mut LinkState, all: bool) {
+    fn flush_down(&self, learner: usize, st: &mut LinkState<Vec<u8>>, all: bool) {
         loop {
             match st.held.front() {
                 Some((due, _)) if all || *due <= st.ticks => {}
                 _ => break,
             }
-            if let Some((_, frame)) = st.held.pop_front() {
-                let _ = self.to_learners[learner].send(frame);
+            if let Some((_, bytes)) = st.held.pop_front() {
+                let _ = self.to_learners[learner].send(bytes);
             }
         }
     }
@@ -445,7 +479,10 @@ impl Bus {
         let n = f.bytes.len();
         match from_bytes(&f.bytes) {
             Ok(msg) => Ok((f.from, msg, n)),
-            Err(err) => Err(BusError::Decode { from: f.from, err }),
+            Err(err) => Err(BusError::Decode {
+                from: Peer::Learner(f.from),
+                err,
+            }),
         }
     }
 
@@ -564,9 +601,80 @@ mod tests {
         let (bus, eps) = Bus::new_with_faults(2, Some(&cfg));
         eps[1].send(&violation(1)).unwrap();
         match bus.recv(Duration::from_secs(1)) {
-            Err(BusError::Decode { from, .. }) => assert_eq!(from, 1),
+            Err(BusError::Decode { from, .. }) => assert_eq!(from, Peer::Learner(1)),
             other => panic!("expected decode error, got {other:?}"),
         }
+    }
+
+    /// Regression (PR 9): a corrupt *downstream* frame used to surface as
+    /// `Decode { from: usize::MAX }` — a sentinel that leaked into logs.
+    /// Provenance is now typed: anything on the downstream channel is from
+    /// the coordinator, and the error says so.
+    #[test]
+    fn worker_decode_error_names_coordinator() {
+        let cfg = plan(
+            LinkFaultConfig::default(),
+            LinkFaultConfig {
+                corrupt: 1.0,
+                ..LinkFaultConfig::default()
+            },
+        );
+        let (bus, eps) = Bus::new_with_faults(1, Some(&cfg));
+        bus.send_to(0, &Message::DistanceRequest).unwrap();
+        // Up link is clean, so the endpoint takes the fast path and the
+        // decode failure surfaces instead of being skipped.
+        match eps[0].recv(Duration::from_secs(1)) {
+            Err(err @ BusError::Decode { from, .. }) => {
+                assert_eq!(from, Peer::Coordinator);
+                let text = err.to_string();
+                assert!(text.contains("coordinator"), "got: {text}");
+                assert!(!text.contains(&usize::MAX.to_string()), "got: {text}");
+            }
+            other => panic!("expected decode error, got {other:?}"),
+        }
+    }
+
+    /// Regression (PR 9): with an up-side fault plan the endpoint's recv
+    /// poll-slices, and an undecodable downstream frame `continue`d without
+    /// re-checking the deadline — a corrupt-frame flood kept the channel
+    /// non-empty and starved the worker past its timeout indefinitely. The
+    /// deadline is now re-checked on every skipped frame.
+    #[test]
+    fn corrupt_flood_still_times_out() {
+        let cfg = plan(
+            LinkFaultConfig {
+                drop: 1.0, // any up-side fault forces the sliced recv path
+                ..LinkFaultConfig::default()
+            },
+            LinkFaultConfig {
+                corrupt: 1.0,
+                ..LinkFaultConfig::default()
+            },
+        );
+        let (bus, eps) = Bus::new_with_faults(1, Some(&cfg));
+        // Pre-fill so the worker finds a corrupt frame on every poll.
+        for _ in 0..5_000 {
+            bus.send_to(0, &Message::DistanceRequest).unwrap();
+        }
+        let timeout = Duration::from_millis(120);
+        let t = std::thread::spawn(move || {
+            let start = Instant::now();
+            let res = eps[0].recv(timeout);
+            (start.elapsed(), res)
+        });
+        // Keep the flood going well past the worker's deadline. Sends may
+        // start failing once the worker returns and drops its endpoint.
+        let flood_until = Instant::now() + Duration::from_millis(600);
+        while Instant::now() < flood_until {
+            let _ = bus.send_to(0, &Message::DistanceRequest);
+        }
+        let (elapsed, res) = t.join().unwrap();
+        assert!(matches!(res, Err(BusError::Timeout)), "got {res:?}");
+        assert!(elapsed >= timeout, "returned early: {elapsed:?}");
+        assert!(
+            elapsed < Duration::from_millis(500),
+            "deadline starved by corrupt flood: {elapsed:?}"
+        );
     }
 
     #[test]

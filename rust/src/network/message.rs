@@ -48,7 +48,7 @@ impl SvBlock {
 
 impl Encode for SvBlock {
     fn encode(&self, w: &mut Writer) {
-        w.u32(self.ids.len() as u32);
+        w.u32_len(self.ids.len());
         w.u32(self.dim);
         for &id in &self.ids {
             w.u64(id);
@@ -187,7 +187,7 @@ const TAG_JOIN: u8 = 14;
 const TAG_LEAVE: u8 = 15;
 
 fn encode_coeffs(w: &mut Writer, coeffs: &[(u64, f64)]) {
-    w.u32(coeffs.len() as u32);
+    w.u32_len(coeffs.len());
     for &(id, a) in coeffs {
         w.u64(id);
         w.f64(a);
@@ -262,13 +262,13 @@ impl Encode for Message {
                 w.u8(TAG_LINEAR_UPLOAD);
                 w.u32(*learner);
                 w.u64(*round);
-                w.u32(wv.len() as u32);
+                w.u32_len(wv.len());
                 w.f32_slice(wv);
             }
             Message::LinearDownload { w: wv, partial } => {
                 w.u8(TAG_LINEAR_DOWNLOAD);
                 w.u8(u8::from(*partial));
-                w.u32(wv.len() as u32);
+                w.u32_len(wv.len());
                 w.f32_slice(wv);
             }
             Message::Done {
@@ -477,7 +477,7 @@ mod tests {
             },
         ];
         for m in msgs {
-            let bytes = to_bytes(&m);
+            let bytes = to_bytes(&m).unwrap();
             assert_eq!(bytes.len(), m.wire_bytes());
             let back: Message = from_bytes(&bytes).unwrap();
             assert_eq!(back, m);

@@ -1,17 +1,21 @@
 //! Cluster networking: protocol messages, the support-vector delta
 //! encoding (the paper's "trivial communication reduction strategy"),
 //! byte-exact communication accounting, the thread/channel message bus
-//! used by the leader/worker runtime, and the deterministic fault
-//! injection layer the chaos suite drives it with.
+//! used by the leader/worker runtime, the deterministic fault injection
+//! layer the chaos suite drives it with, and the transport seam
+//! ([`transport`]) that lets the same leader/worker code run over the
+//! in-process bus or real TCP sockets.
 
 pub mod accounting;
 pub mod bus;
 pub mod delta;
 pub mod fault;
 pub mod message;
+pub mod transport;
 
 pub use accounting::{CommStats, QuarantineRecord, RobustnessStats};
-pub use bus::{Bus, BusError, Endpoint};
+pub use bus::{Bus, BusError, Endpoint, Peer};
 pub use delta::{DeltaDecoder, DeltaEncoder};
 pub use fault::{ChurnEntry, FaultPlan, FaultPlanConfig, LinkFaultConfig};
 pub use message::{Message, SvBlock};
+pub use transport::{Transport, WorkerLink};

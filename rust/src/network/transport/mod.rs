@@ -1,0 +1,105 @@
+//! Transport seam between the coordinator runtime and the links its
+//! frames ride.
+//!
+//! The leader/worker code in `coordinator/` is written against two small
+//! traits — [`Transport`] (coordinator side, one handle over all learner
+//! links) and [`WorkerLink`] (learner side, one handle on the coordinator
+//! link) — so the same protocol logic runs over either backend:
+//!
+//! * the in-process channel bus ([`crate::network::bus`]): the
+//!   deterministic default, and the only backend that supports seeded
+//!   fault injection (fault state is sender-side, in-process by design —
+//!   see the `coordinator` module docs);
+//! * length-prefixed TCP sockets ([`tcp`]): real OS processes, same
+//!   `ser/` codec and `network/message.rs` frames byte-for-byte, driven
+//!   by `kdol cluster --listen/--join`.
+//!
+//! Both backends surface the same typed [`BusError`] vocabulary —
+//! `Timeout` (retryable), `Disconnected` (fatal for the link), `Decode`
+//! (misbehavior evidence naming the sender), `Encode` (unframeable
+//! outgoing message) — so the leader's retry/quarantine ladders work
+//! unmodified over sockets.
+
+pub mod tcp;
+
+use std::time::Duration;
+
+use crate::network::bus::{Bus, BusError, Endpoint};
+use crate::network::message::Message;
+
+pub use tcp::{TcpTransport, TcpWorkerLink};
+
+/// Coordinator-side transport: send to / receive from any learner.
+///
+/// Contract shared by every backend (the conformance suite in
+/// `tests/transport_tcp.rs` asserts it):
+///
+/// * `send_to`/`broadcast` return the *payload* wire size — transport
+///   framing overhead (e.g. TCP's 4-byte length prefix) is never
+///   byte-accounted, so `CommStats` agree across backends;
+/// * `recv` returns `Disconnected` only once **all** learner links are
+///   gone and every already-received frame has been drained;
+/// * an undecodable frame surfaces as `Decode` naming the sending
+///   learner and does not consume the rest of the deadline.
+pub trait Transport {
+    /// Number of learner links this transport was built over.
+    fn learners(&self) -> usize;
+
+    /// Serialize and send to one learner; returns the payload wire size.
+    fn send_to(&self, learner: usize, msg: &Message) -> Result<usize, BusError>;
+
+    /// Send to every learner, delivering to each reachable one even if
+    /// some links are gone; per-learner outcome.
+    fn broadcast(&self, msg: &Message) -> Vec<Result<usize, BusError>>;
+
+    /// Blocking receive from any learner: `(learner, message, wire size)`.
+    fn recv(&self, timeout: Duration) -> Result<(usize, Message, usize), BusError>;
+
+    /// Faults injected so far by this transport's links (only the
+    /// in-process bus can inject; real sockets report 0).
+    fn faults_injected(&self) -> u64 {
+        0
+    }
+}
+
+/// Learner-side link to the coordinator.
+pub trait WorkerLink {
+    /// Serialize and send to the coordinator; returns the payload wire
+    /// size (what the sender accounts).
+    fn send(&self, msg: &Message) -> Result<usize, BusError>;
+
+    /// Blocking receive from the coordinator: `(message, wire size)`.
+    fn recv(&self, timeout: Duration) -> Result<(Message, usize), BusError>;
+}
+
+impl Transport for Bus {
+    fn learners(&self) -> usize {
+        Bus::learners(self)
+    }
+
+    fn send_to(&self, learner: usize, msg: &Message) -> Result<usize, BusError> {
+        Bus::send_to(self, learner, msg)
+    }
+
+    fn broadcast(&self, msg: &Message) -> Vec<Result<usize, BusError>> {
+        Bus::broadcast(self, msg)
+    }
+
+    fn recv(&self, timeout: Duration) -> Result<(usize, Message, usize), BusError> {
+        Bus::recv(self, timeout)
+    }
+
+    fn faults_injected(&self) -> u64 {
+        Bus::faults_injected(self)
+    }
+}
+
+impl WorkerLink for Endpoint {
+    fn send(&self, msg: &Message) -> Result<usize, BusError> {
+        Endpoint::send(self, msg)
+    }
+
+    fn recv(&self, timeout: Duration) -> Result<(Message, usize), BusError> {
+        Endpoint::recv(self, timeout)
+    }
+}

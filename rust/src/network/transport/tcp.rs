@@ -1,0 +1,395 @@
+//! Length-prefixed TCP backend of the transport seam.
+//!
+//! Every frame is the *same* byte payload the in-process bus carries —
+//! `ser/` codec, `network/message.rs` schema, byte for byte — preceded by
+//! a 4-byte little-endian payload length. The prefix is transport
+//! framing, not protocol payload: accounting records the payload size
+//! only, so `CommStats` agree with the in-process backend exactly.
+//!
+//! A connection opens with a fixed 17-byte handshake (magic, wire
+//! version, worker id, config digest) answered by a single accept/reject
+//! byte, so a leader never pairs with a worker running a different
+//! config, a duplicate id, or a different wire generation.
+//!
+//! Hostile-input discipline at the framing layer:
+//!
+//! * a length prefix above [`MAX_FRAME_LEN`] surfaces as
+//!   [`BusError::Decode`] with [`DecodeError::LengthOverflow`] naming the
+//!   peer, and the link is dropped (the stream is desynchronized);
+//! * a truncated frame or mid-frame disconnect surfaces as
+//!   [`BusError::Disconnected`] once already-received frames drain;
+//! * the write side refuses to emit a frame the prefix cannot carry
+//!   ([`BusError::Encode`] — same checked conversion as `ser`'s
+//!   collection prefixes, see `Writer::u32_len`).
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::network::bus::{BusError, Peer};
+use crate::network::message::Message;
+use crate::network::transport::{Transport, WorkerLink};
+use crate::ser::{from_bytes, to_bytes, DecodeError, EncodeError, Writer};
+
+/// Hard cap on a single frame's payload, both directions. Far above any
+/// honest protocol message, far below an allocation a hostile length
+/// prefix could use to OOM the peer.
+pub const MAX_FRAME_LEN: usize = 64 << 20;
+
+/// First bytes of every connection.
+pub const HANDSHAKE_MAGIC: [u8; 4] = *b"KDOL";
+
+/// Bumped whenever the frame schema changes incompatibly (the committed
+/// wire fingerprint pins the schema; this byte guards deployments).
+pub const WIRE_VERSION: u8 = 1;
+
+/// Handshake reply: worker admitted.
+const ACCEPT_OK: u8 = 1;
+/// Handshake reply: worker refused (bad id, duplicate, config mismatch).
+const ACCEPT_REJECT: u8 = 0;
+
+/// How long the leader lets a freshly-accepted connection take to present
+/// its handshake before giving up on it (a stray port-scanner connection
+/// must not wedge cluster formation).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Worker-side connect retry cadence while the leader's listener is not
+/// up yet (separate OS processes race at startup).
+const CONNECT_RETRY: Duration = Duration::from_millis(50);
+
+/// One frame read off a socket by a reader thread.
+enum ReadEvent {
+    /// A complete payload (decode happens on the receiving caller's
+    /// thread, so decode errors surface with provenance there).
+    Frame(Vec<u8>),
+    /// The length prefix exceeded [`MAX_FRAME_LEN`]; the stream is
+    /// desynchronized and the link is dropped after this event.
+    Oversized(usize),
+}
+
+/// Write one length-prefixed frame. The prefix goes through the same
+/// checked `u32` conversion as `ser`'s collection prefixes, plus the
+/// [`MAX_FRAME_LEN`] cap the read side enforces — a frame this end
+/// refuses is exactly a frame the peer would refuse to read.
+fn write_frame(mut stream: &TcpStream, payload: &[u8]) -> Result<(), BusError> {
+    if payload.len() > MAX_FRAME_LEN {
+        return Err(BusError::Encode(EncodeError {
+            len: payload.len(),
+            max: MAX_FRAME_LEN as u64,
+        }));
+    }
+    let mut buf = Writer::with_capacity(4 + payload.len());
+    buf.u32_len(payload.len());
+    let mut buf = buf.finish().map_err(BusError::Encode)?;
+    buf.extend_from_slice(payload);
+    stream.write_all(&buf).map_err(|_| BusError::Disconnected)
+}
+
+/// Read one length-prefixed frame. `None` means the link is gone — clean
+/// close at a frame boundary and mid-frame disconnect alike (both
+/// surface as `Disconnected` once queued frames drain).
+fn read_frame(stream: &mut TcpStream) -> Option<ReadEvent> {
+    let mut hdr = [0u8; 4];
+    if stream.read_exact(&mut hdr).is_err() {
+        return None;
+    }
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len > MAX_FRAME_LEN {
+        return Some(ReadEvent::Oversized(len));
+    }
+    let mut payload = vec![0u8; len];
+    if stream.read_exact(&mut payload).is_err() {
+        return None;
+    }
+    Some(ReadEvent::Frame(payload))
+}
+
+/// Pump frames from one socket into a channel until the link dies. The
+/// sender clone dropping on exit is what turns "every link closed" into
+/// the channel's `Disconnected` — the exact semantics the in-process
+/// bus gets from mpsc for free.
+fn pump<E>(mut stream: TcpStream, tx: Sender<E>, wrap: impl Fn(ReadEvent) -> E) {
+    loop {
+        match read_frame(&mut stream) {
+            Some(ev @ ReadEvent::Frame(_)) => {
+                if tx.send(wrap(ev)).is_err() {
+                    break;
+                }
+            }
+            Some(ev @ ReadEvent::Oversized(_)) => {
+                let _ = tx.send(wrap(ev));
+                break;
+            }
+            None => break,
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// An upstream event tagged with the learner the link belongs to.
+struct UpEvent {
+    from: usize,
+    ev: ReadEvent,
+}
+
+/// Coordinator-side TCP transport: one accepted socket per learner, one
+/// reader thread per socket feeding a single ordered event channel (the
+/// TCP twin of the bus's shared upstream mpsc).
+pub struct TcpTransport {
+    links: Vec<TcpStream>,
+    events: Receiver<UpEvent>,
+    readers: Vec<JoinHandle<()>>,
+}
+
+impl TcpTransport {
+    /// Accept exactly `learners` workers on `listener`, pairing each
+    /// connection to the learner id its handshake claims. Connections
+    /// with a bad magic/version, an out-of-range or already-claimed id,
+    /// or a config digest other than `digest` are refused with
+    /// [`ACCEPT_REJECT`] and dropped; accept keeps going until every id
+    /// is filled.
+    pub fn accept(listener: &TcpListener, learners: usize, digest: u64) -> Result<TcpTransport> {
+        let mut slots: Vec<Option<TcpStream>> = (0..learners).map(|_| None).collect();
+        let mut pending = learners;
+        while pending > 0 {
+            let (mut stream, addr) = listener.accept().context("cluster listener accept")?;
+            let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+            match handshake_verdict(&mut stream, learners, digest, &slots) {
+                Ok(id) => {
+                    let _ = stream.set_read_timeout(None);
+                    let _ = stream.set_nodelay(true);
+                    stream
+                        .write_all(&[ACCEPT_OK])
+                        .with_context(|| format!("accept reply to worker {id}"))?;
+                    slots[id] = Some(stream);
+                    pending -= 1;
+                }
+                Err(reason) => {
+                    // Refuse and move on; a hostile or misconfigured
+                    // connection must not wedge cluster formation.
+                    crate::log_at!(
+                        crate::util::logging::Level::Warn,
+                        "cluster listener refused {addr}: {reason}"
+                    );
+                    let _ = stream.write_all(&[ACCEPT_REJECT]);
+                    let _ = stream.shutdown(Shutdown::Both);
+                }
+            }
+        }
+        let (tx, events) = channel();
+        let mut links = Vec::with_capacity(learners);
+        let mut readers = Vec::with_capacity(learners);
+        for (from, slot) in slots.into_iter().enumerate() {
+            let stream = slot.context("accept loop left a learner slot unfilled")?;
+            let rstream = stream.try_clone().context("clone link for reader")?;
+            let tx = tx.clone();
+            readers.push(std::thread::spawn(move || {
+                pump(rstream, tx, move |ev| UpEvent { from, ev });
+            }));
+            links.push(stream);
+        }
+        // `tx` drops here: once every reader exits, the event channel
+        // disconnects and `recv` reports `Disconnected` after draining.
+        Ok(TcpTransport {
+            links,
+            events,
+            readers,
+        })
+    }
+}
+
+/// Validate one connection's 17-byte handshake; `Ok(worker id)` admits it.
+fn handshake_verdict(
+    stream: &mut TcpStream,
+    learners: usize,
+    digest: u64,
+    slots: &[Option<TcpStream>],
+) -> std::result::Result<usize, String> {
+    let mut hello = [0u8; 17];
+    stream
+        .read_exact(&mut hello)
+        .map_err(|e| format!("handshake read: {e}"))?;
+    if hello[0..4] != HANDSHAKE_MAGIC {
+        return Err("bad handshake magic".to_string());
+    }
+    if hello[4] != WIRE_VERSION {
+        return Err(format!(
+            "wire version {} (leader speaks {WIRE_VERSION})",
+            hello[4]
+        ));
+    }
+    let mut id_bytes = [0u8; 4];
+    id_bytes.copy_from_slice(&hello[5..9]);
+    let id = u32::from_le_bytes(id_bytes) as usize;
+    let mut digest_bytes = [0u8; 8];
+    digest_bytes.copy_from_slice(&hello[9..17]);
+    let got = u64::from_le_bytes(digest_bytes);
+    if id >= learners {
+        return Err(format!("worker id {id} out of range (cluster has {learners})"));
+    }
+    if slots[id].is_some() {
+        return Err(format!("worker id {id} already connected"));
+    }
+    if got != digest {
+        return Err(format!(
+            "config digest {got:#018x} does not match leader's {digest:#018x}"
+        ));
+    }
+    Ok(id)
+}
+
+impl Transport for TcpTransport {
+    fn learners(&self) -> usize {
+        self.links.len()
+    }
+
+    fn send_to(&self, learner: usize, msg: &Message) -> Result<usize, BusError> {
+        let bytes = to_bytes(msg).map_err(BusError::Encode)?;
+        write_frame(&self.links[learner], &bytes)?;
+        Ok(bytes.len())
+    }
+
+    fn broadcast(&self, msg: &Message) -> Vec<Result<usize, BusError>> {
+        (0..self.links.len()).map(|i| self.send_to(i, msg)).collect()
+    }
+
+    fn recv(&self, timeout: Duration) -> Result<(usize, Message, usize), BusError> {
+        match self.events.recv_timeout(timeout) {
+            Ok(UpEvent {
+                from,
+                ev: ReadEvent::Frame(bytes),
+            }) => {
+                let n = bytes.len();
+                match from_bytes(&bytes) {
+                    Ok(msg) => Ok((from, msg, n)),
+                    Err(err) => Err(BusError::Decode {
+                        from: Peer::Learner(from),
+                        err,
+                    }),
+                }
+            }
+            Ok(UpEvent {
+                from,
+                ev: ReadEvent::Oversized(_),
+            }) => Err(BusError::Decode {
+                from: Peer::Learner(from),
+                err: DecodeError::LengthOverflow,
+            }),
+            Err(RecvTimeoutError::Timeout) => Err(BusError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(BusError::Disconnected),
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        for link in &self.links {
+            let _ = link.shutdown(Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Learner-side TCP link to the leader.
+pub struct TcpWorkerLink {
+    stream: TcpStream,
+    events: Receiver<ReadEvent>,
+    reader: Option<JoinHandle<()>>,
+}
+
+impl TcpWorkerLink {
+    /// Connect to the leader at `addr`, retrying for up to `retry_for`
+    /// (separate OS processes race at startup — the leader's listener
+    /// may not be up yet), then handshake as `worker_id` with the local
+    /// config's `digest`.
+    pub fn connect(
+        addr: &str,
+        worker_id: usize,
+        digest: u64,
+        retry_for: Duration,
+    ) -> Result<TcpWorkerLink> {
+        let deadline = Instant::now() + retry_for;
+        let mut stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e).with_context(|| format!("connect to leader at {addr}"));
+                    }
+                    std::thread::sleep(CONNECT_RETRY);
+                }
+            }
+        };
+        let _ = stream.set_nodelay(true);
+        let mut hello = Vec::with_capacity(17);
+        hello.extend_from_slice(&HANDSHAKE_MAGIC);
+        hello.push(WIRE_VERSION);
+        hello.extend_from_slice(&(worker_id as u32).to_le_bytes());
+        hello.extend_from_slice(&digest.to_le_bytes());
+        stream
+            .write_all(&hello)
+            .with_context(|| format!("worker {worker_id} handshake"))?;
+        let mut verdict = [0u8; 1];
+        stream
+            .read_exact(&mut verdict)
+            .with_context(|| format!("worker {worker_id} handshake reply"))?;
+        if verdict[0] != ACCEPT_OK {
+            bail!(
+                "leader at {addr} refused worker {worker_id} \
+                 (duplicate/out-of-range id or config mismatch)"
+            );
+        }
+        let (tx, events) = channel();
+        let rstream = stream.try_clone().context("clone link for reader")?;
+        let reader = std::thread::spawn(move || pump(rstream, tx, |ev| ev));
+        Ok(TcpWorkerLink {
+            stream,
+            events,
+            reader: Some(reader),
+        })
+    }
+}
+
+impl WorkerLink for TcpWorkerLink {
+    fn send(&self, msg: &Message) -> Result<usize, BusError> {
+        let bytes = to_bytes(msg).map_err(BusError::Encode)?;
+        write_frame(&self.stream, &bytes)?;
+        Ok(bytes.len())
+    }
+
+    fn recv(&self, timeout: Duration) -> Result<(Message, usize), BusError> {
+        match self.events.recv_timeout(timeout) {
+            Ok(ReadEvent::Frame(bytes)) => {
+                let n = bytes.len();
+                match from_bytes(&bytes) {
+                    Ok(msg) => Ok((msg, n)),
+                    Err(err) => Err(BusError::Decode {
+                        from: Peer::Coordinator,
+                        err,
+                    }),
+                }
+            }
+            Ok(ReadEvent::Oversized(_)) => Err(BusError::Decode {
+                from: Peer::Coordinator,
+                err: DecodeError::LengthOverflow,
+            }),
+            Err(RecvTimeoutError::Timeout) => Err(BusError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(BusError::Disconnected),
+        }
+    }
+}
+
+impl Drop for TcpWorkerLink {
+    fn drop(&mut self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,19 +1,53 @@
 //! Encoding half of the wire format: an append-only little-endian writer.
 
+use std::fmt;
+
+/// A length that does not fit the wire format's `u32` length prefix.
+///
+/// Surfaced by [`Writer::finish`] after any [`Writer::u32_len`] call was
+/// handed a count above `u32::MAX`. Truncating instead (`len as u32`) would
+/// desynchronize a byte stream: the peer would read a short prefix and then
+/// misinterpret the remaining payload bytes as the next frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EncodeError {
+    /// The length that was requested.
+    pub len: usize,
+    /// The largest length the prefix can carry (`u32::MAX`).
+    pub max: u64,
+}
+
+impl fmt::Display for EncodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "length {} exceeds length-prefix limit (max {})",
+            self.len, self.max
+        )
+    }
+}
+
+impl std::error::Error for EncodeError {}
+
 /// Append-only byte writer.
 #[derive(Default, Debug)]
 pub struct Writer {
     buf: Vec<u8>,
+    /// First length-prefix overflow seen, if any; poisons [`Writer::finish`].
+    overflow: Option<EncodeError>,
 }
 
 impl Writer {
     pub fn new() -> Self {
-        Writer { buf: Vec::new() }
+        Writer {
+            buf: Vec::new(),
+            overflow: None,
+        }
     }
 
     pub fn with_capacity(n: usize) -> Self {
         Writer {
             buf: Vec::with_capacity(n),
+            overflow: None,
         }
     }
 
@@ -30,6 +64,28 @@ impl Writer {
     #[inline]
     pub fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write a `usize` count as the wire format's `u32` length prefix,
+    /// *checked*: a count above `u32::MAX` poisons the writer instead of
+    /// silently truncating. A sentinel `u32::MAX` is still written so the
+    /// buffer layout (and `encoded_len` arithmetic) stays consistent; the
+    /// poisoned buffer is rejected by [`Writer::finish`] before it can
+    /// reach a link.
+    #[inline]
+    pub fn u32_len(&mut self, n: usize) {
+        match u32::try_from(n) {
+            Ok(v) => self.u32(v),
+            Err(_) => {
+                if self.overflow.is_none() {
+                    self.overflow = Some(EncodeError {
+                        len: n,
+                        max: u64::from(u32::MAX),
+                    });
+                }
+                self.u32(u32::MAX);
+            }
+        }
     }
 
     #[inline]
@@ -75,6 +131,16 @@ impl Writer {
         self.buf
     }
 
+    /// Finish the writer, surfacing any length-prefix overflow recorded by
+    /// [`Writer::u32_len`]. This is the only exit that makes the checked
+    /// prefix meaningful — `to_bytes` and the TCP framer both go through it.
+    pub fn finish(self) -> Result<Vec<u8>, EncodeError> {
+        match self.overflow {
+            Some(err) => Err(err),
+            None => Ok(self.buf),
+        }
+    }
+
     pub fn as_slice(&self) -> &[u8] {
         &self.buf
     }
@@ -98,5 +164,24 @@ mod tests {
         assert_eq!(w.len(), 16);
         w.f32_slice(&[3.0]);
         assert_eq!(w.len(), 20);
+    }
+
+    #[test]
+    fn u32_len_matches_u32_in_range() {
+        let mut a = Writer::new();
+        let mut b = Writer::new();
+        a.u32_len(5);
+        b.u32(5);
+        assert_eq!(a.finish().unwrap(), b.into_bytes());
+    }
+
+    #[test]
+    fn u32_len_overflow_poisons_finish() {
+        let mut w = Writer::new();
+        w.u32_len(u32::MAX as usize); // boundary: still fine
+        w.u32_len((u32::MAX as usize) + 1); // one past: overflow
+        let err = w.finish().unwrap_err();
+        assert_eq!(err.len, (u32::MAX as usize) + 1);
+        assert!(err.to_string().contains("length-prefix"));
     }
 }

@@ -15,7 +15,7 @@ mod decode;
 mod encode;
 
 pub use decode::{DecodeError, Reader};
-pub use encode::Writer;
+pub use encode::{EncodeError, Writer};
 
 /// Types that know how to encode themselves into the wire format.
 pub trait Encode {
@@ -37,10 +37,14 @@ pub trait Decode: Sized {
 }
 
 /// Encode a value into a fresh byte vector.
-pub fn to_bytes<T: Encode>(v: &T) -> Vec<u8> {
+///
+/// Fails (instead of silently truncating the length prefix) when any
+/// collection in `v` holds more than `u32::MAX` elements — see
+/// [`Writer::u32_len`].
+pub fn to_bytes<T: Encode>(v: &T) -> Result<Vec<u8>, EncodeError> {
     let mut w = Writer::new();
     v.encode(&mut w);
-    w.into_bytes()
+    w.finish()
 }
 
 /// Decode a value from a byte slice, requiring full consumption.
@@ -145,7 +149,7 @@ impl Decode for bool {
 
 impl<T: Encode> Encode for Vec<T> {
     fn encode(&self, w: &mut Writer) {
-        w.u32(self.len() as u32);
+        w.u32_len(self.len());
         for v in self {
             v.encode(w);
         }
@@ -169,7 +173,7 @@ impl<T: Decode> Decode for Vec<T> {
 
 impl Encode for String {
     fn encode(&self, w: &mut Writer) {
-        w.u32(self.len() as u32);
+        w.u32_len(self.len());
         w.bytes(self.as_bytes());
     }
     fn encoded_len(&self) -> usize {
@@ -191,39 +195,57 @@ mod tests {
 
     #[test]
     fn roundtrip_primitives() {
-        assert_eq!(from_bytes::<u64>(&to_bytes(&42u64)).unwrap(), 42);
-        assert_eq!(from_bytes::<f64>(&to_bytes(&1.5f64)).unwrap(), 1.5);
-        assert_eq!(from_bytes::<f32>(&to_bytes(&-0.25f32)).unwrap(), -0.25);
-        assert!(from_bytes::<bool>(&to_bytes(&true)).unwrap());
+        assert_eq!(from_bytes::<u64>(&to_bytes(&42u64).unwrap()).unwrap(), 42);
+        assert_eq!(from_bytes::<f64>(&to_bytes(&1.5f64).unwrap()).unwrap(), 1.5);
+        assert_eq!(from_bytes::<f32>(&to_bytes(&-0.25f32).unwrap()).unwrap(), -0.25);
+        assert!(from_bytes::<bool>(&to_bytes(&true).unwrap()).unwrap());
     }
 
     #[test]
     fn roundtrip_vec_and_string() {
         let v = vec![1.0f64, -2.0, 3.5];
-        assert_eq!(from_bytes::<Vec<f64>>(&to_bytes(&v)).unwrap(), v);
+        assert_eq!(from_bytes::<Vec<f64>>(&to_bytes(&v).unwrap()).unwrap(), v);
         let s = "kdol".to_string();
-        assert_eq!(from_bytes::<String>(&to_bytes(&s)).unwrap(), s);
+        assert_eq!(from_bytes::<String>(&to_bytes(&s).unwrap()).unwrap(), s);
     }
 
     #[test]
     fn encoded_len_matches_actual() {
         let v = vec![1.0f64; 17];
-        assert_eq!(v.encoded_len(), to_bytes(&v).len());
+        assert_eq!(v.encoded_len(), to_bytes(&v).unwrap().len());
         let s = "hello world".to_string();
-        assert_eq!(s.encoded_len(), to_bytes(&s).len());
+        assert_eq!(s.encoded_len(), to_bytes(&s).unwrap().len());
     }
 
     #[test]
     fn trailing_bytes_rejected() {
-        let mut bytes = to_bytes(&7u32);
+        let mut bytes = to_bytes(&7u32).unwrap();
         bytes.push(0);
         assert!(from_bytes::<u32>(&bytes).is_err());
     }
 
     #[test]
     fn truncation_rejected() {
-        let bytes = to_bytes(&vec![1.0f64; 4]);
+        let bytes = to_bytes(&vec![1.0f64; 4]).unwrap();
         assert!(from_bytes::<Vec<f64>>(&bytes[..bytes.len() - 1]).is_err());
+    }
+
+    /// Regression (PR 9): a collection longer than the `u32` length prefix
+    /// can carry used to be encoded as `len as u32` — a silent truncation
+    /// that over a byte stream desynchronizes framing. It must now surface
+    /// a typed [`EncodeError`]. A real 4-billion-element Vec would OOM the
+    /// test, so `Huge` fakes the oversized prefix through the same
+    /// `u32_len` entry point the blanket impls use.
+    #[test]
+    fn oversized_length_prefix_is_typed_error() {
+        struct Huge;
+        impl Encode for Huge {
+            fn encode(&self, w: &mut Writer) {
+                w.u32_len(usize::MAX);
+            }
+        }
+        let err = to_bytes(&Huge).unwrap_err();
+        assert_eq!(err.len, usize::MAX);
     }
 
     #[test]

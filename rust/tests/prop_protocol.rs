@@ -168,7 +168,7 @@ fn prop_wire_roundtrip_arbitrary_messages() {
             coeffs,
             new_svs: block,
         };
-        let bytes = to_bytes(&msg);
+        let bytes = to_bytes(&msg).unwrap();
         assert_eq!(bytes.len(), msg.wire_bytes());
         let back: Message = from_bytes(&bytes).unwrap();
         assert_eq!(back, msg);

@@ -1,0 +1,332 @@
+//! Transport-seam conformance: the TCP backend must be indistinguishable
+//! from the in-process bus at the protocol layer.
+//!
+//! * **Frame identity** — the payload a `TcpWorkerLink` puts on the wire
+//!   is byte-for-byte the `ser/` encoding the bus carries, and both ends
+//!   report the same (payload-only) wire sizes; the 4-byte length prefix
+//!   is transport framing and never accounted.
+//! * **Outcome parity** — a lockstep cluster run reports the *same*
+//!   `ClusterOutcome` over loopback TCP (leader + workers on separate
+//!   sockets) as over the in-process bus.
+//! * **Hostile frames** — an oversized length prefix is a typed `Decode`
+//!   error naming the peer; truncated frames and mid-frame disconnects
+//!   surface as `Disconnected` only after queued valid frames drain; a
+//!   worker with the wrong config digest is refused at handshake without
+//!   wedging cluster formation.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use kdol::config::{
+    CompressionConfig, ExperimentConfig, KernelConfig, ProtocolConfig, TransportConfig,
+};
+use kdol::coordinator::net::{run_cluster_join, run_cluster_listen_on};
+use kdol::coordinator::{run_cluster, ClusterOutcome};
+use kdol::network::transport::tcp::{
+    TcpTransport, TcpWorkerLink, HANDSHAKE_MAGIC, MAX_FRAME_LEN, WIRE_VERSION,
+};
+use kdol::network::{BusError, Message, Peer, SvBlock, Transport, WorkerLink};
+use kdol::ser::{to_bytes, DecodeError};
+
+const DIGEST: u64 = 0xD1_6E57;
+const RECV: Duration = Duration::from_secs(10);
+
+/// Perform the leader side of the handshake on a raw accepted socket.
+fn raw_accept(listener: &TcpListener) -> TcpStream {
+    let (mut stream, _) = listener.accept().unwrap();
+    let mut hello = [0u8; 17];
+    stream.read_exact(&mut hello).unwrap();
+    assert_eq!(&hello[0..4], &HANDSHAKE_MAGIC);
+    assert_eq!(hello[4], WIRE_VERSION);
+    stream.write_all(&[1]).unwrap();
+    stream
+}
+
+/// Write one length-prefixed frame on a raw socket.
+fn raw_frame(stream: &mut TcpStream, payload: &[u8]) {
+    stream.write_all(&(payload.len() as u32).to_le_bytes()).unwrap();
+    stream.write_all(payload).unwrap();
+}
+
+/// Connect a raw socket and handshake as `worker` with `digest`.
+fn raw_connect(addr: &str, worker: u32, digest: u64) -> TcpStream {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut hello = Vec::with_capacity(17);
+    hello.extend_from_slice(&HANDSHAKE_MAGIC);
+    hello.push(WIRE_VERSION);
+    hello.extend_from_slice(&worker.to_le_bytes());
+    hello.extend_from_slice(&digest.to_le_bytes());
+    stream.write_all(&hello).unwrap();
+    let mut verdict = [0u8; 1];
+    stream.read_exact(&mut verdict).unwrap();
+    assert_eq!(verdict[0], 1, "handshake refused");
+    stream
+}
+
+fn sample_messages() -> Vec<Message> {
+    vec![
+        Message::Violation {
+            learner: 2,
+            round: 17,
+            distance_sq: 0.3125,
+        },
+        Message::DistanceRequest,
+        Message::ModelUpload {
+            learner: 1,
+            round: 9,
+            coeffs: vec![(0, 0.5), (7, -1.25)],
+            new_svs: SvBlock {
+                ids: vec![7],
+                dim: 3,
+                coords: vec![1.0, -2.0, 0.5],
+            },
+        },
+        Message::LinearUpload {
+            learner: 0,
+            round: 4,
+            w: vec![0.25, -0.75, 3.5],
+        },
+        Message::LinearDownload {
+            w: vec![1.5, 0.0],
+            partial: true,
+        },
+        Message::Proceed,
+        Message::Shutdown,
+    ]
+}
+
+#[test]
+fn tcp_frames_are_byte_identical_to_bus_payloads() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let msgs = sample_messages();
+
+    let sender = {
+        let msgs = msgs.clone();
+        std::thread::spawn(move || {
+            let link = TcpWorkerLink::connect(&addr, 3, DIGEST, Duration::from_secs(5)).unwrap();
+            let sizes: Vec<usize> = msgs.iter().map(|m| link.send(m).unwrap()).collect();
+            // One frame back from the "coordinator": same payload-only size.
+            let (msg, n) = link.recv(RECV).unwrap();
+            (sizes, msg, n)
+        })
+    };
+
+    let mut stream = raw_accept(&listener);
+    for msg in &msgs {
+        // The canonical frame bytes are exactly what the in-process bus
+        // would carry for this message.
+        let bus_payload = to_bytes(msg).unwrap();
+        let mut hdr = [0u8; 4];
+        stream.read_exact(&mut hdr).unwrap();
+        assert_eq!(
+            u32::from_le_bytes(hdr) as usize,
+            bus_payload.len(),
+            "length prefix must carry the exact payload size"
+        );
+        let mut payload = vec![0u8; bus_payload.len()];
+        stream.read_exact(&mut payload).unwrap();
+        assert_eq!(payload, bus_payload, "TCP payload differs from bus frame");
+    }
+    let down = Message::SyncRequest;
+    let down_payload = to_bytes(&down).unwrap();
+    raw_frame(&mut stream, &down_payload);
+
+    let (sizes, got, n) = sender.join().unwrap();
+    assert_eq!(got, down, "decoded downstream message");
+    assert_eq!(n, down_payload.len(), "recv reports payload-only size");
+    for (msg, size) in msgs.iter().zip(sizes) {
+        assert_eq!(
+            size,
+            to_bytes(msg).unwrap().len(),
+            "send must report the payload-only size the bus reports"
+        );
+    }
+}
+
+/// Compare every observable field of two cluster outcomes (CommStats has
+/// no PartialEq by design — compare field by field).
+fn assert_outcomes_equal(a: &ClusterOutcome, b: &ClusterOutcome) {
+    assert_eq!(a.cum_loss.to_bits(), b.cum_loss.to_bits(), "cum_loss");
+    assert_eq!(a.cum_error.to_bits(), b.cum_error.to_bits(), "cum_error");
+    assert_eq!(a.rounds, b.rounds, "rounds");
+    assert_eq!(a.comm.up_bytes, b.comm.up_bytes, "up_bytes");
+    assert_eq!(a.comm.down_bytes, b.comm.down_bytes, "down_bytes");
+    assert_eq!(a.comm.up_msgs, b.comm.up_msgs, "up_msgs");
+    assert_eq!(a.comm.down_msgs, b.comm.down_msgs, "down_msgs");
+    assert_eq!(a.comm.syncs, b.comm.syncs, "syncs");
+    assert_eq!(a.comm.violations, b.comm.violations, "violations");
+    assert_eq!(a.comm.last_sync_round, b.comm.last_sync_round, "last_sync_round");
+    assert_eq!(a.comm.peak_round_bytes, b.comm.peak_round_bytes, "peak_round_bytes");
+    assert_eq!(a.partial_syncs, b.partial_syncs, "partial_syncs");
+    assert_eq!(
+        a.cum_compression_err.to_bits(),
+        b.cum_compression_err.to_bits(),
+        "cum_compression_err"
+    );
+    assert_eq!(a.robustness, b.robustness, "robustness");
+    assert_eq!(a.quarantine, b.quarantine, "quarantine");
+    // Models carry f64s whose Debug rendering is value-exact; no
+    // PartialEq on SvModel, so compare the canonical rendering.
+    assert_eq!(
+        format!("{:?}", a.final_model),
+        format!("{:?}", b.final_model),
+        "final_model"
+    );
+}
+
+/// Run one lockstep config on both backends and require exact agreement.
+fn assert_backend_parity(base: &ExperimentConfig) {
+    let in_process = run_cluster(base).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..base.learners)
+        .map(|i| {
+            let mut wcfg = base.clone();
+            wcfg.transport = TransportConfig::Join {
+                addr: addr.clone(),
+                worker: i,
+            };
+            std::thread::spawn(move || run_cluster_join(&wcfg))
+        })
+        .collect();
+    let mut lcfg = base.clone();
+    lcfg.transport = TransportConfig::Listen { addr };
+    let over_tcp = run_cluster_listen_on(&lcfg, listener).unwrap();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+
+    assert_outcomes_equal(&in_process, &over_tcp);
+}
+
+#[test]
+fn lockstep_linear_outcome_identical_over_tcp() {
+    let mut c = ExperimentConfig::quickstart();
+    c.name = "tcp-parity-linear".into();
+    c.learners = 3;
+    c.rounds = 60;
+    c.learner.kernel = KernelConfig::Linear;
+    c.learner.compression = CompressionConfig::None;
+    c.learner.eta = 0.1;
+    c.protocol = ProtocolConfig::Dynamic {
+        delta: 0.3,
+        check_period: 1,
+    };
+    c.partial_sync = true;
+    c.lockstep = true;
+    assert_backend_parity(&c);
+}
+
+#[test]
+fn lockstep_kernel_outcome_identical_over_tcp() {
+    // Scheduled kernel protocol: exercises the SvBlock / coeff frames
+    // (delta-encoded uploads, union downloads) over real sockets.
+    let mut c = ExperimentConfig::quickstart();
+    c.name = "tcp-parity-kernel".into();
+    c.learners = 2;
+    c.rounds = 60;
+    c.protocol = ProtocolConfig::Periodic { period: 10 };
+    c.lockstep = true;
+    assert_backend_parity(&c);
+}
+
+#[test]
+fn oversized_length_prefix_is_decode_error_naming_the_learner() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let client = std::thread::spawn(move || {
+        let mut stream = raw_connect(&addr, 0, DIGEST);
+        // A valid frame first: it must be delivered before the poison.
+        raw_frame(&mut stream, &to_bytes(&Message::DistanceRequest).unwrap());
+        // Hostile length prefix far above the cap; no payload follows.
+        stream.write_all(&((MAX_FRAME_LEN as u32) + 1).to_le_bytes()).unwrap();
+        stream
+    });
+    let transport = TcpTransport::accept(&listener, 1, DIGEST).unwrap();
+    let _stream = client.join().unwrap();
+
+    let (from, msg, _) = transport.recv(RECV).unwrap();
+    assert_eq!((from, msg), (0, Message::DistanceRequest));
+    match transport.recv(RECV) {
+        Err(BusError::Decode {
+            from: Peer::Learner(0),
+            err: DecodeError::LengthOverflow,
+        }) => {}
+        other => panic!("want Decode/LengthOverflow from learner 0, got {other:?}"),
+    }
+    // The poisoned link is dropped; with it gone the transport reports
+    // Disconnected, not an infinite timeout loop.
+    assert!(matches!(transport.recv(RECV), Err(BusError::Disconnected)));
+}
+
+#[test]
+fn truncated_frame_surfaces_as_disconnect_after_draining() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let client = std::thread::spawn(move || {
+        let mut stream = raw_connect(&addr, 0, DIGEST);
+        raw_frame(&mut stream, &to_bytes(&Message::Proceed).unwrap());
+        // Announce 64 bytes, deliver 3, vanish mid-frame.
+        stream.write_all(&64u32.to_le_bytes()).unwrap();
+        stream.write_all(&[1, 2, 3]).unwrap();
+        // Drop closes the socket.
+    });
+    let transport = TcpTransport::accept(&listener, 1, DIGEST).unwrap();
+    client.join().unwrap();
+
+    let (from, msg, _) = transport.recv(RECV).unwrap();
+    assert_eq!((from, msg), (0, Message::Proceed));
+    assert!(matches!(transport.recv(RECV), Err(BusError::Disconnected)));
+}
+
+#[test]
+fn worker_link_maps_hostility_to_coordinator_provenance() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let link_thread = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let link = TcpWorkerLink::connect(&addr, 0, DIGEST, Duration::from_secs(5)).unwrap();
+            let oversized = link.recv(RECV);
+            let after = link.recv(RECV);
+            (oversized, after)
+        })
+    };
+    let mut stream = raw_accept(&listener);
+    stream.write_all(&((MAX_FRAME_LEN as u32) + 7).to_le_bytes()).unwrap();
+    let (oversized, after) = link_thread.join().unwrap();
+    match oversized {
+        Err(BusError::Decode {
+            from: Peer::Coordinator,
+            err: DecodeError::LengthOverflow,
+        }) => {}
+        other => panic!("want Decode/LengthOverflow from coordinator, got {other:?}"),
+    }
+    assert!(matches!(after, Err(BusError::Disconnected)));
+    drop(stream);
+}
+
+#[test]
+fn wrong_digest_is_refused_without_wedging_formation() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let clients = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            // Wrong digest: must be refused at handshake.
+            let refused = TcpWorkerLink::connect(&addr, 0, DIGEST ^ 1, Duration::from_secs(5));
+            assert!(refused.is_err(), "mismatched config digest admitted");
+            // The accept loop must still be alive for the honest worker.
+            let link = TcpWorkerLink::connect(&addr, 0, DIGEST, Duration::from_secs(5)).unwrap();
+            link.send(&Message::DistanceRequest).unwrap();
+            link
+        })
+    };
+    let transport = TcpTransport::accept(&listener, 1, DIGEST).unwrap();
+    let (from, msg, _) = transport.recv(RECV).unwrap();
+    assert_eq!((from, msg), (0, Message::DistanceRequest));
+    drop(clients.join().unwrap());
+}

@@ -38,7 +38,8 @@ pub const RULE_NORMS: &str = "norms-coherence";
 /// Rule 5: no `unwrap()`/`expect(`/`panic!` on runtime paths.
 pub const RULE_NO_UNWRAP: &str = "no-unwrap-in-runtime";
 /// Rule 6: `network/message.rs` field lists match the committed
-/// `wire.fingerprint`.
+/// `wire.fingerprint`, and `network/transport/tcp.rs` framing
+/// declarations match the committed `transport.fingerprint`.
 pub const RULE_WIRE: &str = "wire-fingerprint";
 /// Pseudo-rule for malformed waiver comments (not itself waivable).
 pub const RULE_WAIVER_SYNTAX: &str = "waiver-syntax";
@@ -595,7 +596,10 @@ pub struct LintReport {
 pub struct Options {
     /// Fingerprint file for [`RULE_WIRE`]; `None` skips the rule.
     pub fingerprint: Option<PathBuf>,
-    /// Regenerate the fingerprint instead of checking it.
+    /// Framing fingerprint (`network/transport/tcp.rs`) for the
+    /// transport half of [`RULE_WIRE`]; `None` skips that half.
+    pub transport_fingerprint: Option<PathBuf>,
+    /// Regenerate the fingerprint(s) instead of checking them.
     pub bless: bool,
 }
 
@@ -1215,6 +1219,83 @@ fn render_variants(body: &[Tok]) -> String {
     parts.join(",")
 }
 
+/// Consts in `network/transport/tcp.rs` that are framing *contract*
+/// (frame cap, handshake layout, verdict bytes) rather than local tuning
+/// (timeouts, retry cadence). Only these land in the fingerprint.
+const FRAMING_CONSTS: &[&str] =
+    &["MAX_FRAME_LEN", "HANDSHAKE_MAGIC", "WIRE_VERSION", "ACCEPT_OK", "ACCEPT_REJECT"];
+
+/// Canonical framing description of `network/transport/tcp.rs`: one line
+/// per struct/enum (rendered exactly like [`wire_canonical`]) in source
+/// order, then one `framing{…}` line with each [`FRAMING_CONSTS`] value
+/// token-concatenated. String literals render as `<str>` (the lexer
+/// keeps no string text), so the handshake magic's *bytes* are pinned by
+/// `tests/transport_tcp.rs`, not here.
+pub fn transport_canonical(toks: &[Tok], spans: &[(u32, u32)]) -> Vec<String> {
+    let mut lines = Vec::new();
+    let mut framing: Vec<String> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident || in_span(t.line, spans) {
+            i += 1;
+            continue;
+        }
+        match t.text.as_str() {
+            "struct" | "enum" if i + 1 < toks.len() => {
+                let kw = t.text.clone();
+                let name = toks[i + 1].text.clone();
+                let mut j = i + 2;
+                while j < toks.len() && toks[j].text != "{" && toks[j].text != ";" {
+                    j += 1;
+                }
+                if j >= toks.len() || toks[j].text == ";" {
+                    i = j + 1;
+                    continue;
+                }
+                let close = match_delim(toks, j, "{", "}");
+                let body = &toks[j + 1..close.saturating_sub(1)];
+                if kw == "struct" {
+                    lines.push(format!("struct {name}{{{}}}", render_fields(body)));
+                } else {
+                    lines.push(format!("enum {name}{{{}}}", render_variants(body)));
+                }
+                i = close;
+            }
+            "const"
+                if i + 1 < toks.len()
+                    && toks[i + 1].kind == TokKind::Ident
+                    && FRAMING_CONSTS.contains(&toks[i + 1].text.as_str()) =>
+            {
+                let name = toks[i + 1].text.clone();
+                let mut j = i + 2;
+                while j < toks.len() && toks[j].text != "=" && toks[j].text != ";" {
+                    j += 1;
+                }
+                if j < toks.len() && toks[j].text == "=" {
+                    let mut val = String::new();
+                    j += 1;
+                    while j < toks.len() && toks[j].text != ";" {
+                        if toks[j].kind == TokKind::Str {
+                            val.push_str("<str>");
+                        } else {
+                            val.push_str(&toks[j].text);
+                        }
+                        j += 1;
+                    }
+                    framing.push(format!("{name}={val}"));
+                }
+                i = j;
+            }
+            _ => i += 1,
+        }
+    }
+    if !framing.is_empty() {
+        lines.push(format!("framing{{{}}}", framing.join(",")));
+    }
+    lines
+}
+
 fn check_fingerprint(
     canon: &[String],
     fp_path: &Path,
@@ -1259,10 +1340,25 @@ fn check_fingerprint(
     }
 }
 
-/// Write the fingerprint file (deterministic: header + canonical lines).
+const WIRE_FP_HEADER: &str =
+    "# kdol-lint wire fingerprint — canonical field lists of network/message.rs.";
+const TRANSPORT_FP_HEADER: &str =
+    "# kdol-lint transport fingerprint — framing contract of network/transport/tcp.rs.";
+
+/// Write the wire fingerprint file (deterministic: header + lines).
 pub fn write_fingerprint(canon: &[String], fp_path: &Path) -> std::io::Result<()> {
+    write_fingerprint_as(canon, fp_path, WIRE_FP_HEADER)
+}
+
+/// Write the transport fingerprint file (same shape, its own header).
+pub fn write_transport_fingerprint(canon: &[String], fp_path: &Path) -> std::io::Result<()> {
+    write_fingerprint_as(canon, fp_path, TRANSPORT_FP_HEADER)
+}
+
+fn write_fingerprint_as(canon: &[String], fp_path: &Path, header: &str) -> std::io::Result<()> {
     let mut s = String::new();
-    s.push_str("# kdol-lint wire fingerprint — canonical field lists of network/message.rs.\n");
+    s.push_str(header);
+    s.push('\n');
     s.push_str("# Regenerate with: cargo run -p kdol-lint -- rust/src --bless\n");
     for l in canon {
         s.push_str(l);
@@ -1329,6 +1425,7 @@ fn scan_file(root: &Path, path: PathBuf) -> std::io::Result<(FileScan, Vec<Viola
 pub fn lint_tree(root: &Path, opts: &Options) -> std::io::Result<LintReport> {
     let mut report = LintReport::default();
     let mut message_scan: Option<usize> = None;
+    let mut transport_scan: Option<usize> = None;
     let mut scans = Vec::new();
     for path in collect_rs_files(root)? {
         let (scan, pre) = scan_file(root, path)?;
@@ -1364,6 +1461,9 @@ pub fn lint_tree(root: &Path, opts: &Options) -> std::io::Result<LintReport> {
         if scan.rel.ends_with("network/message.rs") {
             message_scan = Some(scans.len());
         }
+        if scan.rel.ends_with("network/transport/tcp.rs") {
+            transport_scan = Some(scans.len());
+        }
         scans.push(scan);
     }
     if let (Some(idx), Some(fp)) = (message_scan, opts.fingerprint.as_ref()) {
@@ -1371,6 +1471,15 @@ pub fn lint_tree(root: &Path, opts: &Options) -> std::io::Result<LintReport> {
         let canon = wire_canonical(&scan.toks, &scan.spans);
         if opts.bless {
             write_fingerprint(&canon, fp)?;
+        } else {
+            check_fingerprint(&canon, fp, &scan.path, &mut report.violations);
+        }
+    }
+    if let (Some(idx), Some(fp)) = (transport_scan, opts.transport_fingerprint.as_ref()) {
+        let scan = &scans[idx];
+        let canon = transport_canonical(&scan.toks, &scan.spans);
+        if opts.bless {
+            write_transport_fingerprint(&canon, fp)?;
         } else {
             check_fingerprint(&canon, fp, &scan.path, &mut report.violations);
         }
@@ -1457,6 +1566,25 @@ mod tests {
                 "struct SvBlock{ids:Vec<u64>,dim:u32}".to_string(),
                 "enum Message{Ping,Data{x:u32,ys:Vec<(u64,f64)>},Pair(u8,u16)}".to_string(),
                 "tags{TAG_PING=1,TAG_DATA=2}".to_string(),
+            ]
+        );
+    }
+
+    #[test]
+    fn transport_canonicalization() {
+        let (toks, _) = lex(concat!(
+            "pub const MAX_FRAME_LEN: usize = 64 << 20;\n",
+            "pub const HANDSHAKE_MAGIC: [u8; 4] = *b\"KDOL\";\n",
+            "const ACCEPT_OK: u8 = 1;\n",
+            "const HANDSHAKE_TIMEOUT: u64 = 10;\n",
+            "enum ReadEvent { Frame(Vec<u8>), Oversized(usize) }\n",
+        ));
+        let canon = transport_canonical(&toks, &[]);
+        assert_eq!(
+            canon,
+            vec![
+                "enum ReadEvent{Frame(Vec<u8>),Oversized(usize)}".to_string(),
+                "framing{MAX_FRAME_LEN=64<<20,HANDSHAKE_MAGIC=*<str>,ACCEPT_OK=1}".to_string(),
             ]
         );
     }

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! cargo run -p kdol-lint -- rust/src              # lint, exit 1 on violations
-//! cargo run -p kdol-lint -- rust/src --bless      # re-snapshot the wire fingerprint
+//! cargo run -p kdol-lint -- rust/src --bless      # re-snapshot the fingerprints
 //! cargo run -p kdol-lint -- rust/src --list       # machine-readable rule inventory
 //! ```
 
@@ -11,17 +11,20 @@ use std::process::ExitCode;
 
 use kdol_lint::{lint_tree, Options, RULES};
 
-const USAGE: &str = "usage: kdol-lint [--list] [--bless] [--fingerprint <file>] [path]\n\
+const USAGE: &str = "usage: kdol-lint [--list] [--bless] [--fingerprint <file>] \
+[--transport-fingerprint <file>] [path]\n\
   path           tree (or file) to lint; default rust/src\n\
   --list         print `rule=<name> severity=<sev> waivers=<n>` per rule and exit 0\n\
-  --bless        regenerate the wire fingerprint instead of checking it\n\
-  --fingerprint  fingerprint file; default <kdol-lint crate dir>/wire.fingerprint";
+  --bless        regenerate the fingerprints instead of checking them\n\
+  --fingerprint  wire fingerprint file; default <kdol-lint crate dir>/wire.fingerprint\n\
+  --transport-fingerprint  framing fingerprint; default <crate dir>/transport.fingerprint";
 
 fn main() -> ExitCode {
     let mut path: Option<PathBuf> = None;
     let mut list = false;
     let mut bless = false;
     let mut fingerprint: Option<PathBuf> = None;
+    let mut transport_fp: Option<PathBuf> = None;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
@@ -31,6 +34,13 @@ fn main() -> ExitCode {
                 Some(p) => fingerprint = Some(PathBuf::from(p)),
                 None => {
                     eprintln!("--fingerprint needs a file argument\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--transport-fingerprint" => match args.next() {
+                Some(p) => transport_fp = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("--transport-fingerprint needs a file argument\n{USAGE}");
                     return ExitCode::from(2);
                 }
             },
@@ -46,10 +56,12 @@ fn main() -> ExitCode {
         }
     }
     let root = path.unwrap_or_else(|| PathBuf::from("rust/src"));
-    let fingerprint = fingerprint
-        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("wire.fingerprint"));
+    let crate_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let fingerprint = fingerprint.unwrap_or_else(|| crate_dir.join("wire.fingerprint"));
+    let transport_fp = transport_fp.unwrap_or_else(|| crate_dir.join("transport.fingerprint"));
     let opts = Options {
         fingerprint: Some(fingerprint),
+        transport_fingerprint: Some(transport_fp),
         bless,
     };
     let report = match lint_tree(&root, &opts) {

@@ -14,6 +14,7 @@ fn fixture(case: &str) -> PathBuf {
 fn lint(case: &str, fingerprint: Option<&str>) -> LintReport {
     let opts = Options {
         fingerprint: fingerprint.map(|f| fixture(case).join(f)),
+        transport_fingerprint: None,
         bless: false,
     };
     lint_tree(&fixture(case), &opts).expect("fixture tree is readable")
@@ -100,6 +101,7 @@ fn bless_is_deterministic_and_matches_committed() {
     let tmp = std::env::temp_dir().join(format!("kdol-lint-bless-{}.fp", std::process::id()));
     let opts = Options {
         fingerprint: Some(tmp.clone()),
+        transport_fingerprint: None,
         bless: true,
     };
     lint_tree(&fixture("clean/wire"), &opts).expect("bless run");

@@ -12,6 +12,7 @@ fn rust_src_is_lint_clean_at_head() {
     let crate_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
     let opts = Options {
         fingerprint: Some(crate_dir.join("wire.fingerprint")),
+        transport_fingerprint: Some(crate_dir.join("transport.fingerprint")),
         bless: false,
     };
     let root = crate_dir.join("..").join("..").join("src");
