@@ -1,0 +1,72 @@
+//! Gossip-runtime benchmarks: wall time, communicated bytes, and
+//! cumulative loss (the regret proxy) of one in-process diffusion run
+//! per topology family at m = 8 and m = 32 nodes. Bytes and loss ride
+//! in the result names, so the committed `BENCH_10.json` trajectory
+//! doubles as the communication-vs-regret record per PR.
+//!
+//! ```sh
+//! cargo bench --bench gossip
+//! # machine-readable trajectory (cargo runs benches with cwd = rust/,
+//! # so give an absolute path to hit the committed repo-root skeleton):
+//! cargo bench --bench gossip -- --json "$PWD/BENCH_10.json" --label post-PR10
+//! # CI smoke: tiny budget
+//! cargo bench --bench gossip -- --budget-ms 50 --label ci-smoke --json /tmp/b.json
+//! ```
+
+use std::time::Duration;
+
+use kdol::bench_util::{report, BenchCli, BenchResult};
+use kdol::config::{GossipConfig, ProtocolConfig};
+use kdol::coordinator::run_gossip;
+use kdol::experiments::gossip::{regular_degree, TOPOLOGIES};
+
+fn main() {
+    let mut cli = BenchCli::from_env("gossip", Duration::from_millis(300));
+    // One diffusion run per (topology, m); the budget scales the horizon
+    // so `--budget-ms 50` smoke stays quick while a default run measures
+    // something real.
+    let rounds = (cli.budget.as_millis() as usize).clamp(60, 600);
+
+    for m in [8usize, 32] {
+        for topology in TOPOLOGIES {
+            let mut cfg = kdol::config::ExperimentConfig::fig1_linear(ProtocolConfig::NoSync);
+            cfg.name = "bench-gossip".into();
+            cfg.learner.kernel = kdol::config::KernelConfig::Linear;
+            cfg.learners = m;
+            cfg.rounds = rounds;
+            cfg.record_every = rounds;
+            cfg.gossip = Some(GossipConfig {
+                topology,
+                degree: regular_degree(m),
+                period: 5,
+                seed: cfg.seed,
+            });
+            let out = run_gossip(&cfg).expect("gossip bench run");
+            let wall = Duration::from_secs_f64(out.wall_secs.max(1e-9));
+            let per_round = wall / rounds as u32;
+            let r = BenchResult {
+                name: format!(
+                    "gossip {} m={m} bytes={} cumloss={:.1}",
+                    topology.label(),
+                    out.comm.total_bytes(),
+                    out.cum_loss
+                ),
+                iters: rounds,
+                mean: per_round,
+                p50: per_round,
+                p99: per_round,
+                min: per_round,
+            };
+            println!(
+                "{} ({} exchanges over {} directed edges, consensus {:.2e})",
+                report(&r),
+                out.exchanges,
+                out.directed_edges,
+                out.consensus_sq
+            );
+            cli.record(&r);
+        }
+    }
+
+    cli.finish().expect("writing bench JSON");
+}

@@ -2,16 +2,17 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::cli::Args;
 use crate::config::{
-    CompressionConfig, DataConfig, ExperimentConfig, KernelConfig, LossKind, ProtocolConfig,
-    TransportConfig,
+    CompressionConfig, DataConfig, ExperimentConfig, GossipConfig, GossipTopology, KernelConfig,
+    LossKind, ProtocolConfig, TransportConfig,
 };
-use crate::experiments::{fig1, fig2, headline, runner, sweeps};
+use crate::coordinator::gossip::{run_gossip, run_gossip_mesh};
+use crate::experiments::{fig1, fig2, gossip as gossip_cmp, headline, runner, sweeps};
 use crate::metrics::report::{comparison_table, series_csv, write_report};
-use crate::metrics::{EfficiencyReport, Outcome};
+use crate::metrics::{gossip_comm_check, EfficiencyReport, Outcome};
 
 pub fn dispatch(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(&argv, &["divergence", "help", "partial", "lockstep"])?;
@@ -19,6 +20,7 @@ pub fn dispatch(argv: Vec<String>) -> Result<()> {
         Some("run") => cmd_run(&args),
         Some("bench") => cmd_bench(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("gossip") => cmd_gossip(&args),
         Some("serve") => cmd_serve(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("help") | None => {
@@ -233,6 +235,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "sweep-decay" => sweeps::sweep_decay(1.0, scale)?,
         "sweep-rff" => sweeps::sweep_rff(50, 0.2, scale)?,
         "sweep-partial" => sweeps::sweep_partial(0.2, scale)?,
+        "gossip" => gossip_cmp::run(8, ((1000.0 * scale) as usize).max(60), 5)?,
         "bounds" => return cmd_bounds(scale),
         other => bail!("unknown bench target `{other}`"),
     };
@@ -388,6 +391,150 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Parse a `--peers` spec: `id=host:port` pairs split by `,`.
+fn parse_peers(spec: &str) -> Result<Vec<(usize, String)>> {
+    let mut peers = Vec::new();
+    for part in spec.split(',').filter(|p| !p.is_empty()) {
+        let (id, addr) = part
+            .split_once('=')
+            .with_context(|| format!("--peers entry `{part}` is not id=host:port"))?;
+        let id: usize = id
+            .parse()
+            .with_context(|| format!("--peers entry `{part}` has a non-numeric id"))?;
+        if addr.is_empty() {
+            bail!("--peers entry `{part}` has an empty address");
+        }
+        if peers.iter().any(|&(i, _)| i == id) {
+            bail!("--peers lists node {id} twice");
+        }
+        peers.push((id, addr.to_string()));
+    }
+    Ok(peers)
+}
+
+/// FNV-1a over the final wire models, printed so two runs (or two deep-CI
+/// invocations) can be diffed for determinism with one line of shell.
+fn gossip_model_digest(final_w: &[Vec<f32>]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |b: u8| {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for w in final_w {
+        for x in w {
+            for b in x.to_le_bytes() {
+                eat(b);
+            }
+        }
+        eat(0xFF); // node separator
+    }
+    h
+}
+
+fn cmd_gossip(args: &Args) -> Result<()> {
+    args.reject_unknown(&[
+        "config", "preset", "learners", "rounds", "seed", "threads", "kernel", "gamma", "rff-dim",
+        "data", "dim", "drift", "topology", "degree", "period", "gossip-seed", "fault-plan",
+        "recv-timeout", "node-id", "listen", "peers", "csv",
+    ])?;
+    let mut cfg = load_config(args)?;
+    // The presets default to RBF kernels, which diffusion cannot average
+    // (it moves fixed-size wire vectors); without an explicit --kernel,
+    // fall back to the preset's linear sibling instead of erroring.
+    if args.get("kernel").is_none() && matches!(cfg.learner.kernel, KernelConfig::Rbf { .. }) {
+        cfg.learner.kernel = KernelConfig::Linear;
+        cfg.learner.compression = CompressionConfig::None;
+    }
+    let topology = {
+        let spec = args.get("topology").unwrap_or("ring");
+        GossipTopology::parse(spec)
+            .with_context(|| format!("unknown topology `{spec}` (ring|torus|regular|complete)"))?
+    };
+    cfg.gossip = Some(GossipConfig {
+        topology,
+        degree: args.get_usize("degree")?.unwrap_or(2),
+        period: args.get_usize("period")?.unwrap_or(1),
+        seed: args.get_u64("gossip-seed")?.unwrap_or(cfg.seed),
+    });
+    if let Some(spec) = args.get("fault-plan") {
+        let plan = crate::network::fault::parse_fault_spec(spec).map_err(|e| anyhow::anyhow!(e))?;
+        cfg.faults = Some(plan);
+    }
+    if let Some(ms) = args.get_u64("recv-timeout")? {
+        cfg.recv_timeout_ms = ms;
+    }
+    cfg.validate()?;
+
+    let mesh_node = args.get_usize("node-id")?;
+    let out = match mesh_node {
+        Some(node) => {
+            let listen = args
+                .get("listen")
+                .context("--node-id needs --listen <addr> for this node's mesh port")?;
+            let peers = parse_peers(args.get("peers").unwrap_or(""))?;
+            run_gossip_mesh(&cfg, node, listen, &peers)?
+        }
+        None => {
+            if args.get("listen").is_some() || args.get("peers").is_some() {
+                bail!("--listen/--peers describe a TCP mesh node and need --node-id <i>");
+            }
+            run_gossip(&cfg)?
+        }
+    };
+
+    println!("== gossip run: {} ==", out.name);
+    println!(
+        "topology         : {} ({} nodes, {} directed edges)",
+        out.topology.label(),
+        out.nodes,
+        out.directed_edges
+    );
+    println!("exchanges        : {}", out.exchanges);
+    println!("cumulative loss  : {:.2}", out.cum_loss);
+    println!("cumulative error : {:.2}", out.cum_error);
+    println!("total bytes      : {}", out.comm.total_bytes());
+    println!("peak round bytes : {}", out.comm.peak_round_bytes);
+    println!("messages         : {}", out.comm.total_msgs());
+    println!(
+        "active edges     : {} carried traffic",
+        out.edges.active_edges()
+    );
+    println!("consensus spread : {:.3e}", out.consensus_sq);
+    if out.missed + out.stale + out.dup + out.undecodable > 0 || cfg.faults.is_some() {
+        println!(
+            "frames           : {} missed / {} stale / {} duplicate / {} undecodable",
+            out.missed, out.stale, out.dup, out.undecodable
+        );
+        println!("faults injected  : {}", out.robustness.faults_injected);
+    }
+    if mesh_node.is_none() {
+        // Network-wide identity; a single mesh process only sees its own
+        // edges, so the check is meaningful in-process only.
+        let model_dim = match cfg.learner.kernel {
+            KernelConfig::Rff { dim, .. } => dim,
+            _ => cfg.data.dim(),
+        };
+        let c = gossip_comm_check(
+            out.comm.total_bytes(),
+            out.exchanges,
+            out.directed_edges,
+            model_dim,
+        );
+        println!(
+            "{:<17}: measured {:.0}  bound {:.0}  [{}]",
+            "comm identity",
+            c.measured,
+            c.bound,
+            if c.holds() { "holds" } else { "VIOLATED" }
+        );
+    }
+    println!(
+        "model digest     : {:016x}",
+        gossip_model_digest(&out.final_w)
+    );
+    maybe_csv(args, &[&out.to_outcome()])
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

@@ -16,6 +16,7 @@ COMMANDS:
     run           Run one experiment (config file or preset + overrides)
     bench         Reproduce a paper figure / ablation table
     cluster       Run the threaded leader/worker cluster runtime
+    gossip        Run the leaderless diffusion (gossip) runtime
     serve         Sharded serving-tier load scenario (or the XLA demo
                   via --artifacts/--variant/--requests)
     artifacts     Validate the AOT artifacts (manifest + PJRT compile)
@@ -68,9 +69,28 @@ CLUSTER FLAGS:
                            (fault injection / --fault-plan stays
                            in-process only; TCP runs reject it)
 
+GOSSIP FLAGS:
+    shares RUN's config/preset/learners/rounds/seed/threads/kernel/
+    gamma/rff-dim/data/dim/drift/csv flags (RBF is rejected — diffusion
+    averages fixed-size wire models; without --kernel an RBF preset
+    falls back to linear); plus:
+    --topology <kind>      ring | torus | regular | complete      [ring]
+    --degree <k>           random-regular degree (n*k even)       [2]
+    --period <n>           rounds between diffusion exchanges     [1]
+    --gossip-seed <n>      topology seed (defaults to --seed)
+    --fault-plan <spec>    as in CLUSTER (in-process runs only)
+    --recv-timeout <ms>    per-exchange neighbor frame deadline
+    --node-id <i>          be ONE node of a multi-process TCP mesh
+    --listen <addr>        this node's mesh bind address (--node-id)
+    --peers <spec>         neighbor addresses `id=host:port` split by
+                           `,` (every graph neighbor must be listed;
+                           all processes need identical run flags —
+                           the mesh handshake refuses a digest mismatch)
+
 BENCH FLAGS:
     bench <target>         fig1 | fig2 | headline | sweep-delta |
-                           sweep-tau | sweep-checkperiod | sweep-comp | bounds
+                           sweep-tau | sweep-checkperiod | sweep-comp |
+                           gossip | bounds
     --scale <f>            fraction of the paper horizon        [1.0]
     --csv <file>           write series CSV
 
@@ -99,6 +119,9 @@ EXAMPLES:
                  --serve-shards 4
     kdol cluster --learners 2 --lockstep --listen 127.0.0.1:7070
     kdol cluster --learners 2 --lockstep --join 127.0.0.1:7070 --worker-id 0
+    kdol gossip --topology torus --learners 9 --data hyperplane --period 5
+    kdol gossip --learners 3 --topology complete --node-id 0 \\
+                --listen 127.0.0.1:7100 --peers 1=127.0.0.1:7101,2=127.0.0.1:7102
     kdol bench fig2 --scale 0.25 --csv fig2.csv
     kdol serve --clients 64 --shards 4 --duration-ms 2000
     kdol serve --requests 4096

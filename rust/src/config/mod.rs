@@ -7,7 +7,7 @@ pub mod toml;
 
 pub use crate::network::fault::{ChurnEntry, FaultPlanConfig, LinkFaultConfig};
 pub use schema::{
-    CompressionConfig, DataConfig, ExperimentConfig, KernelConfig, LearnerConfig, LossKind,
-    ProtocolConfig, RuntimeBackend, TransportConfig,
+    CompressionConfig, DataConfig, ExperimentConfig, GossipConfig, GossipTopology, KernelConfig,
+    LearnerConfig, LossKind, ProtocolConfig, RuntimeBackend, TransportConfig,
 };
 pub use toml::{parse as parse_toml, Table, TomlError, Value};

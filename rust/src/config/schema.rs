@@ -175,6 +175,61 @@ pub enum TransportConfig {
     Join { addr: String, worker: usize },
 }
 
+/// Network graph family of the leaderless gossip runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GossipTopology {
+    /// Cycle: node i talks to i±1 (degree 2).
+    Ring,
+    /// a×b grid with wraparound, a the largest divisor of n with a² ≤ n
+    /// (degree 4, or 3 when a = 2 — the up/down neighbor coincides).
+    Torus,
+    /// Seeded random k-regular graph (pairing model, resampled until
+    /// simple and connected).
+    Regular,
+    /// Every pair adjacent — one diffusion round equals the leader's
+    /// full-sync average (the parity pin).
+    Complete,
+}
+
+impl GossipTopology {
+    pub fn label(&self) -> &'static str {
+        match self {
+            GossipTopology::Ring => "ring",
+            GossipTopology::Torus => "torus",
+            GossipTopology::Regular => "regular",
+            GossipTopology::Complete => "complete",
+        }
+    }
+
+    /// Parse a CLI/TOML spelling.
+    pub fn parse(s: &str) -> Option<GossipTopology> {
+        match s {
+            "ring" => Some(GossipTopology::Ring),
+            "torus" => Some(GossipTopology::Torus),
+            "regular" => Some(GossipTopology::Regular),
+            "complete" => Some(GossipTopology::Complete),
+            _ => None,
+        }
+    }
+}
+
+/// `[gossip]` — leaderless diffusion runtime (see `coordinator::gossip`):
+/// every node exchanges fixed-size model frames with its graph neighbors
+/// and combines them under Metropolis–Hastings weights. No leader exists;
+/// `protocol`/`partial_sync`/`lockstep` do not apply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GossipConfig {
+    pub topology: GossipTopology,
+    /// Target degree k of the `regular` family (the other families fix
+    /// their own degree).
+    pub degree: usize,
+    /// Exchange with neighbors every `period` rounds.
+    pub period: usize,
+    /// Seed of the topology's own `Pcg64` stream — graph generation is a
+    /// pure function of (seed, n, degree).
+    pub seed: u64,
+}
+
 /// A full experiment description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
@@ -235,6 +290,9 @@ pub struct ExperimentConfig {
     /// Cluster transport: in-process bus (default) or one side of a
     /// multi-process TCP cluster (`--listen` / `--join`).
     pub transport: TransportConfig,
+    /// Leaderless gossip/diffusion runtime (`kdol gossip`); `None` = the
+    /// coordinator-centric protocols above.
+    pub gossip: Option<GossipConfig>,
 }
 
 impl ExperimentConfig {
@@ -269,6 +327,7 @@ impl ExperimentConfig {
             serve_clients: 0,
             serve_shards: 0,
             transport: TransportConfig::InProcess,
+            gossip: None,
         }
     }
 
@@ -333,6 +392,7 @@ impl ExperimentConfig {
             serve_clients: 0,
             serve_shards: 0,
             transport: TransportConfig::InProcess,
+            gossip: None,
         }
     }
 
@@ -496,6 +556,56 @@ impl ExperimentConfig {
                 }
             }
         }
+        if let Some(g) = &self.gossip {
+            if self.learners < 2 {
+                bail!("gossip needs learners >= 2 (a 1-node graph has no edges)");
+            }
+            if g.period == 0 {
+                bail!("gossip.period must be >= 1");
+            }
+            if matches!(self.learner.kernel, KernelConfig::Rbf { .. }) {
+                bail!("gossip diffusion averages fixed-size models; use kernel = linear or rff");
+            }
+            match g.topology {
+                GossipTopology::Regular => {
+                    if g.degree == 0 || g.degree >= self.learners {
+                        bail!(
+                            "regular topology needs 1 <= degree < learners ({} vs {})",
+                            g.degree,
+                            self.learners
+                        );
+                    }
+                    if self.learners * g.degree % 2 != 0 {
+                        bail!("regular topology needs learners * degree even (handshake lemma)");
+                    }
+                }
+                GossipTopology::Torus => {
+                    let n = self.learners;
+                    if n < 4 || !(2..n).any(|a| n % a == 0) {
+                        bail!("torus topology needs a composite learner count >= 4");
+                    }
+                }
+                GossipTopology::Ring | GossipTopology::Complete => {}
+            }
+            if self.lockstep {
+                bail!("gossip has no leader to pace lockstep rounds");
+            }
+            if self.partial_sync {
+                bail!("partial sync is a leader-protocol refinement; gossip has no leader");
+            }
+            if !self.churn.is_empty() {
+                bail!("gossip does not support churn windows (leader-run membership plan)");
+            }
+            if self.serve_clients > 0 {
+                bail!("the serving tier hangs off the leader runtime, not gossip");
+            }
+            if self.transport != TransportConfig::InProcess {
+                bail!(
+                    "gossip meshes are formed from CLI flags (--node-id/--listen/--peers), \
+                     not [transport]"
+                );
+            }
+        }
         match (&self.data, self.learner.loss) {
             (d, LossKind::Squared) | (d, LossKind::EpsInsensitive(_)) if d.is_classification() => {
                 bail!("regression loss on a classification stream")
@@ -619,6 +729,9 @@ impl ExperimentConfig {
         }
         if let Some(tr) = t.get("transport").and_then(Value::as_table) {
             cfg.transport = parse_transport(tr)?;
+        }
+        if let Some(g) = t.get("gossip").and_then(Value::as_table) {
+            cfg.gossip = Some(parse_gossip(g, cfg.seed)?);
         }
         cfg.validate()?;
         Ok(cfg)
@@ -805,6 +918,36 @@ fn parse_transport(t: &Table) -> Result<TransportConfig> {
         }
         Some(other) => bail!("unknown transport mode `{other}`"),
     }
+}
+
+/// `[gossip]` table: `topology = "ring" | "torus" | "regular" |
+/// "complete"`, `degree` (regular only), `period`, and `seed` (defaults
+/// to the experiment seed so one knob reseeds everything).
+fn parse_gossip(t: &Table, default_seed: u64) -> Result<GossipConfig> {
+    let topology = match get_str(t, "topology") {
+        Some(s) => match GossipTopology::parse(s) {
+            Some(g) => g,
+            None => bail!("unknown gossip topology `{s}`"),
+        },
+        None => GossipTopology::Ring,
+    };
+    let degree = match get_int(t, "degree") {
+        Some(d) if d >= 1 => d as usize,
+        Some(d) => bail!("gossip.degree must be >= 1, got {d}"),
+        None => 2,
+    };
+    let period = match get_int(t, "period") {
+        Some(p) if p >= 1 => p as usize,
+        Some(p) => bail!("gossip.period must be >= 1, got {p}"),
+        None => 1,
+    };
+    let seed = get_int(t, "seed").map(|v| v as u64).unwrap_or(default_seed);
+    Ok(GossipConfig {
+        topology,
+        degree,
+        period,
+        seed,
+    })
 }
 
 fn parse_backend(t: &Table) -> Result<RuntimeBackend> {
@@ -1115,6 +1258,90 @@ worker = 1
         let mut drifted = ExperimentConfig::quickstart();
         drifted.seed += 1;
         assert_ne!(leader.cluster_digest(), drifted.cluster_digest());
+    }
+
+    #[test]
+    fn gossip_from_toml() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+learners = 8
+rounds = 40
+seed = 99
+
+[data]
+kind = "hyperplane"
+dim = 6
+drift = 0.01
+
+[learner]
+kernel = "linear"
+loss = "hinge"
+compression = "none"
+
+[gossip]
+topology = "torus"
+period = 5
+"#,
+        )
+        .unwrap();
+        let g = cfg.gossip.as_ref().unwrap();
+        assert_eq!(g.topology, GossipTopology::Torus);
+        assert_eq!(g.period, 5);
+        // Topology seed defaults to the experiment seed.
+        assert_eq!(g.seed, 99);
+
+        assert!(
+            ExperimentConfig::from_toml("[gossip]\ntopology = \"star\"\n").is_err(),
+            "unknown topology must be a parse error"
+        );
+    }
+
+    #[test]
+    fn gossip_configs_validated() {
+        let base = || {
+            let mut c = ExperimentConfig::fig1_linear(ProtocolConfig::NoSync);
+            c.learners = 8;
+            c.gossip = Some(GossipConfig {
+                topology: GossipTopology::Ring,
+                degree: 2,
+                period: 1,
+                seed: 7,
+            });
+            c
+        };
+        assert!(base().validate().is_ok());
+
+        // RBF models are variable-size; diffusion needs fixed-size ones.
+        let mut c = base();
+        c.learner.kernel = KernelConfig::Rbf { gamma: 0.5 };
+        c.learner.eta = 0.35;
+        assert!(c.validate().is_err());
+
+        // Odd n*k violates the handshake lemma.
+        let mut c = base();
+        c.learners = 5;
+        c.gossip.as_mut().unwrap().topology = GossipTopology::Regular;
+        c.gossip.as_mut().unwrap().degree = 3;
+        assert!(c.validate().is_err());
+
+        // A prime node count has no torus grid.
+        let mut c = base();
+        c.learners = 7;
+        c.gossip.as_mut().unwrap().topology = GossipTopology::Torus;
+        assert!(c.validate().is_err());
+
+        // Leader-runtime modes do not compose with gossip.
+        let mut c = base();
+        c.lockstep = true;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.partial_sync = true;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.transport = TransportConfig::Listen {
+            addr: "127.0.0.1:7070".into(),
+        };
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -1,0 +1,568 @@
+//! The leaderless runtime: every node runs the same loop — learn
+//! locally, and every `period` rounds exchange fixed-size model frames
+//! with its graph neighbors and combine them under Metropolis–Hastings
+//! weights (combine-then-adapt diffusion; see [`crate::protocol::gossip`]
+//! and the decentralized message-flow section of [`crate::coordinator`]).
+//!
+//! One diffusion exchange at node i:
+//!
+//! 1. quantize the local model to its wire form `w32` (`to_wire`);
+//! 2. send `LinearUpload{learner: i, round, w: w32}` to every neighbor
+//!    (sender-side accounting: each send is recorded once, against the
+//!    directed edge it crossed *and* the node's `CommStats` — gossip has
+//!    no downstream direction, so `down_*` stays zero and network totals
+//!    are sums over nodes without double counting);
+//! 3. collect one upload per neighbor (early frames of future exchanges
+//!    are buffered; stale and duplicate frames are counted and dropped;
+//!    a deadline miss leaves the neighbor out and its Metropolis mass on
+//!    the self-weight);
+//! 4. [`combine`] the closed neighborhood — own `w32` included — in
+//!    ascending node order, re-quantize, adopt.
+//!
+//! On a complete graph with full attendance, step 4 is bit-for-bit the
+//! leader's `sync_linear` average (`tests/parity_gossip.rs` pins it).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ExperimentConfig, GossipConfig, GossipTopology};
+use crate::data::{build_streams, DataStream};
+use crate::kernel::{LinearModel, Model};
+use crate::learner::build_learner;
+use crate::metrics::{MetricsRecorder, Outcome, Sample};
+use crate::network::transport::{build_bus_fabrics, PeerLinks, TcpMesh};
+use crate::network::{BusError, CommStats, EdgeComm, Message, RobustnessStats};
+use crate::protocol::gossip::{combine, Topology};
+
+/// Dead-man deadline for a neighbor's exchange frame on a clean mesh.
+/// Mirrors the worker loop's leader deadline: generous, because a slow
+/// neighbor is still making progress, and a dead one tears the link
+/// (surfacing as `Disconnected`, not a timeout).
+const GOSSIP_DEADMAN: Duration = Duration::from_secs(120);
+
+/// How long a TCP mesh node retries edge connections while its peer
+/// processes boot.
+const MESH_FORM_RETRY: Duration = Duration::from_secs(30);
+
+/// Aggregate result of a gossip run — the leaderless mirror of
+/// `ClusterOutcome`, merged over every node's report.
+#[derive(Debug)]
+pub struct GossipOutcome {
+    pub name: String,
+    pub topology: GossipTopology,
+    pub nodes: usize,
+    pub rounds: u64,
+    /// Directed edge count of the realized graph (frames per exchange).
+    pub directed_edges: usize,
+    pub cum_loss: f64,
+    pub cum_error: f64,
+    /// Network-wide accounting. All bytes are `up_*` (sender-side; there
+    /// is no downstream direction), and `syncs` is the number of
+    /// diffusion exchanges (not its sum over nodes).
+    pub comm: CommStats,
+    /// Per-directed-edge byte/message matrix, merged over nodes.
+    pub edges: EdgeComm,
+    /// Diffusion exchanges completed by every node.
+    pub exchanges: u64,
+    /// Neighbor contributions that missed their exchange deadline.
+    pub missed: u64,
+    /// Frames for an exchange this node had already completed.
+    pub stale: u64,
+    /// Second frames from one neighbor in one exchange.
+    pub dup: u64,
+    /// Frames that failed to decode (counted, then skipped).
+    pub undecodable: u64,
+    /// Final wire model of every node, in node order.
+    pub final_w: Vec<Vec<f32>>,
+    /// Mean squared distance of the final node models to their average —
+    /// 0 exactly when the network reached consensus.
+    pub consensus_sq: f64,
+    pub robustness: RobustnessStats,
+    /// Over-time series summed across nodes (network cumulative).
+    pub series: Vec<Sample>,
+    pub wall_secs: f64,
+}
+
+impl GossipOutcome {
+    /// View as a [`metrics::Outcome`](Outcome) so the report/CSV helpers
+    /// and the experiments harness can compare gossip against leader
+    /// runs directly. Drift and compression channels don't exist here.
+    pub fn to_outcome(&self) -> Outcome {
+        Outcome {
+            name: self.name.clone(),
+            learners: self.nodes,
+            rounds: self.rounds,
+            cumulative_loss: self.cum_loss,
+            cumulative_error: self.cum_error,
+            cum_drift: 0.0,
+            cum_compression_err: 0.0,
+            comm: self.comm.clone(),
+            partial_syncs: 0,
+            sync_cache: Default::default(),
+            series: self.series.clone(),
+            mean_svs: 0.0,
+            wall_secs: self.wall_secs,
+        }
+    }
+}
+
+/// Everything one node brings home from its loop.
+struct NodeReport {
+    node: usize,
+    cum_loss: f64,
+    cum_error: f64,
+    comm: CommStats,
+    edges: EdgeComm,
+    exchanges: u64,
+    missed: u64,
+    stale: u64,
+    dup: u64,
+    undecodable: u64,
+    final_w: Vec<f32>,
+    series: Vec<Sample>,
+    faults: u64,
+}
+
+/// Run the whole gossip network in-process: one thread per node over the
+/// per-node bus fabrics (the deterministic backend, and the only one
+/// that can inject `[faults]`).
+pub fn run_gossip(cfg: &ExperimentConfig) -> Result<GossipOutcome> {
+    let g = cfg.gossip.clone().context("config has no [gossip] section")?;
+    cfg.validate()?;
+    crate::util::par::set_threads(cfg.threads);
+    let m = cfg.learners;
+    let topo = Topology::build(g.topology, m, g.degree, g.seed)?;
+    let directed_edges = topo.directed_edges();
+    let weights = topo.metropolis_weights();
+    let fabrics = build_bus_fabrics(&topo, cfg.faults.as_ref())?;
+    let streams = build_streams(&cfg.data, m, cfg.seed);
+
+    let start = Instant::now();
+    let mut handles = Vec::with_capacity(m);
+    for (node, ((fabric, stream), row)) in
+        fabrics.into_iter().zip(streams).zip(weights).enumerate()
+    {
+        let cfg = cfg.clone();
+        let g = g.clone();
+        handles.push(std::thread::spawn(move || {
+            run_node(&cfg, &g, node, row, fabric, stream)
+        }));
+    }
+    let mut reports = Vec::with_capacity(m);
+    for h in handles {
+        match h.join() {
+            Ok(r) => reports.push(r?),
+            Err(_) => bail!("gossip node panicked"),
+        }
+    }
+    reports.sort_by_key(|r| r.node);
+    merge(cfg, &g, &topo, directed_edges, reports, start.elapsed().as_secs_f64())
+}
+
+/// Run one node of a multi-process TCP gossip mesh (`kdol gossip
+/// --node-id i --listen <addr> --peers ...`). The topology is rebuilt
+/// locally — it is a pure function of the shared config, and the
+/// config-digest handshake refuses any peer that would disagree. The
+/// outcome carries this node's metrics only.
+pub fn run_gossip_mesh(
+    cfg: &ExperimentConfig,
+    node: usize,
+    listen_addr: &str,
+    peer_addrs: &[(usize, String)],
+) -> Result<GossipOutcome> {
+    let g = cfg.gossip.clone().context("config has no [gossip] section")?;
+    cfg.validate()?;
+    if cfg.faults.is_some() {
+        bail!("fault injection is in-process only; a TCP mesh cannot replay a seeded schedule");
+    }
+    if node >= cfg.learners {
+        bail!("--node-id {node} out of range for {} learners", cfg.learners);
+    }
+    crate::util::par::set_threads(cfg.threads);
+    let m = cfg.learners;
+    let topo = Topology::build(g.topology, m, g.degree, g.seed)?;
+    let directed_edges = topo.directed_edges();
+    let row = topo.metropolis_weights().swap_remove(node);
+    let mesh = TcpMesh::form(
+        node,
+        listen_addr,
+        peer_addrs,
+        topo.neighbors(node),
+        cfg.cluster_digest(),
+        MESH_FORM_RETRY,
+    )?;
+    let stream = build_streams(&cfg.data, m, cfg.seed)
+        .into_iter()
+        .nth(node)
+        .context("node stream")?;
+    let start = Instant::now();
+    let report = run_node(cfg, &g, node, row, mesh, stream)?;
+    let mut outcome = merge(
+        cfg,
+        &g,
+        &topo,
+        directed_edges,
+        vec![report],
+        start.elapsed().as_secs_f64(),
+    )?;
+    outcome.name = format!("{}/node{node}", outcome.name);
+    // A single process cannot measure consensus; leave the local model
+    // as the only entry and the spread at zero.
+    outcome.consensus_sq = 0.0;
+    Ok(outcome)
+}
+
+/// One node's loop: learn, and every `period` rounds run a diffusion
+/// exchange with the neighbors.
+fn run_node<L: PeerLinks>(
+    cfg: &ExperimentConfig,
+    g: &GossipConfig,
+    node: usize,
+    weights: Vec<(usize, f64)>,
+    links: L,
+    mut stream: Box<dyn DataStream>,
+) -> Result<NodeReport> {
+    let dim = cfg.data.dim();
+    let mut learner = build_learner(&cfg.learner, dim, node);
+    if learner.snapshot().as_linear().is_none() {
+        bail!("gossip diffusion needs a fixed-size model (linear or rff)");
+    }
+    let mut comm = CommStats::new();
+    let mut edges = EdgeComm::new(cfg.learners);
+    let mut recorder = MetricsRecorder::new(cfg.record_every as u64);
+    // Frames that arrive for a *later* exchange than the one being
+    // collected (free-running neighbors run ahead); keyed by round.
+    let mut early: BTreeMap<u64, Vec<(usize, Vec<f32>)>> = BTreeMap::new();
+
+    let mut cum_loss = 0.0;
+    let mut cum_error = 0.0;
+    let mut exchanges = 0u64;
+    let mut missed = 0u64;
+    let mut stale = 0u64;
+    let mut dup = 0u64;
+    let mut undecodable = 0u64;
+    let rounds = cfg.rounds as u64;
+    let period = g.period as u64;
+    // Under an injected-fault plan a dropped frame never arrives, so the
+    // dead-man deadline would stall every exchange for minutes; bound
+    // the wait by the configured collection deadline instead (missing
+    // neighbors keep their mass on the self-weight — no retry ladder).
+    let deadline_per_exchange = if cfg.faults.is_some() {
+        Duration::from_millis(cfg.recv_timeout_ms)
+    } else {
+        GOSSIP_DEADMAN
+    };
+
+    for round in 1..=rounds {
+        let (x, y) = stream.next_example();
+        let ev = learner.update(&x, y);
+        cum_loss += ev.loss;
+        cum_error += ev.error;
+        recorder.record_update(ev.loss, ev.error, 0.0, 0.0);
+
+        if round % period == 0 {
+            let w32 = learner
+                .snapshot()
+                .as_linear()
+                .context("gossip node snapshot")?
+                .to_wire();
+            // Sends first: every neighbor is symmetric, so all frames of
+            // an exchange are in flight before anyone blocks collecting.
+            for &to in links.peers() {
+                let msg = Message::LinearUpload {
+                    learner: node as u32,
+                    round,
+                    w: w32.clone(),
+                };
+                comm.record_up(edges.record(node, to, links.send_to(to, &msg)?));
+            }
+
+            let mut got: Vec<Option<Vec<f32>>> = vec![None; links.peers().len()];
+            let mut pending = got.len();
+            // Frames buffered during an earlier exchange, if any.
+            if let Some(buffered) = early.remove(&round) {
+                for (from, w) in buffered {
+                    if let Ok(slot) = links.peers().binary_search(&from) {
+                        if got[slot].is_none() {
+                            got[slot] = Some(w);
+                            pending -= 1;
+                        } else {
+                            dup += 1;
+                        }
+                    }
+                }
+            }
+            let deadline = Instant::now() + deadline_per_exchange;
+            while pending > 0 {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                match links.recv(left) {
+                    Ok((from, Message::LinearUpload { learner: l, round: r, w }, _)) => {
+                        let slot = match links.peers().binary_search(&from) {
+                            Ok(s) if l as usize == from => s,
+                            // Mis-labeled or non-neighbor frame: evidence
+                            // of a confused peer, not of this exchange.
+                            _ => {
+                                undecodable += 1;
+                                continue;
+                            }
+                        };
+                        if r == round {
+                            if got[slot].is_none() {
+                                got[slot] = Some(w);
+                                pending -= 1;
+                            } else {
+                                dup += 1;
+                            }
+                        } else if r > round {
+                            early.entry(r).or_default().push((from, w));
+                        } else {
+                            stale += 1;
+                        }
+                    }
+                    Ok((_, _, _)) => {
+                        // Not a gossip frame; nothing else is spoken here.
+                        undecodable += 1;
+                    }
+                    Err(BusError::Timeout) => break,
+                    Err(BusError::Decode { .. }) => undecodable += 1,
+                    Err(BusError::Disconnected) => break,
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            missed += pending as u64;
+
+            // Closed neighborhood, ascending by node id, own quantized
+            // upload included — exactly the operands every full-attendance
+            // neighbor reduces.
+            let mut contribs: Vec<(usize, &[f32])> = Vec::with_capacity(got.len() + 1);
+            let mut own_placed = false;
+            for (slot, &peer) in links.peers().iter().enumerate() {
+                if !own_placed && node < peer {
+                    contribs.push((node, &w32));
+                    own_placed = true;
+                }
+                if let Some(w) = &got[slot] {
+                    contribs.push((peer, w));
+                }
+            }
+            if !own_placed {
+                contribs.push((node, &w32));
+            }
+            let combined = combine(node, &weights, &contribs)?;
+            learner.set_model(Model::Linear(LinearModel::from_wire(&combined.to_wire())));
+            exchanges += 1;
+            comm.record_sync(round);
+        }
+
+        comm.end_round();
+        recorder.end_round(round, &comm, 0.0);
+    }
+
+    let final_w = learner
+        .snapshot()
+        .as_linear()
+        .context("gossip node final snapshot")?
+        .to_wire();
+    Ok(NodeReport {
+        node,
+        cum_loss,
+        cum_error,
+        comm,
+        edges,
+        exchanges,
+        missed,
+        stale,
+        dup,
+        undecodable,
+        final_w,
+        series: recorder.series,
+        faults: links.faults_injected(),
+    })
+}
+
+/// Fold per-node reports into one network outcome.
+fn merge(
+    cfg: &ExperimentConfig,
+    g: &GossipConfig,
+    topo: &Topology,
+    directed_edges: usize,
+    reports: Vec<NodeReport>,
+    wall_secs: f64,
+) -> Result<GossipOutcome> {
+    let mut comm = CommStats::new();
+    let mut edges = EdgeComm::new(cfg.learners);
+    let mut cum_loss = 0.0;
+    let mut cum_error = 0.0;
+    let mut exchanges = u64::MAX;
+    let (mut missed, mut stale, mut dup, mut undecodable) = (0u64, 0, 0, 0);
+    let mut faults = 0u64;
+    let mut final_w = Vec::with_capacity(reports.len());
+    let mut series: Vec<Sample> = Vec::new();
+    for r in &reports {
+        cum_loss += r.cum_loss;
+        cum_error += r.cum_error;
+        comm.up_bytes += r.comm.up_bytes;
+        comm.up_msgs += r.comm.up_msgs;
+        comm.down_bytes += r.comm.down_bytes;
+        comm.down_msgs += r.comm.down_msgs;
+        comm.violations += r.comm.violations;
+        // Exchanges are synchronized across the network; a node's peak
+        // round sums with its peers' (same exchange rounds move bytes
+        // everywhere at once).
+        comm.peak_round_bytes += r.comm.peak_round_bytes;
+        comm.last_sync_round = comm.last_sync_round.max(r.comm.last_sync_round);
+        edges.merge(&r.edges);
+        exchanges = exchanges.min(r.exchanges);
+        missed += r.missed;
+        stale += r.stale;
+        dup += r.dup;
+        undecodable += r.undecodable;
+        faults += r.faults;
+        final_w.push(r.final_w.clone());
+        if series.is_empty() {
+            series = r.series.clone();
+        } else {
+            if series.len() != r.series.len() {
+                bail!("gossip nodes recorded series of different lengths");
+            }
+            for (s, rs) in series.iter_mut().zip(&r.series) {
+                s.cum_loss += rs.cum_loss;
+                s.cum_error += rs.cum_error;
+                s.cum_bytes += rs.cum_bytes;
+                s.cum_msgs += rs.cum_msgs;
+                s.syncs = s.syncs.max(rs.syncs);
+            }
+        }
+    }
+    if exchanges == u64::MAX {
+        exchanges = 0;
+    }
+    // The network count of sync *events*, comparable to a leader run's.
+    comm.syncs = exchanges;
+
+    // Consensus spread: mean squared distance to the network average of
+    // the final wire models (0 ⇔ every node holds the same model).
+    let consensus_sq = if reports.len() > 1 {
+        // Wire dimension, NOT cfg.data.dim() — RFF models ship their
+        // feature count, which differs from the input dimension.
+        let dim = final_w.first().map_or(0, Vec::len);
+        let n = final_w.len() as f64;
+        let mut avg = vec![0.0f64; dim];
+        for w in &final_w {
+            for (a, &x) in avg.iter_mut().zip(w) {
+                *a += f64::from(x);
+            }
+        }
+        for a in &mut avg {
+            *a /= n;
+        }
+        final_w
+            .iter()
+            .map(|w| {
+                w.iter()
+                    .zip(&avg)
+                    .map(|(&x, a)| (f64::from(x) - a) * (f64::from(x) - a))
+                    .sum::<f64>()
+            })
+            .sum::<f64>()
+            / n
+    } else {
+        0.0
+    };
+
+    debug_assert_eq!(directed_edges, topo.directed_edges());
+    Ok(GossipOutcome {
+        name: format!("{}/gossip-{}", cfg.name, g.topology.label()),
+        topology: g.topology,
+        nodes: cfg.learners,
+        rounds: cfg.rounds as u64,
+        directed_edges,
+        cum_loss,
+        cum_error,
+        comm,
+        edges,
+        exchanges,
+        missed,
+        stale,
+        dup,
+        undecodable,
+        final_w,
+        consensus_sq,
+        robustness: RobustnessStats {
+            faults_injected: faults,
+            stale_suppressed: stale,
+            dup_suppressed: dup,
+            ..RobustnessStats::default()
+        },
+        series,
+        wall_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ProtocolConfig;
+
+    fn gossip_cfg(topology: GossipTopology, m: usize, degree: usize) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::fig1_linear(ProtocolConfig::NoSync);
+        cfg.name = "gossip-smoke".into();
+        cfg.learners = m;
+        cfg.rounds = 60;
+        cfg.record_every = 20;
+        cfg.gossip = Some(GossipConfig {
+            topology,
+            degree,
+            period: 5,
+            seed: 11,
+        });
+        cfg
+    }
+
+    #[test]
+    fn ring_run_is_seed_deterministic_and_fully_accounted() {
+        let cfg = gossip_cfg(GossipTopology::Ring, 4, 0);
+        let a = run_gossip(&cfg).unwrap();
+        let b = run_gossip(&cfg).unwrap();
+        assert_eq!(a.final_w, b.final_w);
+        assert_eq!(a.comm.total_bytes(), b.comm.total_bytes());
+
+        // 12 exchanges on a 4-ring: 8 directed edges, 17 + 4·18 bytes.
+        assert_eq!(a.exchanges, 12);
+        assert_eq!(a.directed_edges, 8);
+        let frame = 17 + 4 * cfg.data.dim() as u64;
+        assert_eq!(a.comm.total_bytes(), 12 * 8 * frame);
+        assert_eq!(a.edges.total_bytes(), a.comm.total_bytes());
+        assert_eq!(a.comm.down_bytes, 0);
+        assert_eq!(a.missed + a.stale + a.dup + a.undecodable, 0);
+        assert_eq!(a.robustness, RobustnessStats::default());
+        assert!(a.consensus_sq.is_finite());
+    }
+
+    #[test]
+    fn complete_graph_reaches_consensus_every_exchange() {
+        let mut cfg = gossip_cfg(GossipTopology::Complete, 3, 0);
+        // Exchange on the final round so the last adoption is global.
+        cfg.rounds = 60;
+        let o = run_gossip(&cfg).unwrap();
+        assert_eq!(o.final_w[0], o.final_w[1]);
+        assert_eq!(o.final_w[1], o.final_w[2]);
+        assert_eq!(o.consensus_sq, 0.0);
+    }
+
+    #[test]
+    fn to_outcome_is_comparable_to_leader_runs() {
+        let cfg = gossip_cfg(GossipTopology::Ring, 4, 0);
+        let g = run_gossip(&cfg).unwrap();
+        let o = g.to_outcome();
+        assert_eq!(o.learners, 4);
+        assert_eq!(o.comm.syncs, g.exchanges);
+        assert_eq!(o.comm.total_bytes(), g.comm.total_bytes());
+        assert!(!o.series.is_empty());
+    }
+}

@@ -154,6 +154,38 @@
 //! queued), so a joiner/leaver in flight can never deadlock a round; a
 //! Join/Leave that contradicts the plan is quarantine evidence.
 //!
+//! # Decentralized message flow (gossip runtime)
+//!
+//! [`gossip`] is the leaderless alternative to everything above: no
+//! coordinator exists, and every node runs the same loop over a static,
+//! seeded communication graph (ring / torus / random-regular / complete,
+//! [`crate::protocol::gossip::Topology`]). Every `period` rounds the
+//! whole network performs one *diffusion exchange*:
+//!
+//! ```text
+//! node i --- LinearUpload{learner: i, round, w: to_wire(f_i)} ---> node j   (every edge i~j,
+//!        (sends first, then collects — all frames of an                both directions)
+//!         exchange are in flight before anyone blocks)
+//! node i:   f_i <- from_wire(to_wire( sum_j w_ij * from_wire(w_j) ))
+//!        (combine-then-adapt: Metropolis–Hastings weights over the
+//!         closed neighborhood, reduced in ascending node order —
+//!         bitwise-reproducible at any thread count; absent neighbors
+//!         keep their mass on the self-weight)
+//! ```
+//!
+//! There are no violations, no balancing, no downloads: the only
+//! protocol frame is the `LinearUpload` family, accounted sender-side
+//! per directed edge ([`crate::network::EdgeComm`]) and summed into the
+//! same `CommStats` vocabulary, so gossip and leader runs plot on one
+//! communication-vs-regret axis. On a complete graph with full
+//! attendance one exchange *is* the leader's `sync_linear` quantized
+//! wire average, bit for bit (`tests/parity_gossip.rs`). The mesh seam
+//! ([`crate::network::transport::peer`]) has the same two backends as
+//! the star: per-node in-process bus fabrics (deterministic default,
+//! seeded fault injection) and one TCP socket per graph edge
+//! (`kdol gossip --node-id i --listen ... --peers ...`, guarded by the
+//! same config-digest handshake as the cluster transport).
+//!
 //! # Transport / session layering
 //!
 //! Everything above — message flow, lockstep, retry/quarantine — is
@@ -225,12 +257,14 @@
 //!           serving, and serving never blocks publishing.
 //! ```
 
+pub mod gossip;
 pub mod leader;
 pub mod net;
 pub mod service;
 pub mod serving;
 pub mod worker;
 
+pub use gossip::{run_gossip, run_gossip_mesh, GossipOutcome};
 pub use leader::{run_cluster, ClusterOutcome};
 pub use net::{run_cluster_join, run_cluster_listen};
 pub use service::{PredictionService, ScorePath};

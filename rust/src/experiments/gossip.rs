@@ -1,0 +1,179 @@
+//! Gossip-vs-leader comparison: communication against regret for the
+//! leaderless diffusion runtime across its seeded topologies, next to a
+//! leader full-sync baseline with the same exchange cadence, on two
+//! workloads:
+//!
+//! * **drifting hyperplane** — linear models on the rotating-hyperplane
+//!   stream (linear-friendly, but drifting: staying synchronized is what
+//!   keeps regret low);
+//! * **mixture** — RFF models on the Gaussian-mixture stream (the
+//!   kernel-quality hypothesis at fixed message size).
+//!
+//! Every system runs the same seed, horizon and cadence; the only axis
+//! is the communication pattern — star (leader) vs ring / torus /
+//! random-regular / complete diffusion — so the table and CSV plot
+//! directly as the paper-style communication-vs-regret trade-off.
+
+use anyhow::Result;
+
+use crate::config::{
+    DataConfig, ExperimentConfig, GossipConfig, GossipTopology, KernelConfig, LossKind,
+    ProtocolConfig,
+};
+use crate::coordinator::gossip::run_gossip;
+use crate::experiments::runner::run_experiment;
+use crate::metrics::report::{comparison_table, series_csv};
+use crate::metrics::Outcome;
+
+/// The four seeded topology families, in the order the tables report.
+pub const TOPOLOGIES: [GossipTopology; 4] = [
+    GossipTopology::Ring,
+    GossipTopology::Torus,
+    GossipTopology::Regular,
+    GossipTopology::Complete,
+];
+
+/// The two workloads: `(family label, data, kernel)`.
+fn families() -> Vec<(&'static str, DataConfig, KernelConfig)> {
+    vec![
+        (
+            "hyperplane-linear",
+            DataConfig::Hyperplane {
+                dim: 16,
+                drift: 0.002,
+            },
+            KernelConfig::Linear,
+        ),
+        (
+            "mixture-rff",
+            DataConfig::Mixture {
+                dim: 8,
+                separation: 1.5,
+            },
+            KernelConfig::Rff {
+                gamma: 0.5,
+                dim: 64,
+            },
+        ),
+    ]
+}
+
+/// Shared base config of one family (no gossip section yet).
+fn base(family: &str, data: DataConfig, kernel: KernelConfig, m: usize, rounds: usize)
+    -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::fig1_linear(ProtocolConfig::NoSync);
+    cfg.name = format!("gossip-cmp-{family}");
+    cfg.seed = 0xD1FF;
+    cfg.learners = m;
+    cfg.rounds = rounds;
+    cfg.record_every = (rounds / 20).max(1);
+    cfg.data = data;
+    cfg.learner.kernel = kernel;
+    cfg.learner.loss = LossKind::Hinge;
+    cfg.learner.eta = 0.1;
+    cfg
+}
+
+/// A degree valid for the random-regular family at any `m >= 4`
+/// (handshake lemma: m·k must be even).
+pub fn regular_degree(m: usize) -> usize {
+    if m % 2 == 0 {
+        3.min(m - 1)
+    } else {
+        2.min(m - 1)
+    }
+}
+
+/// Run one family: a leader periodic-`period` full-sync baseline plus a
+/// gossip run per topology at the same cadence, all on the same seed.
+pub fn run_family(family: &str, m: usize, rounds: usize, period: usize) -> Result<Vec<Outcome>> {
+    let (label, data, kernel) = families()
+        .into_iter()
+        .find(|(l, _, _)| *l == family)
+        .ok_or_else(|| anyhow::anyhow!("unknown gossip family `{family}`"))?;
+    let mut out = Vec::new();
+
+    let mut leader = base(label, data.clone(), kernel, m, rounds);
+    leader.name = format!("gossip-cmp-{label}/leader");
+    leader.protocol = ProtocolConfig::Periodic { period };
+    out.push(run_experiment(&leader)?);
+
+    for topology in TOPOLOGIES {
+        let mut cfg = base(label, data.clone(), kernel, m, rounds);
+        cfg.gossip = Some(GossipConfig {
+            topology,
+            degree: regular_degree(m),
+            period,
+            seed: cfg.seed,
+        });
+        out.push(run_gossip(&cfg)?.to_outcome());
+    }
+    Ok(out)
+}
+
+/// Run both workloads at `m` nodes.
+pub fn run(m: usize, rounds: usize, period: usize) -> Result<Vec<Outcome>> {
+    let mut out = Vec::new();
+    for (label, _, _) in families() {
+        out.extend(run_family(label, m, rounds, period)?);
+    }
+    Ok(out)
+}
+
+/// Render the comparison table plus the over-time CSV (the plottable
+/// communication-vs-regret material).
+pub fn report(outcomes: &[Outcome]) -> String {
+    let refs: Vec<&Outcome> = outcomes.iter().collect();
+    let mut s = comparison_table("gossip vs leader: communication vs regret", &refs);
+    s.push('\n');
+    s.push_str(&series_csv(&refs));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hyperplane_family_compares_leader_and_all_topologies() {
+        let outcomes = run_family("hyperplane-linear", 8, 60, 5).unwrap();
+        assert_eq!(outcomes.len(), 1 + TOPOLOGIES.len());
+        assert!(outcomes[0].name.ends_with("/leader"));
+        for o in &outcomes {
+            assert!(o.comm.total_bytes() > 0, "{} moved no bytes", o.name);
+            assert!(o.cumulative_loss.is_finite());
+        }
+        // Sparser graphs move fewer bytes per exchange than the clique.
+        let find = |pat: &str| {
+            outcomes
+                .iter()
+                .find(|o| o.name.contains(pat))
+                .unwrap_or_else(|| panic!("no outcome named *{pat}*"))
+        };
+        let ring = find("gossip-ring");
+        let complete = find("gossip-complete");
+        assert!(ring.comm.total_bytes() < complete.comm.total_bytes());
+
+        let rendered = report(&outcomes);
+        assert!(rendered.contains("gossip-ring"));
+        assert!(rendered.contains("cum_bytes"));
+    }
+
+    #[test]
+    fn mixture_family_runs_rff_end_to_end() {
+        let outcomes = run_family("mixture-rff", 4, 40, 5).unwrap();
+        assert_eq!(outcomes.len(), 1 + TOPOLOGIES.len());
+        for o in &outcomes {
+            assert!(o.cumulative_error.is_finite());
+        }
+    }
+
+    #[test]
+    fn regular_degree_respects_handshake_lemma() {
+        for m in 4..20 {
+            let k = regular_degree(m);
+            assert!(k >= 1 && k < m);
+            assert_eq!(m * k % 2, 0, "m={m} k={k}");
+        }
+    }
+}

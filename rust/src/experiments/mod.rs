@@ -4,6 +4,7 @@
 
 pub mod fig1;
 pub mod fig2;
+pub mod gossip;
 pub mod headline;
 pub mod runner;
 pub mod sweeps;

@@ -146,6 +146,26 @@ impl EfficiencyReport {
     }
 }
 
+/// Communication identity of the gossip runtime: a diffusion exchange
+/// moves exactly one `LinearUpload` (17 + 4·dim wire bytes, `dim` the
+/// model dimension) across every directed edge, so
+/// `C = exchanges · |E_directed| · (17 + 4·dim)`. On a clean run this is
+/// an equality (the smoke tests pin it); under injected faults the
+/// sender still accounts every frame it handed the link, so the identity
+/// keeps holding as a bound-with-equality rather than an inequality.
+pub fn gossip_comm_check(
+    measured_bytes: u64,
+    exchanges: u64,
+    directed_edges: usize,
+    dim: usize,
+) -> BoundCheck {
+    BoundCheck {
+        name: "gossip comm = exchanges*edges*(17+4d)",
+        measured: measured_bytes as f64,
+        bound: exchanges as f64 * directed_edges as f64 * (17.0 + 4.0 * dim as f64),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +217,15 @@ mod tests {
         let p6 = &r.checks[0];
         assert!(p6.holds(), "{p6:?}");
         assert!((r.consistency_ratio.unwrap() - 10.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gossip_identity_is_tight() {
+        // 12 exchanges on a 4-ring (8 directed edges) at dim 18.
+        let c = gossip_comm_check(12 * 8 * (17 + 4 * 18), 12, 8, 18);
+        assert!(c.holds());
+        assert_eq!(c.measured, c.bound);
+        assert!(!gossip_comm_check(12 * 8 * (17 + 4 * 18) + 1, 12, 8, 18).holds());
     }
 
     #[test]

@@ -7,6 +7,6 @@ pub mod latency;
 pub mod recorder;
 pub mod report;
 
-pub use efficiency::{BoundCheck, EfficiencyReport};
+pub use efficiency::{gossip_comm_check, BoundCheck, EfficiencyReport};
 pub use latency::{LatencyHistogram, LatencySummary};
 pub use recorder::{MetricsRecorder, Outcome, Sample};

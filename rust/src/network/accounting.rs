@@ -77,6 +77,76 @@ impl CommStats {
     }
 }
 
+/// Per-directed-edge byte/message accounting of the gossip runtime: a
+/// dense n×n matrix (row = sender, column = receiver), cheap enough for
+/// the node counts gossip targets and free of hash-iteration ordering.
+/// The diagonal stays zero — topologies are irreflexive.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EdgeComm {
+    n: usize,
+    bytes: Vec<u64>,
+    msgs: Vec<u64>,
+}
+
+impl EdgeComm {
+    pub fn new(n: usize) -> Self {
+        EdgeComm {
+            n,
+            bytes: vec![0; n * n],
+            msgs: vec![0; n * n],
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.n
+    }
+
+    /// Record `bytes` sent on the directed edge `from -> to`, returning
+    /// `bytes` unchanged so one statement can both count the edge and
+    /// feed the same figure to [`CommStats`] — the shape the
+    /// `accounted-sends` lint requires at gossip send sites:
+    /// `comm.record_up(edges.record(node, to, links.send_to(to, &m)?))`.
+    pub fn record(&mut self, from: usize, to: usize, bytes: usize) -> usize {
+        let idx = from * self.n + to;
+        self.bytes[idx] += bytes as u64;
+        self.msgs[idx] += 1;
+        bytes
+    }
+
+    pub fn edge_bytes(&self, from: usize, to: usize) -> u64 {
+        self.bytes[from * self.n + to]
+    }
+
+    pub fn edge_msgs(&self, from: usize, to: usize) -> u64 {
+        self.msgs[from * self.n + to]
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+
+    pub fn total_msgs(&self) -> u64 {
+        self.msgs.iter().sum()
+    }
+
+    /// Directed edges that carried at least one message.
+    pub fn active_edges(&self) -> usize {
+        self.msgs.iter().filter(|&&m| m > 0).count()
+    }
+
+    /// Fold another matrix in (same `n`) — used when per-node reports are
+    /// merged into one `GossipOutcome`.
+    pub fn merge(&mut self, other: &EdgeComm) {
+        debug_assert_eq!(self.n, other.n);
+        for (a, b) in self.bytes.iter_mut().zip(&other.bytes) {
+            *a += b;
+        }
+        for (a, b) in self.msgs.iter_mut().zip(&other.msgs) {
+            *a += b;
+        }
+    }
+}
+
 /// Robustness counters for a cluster run: how much of the leader's fault
 /// machinery actually fired. All-zero on a clean bus with honest workers
 /// (the chaos suite pins that).
@@ -146,6 +216,29 @@ mod tests {
         c.record_up(5);
         c.end_round();
         assert_eq!(c.peak_round_bytes, 200);
+    }
+
+    #[test]
+    fn edge_matrix_records_and_merges() {
+        let mut e = EdgeComm::new(3);
+        // `record` hands the byte count back for statement chaining.
+        assert_eq!(e.record(0, 1, 45), 45);
+        e.record(0, 1, 45);
+        e.record(1, 0, 45);
+        e.record(2, 0, 7);
+        assert_eq!(e.edge_bytes(0, 1), 90);
+        assert_eq!(e.edge_msgs(0, 1), 2);
+        assert_eq!(e.edge_bytes(1, 0), 45);
+        assert_eq!(e.total_bytes(), 142);
+        assert_eq!(e.total_msgs(), 4);
+        assert_eq!(e.active_edges(), 3);
+
+        let mut f = EdgeComm::new(3);
+        f.record(2, 1, 10);
+        f.merge(&e);
+        assert_eq!(f.total_bytes(), 152);
+        assert_eq!(f.edge_bytes(0, 1), 90);
+        assert_eq!(f.active_edges(), 4);
     }
 
     #[test]

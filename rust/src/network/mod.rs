@@ -13,9 +13,9 @@ pub mod fault;
 pub mod message;
 pub mod transport;
 
-pub use accounting::{CommStats, QuarantineRecord, RobustnessStats};
+pub use accounting::{CommStats, EdgeComm, QuarantineRecord, RobustnessStats};
 pub use bus::{Bus, BusError, Endpoint, Peer};
 pub use delta::{DeltaDecoder, DeltaEncoder};
 pub use fault::{ChurnEntry, FaultPlan, FaultPlanConfig, LinkFaultConfig};
 pub use message::{Message, SvBlock};
-pub use transport::{Transport, WorkerLink};
+pub use transport::{PeerLinks, Transport, WorkerLink};

@@ -14,12 +14,18 @@
 //!   `ser/` codec and `network/message.rs` frames byte-for-byte, driven
 //!   by `kdol cluster --listen/--join`.
 //!
+//! The leaderless gossip runtime has its own mesh-shaped seam,
+//! [`PeerLinks`] ([`peer`]), with the same two backends (per-node bus
+//! fabrics in-process, one socket per graph edge over TCP) and the same
+//! error vocabulary and accounting contract.
+//!
 //! Both backends surface the same typed [`BusError`] vocabulary —
 //! `Timeout` (retryable), `Disconnected` (fatal for the link), `Decode`
 //! (misbehavior evidence naming the sender), `Encode` (unframeable
 //! outgoing message) — so the leader's retry/quarantine ladders work
 //! unmodified over sockets.
 
+pub mod peer;
 pub mod tcp;
 
 use std::time::Duration;
@@ -27,6 +33,7 @@ use std::time::Duration;
 use crate::network::bus::{Bus, BusError, Endpoint};
 use crate::network::message::Message;
 
+pub use peer::{build_bus_fabrics, BusFabric, PeerLinks, TcpMesh};
 pub use tcp::{TcpTransport, TcpWorkerLink};
 
 /// Coordinator-side transport: send to / receive from any learner.

@@ -1,0 +1,511 @@
+//! Peer-to-peer link fabrics for the leaderless gossip runtime.
+//!
+//! The leader protocols speak over a star ([`Transport`] one side,
+//! [`WorkerLink`] the other); gossip needs a *mesh* — every node sends
+//! to and receives from its graph neighbors symmetrically. [`PeerLinks`]
+//! is that seam, with the same contract as the star traits: `send_to`
+//! returns the **payload** wire size (framing is never accounted), and
+//! `recv` reports [`BusError::Disconnected`] only after every neighbor
+//! link is gone and queued frames have drained.
+//!
+//! Two backends, mirroring the cluster transports:
+//!
+//! * [`BusFabric`] — in-process: node `i`'s inbox is a private [`Bus`]
+//!   over all `n` slots; neighbor `j` holds the [`Endpoint`] with id `j`
+//!   of that bus (so frame provenance is real), and every non-neighbor
+//!   endpoint is dropped at construction so disconnect semantics work.
+//!   This is the deterministic/test backend and the only one that
+//!   supports fault injection — each node's *outgoing* links inherit the
+//!   plan's `up` side, seeded per sender exactly like the cluster bus.
+//! * [`TcpMesh`] — one socket per graph edge between OS processes. The
+//!   lower node id of each edge accepts, the higher id connects (bind
+//!   first, then connect, so formation never deadlocks), and every
+//!   connection opens with the same magic/version/id/config-digest
+//!   handshake as the cluster transport. The framing helpers are local
+//!   re-implementations against the *public* contract constants of
+//!   [`tcp`](super::tcp) — that file is pinned by the transport
+//!   fingerprint and deliberately not touched.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::network::bus::{Bus, BusError, Endpoint, Peer};
+use crate::network::fault::FaultPlanConfig;
+use crate::network::message::Message;
+use crate::network::transport::tcp::{HANDSHAKE_MAGIC, MAX_FRAME_LEN, WIRE_VERSION};
+use crate::protocol::gossip::Topology;
+use crate::ser::{from_bytes, to_bytes, DecodeError, EncodeError, Writer};
+
+/// Mesh handshake replies (same values as the cluster transport's
+/// private pair; redeclared because only the contract constants are
+/// public there).
+const MESH_ACCEPT_OK: u8 = 1;
+const MESH_ACCEPT_REJECT: u8 = 0;
+
+/// Handshake deadline per accepted connection (a stray connection must
+/// not wedge mesh formation).
+const MESH_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Connect retry cadence while a lower-id peer's listener comes up.
+const MESH_CONNECT_RETRY: Duration = Duration::from_millis(50);
+
+/// One node's view of the mesh: its graph neighbors, addressable by id.
+pub trait PeerLinks: Send {
+    /// This node's id.
+    fn node(&self) -> usize;
+
+    /// Neighbor ids, ascending.
+    fn peers(&self) -> &[usize];
+
+    /// Send to one neighbor; returns the payload wire size (the figure
+    /// accounting records — framing bytes are transport overhead).
+    fn send_to(&self, to: usize, msg: &Message) -> Result<usize, BusError>;
+
+    /// Blocking receive from any neighbor: `(from, message, wire size)`.
+    fn recv(&self, timeout: Duration) -> Result<(usize, Message, usize), BusError>;
+
+    /// Faults injected on this node's links so far (in-process only).
+    fn faults_injected(&self) -> u64 {
+        0
+    }
+}
+
+/// In-process mesh node: a private inbox [`Bus`] plus one outgoing
+/// [`Endpoint`] per neighbor (an endpoint *of that neighbor's* bus).
+pub struct BusFabric {
+    node: usize,
+    peers: Vec<usize>,
+    inbox: Bus,
+    /// `(neighbor id, endpoint into the neighbor's inbox)`, ascending.
+    out: Vec<(usize, Endpoint)>,
+}
+
+/// Build one [`BusFabric`] per node of `topo`. With `faults`, every
+/// node's outgoing links draw from the plan's `up` side, seeded by the
+/// *sending* node's id — the same sender-side placement as the cluster
+/// bus, so a schedule replays by seed here too.
+pub fn build_bus_fabrics(
+    topo: &Topology,
+    faults: Option<&FaultPlanConfig>,
+) -> Result<Vec<BusFabric>> {
+    let n = topo.n;
+    let mut inboxes = Vec::with_capacity(n);
+    let mut endpoints: Vec<Vec<Option<Endpoint>>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (bus, eps) = Bus::new_with_faults(n, faults);
+        inboxes.push(bus);
+        endpoints.push(eps.into_iter().map(Some).collect());
+    }
+    let mut fabrics = Vec::with_capacity(n);
+    for (node, inbox) in inboxes.into_iter().enumerate() {
+        let mut out = Vec::with_capacity(topo.degree(node));
+        for &nb in topo.neighbors(node) {
+            let ep = endpoints[nb][node]
+                .take()
+                .context("endpoint handed out twice (asymmetric adjacency?)")?;
+            out.push((nb, ep));
+        }
+        fabrics.push(BusFabric {
+            node,
+            peers: topo.neighbors(node).to_vec(),
+            inbox,
+            out,
+        });
+    }
+    // `endpoints` drops here: every endpoint not claimed by a neighbor
+    // disconnects from its bus, so a node's recv sees `Disconnected`
+    // exactly when all of its actual neighbors are gone.
+    Ok(fabrics)
+}
+
+impl PeerLinks for BusFabric {
+    fn node(&self) -> usize {
+        self.node
+    }
+
+    fn peers(&self) -> &[usize] {
+        &self.peers
+    }
+
+    fn send_to(&self, to: usize, msg: &Message) -> Result<usize, BusError> {
+        match self.out.binary_search_by_key(&to, |&(id, _)| id) {
+            Ok(i) => self.out[i].1.send(msg),
+            Err(_) => Err(BusError::Disconnected),
+        }
+    }
+
+    fn recv(&self, timeout: Duration) -> Result<(usize, Message, usize), BusError> {
+        self.inbox.recv(timeout)
+    }
+
+    fn faults_injected(&self) -> u64 {
+        // This node's inbox counter accumulates what *its neighbors'*
+        // endpoints injected sending here; summed over all nodes every
+        // injection is counted exactly once.
+        self.inbox.faults_injected()
+    }
+}
+
+/// A frame (or framing violation) read off one mesh socket.
+enum MeshEvent {
+    Frame(usize, Vec<u8>),
+    Oversized(usize),
+}
+
+/// TCP mesh node: one socket per incident graph edge.
+pub struct TcpMesh {
+    node: usize,
+    peers: Vec<usize>,
+    /// `(neighbor id, write half)`, ascending by id.
+    links: Vec<(usize, TcpStream)>,
+    events: Receiver<MeshEvent>,
+    readers: Vec<JoinHandle<()>>,
+}
+
+impl TcpMesh {
+    /// Form this node's links: bind `listen_addr`, connect to every
+    /// neighbor with a lower id (looked up in `peer_addrs`, retrying for
+    /// `retry_for` while that process boots), then accept every neighbor
+    /// with a higher id, validating the magic/version/id/`digest`
+    /// handshake and refusing anything else without wedging.
+    pub fn form(
+        node: usize,
+        listen_addr: &str,
+        peer_addrs: &[(usize, String)],
+        neighbors: &[usize],
+        digest: u64,
+        retry_for: Duration,
+    ) -> Result<TcpMesh> {
+        let listener = TcpListener::bind(listen_addr)
+            .with_context(|| format!("gossip node {node}: bind {listen_addr}"))?;
+
+        let mut links: Vec<(usize, TcpStream)> = Vec::with_capacity(neighbors.len());
+        for &nb in neighbors.iter().filter(|&&nb| nb < node) {
+            let addr = peer_addrs
+                .iter()
+                .find(|&&(id, _)| id == nb)
+                .map(|(_, a)| a.as_str())
+                .with_context(|| format!("gossip node {node}: no --peers address for {nb}"))?;
+            links.push((nb, connect_edge(node, nb, addr, digest, retry_for)?));
+        }
+
+        let mut expected: Vec<usize> = neighbors.iter().copied().filter(|&nb| nb > node).collect();
+        while !expected.is_empty() {
+            let (mut stream, addr) = listener
+                .accept()
+                .with_context(|| format!("gossip node {node}: accept"))?;
+            let _ = stream.set_read_timeout(Some(MESH_HANDSHAKE_TIMEOUT));
+            match mesh_verdict(&mut stream, &expected, digest) {
+                Ok(from) => {
+                    let _ = stream.set_read_timeout(None);
+                    let _ = stream.set_nodelay(true);
+                    stream
+                        .write_all(&[MESH_ACCEPT_OK])
+                        .with_context(|| format!("gossip node {node}: accept reply to {from}"))?;
+                    expected.retain(|&e| e != from);
+                    links.push((from, stream));
+                }
+                Err(reason) => {
+                    crate::log_at!(
+                        crate::util::logging::Level::Warn,
+                        "gossip node {node} refused {addr}: {reason}"
+                    );
+                    let _ = stream.write_all(&[MESH_ACCEPT_REJECT]);
+                    let _ = stream.shutdown(Shutdown::Both);
+                }
+            }
+        }
+        links.sort_by_key(|&(id, _)| id);
+
+        let (tx, events) = channel();
+        let mut readers = Vec::with_capacity(links.len());
+        for &(from, ref stream) in &links {
+            let rstream = stream.try_clone().context("clone mesh link for reader")?;
+            let tx = tx.clone();
+            readers.push(std::thread::spawn(move || pump_mesh(rstream, tx, from)));
+        }
+        // `tx` drops here: once every reader exits, `recv` reports
+        // `Disconnected` after draining — same semantics as the bus.
+        Ok(TcpMesh {
+            node,
+            peers: links.iter().map(|&(id, _)| id).collect(),
+            links,
+            events,
+            readers,
+        })
+    }
+}
+
+/// Dial the lower-id side of an edge and run the connector handshake.
+fn connect_edge(
+    node: usize,
+    nb: usize,
+    addr: &str,
+    digest: u64,
+    retry_for: Duration,
+) -> Result<TcpStream> {
+    let deadline = Instant::now() + retry_for;
+    let mut stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e)
+                        .with_context(|| format!("gossip node {node}: connect to {nb} at {addr}"));
+                }
+                std::thread::sleep(MESH_CONNECT_RETRY);
+            }
+        }
+    };
+    let _ = stream.set_nodelay(true);
+    let mut hello = Vec::with_capacity(17);
+    hello.extend_from_slice(&HANDSHAKE_MAGIC);
+    hello.push(WIRE_VERSION);
+    hello.extend_from_slice(&(node as u32).to_le_bytes());
+    hello.extend_from_slice(&digest.to_le_bytes());
+    stream
+        .write_all(&hello)
+        .with_context(|| format!("gossip node {node}: handshake to {nb}"))?;
+    let mut verdict = [0u8; 1];
+    stream
+        .read_exact(&mut verdict)
+        .with_context(|| format!("gossip node {node}: handshake reply from {nb}"))?;
+    if verdict[0] != MESH_ACCEPT_OK {
+        bail!("gossip peer {nb} at {addr} refused node {node} (id or config mismatch)");
+    }
+    Ok(stream)
+}
+
+/// Validate one accepted connection's 17-byte hello against the still-
+/// expected higher-id neighbor set; `Ok(peer id)` admits it.
+fn mesh_verdict(
+    stream: &mut TcpStream,
+    expected: &[usize],
+    digest: u64,
+) -> std::result::Result<usize, String> {
+    let mut hello = [0u8; 17];
+    stream
+        .read_exact(&mut hello)
+        .map_err(|e| format!("handshake read: {e}"))?;
+    if hello[0..4] != HANDSHAKE_MAGIC {
+        return Err("bad handshake magic".to_string());
+    }
+    if hello[4] != WIRE_VERSION {
+        return Err(format!("wire version {} (node speaks {WIRE_VERSION})", hello[4]));
+    }
+    let mut id_bytes = [0u8; 4];
+    id_bytes.copy_from_slice(&hello[5..9]);
+    let from = u32::from_le_bytes(id_bytes) as usize;
+    let mut digest_bytes = [0u8; 8];
+    digest_bytes.copy_from_slice(&hello[9..17]);
+    let got = u64::from_le_bytes(digest_bytes);
+    if !expected.contains(&from) {
+        return Err(format!("peer id {from} is not an expected neighbor"));
+    }
+    if got != digest {
+        return Err(format!(
+            "config digest {got:#018x} does not match this node's {digest:#018x}"
+        ));
+    }
+    Ok(from)
+}
+
+/// Write one length-prefixed frame (the cluster transport's framing
+/// contract: u32 LE payload length, [`MAX_FRAME_LEN`] cap both sides).
+fn write_mesh_frame(mut stream: &TcpStream, payload: &[u8]) -> Result<(), BusError> {
+    if payload.len() > MAX_FRAME_LEN {
+        return Err(BusError::Encode(EncodeError {
+            len: payload.len(),
+            max: MAX_FRAME_LEN as u64,
+        }));
+    }
+    let mut buf = Writer::with_capacity(4 + payload.len());
+    buf.u32_len(payload.len());
+    let mut buf = buf.finish().map_err(BusError::Encode)?;
+    buf.extend_from_slice(payload);
+    stream.write_all(&buf).map_err(|_| BusError::Disconnected)
+}
+
+/// Pump frames from one mesh socket into the shared event channel until
+/// the link dies; an oversized length prefix poisons only this link.
+fn pump_mesh(mut stream: TcpStream, tx: Sender<MeshEvent>, from: usize) {
+    loop {
+        let mut hdr = [0u8; 4];
+        if stream.read_exact(&mut hdr).is_err() {
+            break;
+        }
+        let len = u32::from_le_bytes(hdr) as usize;
+        if len > MAX_FRAME_LEN {
+            let _ = tx.send(MeshEvent::Oversized(from));
+            break;
+        }
+        let mut payload = vec![0u8; len];
+        if stream.read_exact(&mut payload).is_err() {
+            break;
+        }
+        if tx.send(MeshEvent::Frame(from, payload)).is_err() {
+            break;
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+impl PeerLinks for TcpMesh {
+    fn node(&self) -> usize {
+        self.node
+    }
+
+    fn peers(&self) -> &[usize] {
+        &self.peers
+    }
+
+    fn send_to(&self, to: usize, msg: &Message) -> Result<usize, BusError> {
+        let i = match self.links.binary_search_by_key(&to, |&(id, _)| id) {
+            Ok(i) => i,
+            Err(_) => return Err(BusError::Disconnected),
+        };
+        let bytes = to_bytes(msg).map_err(BusError::Encode)?;
+        write_mesh_frame(&self.links[i].1, &bytes)?;
+        Ok(bytes.len())
+    }
+
+    fn recv(&self, timeout: Duration) -> Result<(usize, Message, usize), BusError> {
+        match self.events.recv_timeout(timeout) {
+            Ok(MeshEvent::Frame(from, bytes)) => {
+                let n = bytes.len();
+                match from_bytes(&bytes) {
+                    Ok(msg) => Ok((from, msg, n)),
+                    Err(err) => Err(BusError::Decode {
+                        from: Peer::Learner(from),
+                        err,
+                    }),
+                }
+            }
+            Ok(MeshEvent::Oversized(from)) => Err(BusError::Decode {
+                from: Peer::Learner(from),
+                err: DecodeError::LengthOverflow,
+            }),
+            Err(RecvTimeoutError::Timeout) => Err(BusError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(BusError::Disconnected),
+        }
+    }
+}
+
+impl Drop for TcpMesh {
+    fn drop(&mut self) {
+        for (_, link) in &self.links {
+            let _ = link.shutdown(Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GossipTopology;
+
+    fn upload(from: usize, round: u64) -> Message {
+        Message::LinearUpload {
+            learner: from as u32,
+            round,
+            w: vec![from as f32, round as f32],
+        }
+    }
+
+    #[test]
+    fn bus_fabric_routes_between_neighbors_only() {
+        let topo = Topology::build(GossipTopology::Ring, 4, 0, 1).unwrap();
+        let fabrics = build_bus_fabrics(&topo, None).unwrap();
+        assert_eq!(fabrics[0].peers(), &[1, 3]);
+
+        // 0 -> 1 arrives with provenance.
+        let n = fabrics[0].send_to(1, &upload(0, 7)).unwrap();
+        assert!(n > 0);
+        let (from, msg, bytes) = fabrics[1].recv(Duration::from_secs(1)).unwrap();
+        assert_eq!(from, 0);
+        assert_eq!(bytes, n);
+        assert_eq!(msg, upload(0, 7));
+
+        // 0 and 2 are not adjacent on a 4-ring.
+        assert!(matches!(
+            fabrics[0].send_to(2, &upload(0, 1)),
+            Err(BusError::Disconnected)
+        ));
+    }
+
+    #[test]
+    fn bus_fabric_disconnects_when_neighbors_drop() {
+        let topo = Topology::build(GossipTopology::Ring, 2, 0, 1).unwrap();
+        let mut fabrics = build_bus_fabrics(&topo, None).unwrap();
+        let f1 = fabrics.pop().unwrap();
+        let f0 = fabrics.pop().unwrap();
+        f1.send_to(0, &upload(1, 3)).unwrap();
+        drop(f1);
+        // The queued frame drains first, then the fabric reports the
+        // mesh as gone — never a hang.
+        let (from, _, _) = f0.recv(Duration::from_secs(1)).unwrap();
+        assert_eq!(from, 1);
+        assert!(matches!(
+            f0.recv(Duration::from_millis(20)),
+            Err(BusError::Disconnected)
+        ));
+    }
+
+    #[test]
+    fn tcp_mesh_forms_a_triangle_and_routes() {
+        let topo = Topology::build(GossipTopology::Complete, 3, 0, 1).unwrap();
+        let digest = 0xD1D1;
+        // OS-assigned ports, rebound by each mesh node.
+        let addrs: Vec<String> = (0..3)
+            .map(|_| {
+                let l = TcpListener::bind("127.0.0.1:0").unwrap();
+                let a = l.local_addr().unwrap().to_string();
+                drop(l);
+                a
+            })
+            .collect();
+        let peer_addrs: Vec<(usize, String)> =
+            addrs.iter().cloned().enumerate().collect();
+        let mut handles = Vec::new();
+        for node in 0..3usize {
+            let listen = addrs[node].clone();
+            let peers = peer_addrs.clone();
+            let neighbors: Vec<usize> = topo.neighbors(node).to_vec();
+            handles.push(std::thread::spawn(move || {
+                let mesh = TcpMesh::form(
+                    node,
+                    &listen,
+                    &peers,
+                    &neighbors,
+                    digest,
+                    Duration::from_secs(10),
+                )
+                .unwrap();
+                // Everyone sends one frame to every neighbor, then
+                // collects one from each.
+                for &nb in mesh.peers() {
+                    mesh.send_to(nb, &upload(node, 42)).unwrap();
+                }
+                let mut got = Vec::new();
+                for _ in 0..mesh.peers().len() {
+                    let (from, msg, _) = mesh.recv(Duration::from_secs(10)).unwrap();
+                    assert_eq!(msg, upload(from, 42));
+                    got.push(from);
+                }
+                got.sort_unstable();
+                assert_eq!(got, mesh.peers());
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

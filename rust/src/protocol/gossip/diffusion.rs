@@ -1,0 +1,165 @@
+//! The combine step of combine-then-adapt diffusion.
+//!
+//! Inputs are *quantized wire* models (`f32`, exactly what crossed the
+//! link — a node's own contribution is its own quantized upload, i.e.
+//! what its neighbors received), widened through
+//! [`LinearModel::from_wire`] like every other adoption site, reduced in
+//! ascending node-id order, and re-quantized by the caller via
+//! `to_wire()`. Fixing the operand order makes the result bitwise
+//! reproducible at any thread count; starting from the wire bytes makes
+//! every node of an exchange compute from identical operands.
+//!
+//! When the full closed neighborhood is present *and* the Metropolis row
+//! is uniform (bitwise-equal neighbor weights — true for every regular
+//! family, and in particular the complete graph), the combine takes the
+//! exact [`LinearModel::average`] sum-then-scale path the leader's
+//! `sync_linear` uses. That structural detection matters: computing the
+//! self-weight as `1 − Σ w_ij` and comparing it to `1/(deg+1)` would
+//! *not* be an f64 equality (e.g. `1 − 2/3 ≠ 1/3`), so the uniform case
+//! must be recognized from the row, not from arithmetic on it.
+
+use anyhow::{bail, Result};
+
+use crate::kernel::LinearModel;
+
+/// Weighted closed-neighborhood combine at `node`.
+///
+/// * `weights` — `node`'s Metropolis row `(j, w_ij)`, ascending in `j`
+///   (all graph neighbors, whether or not they showed up).
+/// * `contribs` — the wire models present this exchange, ascending by
+///   node id, **including `node`'s own quantized upload**. Absent
+///   neighbors are simply missing; their mass stays on the self-weight
+///   (`1 − Σ_{present} w_ij`), which keeps the step a convex combination
+///   and the stationary average unbiased under symmetric loss.
+pub fn combine(
+    node: usize,
+    weights: &[(usize, f64)],
+    contribs: &[(usize, &[f32])],
+) -> Result<LinearModel> {
+    if contribs.is_empty() {
+        bail!("combine at node {node} with no contributions");
+    }
+    if !weights.windows(2).all(|w| w[0].0 < w[1].0) {
+        bail!("metropolis row of node {node} not strictly ascending");
+    }
+    if !contribs.windows(2).all(|c| c[0].0 < c[1].0) {
+        bail!("contributions at node {node} not strictly ascending");
+    }
+    let dim = contribs[0].1.len();
+    let mut own_present = false;
+    let mut present_neighbor_mass = 0.0;
+    let mut present_neighbors = 0usize;
+    for &(id, w) in contribs {
+        if w.len() != dim {
+            bail!("node {id} contributed dim {} != {dim}", w.len());
+        }
+        if id == node {
+            own_present = true;
+            continue;
+        }
+        match weights.iter().find(|&&(j, _)| j == id) {
+            Some(&(_, wij)) => {
+                present_neighbor_mass += wij;
+                present_neighbors += 1;
+            }
+            None => bail!("node {id} is not a neighbor of node {node}"),
+        }
+    }
+    if !own_present {
+        bail!("combine at node {node} is missing its own contribution");
+    }
+
+    // Uniform row + full attendance => the leader's exact average path.
+    let full = present_neighbors == weights.len();
+    let uniform = weights
+        .windows(2)
+        .all(|w| w[0].1.to_bits() == w[1].1.to_bits());
+    if full && uniform {
+        let models: Vec<LinearModel> = contribs
+            .iter()
+            .map(|&(_, w)| LinearModel::from_wire(w))
+            .collect();
+        let refs: Vec<&LinearModel> = models.iter().collect();
+        return Ok(LinearModel::average(&refs));
+    }
+
+    let self_weight = 1.0 - present_neighbor_mass;
+    let mut avg = LinearModel::zeros(dim);
+    for &(id, w) in contribs {
+        let c = if id == node {
+            self_weight
+        } else {
+            // Membership was validated above; a vanished entry here would
+            // be a logic error, so fall back to dropping the term.
+            weights
+                .iter()
+                .find(|&&(j, _)| j == id)
+                .map_or(0.0, |&(_, wij)| wij)
+        };
+        avg.add_scaled(c, &LinearModel::from_wire(w).w);
+    }
+    Ok(avg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wire(v: &[f64]) -> Vec<f32> {
+        v.iter().map(|&x| x as f32).collect()
+    }
+
+    #[test]
+    fn full_uniform_row_equals_leader_average_bitwise() {
+        // 3 nodes, complete graph: row of node 0 is uniform.
+        let weights = vec![(1usize, 1.0 / 3.0), (2usize, 1.0 / 3.0)];
+        let w0 = wire(&[0.25, -1.5]);
+        let w1 = wire(&[2.0, 0.125]);
+        let w2 = wire(&[-0.75, 3.0]);
+        let contribs: Vec<(usize, &[f32])> = vec![(0, &w0), (1, &w1), (2, &w2)];
+        let combined = combine(0, &weights, &contribs).unwrap();
+
+        let m0 = LinearModel::from_wire(&w0);
+        let m1 = LinearModel::from_wire(&w1);
+        let m2 = LinearModel::from_wire(&w2);
+        let leader = LinearModel::average(&[&m0, &m1, &m2]);
+        assert_eq!(combined.to_wire(), leader.to_wire());
+        for (a, b) in combined.w.iter().zip(&leader.w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn missing_neighbor_mass_stays_on_self() {
+        // Node 0 with neighbors {1, 2}, but only 1 showed up.
+        let weights = vec![(1usize, 0.25), (2usize, 0.25)];
+        let w0 = wire(&[1.0]);
+        let w1 = wire(&[3.0]);
+        let contribs: Vec<(usize, &[f32])> = vec![(0, &w0), (1, &w1)];
+        let c = combine(0, &weights, &contribs).unwrap();
+        // self 0.75 * 1.0 + 0.25 * 3.0 = 1.5
+        assert!((c.w[0] - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn malformed_inputs_are_rejected() {
+        let weights = vec![(1usize, 0.25)];
+        let w0 = wire(&[1.0]);
+        let w1 = wire(&[2.0]);
+        let w9 = wire(&[9.0, 9.0]);
+
+        let no_self: Vec<(usize, &[f32])> = vec![(1, &w1)];
+        assert!(combine(0, &weights, &no_self).is_err());
+
+        let stranger: Vec<(usize, &[f32])> = vec![(0, &w0), (3, &w1)];
+        assert!(combine(0, &weights, &stranger).is_err());
+
+        let unsorted: Vec<(usize, &[f32])> = vec![(1, &w1), (0, &w0)];
+        assert!(combine(0, &weights, &unsorted).is_err());
+
+        let dim_mismatch: Vec<(usize, &[f32])> = vec![(0, &w0), (1, &w9)];
+        assert!(combine(0, &weights, &dim_mismatch).is_err());
+
+        assert!(combine(0, &weights, &[]).is_err());
+    }
+}

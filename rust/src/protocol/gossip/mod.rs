@@ -1,0 +1,29 @@
+//! Leaderless gossip/diffusion protocol (PAPERS.md: *Online Distributed
+//! Learning Over Networks in RKH Spaces Using Random Fourier Features*,
+//! arXiv 1703.08131): instead of synchronizing through a coordinator,
+//! every node exchanges its fixed-size model with its neighbors on a
+//! static network graph and adopts a Metropolis–Hastings weighted average
+//! of the closed neighborhood (combine-then-adapt diffusion).
+//!
+//! Two pieces live here, both deterministic:
+//!
+//! * [`Topology`] — seeded graph families (ring, torus, random-regular,
+//!   complete). Generation is a pure function of `(seed, n, degree)`: one
+//!   dedicated [`Pcg64`](crate::util::Pcg64) stream per topology seed,
+//!   no dependence on thread count or iteration order.
+//! * [`combine`] — the diffusion combine step over *quantized wire*
+//!   models, reduced in ascending node-id order so every node computes
+//!   bitwise-identical results at any thread count (the same discipline
+//!   as `util::par`). On a complete graph with full attendance it takes
+//!   the exact `LinearModel::average` path the leader's `sync_linear`
+//!   uses, which is what makes the gossip ↔ leader parity pin
+//!   (`tests/parity_gossip.rs`) an equality, not an approximation.
+//!
+//! The runtime driving these over the transport seam is
+//! [`crate::coordinator::gossip`].
+
+mod diffusion;
+mod topology;
+
+pub use diffusion::combine;
+pub use topology::{Topology, TOPOLOGY_STREAM};

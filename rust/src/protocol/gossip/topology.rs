@@ -1,0 +1,305 @@
+//! Seeded, deterministic network graphs for the gossip runtime.
+//!
+//! Every family yields a simple, connected, undirected graph whose
+//! adjacency lists are sorted ascending — the canonical reduction order
+//! of the diffusion combine step. All four families are *regular*
+//! (every node has the same degree), which keeps the Metropolis rows
+//! uniform; the weight computation below does not rely on that and stays
+//! correct for irregular graphs.
+
+use anyhow::{bail, Result};
+
+use crate::config::GossipTopology;
+use crate::util::rng::Rng;
+use crate::util::Pcg64;
+
+/// Dedicated RNG stream id of topology generation, so graph sampling
+/// never shares a stream with data or learner randomness.
+pub const TOPOLOGY_STREAM: u64 = 0x70_70;
+
+/// Attempts of the random-regular pairing model before giving up. The
+/// acceptance probability of one attempt is bounded below by
+/// ~exp(-(k²-1)/4) times the (high, for k ≥ 3) connectivity probability,
+/// so for the degrees config validation admits this bound is generous.
+const REGULAR_ATTEMPTS: usize = 512;
+
+/// A static undirected communication graph over nodes `0..n`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    pub kind: GossipTopology,
+    pub n: usize,
+    pub seed: u64,
+    /// Adjacency lists, sorted ascending, irreflexive, symmetric.
+    neighbors: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    /// Build a topology — a pure function of `(kind, n, degree, seed)`.
+    /// `degree` is only consulted by [`GossipTopology::Regular`].
+    pub fn build(kind: GossipTopology, n: usize, degree: usize, seed: u64) -> Result<Topology> {
+        if n < 2 {
+            bail!("a gossip topology needs n >= 2 nodes, got {n}");
+        }
+        let mut rng = Pcg64::new(seed, TOPOLOGY_STREAM);
+        let neighbors = match kind {
+            GossipTopology::Ring => ring(n),
+            GossipTopology::Torus => torus(n)?,
+            GossipTopology::Regular => regular(n, degree, &mut rng)?,
+            GossipTopology::Complete => complete(n),
+        };
+        let t = Topology {
+            kind,
+            n,
+            seed,
+            neighbors,
+        };
+        t.check_invariants()?;
+        Ok(t)
+    }
+
+    /// Neighbors of `i`, ascending.
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.neighbors[i]
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.neighbors[i].len()
+    }
+
+    /// Number of directed edges = Σ_i deg(i) — one frame crosses each per
+    /// exchange, the unit of the gossip communication bound.
+    pub fn directed_edges(&self) -> usize {
+        self.neighbors.iter().map(Vec::len).sum()
+    }
+
+    /// Metropolis–Hastings combination weights: `w_ij = 1 / (1 +
+    /// max(deg_i, deg_j))` for each edge, row `i` listing `(j, w_ij)` in
+    /// ascending `j`. The implied self-weight `1 - Σ_j w_ij` makes the
+    /// matrix doubly stochastic and symmetric, so diffusion preserves the
+    /// network-average model (`tests/prop_gossip.rs` pins both).
+    pub fn metropolis_weights(&self) -> Vec<Vec<(usize, f64)>> {
+        (0..self.n)
+            .map(|i| {
+                self.neighbors[i]
+                    .iter()
+                    .map(|&j| {
+                        let d = self.degree(i).max(self.degree(j));
+                        (j, 1.0 / (1.0 + d as f64))
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Simple + symmetric + connected, or the generator is buggy.
+    fn check_invariants(&self) -> Result<()> {
+        for (i, ns) in self.neighbors.iter().enumerate() {
+            if !ns.windows(2).all(|w| w[0] < w[1]) {
+                bail!("node {i} adjacency not strictly ascending");
+            }
+            for &j in ns {
+                if j == i {
+                    bail!("node {i} has a self-loop");
+                }
+                if j >= self.n {
+                    bail!("node {i} lists out-of-range neighbor {j}");
+                }
+                if self.neighbors[j].binary_search(&i).is_err() {
+                    bail!("edge {i}->{j} not symmetric");
+                }
+            }
+            if ns.is_empty() {
+                bail!("node {i} is isolated");
+            }
+        }
+        if !connected(&self.neighbors) {
+            bail!("{} topology on n={} is disconnected", self.kind.label(), self.n);
+        }
+        Ok(())
+    }
+}
+
+fn ring(n: usize) -> Vec<Vec<usize>> {
+    (0..n)
+        .map(|i| {
+            let mut ns = vec![(i + n - 1) % n, (i + 1) % n];
+            ns.sort_unstable();
+            ns.dedup(); // n = 2: both directions reach the same node
+            ns
+        })
+        .collect()
+}
+
+/// a×b wraparound grid, `a` the largest divisor of `n` with a² ≤ n.
+/// Node id = row * b + col. For a = 2 the up and down neighbors coincide
+/// and dedup to one edge (degree 3); likewise b = 2 sideways.
+fn torus(n: usize) -> Result<Vec<Vec<usize>>> {
+    let mut a = 1;
+    for d in 2..=n {
+        if d * d > n {
+            break;
+        }
+        if n % d == 0 {
+            a = d;
+        }
+    }
+    if a < 2 {
+        bail!("torus topology needs a composite node count >= 4, got {n}");
+    }
+    let b = n / a;
+    Ok((0..n)
+        .map(|i| {
+            let (r, c) = (i / b, i % b);
+            let mut ns = vec![
+                ((r + a - 1) % a) * b + c,
+                ((r + 1) % a) * b + c,
+                r * b + (c + b - 1) % b,
+                r * b + (c + 1) % b,
+            ];
+            ns.sort_unstable();
+            ns.dedup();
+            ns
+        })
+        .collect())
+}
+
+fn complete(n: usize) -> Vec<Vec<usize>> {
+    (0..n).map(|i| (0..n).filter(|&j| j != i).collect()).collect()
+}
+
+/// Random k-regular graph via the pairing (configuration) model: shuffle
+/// the multiset of n·k stubs, pair consecutive entries, and resample the
+/// whole attempt on any self-loop, duplicate edge, or disconnection —
+/// rejection keeps the distribution uniform over simple pairings and the
+/// result a pure function of the RNG stream.
+fn regular(n: usize, k: usize, rng: &mut Pcg64) -> Result<Vec<Vec<usize>>> {
+    if k == 0 || k >= n {
+        bail!("regular topology needs 1 <= degree < n, got degree {k} on n={n}");
+    }
+    if n * k % 2 != 0 {
+        bail!("regular topology needs n*degree even, got n={n} degree {k}");
+    }
+    if k == n - 1 {
+        return Ok(complete(n));
+    }
+    let mut stubs: Vec<usize> = Vec::with_capacity(n * k);
+    for i in 0..n {
+        for _ in 0..k {
+            stubs.push(i);
+        }
+    }
+    for _ in 0..REGULAR_ATTEMPTS {
+        rng.shuffle(&mut stubs);
+        let mut adj: Vec<Vec<usize>> = (0..n).map(|_| Vec::with_capacity(k)).collect();
+        let mut simple = true;
+        for pair in stubs.chunks_exact(2) {
+            let (u, v) = (pair[0], pair[1]);
+            if u == v || adj[u].contains(&v) {
+                simple = false;
+                break;
+            }
+            adj[u].push(v);
+            adj[v].push(u);
+        }
+        if !simple {
+            continue;
+        }
+        for ns in &mut adj {
+            ns.sort_unstable();
+        }
+        if connected(&adj) {
+            return Ok(adj);
+        }
+    }
+    bail!("no simple connected {k}-regular graph on n={n} after {REGULAR_ATTEMPTS} attempts");
+}
+
+fn connected(adj: &[Vec<usize>]) -> bool {
+    let n = adj.len();
+    let mut seen = vec![false; n];
+    let mut stack = vec![0usize];
+    seen[0] = true;
+    let mut visited = 1usize;
+    while let Some(u) = stack.pop() {
+        for &v in &adj[u] {
+            if !seen[v] {
+                seen[v] = true;
+                visited += 1;
+                stack.push(v);
+            }
+        }
+    }
+    visited == n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn families_have_expected_degrees() {
+        let ring = Topology::build(GossipTopology::Ring, 6, 0, 1).unwrap();
+        assert!((0..6).all(|i| ring.degree(i) == 2));
+        assert_eq!(ring.neighbors(0), &[1, 5]);
+
+        // 8 = 2x4 grid: the up/down neighbor coincides => degree 3.
+        let torus = Topology::build(GossipTopology::Torus, 8, 0, 1).unwrap();
+        assert!((0..8).all(|i| torus.degree(i) == 3));
+        // 9 = 3x3 grid: full degree 4.
+        let torus = Topology::build(GossipTopology::Torus, 9, 0, 1).unwrap();
+        assert!((0..9).all(|i| torus.degree(i) == 4));
+
+        let reg = Topology::build(GossipTopology::Regular, 10, 3, 42).unwrap();
+        assert!((0..10).all(|i| reg.degree(i) == 3));
+
+        let full = Topology::build(GossipTopology::Complete, 5, 0, 1).unwrap();
+        assert!((0..5).all(|i| full.degree(i) == 4));
+        assert_eq!(full.directed_edges(), 20);
+    }
+
+    #[test]
+    fn build_is_pure_in_the_seed() {
+        let a = Topology::build(GossipTopology::Regular, 12, 4, 7).unwrap();
+        let b = Topology::build(GossipTopology::Regular, 12, 4, 7).unwrap();
+        assert_eq!(a, b);
+        let c = Topology::build(GossipTopology::Regular, 12, 4, 8).unwrap();
+        // Different seeds almost surely sample different graphs; both are
+        // valid either way (check_invariants ran), so only assert purity.
+        let _ = c;
+    }
+
+    #[test]
+    fn degenerate_and_invalid_shapes() {
+        // n = 2 ring: one edge, degree 1.
+        let tiny = Topology::build(GossipTopology::Ring, 2, 0, 1).unwrap();
+        assert_eq!(tiny.neighbors(0), &[1]);
+        assert_eq!(tiny.neighbors(1), &[0]);
+
+        assert!(Topology::build(GossipTopology::Ring, 1, 0, 1).is_err());
+        assert!(Topology::build(GossipTopology::Torus, 7, 0, 1).is_err());
+        assert!(Topology::build(GossipTopology::Regular, 5, 3, 1).is_err());
+        assert!(Topology::build(GossipTopology::Regular, 6, 0, 1).is_err());
+        assert!(Topology::build(GossipTopology::Regular, 6, 6, 1).is_err());
+    }
+
+    #[test]
+    fn metropolis_rows_are_substochastic_and_symmetric() {
+        for (kind, n, k) in [
+            (GossipTopology::Ring, 7, 0),
+            (GossipTopology::Torus, 12, 0),
+            (GossipTopology::Regular, 10, 3),
+            (GossipTopology::Complete, 6, 0),
+        ] {
+            let t = Topology::build(kind, n, k, 3).unwrap();
+            let w = t.metropolis_weights();
+            for i in 0..n {
+                let row_sum: f64 = w[i].iter().map(|&(_, v)| v).sum();
+                assert!(row_sum < 1.0, "{kind:?} row {i} sums to {row_sum}");
+                for &(j, wij) in &w[i] {
+                    let back = w[j].iter().find(|&&(jj, _)| jj == i).unwrap().1;
+                    assert_eq!(wij.to_bits(), back.to_bits(), "{kind:?} edge {i}-{j}");
+                }
+            }
+        }
+    }
+}

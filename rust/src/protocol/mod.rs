@@ -14,6 +14,9 @@
 //!   m learners, used by experiments, benches and tests. The threaded
 //!   leader/worker runtime in [`crate::coordinator`] speaks the same
 //!   messages over real channels.
+//! * [`gossip`] — the leaderless alternative: seeded network topologies
+//!   with Metropolis–Hastings weights and a combine-then-adapt diffusion
+//!   step, driven peer-to-peer by [`crate::coordinator::gossip`].
 //!
 //! # Fixed-size balancing geometry
 //!
@@ -39,11 +42,13 @@
 pub mod balancing;
 pub mod divergence;
 pub mod engine;
+pub mod gossip;
 pub mod local_condition;
 pub mod sync;
 
 pub use balancing::{BalanceGeometry, BalancingSet, FixedGeometry, KernelGeometry};
 pub use divergence::configuration_divergence;
 pub use engine::{ProtocolEngine, RoundReport};
+pub use gossip::Topology;
 pub use local_condition::ConditionTracker;
 pub use sync::{SyncDecision, SyncPolicy};

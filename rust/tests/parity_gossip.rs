@@ -1,0 +1,124 @@
+//! Gossip ↔ leader parity: on a **complete graph with full attendance**,
+//! one diffusion exchange must be bit-for-bit the leader's `sync_linear`
+//! quantized wire average — both reduce the same `from_wire`-widened
+//! wire models in ascending node order through `LinearModel::average`,
+//! quantize once, and adopt the widened result.
+//!
+//! The pin runs at two levels:
+//!
+//! * **math** — `protocol::gossip::combine` on a uniform Metropolis row
+//!   vs `LinearModel::average` on the same operands;
+//! * **runtime** — a full `run_gossip` on the complete graph vs
+//!   `run_cluster` under `Periodic { period }` on the same config, with
+//!   `period | rounds` so the horizon ends on a synchronization: every
+//!   node's final wire model must equal the cluster's `final_model`
+//!   wire exactly, for plain linear and for RFF learners.
+
+use kdol::config::{
+    CompressionConfig, ExperimentConfig, GossipConfig, GossipTopology, KernelConfig, ProtocolConfig,
+};
+use kdol::coordinator::{run_cluster, run_gossip};
+use kdol::kernel::LinearModel;
+use kdol::protocol::gossip::combine;
+use kdol::protocol::Topology;
+
+/// Base config of one parity scenario; the caller picks the runtime by
+/// setting either `protocol` (leader) or `gossip` (diffusion).
+fn base(kernel: KernelConfig, m: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::fig1_linear(ProtocolConfig::NoSync);
+    cfg.name = "parity-gossip".into();
+    cfg.learners = m;
+    cfg.rounds = rounds;
+    cfg.record_every = rounds.max(1);
+    cfg.learner.kernel = kernel;
+    cfg.learner.compression = CompressionConfig::None;
+    cfg
+}
+
+/// Run both systems on the same seed/data at cadence `period` and
+/// assert the final models agree bitwise.
+fn assert_final_model_parity(kernel: KernelConfig, m: usize, rounds: usize, period: usize) {
+    assert_eq!(rounds % period, 0, "horizon must end on a sync");
+
+    let mut leader = base(kernel, m, rounds);
+    leader.protocol = ProtocolConfig::Periodic { period };
+    let cluster = run_cluster(&leader).unwrap();
+    let reference = cluster
+        .final_model
+        .as_ref()
+        .expect("periodic run ends on a full sync")
+        .as_linear()
+        .expect("fixed-size parity scenario")
+        .to_wire();
+
+    let mut diffused = base(kernel, m, rounds);
+    diffused.gossip = Some(GossipConfig {
+        topology: GossipTopology::Complete,
+        degree: 0,
+        period,
+        seed: diffused.seed,
+    });
+    let gossip = run_gossip(&diffused).unwrap();
+
+    assert_eq!(gossip.exchanges, (rounds / period) as u64, "exchange count");
+    assert_eq!(gossip.consensus_sq, 0.0, "complete graph must reach consensus");
+    for (node, w) in gossip.final_w.iter().enumerate() {
+        assert_eq!(
+            w, &reference,
+            "node {node}: complete-graph diffusion diverged from the leader average"
+        );
+    }
+}
+
+#[test]
+fn complete_graph_single_exchange_matches_leader_linear() {
+    // One exchange at the horizon: the purest form of the pin.
+    assert_final_model_parity(KernelConfig::Linear, 4, 40, 40);
+}
+
+#[test]
+fn complete_graph_repeated_exchanges_match_leader_linear() {
+    // Every exchange adopts the same average as the leader's sync, so
+    // the trajectories stay identical by induction across 12 syncs.
+    assert_final_model_parity(KernelConfig::Linear, 4, 60, 5);
+}
+
+#[test]
+fn complete_graph_exchanges_match_leader_rff() {
+    // RFF learners are fixed-size in feature space: the same wire path,
+    // at the feature dimension instead of the input dimension.
+    let kernel = KernelConfig::Rff {
+        gamma: 0.25,
+        dim: 32,
+    };
+    assert_final_model_parity(kernel, 3, 60, 10);
+}
+
+#[test]
+fn uniform_row_combine_is_the_leader_average_bitwise() {
+    // Math-level pin on a real topology's Metropolis row: the complete
+    // graph's row is uniform, so `combine` must take the exact
+    // `LinearModel::average` sum-then-scale path.
+    let n = 5;
+    let dim = 7;
+    let topo = Topology::build(GossipTopology::Complete, n, 0, 3).unwrap();
+    let weights = topo.metropolis_weights();
+    let wires: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            (0..dim)
+                .map(|j| ((i * dim + j) as f32).mul_add(0.125, -2.0))
+                .collect()
+        })
+        .collect();
+
+    let models: Vec<LinearModel> = wires.iter().map(|w| LinearModel::from_wire(w)).collect();
+    let refs: Vec<&LinearModel> = models.iter().collect();
+    let leader = LinearModel::average(&refs).to_wire();
+
+    for node in 0..n {
+        let contribs: Vec<(usize, &[f32])> =
+            wires.iter().enumerate().map(|(i, w)| (i, w.as_slice())).collect();
+        let combined = combine(node, &weights[node], &contribs).unwrap().to_wire();
+        assert_eq!(combined, leader, "node {node}");
+    }
+}

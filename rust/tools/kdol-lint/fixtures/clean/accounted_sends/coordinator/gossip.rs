@@ -1,0 +1,14 @@
+// Clean gossip mirror: every peer-link send — including the bare
+// `.send(` spelling — carries its accounting call in the same
+// statement (sender-side: gossip has no downstream direction), with no
+// waiver needed.
+
+pub fn exchange(links: &PeerLinks, comm: &mut CommStats, edges: &mut EdgeComm, msg: &Message) {
+    for to in links.peers() {
+        comm.record_up(edges.record(links.node(), to, links.send_to(to, msg)));
+    }
+}
+
+pub fn relay(link: &Endpoint, comm: &mut CommStats, msg: &Message) {
+    comm.record_up(link.send(msg));
+}

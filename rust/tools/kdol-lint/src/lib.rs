@@ -918,14 +918,24 @@ fn rule_float_reduction(scan: &FileScan, out: &mut Vec<Violation>) {
 // ---- rule 3: accounted-sends -----------------------------------------------
 
 fn rule_accounted_sends(scan: &FileScan, out: &mut Vec<Violation>) {
-    if !rel_has_component(&scan.rel, &["coordinator"]) {
+    let in_coordinator = rel_has_component(&scan.rel, &["coordinator"]);
+    // Gossip-pathed files: the leaderless runtime and its protocol
+    // module. Every frame there is sender-accounted (there is no leader
+    // to count the other side), so the rule also covers the bare
+    // `.send(` spelling the peer-link seam exposes.
+    let in_gossip = rel_has_component(&scan.rel, &["gossip"])
+        || scan.rel.ends_with("gossip.rs");
+    if !in_coordinator && !in_gossip {
         return;
     }
     let toks = &scan.toks;
     for i in 1..toks.len() {
         let t = &toks[i];
+        let name_matches = t.text == "send_to"
+            || t.text == "broadcast"
+            || (in_gossip && t.text == "send");
         if t.kind != TokKind::Ident
-            || (t.text != "send_to" && t.text != "broadcast")
+            || !name_matches
             || toks[i - 1].text != "."
             || i + 1 >= toks.len()
             || toks[i + 1].text != "("
